@@ -1,0 +1,52 @@
+//! Engine microbenchmarks (the §Perf hot paths): per-layer kernel cost,
+//! Algorithm-2 access analysis, timeline simulation, GA generation, and
+//! a full mapping-search fitness evaluation.
+use compass::arch::{Chiplet, ChipletClass, Dataflow, HwConfig};
+use compass::cost::{access, dataflow::layer_cost, Evaluator};
+use compass::ga::{self, GaConfig};
+use compass::mapping::presets;
+use compass::util::Bench;
+use compass::workload::{build_workload, LayerKind, ModelSpec, Request, WorkloadParams};
+
+fn main() {
+    let chip = Chiplet { class: ChipletClass::M, dataflow: Dataflow::WeightStationary };
+    let gemm = LayerKind::Gemm { m: 4096, k: 4096, n: 16384 };
+    Bench::new("layer_cost/gemm-4kx4kx16k").run(|| layer_cost(&gemm, 0, chip, true));
+    let att = LayerKind::Attention {
+        heads: 32,
+        head_dim: 128,
+        reqs: (0..128).map(|i| (1u64, 256 + 8 * i as u64)).collect(),
+    };
+    Bench::new("layer_cost/attention-128req").run(|| layer_cost(&att, 0, chip, false));
+
+    let model = ModelSpec::gpt3_7b();
+    let w = build_workload(
+        &model,
+        &vec![Request::decode(512); 128],
+        &WorkloadParams { micro_batch_size: 64, tensor_parallel: 8, eval_blocks: 2 },
+    );
+    let hw = HwConfig::homogeneous(2, 4, ChipletClass::M, Dataflow::WeightStationary, 32.0, 16.0);
+    let m = presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 8);
+    Bench::new("access_analysis/decode-128").run(|| access::analyze(&w, &m));
+    let ev = Evaluator::new();
+    Bench::new("eval_batch/decode-128").run(|| ev.eval_batch(&w, &hw, &m));
+    Bench::new("workload_build/decode-128").run(|| {
+        build_workload(
+            &model,
+            &vec![Request::decode(512); 128],
+            &WorkloadParams { micro_batch_size: 64, tensor_parallel: 8, eval_blocks: 2 },
+        )
+    });
+    Bench::new("ga_search/pop12-gen8").budget_ms(1200).run(|| {
+        ga::search(
+            w.num_micro_batches(),
+            w.layers_per_mb,
+            8,
+            &GaConfig { population: 12, generations: 8, ..GaConfig::reduced() },
+            |m| {
+                let r = ev.eval_batch(&w, &hw, m);
+                r.latency_cycles * r.energy_pj
+            },
+        )
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench F10: paper Fig. 10 + Table VII — DSE under the vLLM / Orca /
+//! Chunked-Prefill serving strategies (GovReport-512TOPS) and the
+//! homogeneous-vs-heterogeneous EDP comparison.
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+use compass::util::Bench;
+use compass::workload::serving::{Scenario, ServingStrategy};
+use compass::workload::trace::{Trace, TraceSpec};
+
+fn main() {
+    let mut cfg = DseConfig::reduced();
+    cfg.ga.population = 12;
+    cfg.ga.generations = 8;
+    cfg.bo.rounds = 8;
+    cfg.bo.init = 4;
+    let rt = Runtime::from_env().ok();
+    let results = exp::fig10_serving(&cfg, rt.as_ref(), 11, 2);
+    exp::fig10a_table(&results).print();
+    exp::table7(&results).print();
+    let cp = results.iter().find(|r| r.strategy == ServingStrategy::ChunkedPrefill).unwrap();
+    exp::fig10b_homo_hetero(&cfg, &cp.hw, 11, 2).print();
+
+    // microbench: scenario construction per strategy
+    let trace = Trace::new(&TraceSpec::govreport(), 512, 11);
+    for s in ServingStrategy::ALL {
+        Bench::new(&format!("scenario_build/{}", s.name())).run(|| {
+            Scenario::serving(s, &trace, 9652, 128, 5, 2048)
+        });
+    }
+}

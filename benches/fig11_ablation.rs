@@ -1,0 +1,18 @@
+//! Bench F11: paper Fig. 11 — component ablations under the
+//! chunked-prefill configuration: full Compass vs GA->random,
+//! BO->random, and SCAR-style mapping.
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+
+fn main() {
+    let mut cfg = DseConfig::reduced();
+    cfg.ga.population = 12;
+    cfg.ga.generations = 8;
+    cfg.bo.rounds = 8;
+    cfg.bo.init = 4;
+    let rt = Runtime::from_env().ok();
+    let t0 = std::time::Instant::now();
+    exp::fig11_ablation(&cfg, rt.as_ref(), 13).print();
+    println!("ablation wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,26 @@
+//! Bench F7: regenerate paper Fig. 7 (Gemini vs MOHaM vs Compass) on the
+//! reduced scenario matrix with CI-sized search budgets, printing the
+//! normalized table, the average-savings summary, and Table VI.
+//! `repro compare --scenes all [--full]` runs the full 12-scene matrix.
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+use compass::util::Bench;
+
+fn main() {
+    let mut cfg = DseConfig::reduced();
+    cfg.ga.population = 12;
+    cfg.ga.generations = 8;
+    cfg.bo.rounds = 10;
+    cfg.bo.init = 4;
+    let rt = Runtime::from_env().ok();
+    let scenes = exp::Scene::reduced_matrix();
+    let rows = exp::fig7_compare(&scenes, &cfg, rt.as_ref(), 7);
+    exp::fig7_table(&rows).print();
+    exp::fig7_savings(&rows).print();
+    exp::table6(&rows).print();
+    let one = [exp::Scene::new("sharegpt", false, 64.0)];
+    Bench::new("fig7/one-scene-three-methods").budget_ms(1).run(|| {
+        exp::fig7_compare(&one, &cfg, rt.as_ref(), 7)
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench F8: paper Fig. 8 — execution latency timeline of the mapping
+//! found under ShareGPT-64TOPS (prefill and decode), plus timeline-
+//! recording overhead measurement.
+use compass::cost::{Evaluator, SimOptions};
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::mapping::presets;
+use compass::runtime::Runtime;
+use compass::util::Bench;
+use compass::workload::{build_workload, ModelSpec, Request, WorkloadParams};
+
+fn main() {
+    let mut cfg = DseConfig::reduced();
+    cfg.bo.rounds = 8;
+    cfg.bo.init = 4;
+    let rt = Runtime::from_env().ok();
+    println!("{}", exp::fig8_timeline(&exp::Scene::new("sharegpt", true, 64.0), &cfg, rt.as_ref(), 7));
+    println!("{}", exp::fig8_timeline(&exp::Scene::new("sharegpt", false, 64.0), &cfg, rt.as_ref(), 7));
+
+    let w = build_workload(
+        &ModelSpec::gpt3_7b(),
+        &vec![Request::prefill(128); 4],
+        &WorkloadParams { micro_batch_size: 2, tensor_parallel: 8, eval_blocks: 1 },
+    );
+    let hw = compass::arch::HwConfig::homogeneous(
+        2, 4, compass::arch::ChipletClass::M, compass::arch::Dataflow::WeightStationary, 32.0, 16.0,
+    );
+    let m = presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 8);
+    let plain = Evaluator::new();
+    let recording = Evaluator { opts: SimOptions { record_timeline: true, ..Default::default() } };
+    Bench::new("timeline/eval-no-recording").run(|| plain.eval_batch(&w, &hw, &m));
+    Bench::new("timeline/eval-with-recording").run(|| recording.eval_batch(&w, &hw, &m));
+}

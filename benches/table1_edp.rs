@@ -1,0 +1,15 @@
+//! Bench T1: regenerate paper Table I (EDP ratio OS/WS per phase x
+//! sequence length) and time the single-GEMM EDP probe.
+use compass::arch::{Chiplet, ChipletClass, Dataflow};
+use compass::cost::{edp_of, edp_probe};
+use compass::util::Bench;
+use compass::workload::Phase;
+
+fn main() {
+    compass::experiments::table1(64.0).print();
+    let chip = Chiplet { class: ChipletClass::M, dataflow: Dataflow::WeightStationary };
+    Bench::new("edp_probe/qkv@5120").run(|| {
+        edp_of(edp_probe(Phase::QkvGen, 5120, 4096, 16384, 128, chip, 64.0))
+    });
+    Bench::new("edp_probe/full-table").run(|| compass::experiments::table1(64.0));
+}

@@ -1,0 +1,23 @@
+//! Bench T5: regenerate paper Table V (evaluation-engine validation vs a
+//! steady-state reference on Simba-like hardware) and time both engines.
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::cost::Evaluator;
+use compass::experiments::steady_state_reference;
+use compass::mapping::presets;
+use compass::util::Bench;
+use compass::workload::{build_workload, ModelSpec, Request, WorkloadParams};
+
+fn main() {
+    compass::experiments::table5(2).print();
+    let model = ModelSpec::gpt3_7b();
+    let hw = HwConfig::homogeneous(6, 6, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+    let w = build_workload(
+        &model,
+        &vec![Request::decode(512); 128],
+        &WorkloadParams { micro_batch_size: 32, tensor_parallel: 8, eval_blocks: 2 },
+    );
+    let m = presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 36);
+    let ev = Evaluator::new();
+    Bench::new("eval_engine/decode-batch128").run(|| ev.eval_batch(&w, &hw, &m));
+    Bench::new("steady_state_reference/decode-batch128").run(|| steady_state_reference(&w, &hw, &m));
+}

@@ -1,0 +1,38 @@
+//! Bench T6: paper Table VI — the optimal hardware configurations found
+//! by Compass per scenario (reduced matrix; `repro compare --scenes all`
+//! for all 12). Also times a single BO round's surrogate update.
+use compass::bo::{featurize, Gp, Hyper};
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+use compass::util::Bench;
+
+fn main() {
+    let mut cfg = DseConfig::reduced();
+    cfg.bo.rounds = 12;
+    cfg.bo.init = 5;
+    let rt = Runtime::from_env().ok();
+    let scenes = exp::Scene::reduced_matrix();
+    let rows = exp::fig7_compare(&scenes[..2], &cfg, rt.as_ref(), 7);
+    exp::table6(&rows).print();
+
+    // surrogate-update microbenchmarks (fit + EI batch), both backends
+    let mut rng = compass::util::Rng::seed_from_u64(3);
+    let space = compass::arch::HwSpace::paper(64.0);
+    let xs: Vec<_> = (0..32)
+        .map(|_| featurize(&compass::bo::sa::random_config(&space, &mut rng)))
+        .collect();
+    let ys: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut native = compass::bo::NativeGp::new();
+    Bench::new("gp_fit/native-32obs").run(|| native.fit(&xs, &ys, Hyper::default()).unwrap());
+    native.fit(&xs, &ys, Hyper::default()).unwrap();
+    Bench::new("gp_ei/native-32cand").run(|| native.ei(&xs, 0.0).unwrap());
+    if let Some(rt) = rt.as_ref() {
+        if rt.artifacts_available() {
+            let mut pjrt = compass::bo::PjrtGp::new(rt);
+            Bench::new("gp_fit/pjrt-32obs").run(|| pjrt.fit(&xs, &ys, Hyper::default()).unwrap());
+            pjrt.fit(&xs, &ys, Hyper::default()).unwrap();
+            Bench::new("gp_ei/pjrt-32cand").run(|| pjrt.ei(&xs, 0.0).unwrap());
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the whole Compass stack in ~40 lines.
+//!
+//! Builds an LLM serving workload from a synthetic ShareGPT-like trace,
+//! co-explores hardware (BO over the heterogeneous chiplet space; GP on
+//! PJRT artifacts when `make artifacts` has run) and mapping (GA over the
+//! computation-execution-graph encoding), then prints the winning design.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use compass::arch::HwSpace;
+use compass::dse::{compass_dse, DseConfig};
+use compass::experiments::{make_gp, model_for_tops};
+use compass::runtime::Runtime;
+use compass::workload::serving::Scenario;
+use compass::workload::trace::{Trace, TraceSpec};
+
+fn main() {
+    // 1. workload: a prefill scenario sampled from a dialogue-like trace
+    let trace = Trace::new(&TraceSpec::sharegpt(), 256, 7);
+    let scenario = Scenario::prefill(&trace, 4, 2);
+    let model = model_for_tops(64.0);
+    println!(
+        "workload: {} | trace means in/out = {:.0}/{:.0} tokens",
+        model.name,
+        trace.mean_in(),
+        trace.mean_out()
+    );
+
+    // 2. hardware space: the paper's Table-IV candidates at 64 TOPS
+    let space = HwSpace::paper(64.0);
+
+    // 3. co-explore (reduced single-core budget; DseConfig::paper() for
+    //    the full GA 120x100 / BO 100-round search)
+    let rt = Runtime::from_env().ok();
+    let mut gp = make_gp(rt.as_ref());
+    let out = compass_dse(&scenario, &model, &space, &DseConfig::reduced(), gp.as_mut());
+
+    // 4. results
+    println!("surrogate backend : {}", out.backend);
+    println!("best hardware     : {}", out.hw.describe());
+    println!(
+        "latency {:.3e} cycles | energy {:.3e} pJ | MC ${:.0} | L*E*MC {:.3e}",
+        out.eval.latency_cycles,
+        out.eval.energy_pj,
+        out.eval.mc_usd,
+        out.eval.total_cost()
+    );
+    println!(
+        "mapping[0]: {} micro-batches x {} layers on {} chiplets ({} segments)",
+        out.mappings[0].rows,
+        out.mappings[0].cols,
+        out.hw.num_chiplets(),
+        out.mappings[0].segments().len()
+    );
+    let first = out.bo_history.first().copied().unwrap_or(f64::NAN);
+    let last = out.bo_history.last().copied().unwrap_or(f64::NAN);
+    println!(
+        "BO convergence    : {:.3e} -> {:.3e} ({:.1}% better than the initial design)",
+        first,
+        last,
+        100.0 * (first - last) / first
+    );
+}

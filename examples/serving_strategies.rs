@@ -1,0 +1,40 @@
+//! Paper §VI-F case study: the interplay between system-level serving
+//! strategies (vLLM / Orca / Chunked Prefill, Fig. 9) and multi-chiplet
+//! hardware design, on the GovReport-512TOPS scenario; finishes with the
+//! homogeneous-vs-heterogeneous comparison of Fig. 10(b).
+//!
+//! Run: `cargo run --release --example serving_strategies`
+
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+use compass::workload::serving::ServingStrategy;
+
+fn main() {
+    let cfg = DseConfig::reduced();
+    let rt = Runtime::from_env().ok();
+    let decode_groups = 3;
+
+    println!("GovReport-512TOPS: 1 long prefill amid {decode_groups} decode batches of 128\n");
+    let results = exp::fig10_serving(&cfg, rt.as_ref(), 11, decode_groups);
+    exp::fig10a_table(&results).print();
+    exp::table7(&results).print();
+
+    // chunked prefill should even out per-batch cost: report the
+    // first-batch share of total latency per strategy
+    println!();
+    for r in &results {
+        let share = r.first_other[0] / r.latency.max(1e-300);
+        println!(
+            "{:<14} first-batch latency share: {:5.1}%",
+            r.strategy.name(),
+            100.0 * share
+        );
+    }
+
+    let cp = results
+        .iter()
+        .find(|r| r.strategy == ServingStrategy::ChunkedPrefill)
+        .expect("chunked prefill present");
+    exp::fig10b_homo_hetero(&cfg, &cp.hw, 11, decode_groups).print();
+}

@@ -1,0 +1,50 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): run the full
+//! Compass pipeline on a real small workload — a ShareGPT-like
+//! sequence-length trace at the paper's 64-TOPS edge design point —
+//! and report the paper's headline metric: latency / energy / monetary
+//! cost of the Compass design vs the Gemini- and MOHaM-style baselines,
+//! validated on a *held-out* test trace.
+//!
+//! Run: `cargo run --release --example sharegpt_dse [-- --full]`
+//! The results of this run are recorded in EXPERIMENTS.md.
+
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::runtime::Runtime;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = if full {
+        DseConfig::paper()
+    } else {
+        DseConfig::reduced()
+    };
+    let rt = Runtime::from_env().ok();
+    let t0 = std::time::Instant::now();
+
+    // both phases of the paper's ShareGPT-64TOPS column
+    let scenes = vec![
+        exp::Scene::new("sharegpt", true, 64.0),
+        exp::Scene::new("sharegpt", false, 64.0),
+    ];
+    let rows = exp::fig7_compare(&scenes, &cfg, rt.as_ref(), 7);
+
+    exp::fig7_table(&rows).print();
+    exp::fig7_savings(&rows).print();
+    exp::table6(&rows).print();
+
+    // headline check: total cost of the Compass design vs the baselines
+    for r in &rows {
+        let c = r.compass[3];
+        println!(
+            "[{}] total cost: compass {:.3e} vs gemini {:.3e} ({:+.1}%) vs moham {:.3e} ({:+.1}%)",
+            r.scene.label(),
+            c,
+            r.gemini[3],
+            100.0 * (c - r.gemini[3]) / r.gemini[3],
+            r.moham[3],
+            100.0 * (c - r.moham[3]) / r.moham[3],
+        );
+    }
+    println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
+}

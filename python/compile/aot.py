@@ -1,0 +1,149 @@
+"""AOT-lower the L2 GP graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Artifacts (shapes from constants.py; all f32):
+  gram_train.hlo.txt : composite_gram over (TRAIN_N, TRAIN_N)
+  gram_cross.hlo.txt : composite_gram over (CAND_Q, TRAIN_N)
+  gram_diag.hlo.txt  : K(z, z) for CAND_Q candidates
+  gp_fit.hlo.txt     : masked Cholesky fit -> (alpha, L, mll)
+  gp_ei.hlo.txt      : posterior mean/var/EI for CAND_Q candidates
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .constants import CAND_Q, SLOTS, SYS_D, TRAIN_N, TYPES
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _gram_specs(q):
+    return (
+        _s(q, SYS_D),  # xsys
+        _s(TRAIN_N, SYS_D),  # ysys
+        _s(SYS_D),  # inv_ls
+        _s(q, SLOTS, TYPES),  # a
+        _s(TRAIN_N, SLOTS, TYPES),  # b
+        _s(SLOTS, SLOTS),  # w
+        _s(q, 2),  # sa
+        _s(TRAIN_N, 2),  # sb
+        _s(),  # sigma2
+    )
+
+
+ARTIFACTS = {
+    "gram_train": (model.composite_gram, _gram_specs(TRAIN_N)),
+    "gram_cross": (model.composite_gram, _gram_specs(CAND_Q)),
+    "gram_diag": (
+        model.gram_diag,
+        (_s(CAND_Q, SLOTS, TYPES), _s(SLOTS, SLOTS), _s()),
+    ),
+    "gp_fit": (
+        model.gp_fit,
+        (_s(TRAIN_N, TRAIN_N), _s(TRAIN_N), _s(TRAIN_N), _s()),
+    ),
+    "gp_ei": (
+        model.gp_ei,
+        (
+            _s(CAND_Q, TRAIN_N),  # k_cross
+            _s(CAND_Q),  # k_diag
+            _s(TRAIN_N, TRAIN_N),  # chol
+            _s(TRAIN_N),  # alpha
+            _s(TRAIN_N),  # mask
+            _s(),  # f_best
+        ),
+    ),
+    "ei_fused": (
+        model.gp_ei_fused,
+        (
+            _s(CAND_Q, SYS_D),  # xsys_c
+            _s(CAND_Q, SLOTS, TYPES),  # a_c
+            _s(CAND_Q, 2),  # s_c
+            _s(TRAIN_N, SYS_D),  # xsys_t
+            _s(TRAIN_N, SLOTS, TYPES),  # a_t
+            _s(TRAIN_N, 2),  # s_t
+            _s(SYS_D),  # inv_ls
+            _s(SLOTS, SLOTS),  # w
+            _s(),  # sigma2
+            _s(TRAIN_N, TRAIN_N),  # chol
+            _s(TRAIN_N),  # alpha
+            _s(TRAIN_N),  # mask
+            _s(),  # f_best
+        ),
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    fn, specs = ARTIFACTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {
+        "shapes": {
+            "SLOTS": SLOTS,
+            "TYPES": TYPES,
+            "TRAIN_N": TRAIN_N,
+            "CAND_Q": CAND_Q,
+            "SYS_D": SYS_D,
+        },
+        "artifacts": {},
+    }
+    # partial rebuilds (--only) merge into the existing manifest
+    if args.only and os.path.exists(manifest_path):
+        try:
+            old = json.load(open(manifest_path))
+            if old.get("shapes") == manifest["shapes"]:
+                manifest["artifacts"].update(old.get("artifacts", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+    names = args.only or list(ARTIFACTS)
+    for name in names:
+        text = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

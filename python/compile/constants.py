@@ -1,0 +1,24 @@
+"""Fixed AOT shapes for the GP surrogate artifacts.
+
+The rust BO engine pads every hardware configuration to these sizes so a
+single compiled PJRT executable serves the whole search (no shape-dependent
+recompilation on the hot path).
+
+Padding conventions:
+  * layouts  -> one-hot (SLOTS, TYPES) grids; empty slots are all-zero rows
+                (they match nothing in the layout kernel, Eq. 3).
+  * sys par. -> (SYS_D,) feature vectors; unused dims are zero with an
+                effectively-infinite lengthscale supplied by rust.
+  * train set-> TRAIN_N rows with a {0,1} mask; masked rows are replaced by
+                identity rows in the Cholesky factorisation.
+"""
+
+SLOTS = 256  # max chiplets on the package substrate (16 x 16 grid)
+TYPES = 4  # dataflow-type vocabulary (WS, OS + 2 reserved)
+TRAIN_N = 128  # max BO observations (init design + 100 rounds + slack)
+CAND_Q = 64  # EI candidate batch proposed by the two-tier SA
+SYS_D = 8  # padded system-parameter feature dimension
+
+# Pallas block sizes (MXU-aligned on the q/n grid; W stays VMEM-resident)
+BLOCK_Q = 32
+BLOCK_N = 32

@@ -1,0 +1,4 @@
+from .layout_gram import layout_gram, layout_gram_diag
+from .rbf_gram import rbf_gram
+
+__all__ = ["layout_gram", "layout_gram_diag", "rbf_gram"]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: chiplet-layout Gram matrix (paper Eq. 3).
+
+    K[q, n] = sigma2 * sum_t  a[q, :, t]^T  W  b[n, :, t]
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): the kernel is a pair of
+MXU-friendly contractions per (q, n) block --
+
+    bw[n, u, t] = sum_v W[u, v] * b[n, v, t]        (S x S @ S x T dots)
+    K[q, n]     = sum_{u,t} a[q, u, t] * bw[n, u, t]
+
+with BlockSpec keeping the (S, S) Manhattan weight matrix W resident in
+VMEM across the whole candidate grid while q/n tiles stream from HBM.
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO with identical
+numerics (the structure -- blocking, dot shapes -- is what carries to TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layout_gram_kernel(a_ref, b_ref, w_ref, o_ref, *, sigma2):
+    a = a_ref[...]  # (bq, S, T)
+    b = b_ref[...]  # (bn, S, T)
+    w = w_ref[...]  # (S, S)
+    # bw[n,u,t] = sum_v w[u,v] b[n,v,t]  -- one (S,S)x(S,T) dot per n row,
+    # expressed as a single dot_general so the MXU sees full tiles.
+    bw = jax.lax.dot_general(
+        b, w, dimension_numbers=(((1,), (1,)), ((), ()))
+    )  # (bn, T, S) contracted over v
+    bw = jnp.transpose(bw, (0, 2, 1))  # (bn, S, T)
+    # K[q,n] = sum_{u,t} a[q,u,t] bw[n,u,t] -- flattened (u,t) matmul.
+    af = a.reshape(a.shape[0], -1)
+    bwf = bw.reshape(bw.shape[0], -1)
+    o_ref[...] = sigma2 * (af @ bwf.T)
+
+
+def layout_gram(a, b, w, sigma2=1.0, block_q=None, block_n=None):
+    """Pallas layout-Gram. a: (Q,S,T), b: (N,S,T), w: (S,S) -> (Q,N)."""
+    q, s, t = a.shape
+    n = b.shape[0]
+    bq = min(block_q or q, q)
+    bn = min(block_n or n, n)
+    assert q % bq == 0 and n % bn == 0, "block sizes must tile Q/N"
+    grid = (q // bq, n // bn)
+    return pl.pallas_call(
+        functools.partial(_layout_gram_kernel, sigma2=float(sigma2)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, s, t), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bn, s, t), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((s, s), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), a.dtype),
+        interpret=True,
+    )(a, b, w)
+
+
+def _layout_gram_diag_kernel(a_ref, w_ref, o_ref, *, sigma2):
+    a = a_ref[...]  # (bq, S, T)
+    w = w_ref[...]  # (S, S)
+    aw = jax.lax.dot_general(
+        a, w, dimension_numbers=(((1,), (1,)), ((), ()))
+    )  # (bq, T, S)
+    aw = jnp.transpose(aw, (0, 2, 1))
+    o_ref[...] = sigma2 * jnp.sum(a * aw, axis=(1, 2))
+
+
+def layout_gram_diag(a, w, sigma2=1.0, block_q=None):
+    """diag(layout_gram(a, a, w)) without forming the full Gram. -> (Q,)."""
+    q, s, t = a.shape
+    bq = min(block_q or q, q)
+    assert q % bq == 0
+    return pl.pallas_call(
+        functools.partial(_layout_gram_diag_kernel, sigma2=float(sigma2)),
+        grid=(q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, s, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), a.dtype),
+        interpret=True,
+    )(a, w)

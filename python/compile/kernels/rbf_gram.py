@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: ARD-RBF Gram for system parameters (K_sys, Eq. 2).
+
+    K[q, n] = exp(-0.5 * sum_d ((x[q,d] - y[n,d]) * inv_ls[d])^2)
+
+Blocked over the (q, n) output grid; the squared distance is expanded as
+|x|^2 - 2<x,y> + |y|^2 so the cross term is a single MXU dot per block.
+Zero inverse-lengthscales disable padded feature dimensions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_kernel(x_ref, y_ref, ils_ref, o_ref):
+    x = x_ref[...] * ils_ref[...][None, :]  # (bq, D)
+    y = y_ref[...] * ils_ref[...][None, :]  # (bn, D)
+    d2 = (
+        jnp.sum(x * x, axis=1)[:, None]
+        - 2.0 * (x @ y.T)
+        + jnp.sum(y * y, axis=1)[None, :]
+    )
+    o_ref[...] = jnp.exp(-0.5 * jnp.maximum(d2, 0.0))
+
+
+def rbf_gram(x, y, inv_ls, block_q=None, block_n=None):
+    """Pallas ARD-RBF Gram. x: (Q,D), y: (N,D), inv_ls: (D,) -> (Q,N)."""
+    q, d = x.shape
+    n = y.shape[0]
+    bq = min(block_q or q, q)
+    bn = min(block_n or n, n)
+    assert q % bq == 0 and n % bn == 0
+    return pl.pallas_call(
+        _rbf_kernel,
+        grid=(q // bq, n // bn),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), x.dtype),
+        interpret=True,
+    )(x, y, inv_ls)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+These implement Eq. 2-4 of the paper directly with jnp primitives and are
+the ground truth for pytest/hypothesis sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def layout_gram_ref(a, b, w, sigma2=1.0):
+    """Chiplet-layout kernel of Eq. 3.
+
+    K[q, n] = sigma2 * sum_t  a[q, :, t]^T  W  b[n, :, t]
+
+    a: (Q, S, T) one-hot layout grids (all-zero rows = empty slots)
+    b: (N, S, T)
+    w: (S, S) Manhattan-distance weight matrix (Eq. 4)
+    """
+    return sigma2 * jnp.einsum("qut,uv,nvt->qn", a, w, b)
+
+
+def layout_gram_diag_ref(a, w, sigma2=1.0):
+    """diag of layout_gram_ref(a, a, w): K[q] = sigma2 * sum_t a_t^T W a_t."""
+    return sigma2 * jnp.einsum("qut,uv,qvt->q", a, w, a)
+
+
+def rbf_gram_ref(x, y, inv_ls):
+    """ARD-RBF kernel for system parameters (K_sys in Eq. 2).
+
+    K[q, n] = exp(-0.5 * sum_d ((x[q,d]-y[n,d]) * inv_ls[d])^2)
+
+    x: (Q, D), y: (N, D), inv_ls: (D,) inverse lengthscales
+    (zero inverse-lengthscale disables a padded dimension).
+    """
+    xs = x * inv_ls[None, :]
+    ys = y * inv_ls[None, :]
+    d2 = (
+        jnp.sum(xs * xs, axis=1)[:, None]
+        - 2.0 * xs @ ys.T
+        + jnp.sum(ys * ys, axis=1)[None, :]
+    )
+    return jnp.exp(-0.5 * jnp.maximum(d2, 0.0))
+
+
+def shape_indicator_ref(sa, sb):
+    """1 + I(z_shape == z_shape') term of Eq. 2.
+
+    sa: (Q, 2) integer-valued (H, W) array dims as f32; sb: (N, 2).
+    """
+    eq = jnp.all(sa[:, None, :] == sb[None, :, :], axis=-1)
+    return 1.0 + eq.astype(sa.dtype)
+
+
+def composite_gram_ref(xsys, ysys, inv_ls, a, b, w, sa, sb, sigma2):
+    """Full hardware-aware composite kernel of Eq. 2."""
+    return (
+        rbf_gram_ref(xsys, ysys, inv_ls)
+        * shape_indicator_ref(sa, sb)
+        * layout_gram_ref(a, b, w, sigma2)
+    )
+
+
+def manhattan_weights_ref(coords, lam):
+    """Eq. 4 positional-similarity weights.
+
+    coords: (S, 2) slot (x, y) coordinates; padded slots may use any value
+    (their one-hot rows are zero so they never contribute).
+    """
+    d = jnp.abs(coords[:, None, :] - coords[None, :, :]).sum(-1)
+    return jnp.exp(-d / lam)

@@ -1,0 +1,170 @@
+"""L2: the GP surrogate compute graph of Compass' hardware sampling engine.
+
+The paper updates the Bayesian-optimization model parameters on an
+accelerator (A100 in their testbed); here that compute is expressed in JAX,
+calls the L1 Pallas kernels for the Gram hot-spot, and is AOT-lowered by
+aot.py into HLO artifacts that the Rust coordinator executes via PJRT:
+
+  composite_gram : Eq. 2  K = K_sys * (1 + I(shape=shape')) * K_layout
+  gram_diag      : K(z, z) for EI variance
+  gp_fit         : masked Cholesky fit  -> (alpha, L, mll)
+  gp_ei          : posterior mean/var + Expected Improvement (minimisation)
+
+All shapes are fixed (constants.py) and masked so one compiled executable
+serves the entire BO run. Masked training rows are replaced by identity
+rows in K so the Cholesky stays well-posed and masked entries contribute
+nothing to mean/var/mll.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .constants import BLOCK_N, BLOCK_Q
+
+
+# -- plain-HLO linear algebra -------------------------------------------
+# jax.lax.linalg.{cholesky,triangular_solve} lower to LAPACK FFI
+# custom-calls on CPU (lapack_spotrf_ffi / lapack_strsm_ffi) which the
+# runtime's xla_extension 0.5.1 cannot execute. These loop-based
+# implementations lower to pure HLO (while + dynamic slices); n is small
+# (TRAIN_N = 128) so the sequential loop is immaterial.
+
+
+def cholesky_hlo(a):
+    """Lower-Cholesky of a PD matrix, Cholesky-Crout column order."""
+    n = a.shape[0]
+    rows = jnp.arange(n)
+
+    def body(j, l):
+        lj = l[j]  # row j (columns >= j are still zero)
+        ljj = jnp.sqrt(jnp.maximum(a[j, j] - jnp.dot(lj, lj), 1e-20))
+        col = (a[:, j] - l @ lj) / ljj
+        col = jnp.where(rows > j, col, 0.0)
+        l = l + col[:, None] * (rows == j)[None, :].astype(a.dtype)
+        return l.at[j, j].set(ljj)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_lower_hlo(l, b):
+    """Solve L x = b for lower-triangular L; b may be (n,) or (n, q)."""
+    n = l.shape[0]
+    x0 = jnp.zeros_like(b)
+
+    def body(i, x):
+        xi = (b[i] - l[i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, x0)
+
+
+def solve_upper_t_hlo(l, b):
+    """Solve L^T x = b (backward substitution)."""
+    n = l.shape[0]
+    x0 = jnp.zeros_like(b)
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i] - l[:, i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, x0)
+
+
+def composite_gram(xsys, ysys, inv_ls, a, b, w, sa, sb, sigma2):
+    """Hardware-aware composite kernel (Eq. 2).
+
+    xsys: (Q, D) system-parameter features     ysys: (N, D)
+    inv_ls: (D,) inverse lengthscales (0 disables padded dims)
+    a: (Q, S, T) one-hot layouts               b: (N, S, T)
+    w: (S, S) Manhattan weights (Eq. 4, built by the coordinator)
+    sa: (Q, 2) (H, W) array dims               sb: (N, 2)
+    sigma2: () layout-kernel variance
+    -> (Q, N)
+    """
+    k_sys = kernels.rbf_gram(xsys, ysys, inv_ls, BLOCK_Q, BLOCK_N)
+    k_lay = kernels.layout_gram(a, b, w, 1.0, BLOCK_Q, BLOCK_N)
+    eq = jnp.all(sa[:, None, :] == sb[None, :, :], axis=-1)
+    ind = 1.0 + eq.astype(xsys.dtype)
+    return (k_sys * ind * k_lay * sigma2,)
+
+
+def gram_diag(a, w, sigma2):
+    """K(z, z) under Eq. 2: K_sys(z,z)=1, indicator=2, layout diag."""
+    d = kernels.layout_gram_diag(a, w, 1.0, BLOCK_Q)
+    return (2.0 * sigma2 * d,)
+
+
+def gp_fit(k, y, mask, noise):
+    """Masked GP fit.
+
+    k: (N, N) train Gram, y: (N,) observations (standardised by rust),
+    mask: (N,) {0,1}, noise: () observation noise variance.
+    Returns alpha: (N,), L: (N, N) lower Cholesky, mll: ().
+    """
+    n = k.shape[0]
+    mm = mask[:, None] * mask[None, :]
+    eye = jnp.eye(n, dtype=k.dtype)
+    # masked rows/cols -> identity; active diagonal gets noise + jitter
+    km = k * mm + eye * (1.0 - mask)[None, :] * (1.0 - mask)[:, None]
+    km = km + eye * (mask * (noise + 1e-6))[None, :]
+    # keep strictly: identity on masked diag, k+noise on active diag
+    chol = cholesky_hlo(km)
+    ym = y * mask
+    z = solve_lower_hlo(chol, ym)
+    alpha = solve_upper_t_hlo(chol, z)
+    n_act = jnp.sum(mask)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)) * mask)
+    mll = -0.5 * jnp.sum(ym * alpha) - 0.5 * logdet - 0.5 * n_act * jnp.log(
+        2.0 * jnp.pi
+    )
+    return alpha, chol, mll
+
+
+_SQRT2 = 1.4142135623730951
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def erf_hlo(x):
+    """Abramowitz-Stegun 7.1.26 erf (|err| < 1.5e-7): the `erf` HLO
+    opcode postdates the runtime's xla_extension 0.5.1 text parser, so
+    the CDF is built from elementary ops instead of jax.lax.erf."""
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t + 1.421413741) * t
+             - 0.284496736) * t + 0.254829592) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def gp_ei_fused(
+    xsys_c, a_c, s_c, xsys_t, a_t, s_t, inv_ls, w, sigma2, chol, alpha, mask, f_best
+):
+    """Fused acquisition step: candidate-vs-train composite Gram, prior
+    variances, posterior and EI in ONE executable — one PJRT dispatch per
+    SA step instead of three (gram_cross + gram_diag + gp_ei), and the
+    intermediate (Q, N) Gram never leaves the device (see EXPERIMENTS.md
+    #Perf, L2)."""
+    k_cross = composite_gram(xsys_c, xsys_t, inv_ls, a_c, a_t, w, s_c, s_t, sigma2)[0]
+    k_diag = gram_diag(a_c, w, sigma2)[0]
+    return gp_ei(k_cross, k_diag, chol, alpha, mask, f_best)
+
+
+def gp_ei(k_cross, k_diag, chol, alpha, mask, f_best):
+    """Posterior + Expected Improvement for minimisation.
+
+    k_cross: (Q, N) candidate-vs-train Gram, k_diag: (Q,) prior variances,
+    chol/alpha/mask from gp_fit, f_best: () incumbent (standardised).
+    Returns mean: (Q,), var: (Q,), ei: (Q,).
+    """
+    kc = k_cross * mask[None, :]
+    mean = kc @ alpha
+    v = solve_lower_hlo(chol, kc.T)  # (N, Q)
+    var = jnp.maximum(k_diag - jnp.sum(v * v, axis=0), 1e-10)
+    sd = jnp.sqrt(var)
+    zz = (f_best - mean) / sd
+    cdf = 0.5 * (1.0 + erf_hlo(zz / _SQRT2))
+    pdf = _INV_SQRT_2PI * jnp.exp(-0.5 * zz * zz)
+    ei = sd * (zz * cdf + pdf)
+    return mean, var, jnp.maximum(ei, 0.0)

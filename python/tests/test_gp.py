@@ -1,0 +1,165 @@
+"""L2 GP fit / EI graphs vs a plain-numpy reference implementation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import rbf_gram_ref
+
+
+def numpy_gp(k, y, noise):
+    """Dense-numpy reference GP fit (no masking)."""
+    n = k.shape[0]
+    km = k + np.eye(n) * (noise + 1e-6)
+    chol = np.linalg.cholesky(km)
+    alpha = np.linalg.solve(km, y)
+    logdet = 2.0 * np.log(np.diag(chol)).sum()
+    mll = -0.5 * y @ alpha - 0.5 * logdet - 0.5 * n * np.log(2 * np.pi)
+    return alpha, chol, mll
+
+
+def make_problem(n_act, n_pad, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_act, d)).astype(np.float32)
+    y = np.sin(x).sum(1).astype(np.float32)
+    ils = np.full(d, 0.8, np.float32)
+    k_act = np.asarray(rbf_gram_ref(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    n = n_act + n_pad
+    k = rng.normal(size=(n, n)).astype(np.float32)  # junk outside active block
+    k = k @ k.T  # keep symmetric junk
+    k[:n_act, :n_act] = k_act
+    yy = rng.normal(size=n).astype(np.float32)
+    yy[:n_act] = y
+    mask = np.zeros(n, np.float32)
+    mask[:n_act] = 1.0
+    return x, k, yy, mask, k_act, y
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_act=st.integers(2, 12), n_pad=st.integers(0, 8), seed=st.integers(0, 999))
+def test_masked_fit_matches_numpy_on_active_block(n_act, n_pad, seed):
+    _, k, y, mask, k_act, y_act = make_problem(n_act, n_pad, seed=seed)
+    noise = 0.01
+    alpha, chol, mll = model.gp_fit(
+        jnp.asarray(k), jnp.asarray(y), jnp.asarray(mask), jnp.float32(noise)
+    )
+    ref_alpha, _, ref_mll = numpy_gp(k_act.astype(np.float64), y_act, noise)
+    np.testing.assert_allclose(np.asarray(alpha)[:n_act], ref_alpha, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(alpha)[n_act:], 0.0, atol=1e-6)
+    assert float(mll) == pytest.approx(ref_mll, rel=2e-3, abs=2e-2)
+
+
+def test_padding_is_inert():
+    """Adding masked rows must not change alpha/mll of the active block."""
+    _, k0, y0, m0, _, _ = make_problem(8, 0, seed=3)
+    _, k1, y1, m1, _, _ = make_problem(8, 6, seed=3)
+    a0, _, mll0 = model.gp_fit(jnp.asarray(k0), jnp.asarray(y0), jnp.asarray(m0), jnp.float32(0.05))
+    a1, _, mll1 = model.gp_fit(jnp.asarray(k1), jnp.asarray(y1), jnp.asarray(m1), jnp.float32(0.05))
+    np.testing.assert_allclose(np.asarray(a0)[:8], np.asarray(a1)[:8], rtol=1e-4)
+    assert float(mll0) == pytest.approx(float(mll1), rel=1e-4)
+
+
+def test_posterior_interpolates_training_points():
+    """With tiny noise, posterior mean at train inputs ~= train targets."""
+    rng = np.random.default_rng(5)
+    d, n = 2, 10
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = (x**2).sum(1).astype(np.float32)
+    ils = np.full(d, 1.0, np.float32)
+    k = np.asarray(rbf_gram_ref(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    mask = np.ones(n, np.float32)
+    alpha, chol, _ = model.gp_fit(
+        jnp.asarray(k), jnp.asarray(y), jnp.asarray(mask), jnp.float32(1e-5)
+    )
+    mean, var, ei = model.gp_ei(
+        jnp.asarray(k),  # k_cross = train-vs-train
+        jnp.asarray(np.diag(k)),
+        chol,
+        alpha,
+        jnp.asarray(mask),
+        jnp.float32(float(y.min())),
+    )
+    np.testing.assert_allclose(np.asarray(mean), y, rtol=5e-2, atol=5e-2)
+    assert (np.asarray(var) < 1e-2).all()
+    # EI at noiseless training points is ~0 (no expected improvement)
+    assert (np.asarray(ei) < 1e-2).all()
+
+
+def test_ei_properties():
+    """EI >= 0; further-from-incumbent means with equal var -> lower EI."""
+    n, q = 6, 4
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    ils = np.ones(2, np.float32)
+    k = np.asarray(rbf_gram_ref(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    mask = np.ones(n, np.float32)
+    alpha, chol, _ = model.gp_fit(
+        jnp.asarray(k), jnp.asarray(y), jnp.asarray(mask), jnp.float32(0.01)
+    )
+    xq = rng.normal(size=(q, 2)).astype(np.float32)
+    kc = np.asarray(rbf_gram_ref(jnp.asarray(xq), jnp.asarray(x), jnp.asarray(ils)))
+    mean, var, ei = model.gp_ei(
+        jnp.asarray(kc),
+        jnp.ones(q, jnp.float32),
+        chol,
+        alpha,
+        jnp.asarray(mask),
+        jnp.float32(float(y.min())),
+    )
+    assert (np.asarray(ei) >= 0).all()
+    assert (np.asarray(var) > 0).all()
+
+
+def test_ei_monotone_in_incumbent():
+    """A worse incumbent (higher f_best for minimisation) raises EI."""
+    n = 5
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    ils = np.ones(2, np.float32)
+    k = np.asarray(rbf_gram_ref(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    mask = np.ones(n, np.float32)
+    alpha, chol, _ = model.gp_fit(
+        jnp.asarray(k), jnp.asarray(y), jnp.asarray(mask), jnp.float32(0.05)
+    )
+    xq = rng.normal(size=(3, 2)).astype(np.float32)
+    kc = jnp.asarray(np.asarray(rbf_gram_ref(jnp.asarray(xq), jnp.asarray(x), jnp.asarray(ils))))
+    kd = jnp.ones(3, jnp.float32)
+    _, _, ei_lo = model.gp_ei(kc, kd, chol, alpha, jnp.asarray(mask), jnp.float32(-1.0))
+    _, _, ei_hi = model.gp_ei(kc, kd, chol, alpha, jnp.asarray(mask), jnp.float32(1.0))
+    assert (np.asarray(ei_hi) >= np.asarray(ei_lo) - 1e-7).all()
+
+
+def test_composite_gram_combines_terms():
+    """Eq. 2: composite = rbf * (1 + shape indicator) * sigma2 * layout."""
+    from compile.kernels.ref import (
+        composite_gram_ref,
+        manhattan_weights_ref,
+    )
+
+    rng = np.random.default_rng(11)
+    q, n, d, s, t = 4, 4, 3, 9, 2
+    xs = rng.normal(size=(q, d)).astype(np.float32)
+    ys = rng.normal(size=(n, d)).astype(np.float32)
+    ils = np.full(d, 0.5, np.float32)
+    a = np.zeros((q, s, t), np.float32)
+    b = np.zeros((n, s, t), np.float32)
+    for i in range(q):
+        a[i, np.arange(s), rng.integers(0, t, s)] = 1.0
+    for i in range(n):
+        b[i, np.arange(s), rng.integers(0, t, s)] = 1.0
+    coords = np.array([(x_, y_) for y_ in range(3) for x_ in range(3)], np.float32)
+    w = np.asarray(manhattan_weights_ref(jnp.asarray(coords), 2.0))
+    sa = np.tile(np.array([[3.0, 3.0]], np.float32), (q, 1))
+    sb = np.tile(np.array([[3.0, 3.0]], np.float32), (n, 1))
+    sb[2] = [1.0, 9.0]  # different array dims -> indicator 1 not 2
+    got = model.composite_gram(
+        *map(jnp.asarray, (xs, ys, ils, a, b, w, sa, sb)), jnp.float32(1.7)
+    )[0]
+    want = composite_gram_ref(
+        *map(jnp.asarray, (xs, ys, ils, a, b, w, sa, sb)), 1.7
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

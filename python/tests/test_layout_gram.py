@@ -1,0 +1,143 @@
+"""L1 layout-Gram Pallas kernel vs pure-jnp oracle (Eq. 3/4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layout_gram, layout_gram_diag
+from compile.kernels.ref import (
+    layout_gram_diag_ref,
+    layout_gram_ref,
+    manhattan_weights_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def random_onehot(q, s, t, fill=0.7, rng=RNG):
+    """Random padded one-hot layouts: ~fill fraction of slots occupied."""
+    out = np.zeros((q, s, t), dtype=np.float32)
+    for i in range(q):
+        occ = rng.random(s) < fill
+        types = rng.integers(0, t, size=s)
+        out[i, np.arange(s)[occ], types[occ]] = 1.0
+    return out
+
+
+def grid_weights(h, w, lam=2.0):
+    coords = np.array([(x, y) for y in range(h) for x in range(w)], np.float32)
+    return np.asarray(manhattan_weights_ref(jnp.asarray(coords), lam))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([1, 2, 4, 8]),
+    s=st.sampled_from([4, 9, 16]),
+    t=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_hypothesis(q, n, s, t, seed):
+    rng = np.random.default_rng(seed)
+    a = random_onehot(q, s, t, rng=rng)
+    b = random_onehot(n, s, t, rng=rng)
+    side = int(np.sqrt(s))
+    w = grid_weights(side, s // side, lam=1.5)
+    got = layout_gram(jnp.asarray(a), jnp.asarray(b), jnp.asarray(w))
+    want = layout_gram_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bn", [(2, 2), (4, 8), (8, 4)])
+def test_blocking_invariance(bq, bn):
+    """Result is independent of the BlockSpec tiling."""
+    a = random_onehot(8, 16, 4)
+    b = random_onehot(8, 16, 4)
+    w = grid_weights(4, 4)
+    full = layout_gram(jnp.asarray(a), jnp.asarray(b), jnp.asarray(w))
+    tiled = layout_gram(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(w), block_q=bq, block_n=bn
+    )
+    np.testing.assert_allclose(full, tiled, rtol=1e-6)
+
+
+def test_sigma2_scales_linearly():
+    a = random_onehot(4, 16, 4)
+    w = grid_weights(4, 4)
+    k1 = layout_gram(jnp.asarray(a), jnp.asarray(a), jnp.asarray(w), sigma2=1.0)
+    k3 = layout_gram(jnp.asarray(a), jnp.asarray(a), jnp.asarray(w), sigma2=3.0)
+    np.testing.assert_allclose(3.0 * np.asarray(k1), k3, rtol=1e-5)
+
+
+def test_symmetry_self_gram():
+    a = random_onehot(6, 16, 4)
+    w = grid_weights(4, 4)  # symmetric by construction
+    k = np.asarray(layout_gram(jnp.asarray(a), jnp.asarray(a), jnp.asarray(w)))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5)
+
+
+def test_empty_slots_contribute_nothing():
+    """All-zero one-hot rows (padding) must not affect the Gram."""
+    a = random_onehot(4, 16, 4)
+    b = random_onehot(4, 16, 4)
+    w = grid_weights(4, 4)
+    base = layout_gram(jnp.asarray(a), jnp.asarray(b), jnp.asarray(w))
+    # grow S with empty padding slots
+    ap = np.concatenate([a, np.zeros((4, 8, 4), np.float32)], axis=1)
+    bp = np.concatenate([b, np.zeros((4, 8, 4), np.float32)], axis=1)
+    wp = np.zeros((24, 24), np.float32)
+    wp[:16, :16] = w
+    wp[16:, 16:] = 1.0  # junk weights on padded slots
+    padded = layout_gram(jnp.asarray(ap), jnp.asarray(bp), jnp.asarray(wp))
+    np.testing.assert_allclose(base, padded, rtol=1e-5)
+
+
+def test_identical_layouts_maximize_similarity():
+    """For identity W, K(a,a) counts occupied slots; mismatches score less."""
+    s, t = 16, 2
+    a = np.zeros((1, s, t), np.float32)
+    a[0, :, 0] = 1.0  # all WS
+    b = np.array(a)
+    b[0, :8, 0] = 0.0
+    b[0, :8, 1] = 1.0  # half flipped to OS
+    w = np.eye(s, dtype=np.float32)
+    kaa = float(layout_gram(jnp.asarray(a), jnp.asarray(a), jnp.asarray(w))[0, 0])
+    kab = float(layout_gram(jnp.asarray(a), jnp.asarray(b), jnp.asarray(w))[0, 0])
+    assert kaa == pytest.approx(16.0)
+    assert kab == pytest.approx(8.0)
+    assert kab < kaa
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    q=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([4, 16]),
+    t=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_diag_matches_ref(q, s, t, seed):
+    rng = np.random.default_rng(seed)
+    a = random_onehot(q, s, t, rng=rng)
+    side = int(np.sqrt(s))
+    w = grid_weights(side, s // side)
+    got = layout_gram_diag(jnp.asarray(a), jnp.asarray(w), sigma2=2.0)
+    want = layout_gram_diag_ref(jnp.asarray(a), jnp.asarray(w), sigma2=2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_diag_consistent_with_full_gram():
+    a = random_onehot(8, 16, 4)
+    w = grid_weights(4, 4)
+    full = np.asarray(layout_gram(jnp.asarray(a), jnp.asarray(a), jnp.asarray(w)))
+    diag = np.asarray(layout_gram_diag(jnp.asarray(a), jnp.asarray(w)))
+    np.testing.assert_allclose(np.diag(full), diag, rtol=1e-5)
+
+
+def test_manhattan_weights_properties():
+    w = grid_weights(4, 4, lam=2.0)
+    assert w.shape == (16, 16)
+    np.testing.assert_allclose(np.diag(w), 1.0)  # zero distance
+    assert (w > 0).all() and (w <= 1.0).all()
+    # adjacent slots weigh more than diagonal neighbours
+    assert w[0, 1] > w[0, 5]

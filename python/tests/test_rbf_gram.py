@@ -1,0 +1,77 @@
+"""L1 ARD-RBF Pallas kernel vs pure-jnp oracle (K_sys of Eq. 2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rbf_gram
+from compile.kernels.ref import rbf_gram_ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.sampled_from([1, 2, 4, 8, 16]),
+    n=st.sampled_from([1, 2, 4, 8, 16]),
+    d=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_hypothesis(q, n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(q, d)).astype(np.float32)
+    y = rng.normal(size=(n, d)).astype(np.float32)
+    ils = rng.uniform(0.1, 2.0, size=d).astype(np.float32)
+    got = rbf_gram(jnp.asarray(x), jnp.asarray(y), jnp.asarray(ils))
+    want = rbf_gram_ref(jnp.asarray(x), jnp.asarray(y), jnp.asarray(ils))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_self_similarity_is_one():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+    ils = np.full(4, 0.7, np.float32)
+    k = np.asarray(rbf_gram(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-5)
+
+
+def test_bounds_and_symmetry():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    ils = rng.uniform(0.2, 1.0, size=8).astype(np.float32)
+    k = np.asarray(rbf_gram(jnp.asarray(x), jnp.asarray(x), jnp.asarray(ils)))
+    assert (k > 0).all() and (k <= 1.0 + 1e-6).all()
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_inverse_lengthscale_disables_dim():
+    """Padded feature dims (inv_ls = 0) must not affect similarity."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 4)).astype(np.float32)
+    y = rng.normal(size=(4, 4)).astype(np.float32)
+    ils = np.array([1.0, 1.0, 0.0, 0.0], np.float32)
+    x2 = np.array(x)
+    x2[:, 2:] = 999.0  # junk in disabled dims
+    k1 = rbf_gram(jnp.asarray(x), jnp.asarray(y), jnp.asarray(ils))
+    k2 = rbf_gram(jnp.asarray(x2), jnp.asarray(y), jnp.asarray(ils))
+    np.testing.assert_allclose(k1, k2, rtol=1e-5)
+
+
+def test_similarity_decays_with_distance():
+    x = np.zeros((1, 2), np.float32)
+    ys = np.array([[0.5, 0.0], [1.0, 0.0], [2.0, 0.0]], np.float32)
+    ils = np.ones(2, np.float32)
+    k = np.asarray(rbf_gram(jnp.asarray(x), jnp.asarray(ys), jnp.asarray(ils)))[0]
+    assert k[0] > k[1] > k[2]
+
+
+@pytest.mark.parametrize("bq,bn", [(2, 4), (4, 2), (8, 8)])
+def test_blocking_invariance(bq, bn):
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+    y = rng.normal(size=(8, 4)).astype(np.float32)
+    ils = np.ones(4, np.float32)
+    full = rbf_gram(jnp.asarray(x), jnp.asarray(y), jnp.asarray(ils))
+    tiled = rbf_gram(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(ils), block_q=bq, block_n=bn
+    )
+    np.testing.assert_allclose(full, tiled, rtol=1e-6)

@@ -1,0 +1,72 @@
+//! Technology constants (TSMC-12nm-era, Simba/Gemini-calibrated).
+//!
+//! Only *relative* latency/energy/cost across candidate designs drives the
+//! paper's conclusions; the absolute values below are public-literature
+//! figures for a 12 nm process with GRS-based NoP and organic-substrate
+//! packaging (see DESIGN.md "Substitutions").
+
+/// Clock frequency of every chiplet (paper: 1 GHz).
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Bytes per model element (fp16 weights/activations).
+pub const BYTES_PER_ELEM: u64 = 2;
+/// Bytes per partial sum (fp32 accumulation).
+pub const BYTES_PER_PSUM: u64 = 4;
+
+// ---- energy (picojoules) ----------------------------------------------
+/// Energy per MAC operation (fp16 multiply-accumulate, 12 nm).
+pub const E_MAC_PJ: f64 = 0.6;
+/// Energy per byte read/written at the global buffer (large SRAM).
+pub const E_GLB_PJ_BYTE: f64 = 1.4;
+/// Energy per byte in the local accumulator / register-file level.
+pub const E_REG_PJ_BYTE: f64 = 0.12;
+/// Energy per byte of off-package DRAM access.
+pub const E_DRAM_PJ_BYTE: f64 = 62.0;
+/// Energy per byte per NoP hop (GRS signalling + router).
+pub const E_NOP_PJ_BYTE_HOP: f64 = 2.6;
+/// Energy per scalar op in the post-processing (vector) unit.
+pub const E_VEC_PJ_OP: f64 = 0.9;
+
+// ---- latency ----------------------------------------------------------
+/// Router pipeline latency per NoP hop (cycles).
+pub const NOP_HOP_CYCLES: f64 = 4.0;
+/// Fixed DRAM access latency (cycles) added to bandwidth time.
+pub const DRAM_LAT_CYCLES: f64 = 120.0;
+
+// ---- area (mm^2) ------------------------------------------------------
+/// Area per MAC unit (fp16 datapath, 12 nm).
+pub const A_MAC_MM2: f64 = 0.0011 / 1.024; // ~1.07 mm^2 per 1K MACs
+/// Area per MiB of global-buffer SRAM.
+pub const A_SRAM_MM2_PER_MIB: f64 = 0.85;
+/// Fixed NoC / control / post-processing overhead per chiplet.
+pub const A_OTHERS_MM2: f64 = 1.9;
+/// alpha: chiplet area per GB/s of NoP bandwidth (PHY + router).
+pub const A_NOP_MM2_PER_GBS: f64 = 0.004;
+/// beta: IO-die area per GB/s of NoP bandwidth.
+pub const A_IO_NOP_MM2_PER_GBS: f64 = 0.006;
+/// gamma: IO-die area per GB/s of DRAM bandwidth (PHY).
+pub const A_IO_DRAM_MM2_PER_GBS: f64 = 0.035;
+
+// ---- monetary cost (Gemini yield model) --------------------------------
+/// Reference yield at the reference area.
+pub const Y_UNIT: f64 = 0.95;
+/// Reference area (mm^2) for `Y_UNIT`.
+pub const A_UNIT_MM2: f64 = 10.0;
+/// Yield of an IO die (mature process, fixed).
+pub const Y_IO: f64 = 0.98;
+/// Manufacturing cost per mm^2 of compute-chiplet silicon (normalised
+/// cost units, calibrated so a Simba-like 64-TOPS package lands at the
+/// Table-V reference scale of ~$2.4K).
+pub const COST_CHIP_PER_MM2: f64 = 11.0;
+/// Manufacturing cost per mm^2 of IO-die silicon (mature node).
+pub const COST_IO_PER_MM2: f64 = 5.0;
+/// Packaging cost per mm^2 of substrate area (organic substrate).
+pub const COST_PACK_PER_MM2: f64 = 0.8;
+/// Package substrate area per mm^2 of total silicon (fan-out factor).
+pub const PACKAGE_AREA_FACTOR: f64 = 3.2;
+
+/// Number of DRAM chips on the package (paper: 4, split left/right).
+pub const NUM_DRAM_CHIPS: usize = 4;
+
+/// Vector lanes in the post-processing unit, as a fraction of MACs.
+pub const VEC_LANES_PER_MAC: f64 = 1.0 / 16.0;

@@ -1,0 +1,385 @@
+//! Multi-chiplet accelerator hardware template (paper §III-B, Fig. 3).
+//!
+//! A package integrates an `H x W` grid of compute chiplets (possibly
+//! heterogeneous in dataflow), interconnected by a mesh NoP with XY
+//! routing; edge chiplets reach IO dies that bridge to off-package DRAM
+//! chips placed on the left/right package edges (paper: 4 DRAM chips).
+
+pub mod constants;
+
+
+use constants::*;
+
+/// Dataflow microarchitecture of a compute chiplet (paper Table IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Weight-stationary: weights resident in the PE array, inputs stream,
+    /// partial sums reduced in-array + accumulator buffer.
+    WeightStationary,
+    /// Output-stationary: partial sums resident in PE registers, weights
+    /// and inputs both stream through the array.
+    OutputStationary,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 2] = [Dataflow::WeightStationary, Dataflow::OutputStationary];
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Dataflow::WeightStationary => "WS",
+            Dataflow::OutputStationary => "OS",
+        }
+    }
+}
+
+/// Compute-capacity point from the pre-built chiplet library (Table IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChipletClass {
+    /// 1K MACs, 2 MiB GLB (32x32 array)
+    S,
+    /// 4K MACs, 8 MiB GLB (64x64 array)
+    M,
+    /// 16K MACs, 32 MiB GLB (128x128 array)
+    L,
+}
+
+impl ChipletClass {
+    pub const ALL: [ChipletClass; 3] = [ChipletClass::S, ChipletClass::M, ChipletClass::L];
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            ChipletClass::S => "S",
+            ChipletClass::M => "M",
+            ChipletClass::L => "L",
+        }
+    }
+
+    /// MAC units per chiplet (also MACs per cycle at full utilization).
+    pub fn macs(&self) -> u64 {
+        match self {
+            ChipletClass::S => 1 << 10,
+            ChipletClass::M => 1 << 12,
+            ChipletClass::L => 1 << 14,
+        }
+    }
+
+    /// Square PE-array side (`macs = side * side`).
+    pub fn array_side(&self) -> u64 {
+        match self {
+            ChipletClass::S => 32,
+            ChipletClass::M => 64,
+            ChipletClass::L => 128,
+        }
+    }
+
+    /// Global-buffer capacity in bytes.
+    pub fn glb_bytes(&self) -> u64 {
+        match self {
+            ChipletClass::S => 2 << 20,
+            ChipletClass::M => 8 << 20,
+            ChipletClass::L => 32 << 20,
+        }
+    }
+
+    /// Peak TOPS at `CLOCK_HZ` (2 ops per MAC).
+    pub fn tops(&self) -> f64 {
+        2.0 * self.macs() as f64 * CLOCK_HZ / 1e12
+    }
+
+    /// Chiplets needed to reach `target_tops` total compute.
+    pub fn chiplets_for(&self, target_tops: f64) -> usize {
+        (target_tops / self.tops()).round().max(1.0) as usize
+    }
+
+    /// Silicon area of one chiplet with this class' MACs + GLB,
+    /// excluding the NoP-bandwidth-dependent term.
+    pub fn base_area_mm2(&self) -> f64 {
+        self.macs() as f64 * A_MAC_MM2
+            + (self.glb_bytes() as f64 / (1 << 20) as f64) * A_SRAM_MM2_PER_MIB
+            + A_OTHERS_MM2
+    }
+}
+
+/// One compute chiplet instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Chiplet {
+    pub class: ChipletClass,
+    pub dataflow: Dataflow,
+}
+
+/// Full hardware configuration: the joint tensor `Z = [z_sys, z_shape,
+/// z_layout]` of the hardware sampling engine (paper §V-B), plus the
+/// searched system parameters of Table IV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Grid height (z_shape.H).
+    pub grid_h: usize,
+    /// Grid width (z_shape.W).
+    pub grid_w: usize,
+    /// Uniform compute-capacity class of every chiplet (z_shape).
+    pub class: ChipletClass,
+    /// Per-slot dataflow assignment, row-major (z_layout).
+    pub layout: Vec<Dataflow>,
+    /// NoP link bandwidth, GB/s (z_sys).
+    pub nop_bw_gbs: f64,
+    /// Bandwidth per DRAM chip, GB/s (z_sys).
+    pub dram_bw_gbs: f64,
+    /// Micro-batch size used when instantiating prefill workloads (z_sys).
+    pub micro_batch_prefill: usize,
+    /// Micro-batch size for decode workloads (z_sys).
+    pub micro_batch_decode: usize,
+    /// Number of partitions for FFN layers (tensor parallelism, z_sys).
+    pub tensor_parallel: usize,
+}
+
+impl HwConfig {
+    /// Homogeneous configuration helper.
+    pub fn homogeneous(
+        grid_h: usize,
+        grid_w: usize,
+        class: ChipletClass,
+        dataflow: Dataflow,
+        nop_bw_gbs: f64,
+        dram_bw_gbs: f64,
+    ) -> Self {
+        HwConfig {
+            grid_h,
+            grid_w,
+            class,
+            layout: vec![dataflow; grid_h * grid_w],
+            nop_bw_gbs,
+            dram_bw_gbs,
+            micro_batch_prefill: 4,
+            micro_batch_decode: 64,
+            tensor_parallel: 8,
+        }
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.grid_h * self.grid_w
+    }
+
+    pub fn chiplet(&self, idx: usize) -> Chiplet {
+        Chiplet {
+            class: self.class,
+            dataflow: self.layout[idx],
+        }
+    }
+
+    /// (x, y) grid coordinate of chiplet `idx` (row-major).
+    pub fn coord(&self, idx: usize) -> (usize, usize) {
+        (idx % self.grid_w, idx / self.grid_w)
+    }
+
+    /// Manhattan hop count between two chiplets under XY mesh routing.
+    pub fn hops(&self, from: usize, to: usize) -> u64 {
+        let (x0, y0) = self.coord(from);
+        let (x1, y1) = self.coord(to);
+        (x0.abs_diff(x1) + y0.abs_diff(y1)) as u64
+    }
+
+    /// DRAM chips sit on the left/right package edges, split evenly
+    /// top/bottom (paper: 4 chips). Returns hop count from a chiplet to
+    /// the package-edge port of DRAM chip `dram_id`.
+    pub fn dram_hops(&self, chip: usize, dram_id: usize) -> u64 {
+        let (x, y) = self.coord(chip);
+        let half = (NUM_DRAM_CHIPS / 2).max(1);
+        let slot = dram_id % NUM_DRAM_CHIPS;
+        let left = slot < half;
+        // port row: distribute DRAM chips across the grid height
+        let band = self.grid_h.max(1).div_ceil(half);
+        let port_y = ((slot % half) * band + band / 2).min(self.grid_h.saturating_sub(1));
+        let x_hops = if left { x + 1 } else { self.grid_w - x };
+        (x_hops + y.abs_diff(port_y)) as u64
+    }
+
+    /// Nearest DRAM chip for a chiplet (used when the mapping does not
+    /// pin a layer to a specific DRAM id).
+    pub fn nearest_dram(&self, chip: usize) -> usize {
+        (0..NUM_DRAM_CHIPS)
+            .min_by_key(|&d| self.dram_hops(chip, d))
+            .unwrap_or(0)
+    }
+
+    pub fn total_tops(&self) -> f64 {
+        self.class.tops() * self.num_chiplets() as f64
+    }
+
+    pub fn count_dataflow(&self, df: Dataflow) -> usize {
+        self.layout.iter().filter(|&&d| d == df).count()
+    }
+
+    /// One-line description for reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}x{} {} | WS={} OS={} | NoP={}GB/s DRAM={}GB/s | mbp={} mbd={} tp={}",
+            self.grid_h,
+            self.grid_w,
+            self.class.short(),
+            self.count_dataflow(Dataflow::WeightStationary),
+            self.count_dataflow(Dataflow::OutputStationary),
+            self.nop_bw_gbs,
+            self.dram_bw_gbs,
+            self.micro_batch_prefill,
+            self.micro_batch_decode,
+            self.tensor_parallel,
+        )
+    }
+}
+
+/// Candidate values for the searched hardware parameters (paper Table IV).
+#[derive(Debug, Clone)]
+pub struct HwSpace {
+    pub classes: Vec<ChipletClass>,
+    pub dataflows: Vec<Dataflow>,
+    pub nop_bw_gbs: Vec<f64>,
+    pub dram_bw_gbs: Vec<f64>,
+    pub micro_batch_prefill: Vec<usize>,
+    pub micro_batch_decode: Vec<usize>,
+    pub tensor_parallel: Vec<usize>,
+    /// Total compute target (TOPS); fixes chiplet count per class.
+    pub target_tops: f64,
+    /// Upper bound on chiplets (rules out impractical S-chip seas).
+    pub max_chiplets: usize,
+}
+
+impl HwSpace {
+    /// The paper's Table-IV space at a given compute target.
+    pub fn paper(target_tops: f64) -> Self {
+        HwSpace {
+            classes: ChipletClass::ALL.to_vec(),
+            dataflows: Dataflow::ALL.to_vec(),
+            nop_bw_gbs: vec![32.0, 64.0, 128.0, 256.0, 512.0],
+            dram_bw_gbs: vec![16.0, 32.0, 64.0, 128.0, 256.0],
+            micro_batch_prefill: vec![1, 2, 4],
+            micro_batch_decode: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            tensor_parallel: vec![4, 8, 16, 32, 64],
+            target_tops,
+            max_chiplets: 256,
+        }
+    }
+
+    /// Grid dimensions (H, W) for `n` chiplets: the most-square
+    /// factorization, favouring wider-than-tall (DRAM on left/right).
+    pub fn grid_dims(n: usize) -> (usize, usize) {
+        let mut best = (1, n);
+        let mut best_gap = usize::MAX;
+        for h in 1..=n {
+            if n % h != 0 {
+                continue;
+            }
+            let w = n / h;
+            let gap = h.abs_diff(w);
+            if h <= w && gap < best_gap {
+                best_gap = gap;
+                best = (h, w);
+            }
+        }
+        best
+    }
+
+    /// Classes that satisfy `target_tops` within `max_chiplets`.
+    pub fn feasible_classes(&self) -> Vec<ChipletClass> {
+        self.classes
+            .iter()
+            .copied()
+            .filter(|c| c.chiplets_for(self.target_tops) <= self.max_chiplets)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_parameters_match_table_iv() {
+        assert_eq!(ChipletClass::S.macs(), 1024);
+        assert_eq!(ChipletClass::M.macs(), 4096);
+        assert_eq!(ChipletClass::L.macs(), 16384);
+        assert_eq!(ChipletClass::S.glb_bytes(), 2 * 1024 * 1024);
+        assert_eq!(ChipletClass::M.glb_bytes(), 8 * 1024 * 1024);
+        assert_eq!(ChipletClass::L.glb_bytes(), 32 * 1024 * 1024);
+    }
+
+    #[test]
+    fn tops_and_chiplet_counts() {
+        // L chiplet: 16K MACs * 2 ops * 1 GHz = 32.768 TOPS
+        assert!((ChipletClass::L.tops() - 32.768).abs() < 1e-9);
+        // 2048 TOPS needs 62.5 -> 63-ish L chiplets; rounds to 63
+        assert_eq!(ChipletClass::L.chiplets_for(2048.0), 63);
+        assert_eq!(ChipletClass::M.chiplets_for(64.0), 8);
+        assert_eq!(ChipletClass::S.chiplets_for(64.0), 31);
+    }
+
+    #[test]
+    fn grid_dims_near_square() {
+        assert_eq!(HwSpace::grid_dims(8), (2, 4));
+        assert_eq!(HwSpace::grid_dims(16), (4, 4));
+        assert_eq!(HwSpace::grid_dims(63), (7, 9));
+        assert_eq!(HwSpace::grid_dims(1), (1, 1));
+    }
+
+    #[test]
+    fn xy_hops_are_manhattan() {
+        let hw = HwConfig::homogeneous(
+            4,
+            4,
+            ChipletClass::M,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        assert_eq!(hw.hops(0, 0), 0);
+        assert_eq!(hw.hops(0, 3), 3); // same row
+        assert_eq!(hw.hops(0, 15), 6); // corner to corner
+        assert_eq!(hw.hops(5, 10), 2);
+    }
+
+    #[test]
+    fn dram_ports_on_edges() {
+        let hw = HwConfig::homogeneous(
+            4,
+            4,
+            ChipletClass::M,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        // chip 0 is top-left: DRAM 0 (left, upper band) must be closest
+        assert_eq!(hw.nearest_dram(0), 0);
+        // chip 15 bottom-right: a right-side DRAM must be nearest
+        assert!(hw.nearest_dram(15) >= 2);
+        // all hops positive (off-package access always crosses an edge)
+        for c in 0..16 {
+            for d in 0..4 {
+                assert!(hw.dram_hops(c, d) >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn feasible_classes_respect_cap() {
+        let mut space = HwSpace::paper(2048.0);
+        space.max_chiplets = 256;
+        let feas = space.feasible_classes();
+        // S would need 1000 chiplets at 2048 TOPS -> excluded
+        assert!(!feas.contains(&ChipletClass::S));
+        assert!(feas.contains(&ChipletClass::M));
+        assert!(feas.contains(&ChipletClass::L));
+    }
+
+    #[test]
+    fn describe_mentions_counts() {
+        let hw = HwConfig::homogeneous(
+            2,
+            4,
+            ChipletClass::L,
+            Dataflow::OutputStationary,
+            64.0,
+            32.0,
+        );
+        let d = hw.describe();
+        assert!(d.contains("OS=8") && d.contains("WS=0"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Baseline DSE methods (paper §VI-A baseline setup + §VI-G ablations),
+//! re-implemented on the Compass evaluation engine exactly as the paper
+//! adapted them ("both methods are adapted to convert into the mapping
+//! method of Compass"):
+//!
+//! * [`gemini`] — single-model DSE: simulated-annealing mapping search,
+//!   grid-searched *homogeneous* hardware, and a fixed (average) sequence
+//!   length with padding;
+//! * [`moham`]  — multi-model DSE: joint GA over hardware + mapping, each
+//!   micro-batch treated as an independent model (no merged batching);
+//! * [`scar`]   — SCAR-style heuristic mapping (load-balanced segment
+//!   placement) for the Fig. 11 ablation;
+//! * [`random`] — random mapping / random hardware search at matched
+//!   budgets for the Fig. 11 ablations.
+
+pub mod gemini;
+pub mod moham;
+pub mod random;
+pub mod scar;
+
+use crate::workload::serving::Scenario;
+use crate::workload::trace::Trace;
+use crate::workload::Request;
+
+/// Gemini's fixed-sequence-length view of a scenario: every request is
+/// padded/truncated to the trace average (paper: "we perform DSE with the
+/// average sequence length of the scenario").
+pub fn fixed_length_scenario(scenario: &Scenario, trace: &Trace) -> Scenario {
+    let mean_in = trace.mean_in().round().max(1.0) as u64;
+    let mean_ctx = (trace.mean_in() + 0.5 * trace.mean_out()).round().max(1.0) as u64;
+    let mut out = scenario.clone();
+    for g in out.groups.iter_mut() {
+        for r in g.batch.iter_mut() {
+            *r = match *r {
+                Request::Prefill { .. } => Request::prefill(mean_in),
+                Request::Decode { .. } => Request::decode(mean_ctx),
+            };
+        }
+    }
+    out.name = format!("{}-fixedlen", scenario.name);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::TraceSpec;
+
+    #[test]
+    fn fixed_length_pads_every_request() {
+        let trace = Trace::new(&TraceSpec::sharegpt(), 128, 1);
+        let scen = Scenario::decode(&trace, 16, 2);
+        let fixed = fixed_length_scenario(&scen, &trace);
+        let mut ctxs: Vec<u64> = fixed
+            .groups
+            .iter()
+            .flat_map(|g| g.batch.iter())
+            .map(|r| match r {
+                Request::Decode { ctx } => *ctx,
+                Request::Prefill { len, .. } => *len,
+            })
+            .collect();
+        ctxs.dedup();
+        assert_eq!(ctxs.len(), 1, "all requests must share one length");
+        // and the real scenario had variety
+        let mut real: Vec<u64> = scen
+            .groups
+            .iter()
+            .flat_map(|g| g.batch.iter())
+            .map(|r| r.kv_tokens())
+            .collect();
+        real.sort();
+        real.dedup();
+        assert!(real.len() > 4);
+    }
+}

@@ -1,0 +1,215 @@
+//! MOHaM-style baseline (paper §VI-A): multi-model hardware-mapping
+//! co-optimisation by a *joint* genetic algorithm, with every micro-batch
+//! treated as an independent model — i.e. `micro_batch_size = 1`, so the
+//! QKV-generation and FFN stages can never merge requests into one GEMM
+//! (the restriction the paper identifies as MOHaM's key limitation on
+//! LLM workloads).
+
+use crate::arch::{HwConfig, HwSpace};
+use crate::bo::sa::{inner_move, outer_move, random_config};
+use crate::cost::Evaluator;
+use crate::dse::MappingSearch;
+use crate::ga::{ops, GaConfig};
+use crate::mapping::Mapping;
+use crate::util::Rng;
+use crate::workload::serving::Scenario;
+use crate::workload::{build_workload, ModelSpec, WorkloadParams};
+
+/// A joint individual: hardware genes + one mapping per scenario group.
+#[derive(Clone)]
+struct Individual {
+    hw: HwConfig,
+    maps: Vec<Mapping>,
+}
+
+/// MOHaM workload view: micro-batch size forced to 1 for every group.
+fn moham_params(hw: &HwConfig, eval_blocks: usize) -> WorkloadParams {
+    WorkloadParams {
+        micro_batch_size: 1,
+        tensor_parallel: hw.tensor_parallel,
+        eval_blocks,
+    }
+}
+
+/// Joint GA over (hardware, mappings). The budget is
+/// `population x (generations + 1)` full evaluations, comparable to
+/// Compass' BO rounds x GA budget scaled down (paper matches wall-clock).
+pub fn moham_dse(
+    scenario: &Scenario,
+    model: &ModelSpec,
+    space: &HwSpace,
+    cfg: &GaConfig,
+    eval_blocks: usize,
+) -> (HwConfig, MappingSearch) {
+    let ev = Evaluator::new();
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x4d4f_4841_4d00);
+
+    let shapes = |hw: &HwConfig| -> Vec<(usize, usize)> {
+        scenario
+            .groups
+            .iter()
+            .map(|g| {
+                let w = build_workload(model, &g.batch, &moham_params(hw, eval_blocks));
+                (w.num_micro_batches(), w.layers_per_mb)
+            })
+            .collect()
+    };
+
+    let fitness = |ind: &Individual| -> f64 {
+        let mut latency = 0.0;
+        let mut energy = 0.0;
+        for (g, m) in scenario.groups.iter().zip(&ind.maps) {
+            let w = build_workload(model, &g.batch, &moham_params(&ind.hw, eval_blocks));
+            let r = ev.eval_batch(&w, &ind.hw, m);
+            latency += r.latency_cycles * g.weight;
+            energy += r.energy_pj * g.weight;
+        }
+        let mc = crate::cost::money::monetary_cost(&ind.hw).total;
+        (latency / crate::arch::constants::CLOCK_HZ) * (energy * 1e-12) * mc
+    };
+
+    let spawn = |rng: &mut Rng| -> Individual {
+        let hw = random_config(space, rng);
+        let maps = shapes(&hw)
+            .into_iter()
+            .map(|(r, c)| ops::random_mapping(r, c, hw.num_chiplets(), rng))
+            .collect();
+        Individual { hw, maps }
+    };
+
+    let mut pop: Vec<Individual> = (0..cfg.population).map(|_| spawn(&mut rng)).collect();
+    let mut fits: Vec<f64> = pop.iter().map(&fitness).collect();
+
+    for gen in 0..cfg.generations {
+        let phase = gen as f64 / cfg.generations.max(1) as f64;
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| fits[a].total_cmp(&fits[b]));
+        let mut next: Vec<Individual> = order
+            .iter()
+            .take(cfg.elites)
+            .map(|&i| pop[i].clone())
+            .collect();
+        let mut next_fits: Vec<f64> = order.iter().take(cfg.elites).map(|&i| fits[i]).collect();
+        while next.len() < cfg.population {
+            // tournament
+            let pick = |rng: &mut Rng, fits: &[f64]| {
+                let mut b = rng.gen_index(fits.len());
+                for _ in 1..cfg.tournament_k {
+                    let c = rng.gen_index(fits.len());
+                    if fits[c] < fits[b] {
+                        b = c;
+                    }
+                }
+                b
+            };
+            let pa = pick(&mut rng, &fits);
+            let pb = pick(&mut rng, &fits);
+            let mut child = pop[pa].clone();
+            // hardware genes: uniform crossover on sys, layout from one
+            // parent when shapes agree; then a mutation move
+            if pop[pb].hw.class == child.hw.class && rng.gen_bool(0.5) {
+                child.hw.layout = pop[pb].hw.layout.clone();
+            }
+            if rng.gen_bool(0.5) {
+                child.hw.nop_bw_gbs = pop[pb].hw.nop_bw_gbs;
+                child.hw.dram_bw_gbs = pop[pb].hw.dram_bw_gbs;
+            }
+            if rng.gen_bool(cfg.mutation_prob) {
+                child.hw = if rng.gen_bool(0.5) {
+                    outer_move(&child.hw, space, &mut rng)
+                } else {
+                    inner_move(&child.hw, space, &mut rng)
+                };
+            }
+            // mapping genes: crossover per group when shapes agree,
+            // else re-randomise to the new shape
+            let sh = shapes(&child.hw);
+            let chips = child.hw.num_chiplets();
+            let mut maps = Vec::with_capacity(sh.len());
+            for (gi, (r, c)) in sh.iter().enumerate() {
+                let a_ok = pop[pa].maps[gi].rows == *r && pop[pa].maps[gi].cols == *c;
+                let b_ok = pop[pb].maps[gi].rows == *r && pop[pb].maps[gi].cols == *c;
+                let mut m = match (a_ok, b_ok) {
+                    (true, true) => ops::crossover(&pop[pa].maps[gi], &pop[pb].maps[gi], &mut rng),
+                    (true, false) => pop[pa].maps[gi].clone(),
+                    (false, true) => pop[pb].maps[gi].clone(),
+                    (false, false) => ops::random_mapping(*r, *c, chips, &mut rng),
+                };
+                // clamp chip ids to the (possibly smaller) chip count
+                for g in m.layer_to_chip.iter_mut() {
+                    if *g as usize >= chips {
+                        *g = (*g as usize % chips) as u16;
+                    }
+                }
+                if rng.gen_bool(cfg.mutation_prob) {
+                    ops::mutate_layer_to_chip(&mut m, chips, phase, &mut rng);
+                }
+                maps.push(m);
+            }
+            child.maps = maps;
+            next_fits.push(fitness(&child));
+            next.push(child);
+        }
+        pop = next;
+        fits = next_fits;
+    }
+
+    let bi = (0..pop.len())
+        .min_by(|&a, &b| fits[a].total_cmp(&fits[b]))
+        .unwrap();
+    let best = pop[bi].clone();
+    let eval = {
+        // evaluate through the scenario path for a consistent report
+        let ev = Evaluator::new();
+        let mut hw1 = best.hw.clone();
+        hw1.micro_batch_prefill = 1;
+        hw1.micro_batch_decode = 1;
+        ev.eval_scenario(scenario, model, &hw1, &best.maps, eval_blocks)
+    };
+    (
+        best.hw.clone(),
+        MappingSearch {
+            mappings: best.maps,
+            eval,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{Trace, TraceSpec};
+
+    #[test]
+    fn moham_runs_and_respects_space() {
+        let trace = Trace::new(&TraceSpec::sharegpt(), 32, 4);
+        let scen = Scenario::prefill(&trace, 2, 1);
+        let model = ModelSpec::tiny();
+        let space = HwSpace::paper(64.0);
+        let cfg = GaConfig {
+            population: 6,
+            generations: 4,
+            ..GaConfig::tiny()
+        };
+        let (hw, ms) = moham_dse(&scen, &model, &space, &cfg, 1);
+        assert!(space.nop_bw_gbs.contains(&hw.nop_bw_gbs));
+        assert!(ms.eval.total_cost() > 0.0);
+        // every mapping row count equals the batch size (micro-batch 1)
+        assert_eq!(ms.mappings[0].rows, 2);
+    }
+
+    #[test]
+    fn moham_micro_batch_is_always_one() {
+        // the defining restriction: each request is an independent model
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let p = moham_params(&hw, 1);
+        assert_eq!(p.micro_batch_size, 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Random-search ablations (paper §VI-G, Fig. 11): replace the GA with
+//! random mapping sampling and/or the BO with random hardware sampling at
+//! identical evaluation budgets.
+
+use crate::arch::{HwConfig, HwSpace};
+use crate::bo::sa::random_config;
+use crate::bo::BoConfig;
+use crate::cost::{group_params, Evaluator};
+use crate::dse::MappingSearch;
+use crate::ga::{ops, GaConfig};
+use crate::util::Rng;
+use crate::workload::serving::Scenario;
+use crate::workload::{build_workload, ModelSpec};
+
+/// Random mapping search with the GA's evaluation budget.
+pub fn random_mappings(
+    scenario: &Scenario,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    ga: &GaConfig,
+    eval_blocks: usize,
+) -> MappingSearch {
+    let ev = Evaluator::new();
+    let budget = ga.population * (ga.generations + 1);
+    let chips = hw.num_chiplets();
+    let mut mappings = Vec::new();
+    for (gi, group) in scenario.groups.iter().enumerate() {
+        let params = group_params(hw, group.has_prefill, eval_blocks);
+        let w = build_workload(model, &group.batch, &params);
+        let mut rng = Rng::seed_from_u64(ga.seed.wrapping_add(777 + gi as u64));
+        let mut best = None;
+        let mut best_f = f64::INFINITY;
+        for _ in 0..budget {
+            let m = ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, chips, &mut rng);
+            let r = ev.eval_batch(&w, hw, &m);
+            let f = r.latency_cycles * r.energy_pj;
+            if f < best_f {
+                best_f = f;
+                best = Some(m);
+            }
+        }
+        mappings.push(best.unwrap());
+    }
+    let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);
+    MappingSearch { mappings, eval }
+}
+
+/// Random hardware search with the BO's round budget (mapping search
+/// still by `mapping_search`, so only the sampler is ablated).
+pub fn random_hardware<F: FnMut(&HwConfig) -> f64>(
+    space: &HwSpace,
+    bo: &BoConfig,
+    mut objective: F,
+) -> (HwConfig, f64) {
+    let mut rng = Rng::seed_from_u64(bo.seed ^ 0x52414e44);
+    let mut best: Option<(HwConfig, f64)> = None;
+    for _ in 0..bo.rounds {
+        let hw = random_config(space, &mut rng);
+        let y = objective(&hw);
+        if best.as_ref().map_or(true, |(_, b)| y < *b) {
+            best = Some((hw, y));
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{Trace, TraceSpec};
+
+    #[test]
+    fn random_mapping_search_returns_valid_best() {
+        let trace = Trace::new(&TraceSpec::sharegpt(), 32, 5);
+        let scen = Scenario::prefill(&trace, 2, 1);
+        let model = ModelSpec::tiny();
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let cfg = GaConfig {
+            population: 5,
+            generations: 3,
+            ..GaConfig::tiny()
+        };
+        let ms = random_mappings(&scen, &model, &hw, &cfg, 1);
+        assert!(ms.mappings[0].is_valid(4));
+        assert!(ms.eval.total_cost() > 0.0);
+    }
+
+    #[test]
+    fn random_hardware_returns_space_member() {
+        let space = HwSpace::paper(64.0);
+        let bo = BoConfig::tiny();
+        let (hw, y) = random_hardware(&space, &bo, |hw| hw.nop_bw_gbs + hw.dram_bw_gbs);
+        assert!(space.nop_bw_gbs.contains(&hw.nop_bw_gbs));
+        assert!(y >= 32.0 + 16.0);
+        // picks the minimum over its samples
+        assert!(y <= 512.0 + 256.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! SCAR-style heuristic mapping (paper §VI-G Fig. 11 ablation): the
+//! multi-model scheduling heuristic of SCAR migrated onto the Compass
+//! mapping representation — greedy load-balanced placement of layer
+//! segments with locality clustering (consecutive layers of a micro-batch
+//! stay on the same chiplet; chiplets are picked by
+//! least-accumulated-load first).
+
+use crate::arch::HwConfig;
+use crate::cost::dataflow::layer_cost;
+use crate::cost::{group_params, Evaluator};
+use crate::dse::MappingSearch;
+use crate::mapping::Mapping;
+use crate::workload::serving::Scenario;
+use crate::workload::{build_workload, ModelSpec, Workload};
+
+/// Build the SCAR-style mapping for one workload: split each micro-batch
+/// column into `num_chips`-sized contiguous segments and place each
+/// segment on the currently least-loaded chiplet (load measured by the
+/// intra-chiplet cost model).
+pub fn scar_mapping(workload: &Workload, hw: &HwConfig) -> Mapping {
+    let rows = workload.num_micro_batches();
+    let cols = workload.layers_per_mb;
+    let chips = hw.num_chiplets();
+    let mut m = Mapping::new(rows, cols);
+    // segment the model into chip-count-sized slabs (SCAR schedules at
+    // sub-model granularity); mark the boundaries in the encoding
+    let seg_len = cols.div_ceil(chips).max(1);
+    for i in 0..cols.saturating_sub(1) {
+        if (i + 1) % seg_len == 0 {
+            m.segmentation[i] = true;
+        }
+    }
+    let mut load = vec![0f64; chips];
+    for mb in 0..rows {
+        let layers = &workload.micro_batches[mb].layers;
+        let mut l = 0usize;
+        while l < cols {
+            let end = (l + seg_len).min(cols);
+            // cheapest-loaded chiplet takes the whole segment
+            let chip = (0..chips)
+                .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+                .unwrap();
+            for li in l..end {
+                m.set_chip(mb, li, chip as u16);
+                let c = layer_cost(
+                    &layers[li].kind,
+                    layers[li].vec_ops,
+                    hw.chiplet(chip),
+                    true,
+                );
+                load[chip] += c.cycles;
+            }
+            l = end;
+        }
+    }
+    m
+}
+
+/// SCAR mappings for a whole scenario (fixed hardware).
+pub fn scar_mappings(
+    scenario: &Scenario,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    eval_blocks: usize,
+) -> MappingSearch {
+    let ev = Evaluator::new();
+    let mappings: Vec<Mapping> = scenario
+        .groups
+        .iter()
+        .map(|g| {
+            let w = build_workload(model, &g.batch, &group_params(hw, g.has_prefill, eval_blocks));
+            scar_mapping(&w, hw)
+        })
+        .collect();
+    let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);
+    MappingSearch { mappings, eval }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::workload::{Request, WorkloadParams};
+
+    fn setup() -> (Workload, HwConfig) {
+        let model = ModelSpec::tiny();
+        let batch = vec![Request::prefill(64); 4];
+        let w = build_workload(
+            &model,
+            &batch,
+            &WorkloadParams {
+                micro_batch_size: 2,
+                tensor_parallel: 2,
+                eval_blocks: 2,
+            },
+        );
+        let hw = HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+        (w, hw)
+    }
+
+    #[test]
+    fn scar_mapping_is_valid_and_uses_multiple_chips() {
+        let (w, hw) = setup();
+        let m = scar_mapping(&w, &hw);
+        assert!(m.is_valid(4));
+        assert!(m.chips_used() > 1, "load balancing must spread work");
+    }
+
+    #[test]
+    fn segments_are_contiguous_on_one_chip() {
+        let (w, hw) = setup();
+        let m = scar_mapping(&w, &hw);
+        for mb in 0..m.rows {
+            for (s, e) in m.segments() {
+                let c = m.chip(mb, s);
+                assert!(
+                    (s..e).all(|l| m.chip(mb, l) == c),
+                    "segment [{s},{e}) split across chips"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let (w, hw) = setup();
+        let m = scar_mapping(&w, &hw);
+        let mut load = vec![0f64; 4];
+        for mb in 0..m.rows {
+            for l in 0..m.cols {
+                let node = &w.micro_batches[mb].layers[l];
+                let c = layer_cost(&node.kind, node.vec_ops, hw.chiplet(0), true);
+                load[m.chip(mb, l) as usize] += c.cycles;
+            }
+        }
+        let max = load.iter().cloned().fold(0.0, f64::max);
+        let min = load.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min > 0.0, "every chip must get work: {load:?}");
+        assert!(max / min < 20.0, "gross imbalance: {load:?}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Featurisation of hardware configurations for the GP composite kernel
+//! (paper Eq. 2-4), padded to the fixed AOT artifact shapes.
+//!
+//! * `z_sys`    → an `SYS_D` feature vector (log2-scaled discrete knobs);
+//! * `z_shape`  → the `(H, W)` pair for the indicator term;
+//! * `z_layout` → a one-hot `(SLOTS, TYPES)` grid. The actual `H x W`
+//!   grid is embedded top-left into the padded 16x16 slot grid so that
+//!   Manhattan distances (Eq. 4) are preserved; empty slots are all-zero
+//!   rows and contribute nothing to the layout kernel.
+
+use crate::arch::{ChipletClass, Dataflow, HwConfig};
+use crate::runtime::shapes::{SLOTS, SYS_D, TYPES};
+
+/// Side of the padded slot grid (`PAD_SIDE^2 == SLOTS`).
+pub const PAD_SIDE: usize = 16;
+
+/// Featurised hardware configuration.
+#[derive(Debug, Clone)]
+pub struct HwFeatures {
+    pub sys: [f32; SYS_D],
+    pub shape: [f32; 2],
+    /// Row-major `(SLOTS, TYPES)` one-hot layout.
+    pub layout: Vec<f32>,
+}
+
+/// Type index of a dataflow in the one-hot vocabulary.
+pub fn type_index(df: Dataflow) -> usize {
+    match df {
+        Dataflow::WeightStationary => 0,
+        Dataflow::OutputStationary => 1,
+    }
+}
+
+fn class_index(c: ChipletClass) -> f32 {
+    match c {
+        ChipletClass::S => 0.0,
+        ChipletClass::M => 1.0,
+        ChipletClass::L => 2.0,
+    }
+}
+
+/// Featurise one configuration.
+pub fn featurize(hw: &HwConfig) -> HwFeatures {
+    let mut sys = [0f32; SYS_D];
+    sys[0] = (hw.nop_bw_gbs as f32).log2();
+    sys[1] = (hw.dram_bw_gbs as f32).log2();
+    sys[2] = (hw.micro_batch_prefill.max(1) as f32).log2();
+    sys[3] = (hw.micro_batch_decode.max(1) as f32).log2();
+    sys[4] = (hw.tensor_parallel.max(1) as f32).log2();
+    sys[5] = class_index(hw.class);
+    // sys[6], sys[7] reserved (zero; disabled via zero inverse lengthscale)
+
+    let mut layout = vec![0f32; SLOTS * TYPES];
+    for y in 0..hw.grid_h.min(PAD_SIDE) {
+        for x in 0..hw.grid_w.min(PAD_SIDE) {
+            let src = y * hw.grid_w + x;
+            let dst = y * PAD_SIDE + x;
+            layout[dst * TYPES + type_index(hw.layout[src])] = 1.0;
+        }
+    }
+    HwFeatures {
+        sys,
+        shape: [hw.grid_h as f32, hw.grid_w as f32],
+        layout,
+    }
+}
+
+/// Inverse lengthscales for the sys-RBF kernel: a single learned scale
+/// applied to the active dims, zero on padding.
+pub fn inv_lengthscales(ls: f32) -> [f32; SYS_D] {
+    let mut out = [0f32; SYS_D];
+    for item in out.iter_mut().take(6) {
+        *item = 1.0 / ls.max(1e-3);
+    }
+    out
+}
+
+/// Manhattan positional-similarity weights over the padded grid
+/// (Eq. 4): `W[u, v] = exp(-(|x_u - x_v| + |y_u - y_v|) / lambda)`.
+pub fn manhattan_weights(lambda: f32) -> Vec<f32> {
+    let mut w = vec![0f32; SLOTS * SLOTS];
+    for u in 0..SLOTS {
+        let (xu, yu) = ((u % PAD_SIDE) as i32, (u / PAD_SIDE) as i32);
+        for v in 0..SLOTS {
+            let (xv, yv) = ((v % PAD_SIDE) as i32, (v / PAD_SIDE) as i32);
+            let d = (xu - xv).abs() + (yu - yv).abs();
+            w[u * SLOTS + v] = (-(d as f32) / lambda.max(1e-3)).exp();
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwConfig;
+
+    fn hw() -> HwConfig {
+        let mut h = HwConfig::homogeneous(2, 4, ChipletClass::M, Dataflow::WeightStationary, 64.0, 32.0);
+        h.layout[3] = Dataflow::OutputStationary;
+        h.layout[5] = Dataflow::OutputStationary;
+        h
+    }
+
+    #[test]
+    fn one_hot_layout_counts_match() {
+        let f = featurize(&hw());
+        let total: f32 = f.layout.iter().sum();
+        assert_eq!(total, 8.0); // 8 occupied slots
+        let os: f32 = (0..SLOTS).map(|u| f.layout[u * TYPES + 1]).sum();
+        assert_eq!(os, 2.0);
+    }
+
+    #[test]
+    fn layout_preserves_grid_geometry() {
+        let f = featurize(&hw());
+        // grid (2,4): slot (x=3, y=0) -> padded index 3; (x=1, y=1) -> 17
+        assert_eq!(f.layout[3 * TYPES + 1], 1.0); // OS at x=3,y=0
+        assert_eq!(f.layout[(PAD_SIDE + 1) * TYPES + 1], 1.0); // OS at x=1,y=1
+        // everything outside the 2x4 block is empty
+        for y in 2..PAD_SIDE {
+            for x in 0..PAD_SIDE {
+                let u = y * PAD_SIDE + x;
+                assert!(f.layout[u * TYPES..(u + 1) * TYPES].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn sys_features_log_scaled() {
+        let f = featurize(&hw());
+        assert_eq!(f.sys[0], 6.0); // log2 64
+        assert_eq!(f.sys[1], 5.0); // log2 32
+        assert_eq!(f.sys[5], 1.0); // class M
+        assert_eq!(f.sys[6], 0.0);
+        assert_eq!(f.shape, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn manhattan_weights_match_eq4() {
+        let w = manhattan_weights(2.0);
+        assert_eq!(w.len(), SLOTS * SLOTS);
+        assert_eq!(w[0], 1.0); // self distance 0
+        let d1 = w[1]; // (0,0) -> (1,0): distance 1
+        assert!((d1 - (-0.5f32).exp()).abs() < 1e-6);
+        // symmetric
+        for u in [0usize, 17, 100] {
+            for v in [3usize, 40, 255] {
+                assert_eq!(w[u * SLOTS + v], w[v * SLOTS + u]);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_lengthscales_disable_padding() {
+        let ils = inv_lengthscales(2.0);
+        assert!(ils[..6].iter().all(|&x| (x - 0.5).abs() < 1e-6));
+        assert_eq!(ils[6], 0.0);
+        assert_eq!(ils[7], 0.0);
+    }
+}

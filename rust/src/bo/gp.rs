@@ -1,0 +1,572 @@
+//! The GP surrogate of the hardware sampling engine (paper §V-B-2).
+//!
+//! Two interchangeable backends compute identical math:
+//!
+//! * [`PjrtGp`] — the shipped path: composite-kernel Gram, masked
+//!   Cholesky fit, and batched Expected Improvement are executed as the
+//!   AOT-lowered JAX/Pallas artifacts through the PJRT runtime (the
+//!   paper updates its BO model on an accelerator; see DESIGN.md).
+//! * [`NativeGp`] — a pure-Rust mirror used for cross-validation tests
+//!   and as a fallback when `artifacts/` has not been built.
+
+use anyhow::Result;
+
+use crate::runtime::shapes::{CAND_Q, SLOTS, SYS_D, TRAIN_N, TYPES};
+use crate::runtime::Runtime;
+
+use super::features::{inv_lengthscales, manhattan_weights, HwFeatures};
+
+/// GP kernel hyperparameters (learned by MLL grid search during BO).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyper {
+    /// Layout-kernel variance sigma^2 (Eq. 3).
+    pub sigma2: f32,
+    /// Layout length scale lambda (Eq. 4).
+    pub lambda: f32,
+    /// Sys-RBF lengthscale.
+    pub ls: f32,
+    /// Observation noise variance.
+    pub noise: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            sigma2: 0.05,
+            lambda: 2.0,
+            ls: 2.0,
+            noise: 1e-3,
+        }
+    }
+}
+
+/// Posterior + acquisition for one candidate batch.
+#[derive(Debug, Clone)]
+pub struct EiBatch {
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub ei: Vec<f32>,
+}
+
+/// A fitted surrogate able to score candidate batches.
+pub trait Gp {
+    /// Fit on `n` observations (features + standardised objectives).
+    /// Returns the log marginal likelihood.
+    fn fit(&mut self, xs: &[HwFeatures], ys: &[f32], hyper: Hyper) -> Result<f32>;
+
+    /// Expected improvement of up to `CAND_Q` candidates against the
+    /// standardised incumbent `f_best` (minimisation).
+    fn ei(&self, cands: &[HwFeatures], f_best: f32) -> Result<EiBatch>;
+
+    fn backend(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// shared feature packing
+// ---------------------------------------------------------------------
+
+struct Packed {
+    sys: Vec<f32>,    // (rows, SYS_D)
+    layout: Vec<f32>, // (rows, SLOTS, TYPES)
+    shape: Vec<f32>,  // (rows, 2)
+    rows: usize,
+}
+
+fn pack(xs: &[HwFeatures], rows: usize) -> Packed {
+    assert!(xs.len() <= rows, "{} > {rows}", xs.len());
+    let mut sys = vec![0f32; rows * SYS_D];
+    let mut layout = vec![0f32; rows * SLOTS * TYPES];
+    let mut shape = vec![0f32; rows * 2];
+    for (i, x) in xs.iter().enumerate() {
+        sys[i * SYS_D..(i + 1) * SYS_D].copy_from_slice(&x.sys);
+        layout[i * SLOTS * TYPES..(i + 1) * SLOTS * TYPES].copy_from_slice(&x.layout);
+        shape[i * 2] = x.shape[0];
+        shape[i * 2 + 1] = x.shape[1];
+        // padding rows keep shape (0,0): they never match a real shape
+    }
+    Packed {
+        sys,
+        layout,
+        shape,
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------
+
+/// GP executed on the AOT artifacts through PJRT.
+pub struct PjrtGp<'rt> {
+    rt: &'rt Runtime,
+    hyper: Hyper,
+    train: Option<Packed>,
+    n_act: usize,
+    alpha: Vec<f32>,
+    chol: Vec<f32>,
+    mask: Vec<f32>,
+    w: Vec<f32>,
+}
+
+impl<'rt> PjrtGp<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtGp {
+            rt,
+            hyper: Hyper::default(),
+            train: None,
+            n_act: 0,
+            alpha: Vec::new(),
+            chol: Vec::new(),
+            mask: Vec::new(),
+            w: Vec::new(),
+        }
+    }
+}
+
+const N_I: i64 = TRAIN_N as i64;
+const Q_I: i64 = CAND_Q as i64;
+const S_I: i64 = SLOTS as i64;
+const T_I: i64 = TYPES as i64;
+const D_I: i64 = SYS_D as i64;
+
+impl Gp for PjrtGp<'_> {
+    fn fit(&mut self, xs: &[HwFeatures], ys: &[f32], hyper: Hyper) -> Result<f32> {
+        assert_eq!(xs.len(), ys.len());
+        self.hyper = hyper;
+        self.n_act = xs.len().min(TRAIN_N);
+        let p = pack(&xs[..self.n_act], TRAIN_N);
+        self.w = manhattan_weights(hyper.lambda);
+        let ils = inv_lengthscales(hyper.ls);
+        let sigma2 = [hyper.sigma2];
+        let gram = self.rt.run_f32(
+            "gram_train",
+            &[
+                (&p.sys, &[N_I, D_I]),
+                (&p.sys, &[N_I, D_I]),
+                (&ils, &[D_I]),
+                (&p.layout, &[N_I, S_I, T_I]),
+                (&p.layout, &[N_I, S_I, T_I]),
+                (&self.w, &[S_I, S_I]),
+                (&p.shape, &[N_I, 2]),
+                (&p.shape, &[N_I, 2]),
+                (&sigma2, &[]),
+            ],
+        )?;
+        let k = &gram[0];
+        let mut y = vec![0f32; TRAIN_N];
+        y[..self.n_act].copy_from_slice(&ys[..self.n_act]);
+        let mut mask = vec![0f32; TRAIN_N];
+        for m in mask.iter_mut().take(self.n_act) {
+            *m = 1.0;
+        }
+        let noise = [hyper.noise];
+        let fit = self.rt.run_f32(
+            "gp_fit",
+            &[
+                (k, &[N_I, N_I]),
+                (&y, &[N_I]),
+                (&mask, &[N_I]),
+                (&noise, &[]),
+            ],
+        )?;
+        self.alpha = fit[0].clone();
+        self.chol = fit[1].clone();
+        let mll = fit[2][0];
+        self.mask = mask;
+        self.train = Some(p);
+        Ok(mll)
+    }
+
+    fn ei(&self, cands: &[HwFeatures], f_best: f32) -> Result<EiBatch> {
+        let train = self
+            .train
+            .as_ref()
+            .expect("fit must be called before ei");
+        let q_act = cands.len().min(CAND_Q);
+        let c = pack(&cands[..q_act], CAND_Q);
+        let ils = inv_lengthscales(self.hyper.ls);
+        let sigma2 = [self.hyper.sigma2];
+        let fb = [f_best];
+        // fused acquisition: one dispatch per SA step (gram + diag + EI);
+        // the 3-call path remains as a fallback for pre-fusion artifacts
+        if self.rt.artifacts_dir().join("ei_fused.hlo.txt").exists() {
+            let out = self.rt.run_f32(
+                "ei_fused",
+                &[
+                    (&c.sys, &[Q_I, D_I]),
+                    (&c.layout, &[Q_I, S_I, T_I]),
+                    (&c.shape, &[Q_I, 2]),
+                    (&train.sys, &[N_I, D_I]),
+                    (&train.layout, &[N_I, S_I, T_I]),
+                    (&train.shape, &[N_I, 2]),
+                    (&ils, &[D_I]),
+                    (&self.w, &[S_I, S_I]),
+                    (&sigma2, &[]),
+                    (&self.chol, &[N_I, N_I]),
+                    (&self.alpha, &[N_I]),
+                    (&self.mask, &[N_I]),
+                    (&fb, &[]),
+                ],
+            )?;
+            return Ok(EiBatch {
+                mean: out[0][..q_act].to_vec(),
+                var: out[1][..q_act].to_vec(),
+                ei: out[2][..q_act].to_vec(),
+            });
+        }
+        let cross = self.rt.run_f32(
+            "gram_cross",
+            &[
+                (&c.sys, &[Q_I, D_I]),
+                (&train.sys, &[N_I, D_I]),
+                (&ils, &[D_I]),
+                (&c.layout, &[Q_I, S_I, T_I]),
+                (&train.layout, &[N_I, S_I, T_I]),
+                (&self.w, &[S_I, S_I]),
+                (&c.shape, &[Q_I, 2]),
+                (&train.shape, &[N_I, 2]),
+                (&sigma2, &[]),
+            ],
+        )?;
+        let diag = self.rt.run_f32(
+            "gram_diag",
+            &[
+                (&c.layout, &[Q_I, S_I, T_I]),
+                (&self.w, &[S_I, S_I]),
+                (&sigma2, &[]),
+            ],
+        )?;
+        let out = self.rt.run_f32(
+            "gp_ei",
+            &[
+                (&cross[0], &[Q_I, N_I]),
+                (&diag[0], &[Q_I]),
+                (&self.chol, &[N_I, N_I]),
+                (&self.alpha, &[N_I]),
+                (&self.mask, &[N_I]),
+                (&fb, &[]),
+            ],
+        )?;
+        Ok(EiBatch {
+            mean: out[0][..q_act].to_vec(),
+            var: out[1][..q_act].to_vec(),
+            ei: out[2][..q_act].to_vec(),
+        })
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------
+// native backend (f64 mirror)
+// ---------------------------------------------------------------------
+
+/// Pure-Rust GP identical in math to the artifacts (used for tests and
+/// as an artifact-less fallback).
+#[derive(Default)]
+pub struct NativeGp {
+    hyper: Hyper,
+    xs: Vec<HwFeatures>,
+    w: Vec<f32>,
+    alpha: Vec<f64>,
+    chol: Vec<f64>, // n x n lower
+    n: usize,
+}
+
+impl NativeGp {
+    pub fn new() -> Self {
+        NativeGp {
+            hyper: Hyper::default(),
+            ..Default::default()
+        }
+    }
+
+    /// Composite kernel of Eq. 2 between two feature sets.
+    fn kernel(&self, a: &HwFeatures, b: &HwFeatures) -> f64 {
+        let ils = inv_lengthscales(self.hyper.ls);
+        // K_sys: ARD RBF
+        let mut d2 = 0f64;
+        for d in 0..SYS_D {
+            let x = ((a.sys[d] - b.sys[d]) * ils[d]) as f64;
+            d2 += x * x;
+        }
+        let k_sys = (-0.5 * d2).exp();
+        // indicator
+        let ind = if a.shape == b.shape { 2.0 } else { 1.0 };
+        // layout kernel
+        let mut k_lay = 0f64;
+        for u in 0..SLOTS {
+            for t in 0..TYPES {
+                let au = a.layout[u * TYPES + t];
+                if au == 0.0 {
+                    continue;
+                }
+                for v in 0..SLOTS {
+                    let bv = b.layout[v * TYPES + t];
+                    if bv != 0.0 {
+                        k_lay += (au * bv * self.w[u * SLOTS + v]) as f64;
+                    }
+                }
+            }
+        }
+        k_sys * ind * (self.hyper.sigma2 as f64) * k_lay
+    }
+}
+
+/// Dense lower-Cholesky of a positive-definite matrix (row-major n x n).
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L x = b` (lower triangular).
+pub fn solve_lower(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut x = vec![0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Solve `L^T x = b`.
+pub fn solve_upper_t(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz-Stegun erf approximation (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+impl Gp for NativeGp {
+    fn fit(&mut self, xs: &[HwFeatures], ys: &[f32], hyper: Hyper) -> Result<f32> {
+        self.hyper = hyper;
+        self.w = manhattan_weights(hyper.lambda);
+        self.xs = xs.to_vec();
+        self.n = xs.len();
+        let n = self.n;
+        let mut k = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&xs[i], &xs[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += (hyper.noise + 1e-6) as f64;
+        }
+        let l = cholesky(&k, n)
+            .ok_or_else(|| anyhow::anyhow!("kernel matrix not positive definite"))?;
+        let y64: Vec<f64> = ys.iter().map(|&v| v as f64).collect();
+        let z = solve_lower(&l, &y64, n);
+        self.alpha = solve_upper_t(&l, &z, n);
+        let logdet: f64 = (0..n).map(|i| l[i * n + i].ln()).sum::<f64>() * 2.0;
+        let fit: f64 = y64.iter().zip(&self.alpha).map(|(y, a)| y * a).sum();
+        let mll = -0.5 * fit - 0.5 * logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+        self.chol = l;
+        Ok(mll as f32)
+    }
+
+    fn ei(&self, cands: &[HwFeatures], f_best: f32) -> Result<EiBatch> {
+        let n = self.n;
+        let mut mean = Vec::with_capacity(cands.len());
+        let mut var = Vec::with_capacity(cands.len());
+        let mut ei = Vec::with_capacity(cands.len());
+        for c in cands {
+            let kc: Vec<f64> = self.xs.iter().map(|x| self.kernel(c, x)).collect();
+            let m: f64 = kc.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+            let v = solve_lower(&self.chol, &kc, n);
+            let prior = self.kernel(c, c);
+            let s2 = (prior - v.iter().map(|x| x * x).sum::<f64>()).max(1e-10);
+            let sd = s2.sqrt();
+            let z = (f_best as f64 - m) / sd;
+            let e = (sd * (z * norm_cdf(z) + norm_pdf(z))).max(0.0);
+            mean.push(m as f32);
+            var.push(s2 as f32);
+            ei.push(e as f32);
+        }
+        Ok(EiBatch { mean, var, ei })
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow, HwConfig};
+    use crate::bo::features::featurize;
+    use crate::util::Rng;
+
+    fn random_hw(rng: &mut Rng) -> HwConfig {
+        let mut hw = HwConfig::homogeneous(
+            2,
+            4,
+            *rng.choose(&ChipletClass::ALL),
+            Dataflow::WeightStationary,
+            *rng.choose(&[32.0, 64.0, 128.0]),
+            *rng.choose(&[16.0, 32.0, 64.0]),
+        );
+        for d in hw.layout.iter_mut() {
+            *d = *rng.choose(&Dataflow::ALL);
+        }
+        hw.tensor_parallel = *rng.choose(&[4usize, 8, 16]);
+        hw
+    }
+
+    fn toy_data(n: usize, seed: u64) -> (Vec<HwFeatures>, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let xs: Vec<HwFeatures> = (0..n).map(|_| featurize(&random_hw(&mut rng))).collect();
+        // smooth objective of the features: correlated with sys dims + WS count
+        let ys: Vec<f32> = xs
+            .iter()
+            .map(|f| {
+                let ws: f32 = (0..SLOTS).map(|u| f.layout[u * TYPES]).sum();
+                (f.sys[0] - f.sys[1]) * 0.3 + ws * 0.1
+            })
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn cholesky_solves_linear_system() {
+        // A = M M^T positive definite
+        let m = [2.0, 0.0, 0.0, 1.0, 3.0, 0.0, 0.5, -1.0, 1.5];
+        let n = 3;
+        let mut a = vec![0f64; 9];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += m[i * n + k] * m[j * n + k];
+                }
+            }
+        }
+        let l = cholesky(&a, n).unwrap();
+        let b = [1.0, -2.0, 0.5];
+        let z = solve_lower(&l, &b, n);
+        let x = solve_upper_t(&l, &z, n);
+        // check A x = b
+        for i in 0..n {
+            let got: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        for (x, want) in [(0.0, 0.0), (1.0, 0.8427007929), (-1.0, -0.8427007929), (2.0, 0.9953222650)] {
+            assert!((erf(x) - want).abs() < 1e-6, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn native_gp_interpolates_and_ranks() {
+        let (xs, ys) = toy_data(16, 3);
+        let mut gp = NativeGp::new();
+        let mll = gp
+            .fit(&xs, &ys, Hyper { noise: 1e-4, ..Default::default() })
+            .unwrap();
+        assert!(mll.is_finite());
+        let batch = gp.ei(&xs, *ys.iter().min_by(|a, b| a.total_cmp(b)).unwrap()).unwrap();
+        // posterior mean at training points tracks targets
+        for (m, y) in batch.mean.iter().zip(&ys) {
+            assert!((m - y).abs() < 0.25, "mean {m} vs y {y}");
+        }
+        // variance at training points is small
+        assert!(batch.var.iter().all(|&v| v < 0.05));
+        assert!(batch.ei.iter().all(|&e| e >= 0.0));
+    }
+
+    #[test]
+    fn ei_rewards_unseen_regions() {
+        let (xs, ys) = toy_data(10, 5);
+        let mut gp = NativeGp::new();
+        gp.fit(&xs, &ys, Hyper::default()).unwrap();
+        let f_best = ys.iter().cloned().fold(f32::INFINITY, f32::min);
+        let train_ei = gp.ei(&xs[..4], f_best).unwrap();
+        // a far-away candidate (different shape, different sys) has more EI
+        let mut rng = Rng::seed_from_u64(99);
+        let mut far = random_hw(&mut rng);
+        far.grid_h = 4;
+        far.grid_w = 4;
+        far.layout = vec![Dataflow::OutputStationary; 16];
+        far.nop_bw_gbs = 512.0;
+        let far_f = featurize(&far);
+        let far_ei = gp.ei(std::slice::from_ref(&far_f), f_best).unwrap();
+        let max_train = train_ei.ei.iter().cloned().fold(0.0f32, f32::max);
+        assert!(
+            far_ei.ei[0] >= max_train * 0.5,
+            "unseen candidate EI {} should rival training EI {max_train}",
+            far_ei.ei[0]
+        );
+        assert!(far_ei.var[0] > train_ei.var.iter().cloned().fold(0.0f32, f32::max));
+    }
+
+    #[test]
+    fn identical_layouts_more_similar_than_different() {
+        let mut rng = Rng::seed_from_u64(1);
+        let hw = random_hw(&mut rng);
+        let fa = featurize(&hw);
+        let mut hw2 = hw.clone();
+        for d in hw2.layout.iter_mut() {
+            *d = Dataflow::OutputStationary;
+        }
+        let fb = featurize(&hw2);
+        let gp = {
+            let mut g = NativeGp::new();
+            let (xs, ys) = toy_data(4, 2);
+            g.fit(&xs, &ys, Hyper::default()).unwrap();
+            g
+        };
+        let kaa = gp.kernel(&fa, &fa);
+        let kab = gp.kernel(&fa, &fb);
+        assert!(kaa > kab, "self-similarity {kaa} must exceed cross {kab}");
+    }
+}

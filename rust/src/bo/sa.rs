@@ -1,0 +1,225 @@
+//! Two-tier simulated-annealing acquisition optimizer (paper §V-B-2).
+//!
+//! The design space is fully discrete, so EI cannot be maximised by
+//! gradients. The outer tier perturbs `z_shape` (chiplet class, hence
+//! grid dimension) and `z_sys` (bandwidths, micro-batch sizes, tensor
+//! parallelism); the inner tier refines `z_layout` with single-slot
+//! replacements or dual-slot swaps. A shape change triggers a layout
+//! reallocation onto the new grid.
+
+use crate::arch::{Dataflow, HwConfig, HwSpace};
+use crate::util::Rng;
+
+/// Draw a uniformly random configuration from the space.
+pub fn random_config(space: &HwSpace, rng: &mut Rng) -> HwConfig {
+    let classes = space.feasible_classes();
+    let class = *rng.choose(&classes);
+    let n = class.chiplets_for(space.target_tops).min(space.max_chiplets);
+    let (h, w) = HwSpace::grid_dims(n);
+    let mut hw = HwConfig {
+        grid_h: h,
+        grid_w: w,
+        class,
+        layout: (0..n).map(|_| *rng.choose(&space.dataflows)).collect(),
+        nop_bw_gbs: *rng.choose(&space.nop_bw_gbs),
+        dram_bw_gbs: *rng.choose(&space.dram_bw_gbs),
+        micro_batch_prefill: *rng.choose(&space.micro_batch_prefill),
+        micro_batch_decode: *rng.choose(&space.micro_batch_decode),
+        tensor_parallel: *rng.choose(&space.tensor_parallel),
+    };
+    // keep TP within the chiplet budget (a slice per chiplet at most)
+    hw.tensor_parallel = hw.tensor_parallel.min(n.max(1));
+    hw
+}
+
+/// Homogeneous seed designs: every feasible (class, dataflow) corner at
+/// median bandwidths. Seeding the BO initial design with these gives the
+/// surrogate the same well-understood anchor points a grid search starts
+/// from; the two-tier SA then explores heterogeneous refinements.
+pub fn homogeneous_seeds(space: &HwSpace) -> Vec<HwConfig> {
+    let mut out = Vec::new();
+    for class in space.feasible_classes() {
+        let n = class.chiplets_for(space.target_tops).min(space.max_chiplets);
+        let (h, w) = HwSpace::grid_dims(n);
+        for &df in &space.dataflows {
+            let mut hw = HwConfig::homogeneous(
+                h,
+                w,
+                class,
+                df,
+                space.nop_bw_gbs[space.nop_bw_gbs.len() / 2],
+                space.dram_bw_gbs[space.dram_bw_gbs.len() / 2],
+            );
+            hw.micro_batch_prefill = *space.micro_batch_prefill.last().unwrap_or(&1);
+            hw.micro_batch_decode = space.micro_batch_decode[space.micro_batch_decode.len() / 2];
+            hw.tensor_parallel =
+                space.tensor_parallel[space.tensor_parallel.len() / 2].min(n.max(1));
+            out.push(hw);
+        }
+    }
+    out
+}
+
+/// Outer-tier move: perturb one dimension of `z_shape` or `z_sys`.
+/// A class change reallocates the layout onto the new grid (paper: "if
+/// the array dimension changes, it triggers a reallocation mapping").
+pub fn outer_move(hw: &HwConfig, space: &HwSpace, rng: &mut Rng) -> HwConfig {
+    let mut next = hw.clone();
+    match rng.gen_index(6) {
+        0 => {
+            let classes = space.feasible_classes();
+            let class = *rng.choose(&classes);
+            if class != next.class {
+                let n = class.chiplets_for(space.target_tops).min(space.max_chiplets);
+                let (h, w) = HwSpace::grid_dims(n);
+                let old = next.layout.clone();
+                next.class = class;
+                next.grid_h = h;
+                next.grid_w = w;
+                // reallocation mapping: tile the old layout pattern over
+                // the new grid (preserves the WS/OS mix)
+                next.layout = (0..n).map(|i| old[i % old.len()]).collect();
+                next.tensor_parallel = next.tensor_parallel.min(n.max(1));
+            }
+        }
+        1 => next.nop_bw_gbs = *rng.choose(&space.nop_bw_gbs),
+        2 => next.dram_bw_gbs = *rng.choose(&space.dram_bw_gbs),
+        3 => next.micro_batch_prefill = *rng.choose(&space.micro_batch_prefill),
+        4 => next.micro_batch_decode = *rng.choose(&space.micro_batch_decode),
+        _ => {
+            next.tensor_parallel =
+                (*rng.choose(&space.tensor_parallel)).min(next.num_chiplets().max(1))
+        }
+    }
+    next
+}
+
+/// Inner-tier move: single-slot random replacement or dual-slot swap.
+pub fn inner_move(hw: &HwConfig, space: &HwSpace, rng: &mut Rng) -> HwConfig {
+    let mut next = hw.clone();
+    let n = next.layout.len();
+    if n == 0 {
+        return next;
+    }
+    if rng.gen_bool(0.5) {
+        let i = rng.gen_index(n);
+        next.layout[i] = *rng.choose(&space.dataflows);
+    } else if n >= 2 {
+        let i = rng.gen_index(n);
+        let mut j = rng.gen_index(n);
+        if i == j {
+            j = (j + 1) % n;
+        }
+        next.layout.swap(i, j);
+    }
+    next
+}
+
+/// One annealing proposal: outer with probability `p_outer`, else inner.
+pub fn propose(hw: &HwConfig, space: &HwSpace, p_outer: f64, rng: &mut Rng) -> HwConfig {
+    if rng.gen_bool(p_outer) {
+        outer_move(hw, space, rng)
+    } else {
+        inner_move(hw, space, rng)
+    }
+}
+
+/// Count the WS/OS mix (report helper).
+pub fn dataflow_mix(hw: &HwConfig) -> (usize, usize) {
+    (
+        hw.count_dataflow(Dataflow::WeightStationary),
+        hw.count_dataflow(Dataflow::OutputStationary),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> HwSpace {
+        HwSpace::paper(64.0)
+    }
+
+    #[test]
+    fn random_configs_respect_space() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(0);
+        for _ in 0..100 {
+            let hw = random_config(&sp, &mut rng);
+            assert!(sp.nop_bw_gbs.contains(&hw.nop_bw_gbs));
+            assert!(sp.dram_bw_gbs.contains(&hw.dram_bw_gbs));
+            assert_eq!(hw.layout.len(), hw.num_chiplets());
+            assert!(hw.num_chiplets() <= sp.max_chiplets);
+            // total compute must be close to the target
+            let tops = hw.total_tops();
+            assert!(
+                (tops - 64.0).abs() / 64.0 < 0.5,
+                "tops {tops} too far from target"
+            );
+            assert!(hw.tensor_parallel <= hw.num_chiplets().max(1));
+        }
+    }
+
+    #[test]
+    fn outer_move_changes_one_dimension() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(1);
+        let base = random_config(&sp, &mut rng);
+        for _ in 0..200 {
+            let next = outer_move(&base, &sp, &mut rng);
+            // layout length always consistent with grid
+            assert_eq!(next.layout.len(), next.num_chiplets());
+            // a class change must rebuild the grid to the compute target
+            if next.class != base.class {
+                let n = next.class.chiplets_for(sp.target_tops);
+                assert_eq!(next.num_chiplets(), n.min(sp.max_chiplets));
+            }
+        }
+    }
+
+    #[test]
+    fn inner_move_preserves_shape_and_class() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(2);
+        let base = random_config(&sp, &mut rng);
+        for _ in 0..100 {
+            let next = inner_move(&base, &sp, &mut rng);
+            assert_eq!(next.class, base.class);
+            assert_eq!((next.grid_h, next.grid_w), (base.grid_h, base.grid_w));
+            // at most two slots differ
+            let diff = next
+                .layout
+                .iter()
+                .zip(&base.layout)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert!(diff <= 2, "inner move changed {diff} slots");
+        }
+    }
+
+    #[test]
+    fn swap_preserves_dataflow_mix() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut hw = random_config(&sp, &mut rng);
+        // force a known mix
+        for (i, d) in hw.layout.iter_mut().enumerate() {
+            *d = if i % 3 == 0 {
+                Dataflow::OutputStationary
+            } else {
+                Dataflow::WeightStationary
+            };
+        }
+        let mix = dataflow_mix(&hw);
+        // swaps (second branch) keep the multiset; replacements may not --
+        // verify over many proposals that mixes stay in plausible range
+        let mut seen_same_mix = false;
+        for _ in 0..50 {
+            let next = inner_move(&hw, &sp, &mut rng);
+            if dataflow_mix(&next) == mix {
+                seen_same_mix = true;
+            }
+        }
+        assert!(seen_same_mix);
+    }
+}

@@ -1,0 +1,266 @@
+//! The Compass evaluation engine (paper §V-C): latency, energy, and
+//! monetary cost for a (workload, hardware, mapping) triplet, combining
+//! the intra-chiplet dataflow model, Algorithm-2 data-access analysis,
+//! the inter-chiplet timeline, and the Gemini-style monetary model.
+
+pub mod access;
+pub mod dataflow;
+pub mod money;
+pub mod timeline;
+
+
+use crate::arch::constants::CLOCK_HZ;
+use crate::arch::{Chiplet, HwConfig};
+use crate::mapping::Mapping;
+use crate::workload::serving::Scenario;
+use crate::workload::{build_workload, Phase, Workload, WorkloadParams};
+
+pub use money::MoneyCost;
+pub use timeline::{Breakdown, SimOptions, SimResult, TimelineEntry};
+
+/// Aggregate evaluation of a scenario on one hardware + mapping set.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// Weighted total latency (cycles).
+    pub latency_cycles: f64,
+    /// Weighted total energy (pJ).
+    pub energy_pj: f64,
+    /// Hardware monetary cost ($).
+    pub mc_usd: f64,
+    /// Per-group (latency, energy) pairs in scenario order.
+    pub per_group: Vec<(f64, f64)>,
+    /// Per-phase energy across groups (pJ).
+    pub phase_energy: Vec<(Phase, f64)>,
+}
+
+impl EvalResult {
+    /// Design objective: the product of latency, energy and monetary
+    /// cost (paper §VI-A), in SI-ish units (s * J * $) for scale sanity.
+    pub fn total_cost(&self) -> f64 {
+        (self.latency_cycles / CLOCK_HZ) * (self.energy_pj * 1e-12) * self.mc_usd
+    }
+
+    /// Energy-delay product (s * J), used by the homo/hetero study.
+    pub fn edp(&self) -> f64 {
+        (self.latency_cycles / CLOCK_HZ) * (self.energy_pj * 1e-12)
+    }
+}
+
+/// The evaluation engine. Holds simulation options; construction is cheap.
+#[derive(Debug, Clone, Default)]
+pub struct Evaluator {
+    pub opts: SimOptions,
+}
+
+impl Evaluator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate one batch (one workload) under one mapping.
+    pub fn eval_batch(
+        &self,
+        workload: &Workload,
+        hw: &HwConfig,
+        mapping: &Mapping,
+    ) -> SimResult {
+        // compute the schedule order once; analysis and simulation share it
+        let order = mapping.schedule_order();
+        let flags = access::analyze_with_order(workload, mapping, &order);
+        timeline::simulate_with_order(workload, hw, mapping, &flags, &self.opts, &order)
+    }
+
+    /// Evaluate a full scenario: each batch group is instantiated with
+    /// the hardware's workload knobs (micro-batch size per request type,
+    /// tensor parallelism) and simulated under its own mapping.
+    ///
+    /// `mappings` must be parallel to `scenario.groups`.
+    pub fn eval_scenario(
+        &self,
+        scenario: &Scenario,
+        model: &crate::workload::ModelSpec,
+        hw: &HwConfig,
+        mappings: &[Mapping],
+        eval_blocks: usize,
+    ) -> EvalResult {
+        assert_eq!(mappings.len(), scenario.groups.len());
+        let mut latency = 0.0;
+        let mut energy = 0.0;
+        let mut per_group = Vec::with_capacity(scenario.groups.len());
+        let mut phase_energy: Vec<(Phase, f64)> = Vec::new();
+        for (group, mapping) in scenario.groups.iter().zip(mappings) {
+            let w = build_workload(model, &group.batch, &group_params(hw, group.has_prefill, eval_blocks));
+            let r = self.eval_batch(&w, hw, mapping);
+            latency += r.latency_cycles * group.weight;
+            energy += r.energy_pj * group.weight;
+            per_group.push((r.latency_cycles, r.energy_pj));
+            for (p, e) in r.phase_energy {
+                match phase_energy.iter_mut().find(|(pp, _)| *pp == p) {
+                    Some((_, acc)) => *acc += e * group.weight,
+                    None => phase_energy.push((p, e * group.weight)),
+                }
+            }
+        }
+        EvalResult {
+            latency_cycles: latency,
+            energy_pj: energy,
+            mc_usd: money::monetary_cost(hw).total,
+            per_group,
+            phase_energy,
+        }
+    }
+}
+
+/// Workload knobs a hardware configuration implies for a batch group.
+pub fn group_params(hw: &HwConfig, has_prefill: bool, eval_blocks: usize) -> WorkloadParams {
+    WorkloadParams {
+        micro_batch_size: if has_prefill {
+            hw.micro_batch_prefill
+        } else {
+            hw.micro_batch_decode
+        },
+        tensor_parallel: hw.tensor_parallel,
+        eval_blocks,
+    }
+}
+
+/// Single-GEMM EDP probe used by paper Table I: one phase of a GPT3-class
+/// block at sequence length `seq`, on a single chiplet with `dram_bw`
+/// GB/s. Returns (latency_cycles, energy_pj).
+pub fn edp_probe(
+    phase: Phase,
+    seq: u64,
+    hidden: u64,
+    ffn: u64,
+    head_dim: u64,
+    chip: Chiplet,
+    dram_bw_gbs: f64,
+) -> (f64, f64) {
+    use crate::arch::constants::*;
+    let (cost, w_bytes, io_bytes) = match phase {
+        Phase::QkvGen => {
+            let c = dataflow::gemm_cost(seq, hidden, 3 * hidden, chip, true);
+            (c, (hidden * 3 * hidden * BYTES_PER_ELEM) as f64, (seq * 4 * hidden * BYTES_PER_ELEM) as f64)
+        }
+        Phase::QkT => {
+            // one head; both operands are activations
+            let c = dataflow::gemm_cost(seq, head_dim, seq, chip, false);
+            (c, (head_dim * seq * BYTES_PER_ELEM) as f64, (seq * head_dim * BYTES_PER_ELEM) as f64)
+        }
+        Phase::Av => {
+            let c = dataflow::gemm_cost(seq, seq, head_dim, chip, false);
+            (c, (seq * head_dim * BYTES_PER_ELEM) as f64, (seq * seq * BYTES_PER_ELEM) as f64)
+        }
+        Phase::Ffn1 => {
+            let c = dataflow::gemm_cost(seq, hidden, ffn, chip, true);
+            (c, (hidden * ffn * BYTES_PER_ELEM) as f64, (seq * (hidden + ffn) * BYTES_PER_ELEM) as f64)
+        }
+        Phase::Ffn2 => {
+            let c = dataflow::gemm_cost(seq, ffn, hidden, chip, true);
+            (c, (ffn * hidden * BYTES_PER_ELEM) as f64, (seq * (hidden + ffn) * BYTES_PER_ELEM) as f64)
+        }
+        _ => panic!("probe supports GEMM phases only"),
+    };
+    let dram_bytes = cost.weight_dram.max(if w_bytes > 0.0 { w_bytes } else { 0.0 })
+        + cost.spill_dram
+        + io_bytes;
+    let bytes_per_cycle = dram_bw_gbs * 1e9 / CLOCK_HZ;
+    let t_dram = dram_bytes / bytes_per_cycle + DRAM_LAT_CYCLES;
+    let latency = cost.cycles.max(t_dram);
+    let energy = cost.onchip_energy_pj() + dram_bytes * E_DRAM_PJ_BYTE;
+    (latency, energy)
+}
+
+/// EDP of a probe.
+pub fn edp_of(probe: (f64, f64)) -> f64 {
+    (probe.0 / CLOCK_HZ) * (probe.1 * 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::mapping::presets;
+    use crate::workload::trace::{Trace, TraceSpec};
+    use crate::workload::{ModelSpec, Request};
+
+    fn chip(df: Dataflow) -> Chiplet {
+        Chiplet {
+            class: ChipletClass::M,
+            dataflow: df,
+        }
+    }
+
+    /// The headline inspiration of the paper (Table I): dataflow
+    /// preference flips with sequence length.
+    #[test]
+    fn table1_preference_crossover() {
+        let h = 4096;
+        let ffn = 16384;
+        let ratio = |phase: Phase, seq: u64| {
+            let os = edp_of(edp_probe(phase, seq, h, ffn, 128, chip(Dataflow::OutputStationary), 64.0));
+            let ws = edp_of(edp_probe(phase, seq, h, ffn, 128, chip(Dataflow::WeightStationary), 64.0));
+            os / ws
+        };
+        // short sequences: WS superior (ratio > 1)
+        assert!(ratio(Phase::QkvGen, 128) > 1.2, "qkv@128 {}", ratio(Phase::QkvGen, 128));
+        assert!(ratio(Phase::Ffn2, 128) > 1.2, "ffn2@128 {}", ratio(Phase::Ffn2, 128));
+        // long sequences: OS superior (ratio < 1)
+        assert!(ratio(Phase::QkvGen, 10240) < 1.0, "qkv@10240 {}", ratio(Phase::QkvGen, 10240));
+        assert!(ratio(Phase::Ffn1, 10240) < 1.0, "ffn1@10240 {}", ratio(Phase::Ffn1, 10240));
+        // QK^T flips earlier than the weight GEMMs (paper: 0.88 @ 1024)
+        assert!(ratio(Phase::QkT, 1024) < ratio(Phase::QkvGen, 1024));
+        assert!(ratio(Phase::QkT, 5120) < 1.0);
+    }
+
+    #[test]
+    fn scenario_eval_weights_groups() {
+        let model = ModelSpec::tiny();
+        let trace = Trace::new(&TraceSpec::sharegpt(), 64, 3);
+        let scen = Scenario::prefill(&trace, 2, 2);
+        let hw = HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+        let ev = Evaluator::new();
+        let cols = {
+            let w = build_workload(&model, &scen.groups[0].batch, &group_params(&hw, true, 1));
+            w.layers_per_mb
+        };
+        let rows = scen.groups[0].batch.len() / hw.micro_batch_prefill.min(scen.groups[0].batch.len());
+        let maps: Vec<Mapping> = scen
+            .groups
+            .iter()
+            .map(|_| presets::data_parallel(rows.max(1), cols, 4))
+            .collect();
+        let r = ev.eval_scenario(&scen, &model, &hw, &maps, 1);
+        assert!(r.latency_cycles > 0.0 && r.energy_pj > 0.0 && r.mc_usd > 0.0);
+        assert_eq!(r.per_group.len(), 2);
+        let sum_l: f64 = r.per_group.iter().map(|g| g.0).sum();
+        assert!((sum_l - r.latency_cycles).abs() / r.latency_cycles < 1e-9);
+        assert!(r.total_cost() > 0.0);
+    }
+
+    #[test]
+    fn better_mapping_beats_worse_mapping() {
+        // pipeline mapping with weight reuse must beat an adversarial
+        // mapping that round-robins layers across chips at random
+        let model = ModelSpec::tiny();
+        let batch = vec![Request::decode(300); 8];
+        let params = WorkloadParams {
+            micro_batch_size: 2,
+            tensor_parallel: 2,
+            eval_blocks: 2,
+        };
+        let w = build_workload(&model, &batch, &params);
+        let hw = HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+        let ev = Evaluator::new();
+        let good = presets::pipeline_parallel(4, w.layers_per_mb, 4);
+        let mut bad = Mapping::new(4, w.layers_per_mb);
+        for (i, g) in bad.layer_to_chip.iter_mut().enumerate() {
+            *g = ((i * 7 + 3) % 4) as u16;
+        }
+        let rg = ev.eval_batch(&w, &hw, &good);
+        let rb = ev.eval_batch(&w, &hw, &bad);
+        let eg = rg.latency_cycles * rg.energy_pj;
+        let eb = rb.latency_cycles * rb.energy_pj;
+        assert!(eg < eb, "pipeline EDP {eg} should beat random {eb}");
+    }
+}

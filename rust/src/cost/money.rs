@@ -1,0 +1,121 @@
+//! Monetary-cost model (paper §V-C, Gemini yield formula).
+//!
+//!   Y_c      = Y_unit ^ (A_c / A_unit)
+//!   A_c      = A_MAC + A_SRAM + A_NoC + alpha * BW_NoP + A_others
+//!   MC_c     = A_c / Y_c * COST_chip
+//!   A_IO     = beta * BW_NoP + gamma * BW_DRAM
+//!   MC_IO    = A_IO / Y_IO * COST_IO
+//!   MC_pack  = (sum A_c + sum A_IO) * COST_pack
+//!   MC_total = sum MC_c + sum MC_IO + MC_pack
+
+
+use crate::arch::constants::*;
+use crate::arch::HwConfig;
+
+/// Monetary-cost report ($).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MoneyCost {
+    pub chiplets: f64,
+    pub io_dies: f64,
+    pub package: f64,
+    pub total: f64,
+    /// Area of one compute chiplet (mm^2).
+    pub chiplet_area_mm2: f64,
+    /// Total silicon area (mm^2).
+    pub silicon_area_mm2: f64,
+}
+
+/// Yield of a die of `area` mm^2 under the Gemini model.
+pub fn yield_of(area: f64) -> f64 {
+    Y_UNIT.powf(area / A_UNIT_MM2)
+}
+
+/// Evaluate the monetary cost of a hardware configuration.
+pub fn monetary_cost(hw: &HwConfig) -> MoneyCost {
+    let n = hw.num_chiplets() as f64;
+    // all chiplets share the class; dataflow does not change area in the
+    // template (same MACs, same GLB, different interconnect pattern)
+    let a_c = hw.class.base_area_mm2() + A_NOP_MM2_PER_GBS * hw.nop_bw_gbs;
+    let mc_c = a_c / yield_of(a_c) * COST_CHIP_PER_MM2;
+
+    let n_io = NUM_DRAM_CHIPS as f64;
+    let a_io = A_IO_NOP_MM2_PER_GBS * hw.nop_bw_gbs + A_IO_DRAM_MM2_PER_GBS * hw.dram_bw_gbs;
+    let mc_io = a_io / Y_IO * COST_IO_PER_MM2;
+
+    let silicon = n * a_c + n_io * a_io;
+    let mc_pack = silicon * PACKAGE_AREA_FACTOR * COST_PACK_PER_MM2;
+
+    MoneyCost {
+        chiplets: n * mc_c,
+        io_dies: n_io * mc_io,
+        package: mc_pack,
+        total: n * mc_c + n_io * mc_io + mc_pack,
+        chiplet_area_mm2: a_c,
+        silicon_area_mm2: silicon,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow, HwConfig};
+
+    fn hw(class: ChipletClass, n: usize, nop: f64, dram: f64) -> HwConfig {
+        let (h, w) = crate::arch::HwSpace::grid_dims(n);
+        HwConfig::homogeneous(h, w, class, Dataflow::WeightStationary, nop, dram)
+    }
+
+    #[test]
+    fn yield_decreases_with_area() {
+        assert!(yield_of(10.0) > yield_of(100.0));
+        assert!((yield_of(A_UNIT_MM2) - Y_UNIT).abs() < 1e-12);
+        assert!(yield_of(1.0) < 1.0);
+    }
+
+    #[test]
+    fn cost_components_positive_and_sum() {
+        let mc = monetary_cost(&hw(ChipletClass::M, 8, 32.0, 16.0));
+        assert!(mc.chiplets > 0.0 && mc.io_dies > 0.0 && mc.package > 0.0);
+        assert!((mc.total - (mc.chiplets + mc.io_dies + mc.package)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_chiplets_cost_more() {
+        let a = monetary_cost(&hw(ChipletClass::M, 8, 32.0, 16.0));
+        let b = monetary_cost(&hw(ChipletClass::M, 16, 32.0, 16.0));
+        assert!(b.total > a.total);
+    }
+
+    #[test]
+    fn bandwidth_increases_cost() {
+        let a = monetary_cost(&hw(ChipletClass::M, 8, 32.0, 16.0));
+        let b = monetary_cost(&hw(ChipletClass::M, 8, 512.0, 256.0));
+        assert!(b.total > a.total);
+    }
+
+    #[test]
+    fn chiplet_yield_advantage_over_monolith() {
+        // equal total MACs: 16 x M vs 4 x L; the big die pays a yield
+        // penalty, one of the core economic motivations for chiplets
+        let many_small = monetary_cost(&hw(ChipletClass::M, 16, 32.0, 16.0));
+        let few_large = monetary_cost(&hw(ChipletClass::L, 4, 32.0, 16.0));
+        let small_per_mm2 = many_small.chiplets / (16.0 * many_small.chiplet_area_mm2);
+        let large_per_mm2 = few_large.chiplets / (4.0 * few_large.chiplet_area_mm2);
+        assert!(
+            large_per_mm2 > small_per_mm2,
+            "large dies must cost more per mm^2 ({large_per_mm2} vs {small_per_mm2})"
+        );
+    }
+
+    #[test]
+    fn simba_like_config_cost_scale() {
+        // Table V reference point: a Simba-like 64-TOPS configuration
+        // should land in the low-thousands-of-dollars range.
+        let mc = monetary_cost(&hw(ChipletClass::S, 31, 32.0, 16.0));
+        assert!(
+            mc.total > 1_000.0 && mc.total < 10_000.0,
+            "got ${}",
+            mc.total
+        );
+    }
+}

@@ -1,0 +1,447 @@
+//! Inter-chiplet latency & energy simulation (paper §V-C).
+//!
+//! Per-layer processing time under double buffering:
+//!     `T_proc = max(T_comp, T_DRAM, T_NoP)`
+//! Start time: the later of (a) the completion of the previously scheduled
+//! layer on the same chiplet and (b) the latest completion among direct
+//! predecessors:
+//!     `T_start = max(max_{pred} T_end, max_{same core} T_end)`
+//! Model latency is the maximum completion time across all layers; energy
+//! is the sum `E_comp + E_DRAM + E_NoP` over layers.
+
+use crate::arch::constants::*;
+use crate::arch::HwConfig;
+use crate::mapping::Mapping;
+use crate::workload::{Phase, Workload};
+
+use super::access::{AccessFlags, InputSrc};
+use super::dataflow::layer_cost;
+
+/// One executed task in the spatio-temporal diagram (paper Fig. 5/8).
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineEntry {
+    pub mb: usize,
+    pub layer: usize,
+    pub chip: u16,
+    pub start: f64,
+    pub end: f64,
+    pub phase: Phase,
+}
+
+
+/// Energy / latency breakdown by component.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub comp_cycles: f64,
+    pub dram_cycles: f64,
+    pub nop_cycles: f64,
+    pub comp_energy_pj: f64,
+    pub dram_energy_pj: f64,
+    pub nop_energy_pj: f64,
+    pub dram_bytes: f64,
+    pub nop_bytes: f64,
+    pub macs: f64,
+}
+
+/// Result of simulating one batch on one (hardware, mapping) pair.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end latency in cycles (block-extrapolated).
+    pub latency_cycles: f64,
+    /// Total energy in pJ (block-extrapolated).
+    pub energy_pj: f64,
+    pub breakdown: Breakdown,
+    /// Per-phase energy (pJ), for the paper's breakdown plots.
+    pub phase_energy: Vec<(Phase, f64)>,
+    /// Spatio-temporal execution diagram (only when requested).
+    pub timeline: Option<Vec<TimelineEntry>>,
+}
+
+/// Simulation switches.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Record the full spatio-temporal diagram.
+    pub record_timeline: bool,
+    /// Serialise DRAM accesses per DRAM chip (bandwidth contention)
+    /// instead of the paper's per-layer bandwidth model.
+    pub dram_contention: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            record_timeline: false,
+            dram_contention: false,
+        }
+    }
+}
+
+/// Simulate one batch. `flags` must come from `access::analyze` on the
+/// same (workload, mapping).
+pub fn simulate(
+    workload: &Workload,
+    hw: &HwConfig,
+    mapping: &Mapping,
+    flags: &AccessFlags,
+    opts: &SimOptions,
+) -> SimResult {
+    simulate_with_order(workload, hw, mapping, flags, opts, &mapping.schedule_order())
+}
+
+/// `simulate` with a precomputed schedule order and a per-(shape-class,
+/// chiplet-kind, weight-flag) kernel-cost memo -- the evaluation engine's
+/// hot-path variant (see EXPERIMENTS.md #Perf).
+pub fn simulate_with_order(
+    workload: &Workload,
+    hw: &HwConfig,
+    mapping: &Mapping,
+    flags: &AccessFlags,
+    opts: &SimOptions,
+    order: &[(usize, usize)],
+) -> SimResult {
+    // cost memo: classes x (3 chiplet classes x 2 dataflows) x load flag
+    let n_classes = workload
+        .micro_batches
+        .iter()
+        .flat_map(|mb| mb.layers.iter())
+        .map(|l| l.shape_class + 1)
+        .max()
+        .unwrap_or(1) as usize;
+    let mut memo: Vec<Option<super::dataflow::KernelCost>> = vec![None; n_classes * 12];
+    let chip_kind = |c: crate::arch::Chiplet| -> usize {
+        let cls = match c.class {
+            crate::arch::ChipletClass::S => 0,
+            crate::arch::ChipletClass::M => 1,
+            crate::arch::ChipletClass::L => 2,
+        };
+        let df = match c.dataflow {
+            crate::arch::Dataflow::WeightStationary => 0,
+            crate::arch::Dataflow::OutputStationary => 1,
+        };
+        cls * 2 + df
+    };
+    let cols = mapping.cols;
+    let nop_bytes_per_cycle = hw.nop_bw_gbs * 1e9 / CLOCK_HZ;
+    let dram_bytes_per_cycle = hw.dram_bw_gbs * 1e9 / CLOCK_HZ;
+
+    let mut chip_avail = vec![0.0f64; hw.num_chiplets()];
+    let mut dram_avail = vec![0.0f64; NUM_DRAM_CHIPS];
+    let mut layer_end = vec![0.0f64; mapping.rows * cols];
+    let mut bd = Breakdown::default();
+    let mut phase_energy: Vec<(Phase, f64)> = Vec::new();
+    let mut timeline = if opts.record_timeline {
+        Some(Vec::with_capacity(mapping.rows * cols))
+    } else {
+        None
+    };
+    let mut makespan = 0.0f64;
+
+    for &(mb, layer) in order {
+        let t = mb * cols + layer;
+        let chip_id = mapping.chip(mb, layer);
+        let chip = hw.chiplet(chip_id as usize);
+        let node = &workload.micro_batches[mb].layers[layer];
+
+        let load_wei = flags.is_load_wei[t]
+            // resident reuse only possible when the weights fit the GLB
+            || node.weight_bytes > (chip.class.glb_bytes() as f64 * 0.9) as u64;
+        let write_out = flags.is_write_out[t] || node.force_out;
+
+        let key = (node.shape_class as usize * 12) + chip_kind(chip) * 2 + load_wei as usize;
+        let cost = match memo[key] {
+            Some(c) => c,
+            None => {
+                let c = layer_cost(&node.kind, node.vec_ops, chip, load_wei);
+                memo[key] = Some(c);
+                c
+            }
+        };
+
+        // --- classify activation traffic ---
+        let n_preds = node.preds.len().max(1) as f64;
+        let per_pred_bytes = node.in_bytes as f64 / n_preds;
+        let mut dram_rd = cost.weight_dram + cost.spill_dram + node.kv_read_bytes as f64;
+        let mut nop_bytes = 0.0;
+        let mut nop_hop_bytes = 0.0;
+        if node.preds.is_empty() {
+            // model input arrives from DRAM
+            dram_rd += node.in_bytes as f64;
+        } else {
+            for src in flags.srcs(t) {
+                match *src {
+                    InputSrc::Local => {}
+                    InputSrc::Nop { chip: c } => {
+                        let hops = hw.hops(c as usize, chip_id as usize).max(1) as f64;
+                        nop_bytes += per_pred_bytes;
+                        nop_hop_bytes += per_pred_bytes * hops;
+                    }
+                    InputSrc::Dram => dram_rd += per_pred_bytes,
+                }
+            }
+        }
+        let dram_wr = if write_out { node.out_bytes as f64 } else { 0.0 } + node.kv_write_bytes as f64;
+        let dram_bytes = dram_rd + dram_wr;
+
+        // --- per-layer times (double buffering: overlap, take max) ---
+        let t_comp = cost.cycles;
+        let t_dram = if dram_bytes > 0.0 {
+            dram_bytes / dram_bytes_per_cycle + DRAM_LAT_CYCLES
+        } else {
+            0.0
+        };
+        let t_nop = if nop_bytes > 0.0 {
+            nop_bytes / nop_bytes_per_cycle
+                + NOP_HOP_CYCLES * (nop_hop_bytes / nop_bytes.max(1.0)).max(1.0)
+        } else {
+            0.0
+        };
+        let t_proc = t_comp.max(t_dram).max(t_nop);
+
+        // --- start time: dependencies + core availability ---
+        let mut start = chip_avail[chip_id as usize];
+        for &p in &node.preds {
+            start = start.max(layer_end[mb * cols + p]);
+        }
+        // DRAM channel contention (optional extension)
+        if opts.dram_contention && dram_bytes > 0.0 {
+            let d = node
+                .dram_id
+                .map(|d| d as usize % NUM_DRAM_CHIPS)
+                .unwrap_or_else(|| hw.nearest_dram(chip_id as usize));
+            start = start.max(dram_avail[d] - t_proc.min(t_dram));
+            dram_avail[d] = start.max(dram_avail[d]) + t_dram;
+        }
+        let end = start + t_proc;
+        chip_avail[chip_id as usize] = end;
+        layer_end[t] = end;
+        makespan = makespan.max(end);
+
+        // --- energy ---
+        let dram_hops = {
+            let d = node
+                .dram_id
+                .map(|d| d as usize % NUM_DRAM_CHIPS)
+                .unwrap_or_else(|| hw.nearest_dram(chip_id as usize));
+            hw.dram_hops(chip_id as usize, d) as f64
+        };
+        let e_comp = cost.onchip_energy_pj();
+        let e_dram = dram_bytes * E_DRAM_PJ_BYTE + dram_bytes * dram_hops * E_NOP_PJ_BYTE_HOP;
+        let e_nop = nop_hop_bytes * E_NOP_PJ_BYTE_HOP;
+        bd.comp_cycles += t_comp;
+        bd.dram_cycles += t_dram;
+        bd.nop_cycles += t_nop;
+        bd.comp_energy_pj += e_comp;
+        bd.dram_energy_pj += e_dram;
+        bd.nop_energy_pj += e_nop;
+        bd.dram_bytes += dram_bytes;
+        bd.nop_bytes += nop_bytes;
+        bd.macs += cost.macs;
+
+        let e_total = e_comp + e_dram + e_nop;
+        match phase_energy.iter_mut().find(|(p, _)| *p == node.phase) {
+            Some((_, e)) => *e += e_total,
+            None => phase_energy.push((node.phase, e_total)),
+        }
+
+        if let Some(tl) = timeline.as_mut() {
+            tl.push(TimelineEntry {
+                mb,
+                layer,
+                chip: chip_id,
+                start,
+                end,
+                phase: node.phase,
+            });
+        }
+    }
+
+    let scale = workload.block_scale;
+    let energy: f64 =
+        (bd.comp_energy_pj + bd.dram_energy_pj + bd.nop_energy_pj) * scale;
+    for (_, e) in phase_energy.iter_mut() {
+        *e *= scale;
+    }
+    SimResult {
+        latency_cycles: makespan * scale,
+        energy_pj: energy,
+        breakdown: bd,
+        phase_energy,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::cost::access;
+    use crate::mapping::presets;
+    use crate::workload::{build_workload, ModelSpec, Request, WorkloadParams};
+
+    fn setup(
+        rows: usize,
+        chips: usize,
+    ) -> (Workload, HwConfig) {
+        let m = ModelSpec::tiny();
+        let batch = vec![Request::prefill(64); rows];
+        let w = build_workload(
+            &m,
+            &batch,
+            &WorkloadParams {
+                micro_batch_size: 1,
+                tensor_parallel: 2,
+                eval_blocks: 2,
+            },
+        );
+        let (h, wd) = crate::arch::HwSpace::grid_dims(chips);
+        let hw = HwConfig::homogeneous(h, wd, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+        (w, hw)
+    }
+
+    fn run(
+        w: &Workload,
+        hw: &HwConfig,
+        map: &Mapping,
+        opts: &SimOptions,
+    ) -> SimResult {
+        let flags = access::analyze(w, map);
+        simulate(w, hw, map, &flags, opts)
+    }
+
+    #[test]
+    fn latency_and_energy_positive_and_scaled() {
+        let (w, hw) = setup(2, 4);
+        let map = presets::pipeline_parallel(2, w.layers_per_mb, 4);
+        let r = run(&w, &hw, &map, &SimOptions::default());
+        assert!(r.latency_cycles > 0.0);
+        assert!(r.energy_pj > 0.0);
+        // tiny model has 4 blocks, we eval 2 -> scale 2
+        assert!((w.block_scale - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependencies_respected_in_timeline() {
+        let (w, hw) = setup(2, 4);
+        let map = presets::model_parallel(w.layers_per_mb, 4);
+        let map = {
+            let mut m = crate::mapping::Mapping::new(2, w.layers_per_mb);
+            m.layer_to_chip = map
+                .layer_to_chip
+                .iter()
+                .cycle()
+                .take(2 * w.layers_per_mb)
+                .copied()
+                .collect();
+            m
+        };
+        let r = run(
+            &w,
+            &hw,
+            &map,
+            &SimOptions {
+                record_timeline: true,
+                ..Default::default()
+            },
+        );
+        let tl = r.timeline.unwrap();
+        let end_of = |mb: usize, l: usize| {
+            tl.iter()
+                .find(|e| e.mb == mb && e.layer == l)
+                .map(|e| e.end)
+                .unwrap()
+        };
+        for e in &tl {
+            for &p in &w.micro_batches[e.mb].layers[e.layer].preds {
+                assert!(
+                    e.start + 1e-9 >= end_of(e.mb, p),
+                    "layer {} started before pred {p}",
+                    e.layer
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn same_chip_tasks_serialize() {
+        let (w, hw) = setup(1, 1);
+        let map = presets::data_parallel(1, w.layers_per_mb, 1);
+        let r = run(
+            &w,
+            &hw,
+            &map,
+            &SimOptions {
+                record_timeline: true,
+                ..Default::default()
+            },
+        );
+        let tl = r.timeline.unwrap();
+        for pair in tl.windows(2) {
+            assert!(pair[1].start + 1e-9 >= pair[0].end);
+        }
+    }
+
+    #[test]
+    fn more_chips_reduce_latency_for_parallel_work() {
+        let m = ModelSpec::tiny();
+        let batch = vec![Request::prefill(64); 8];
+        let w = build_workload(
+            &m,
+            &batch,
+            &WorkloadParams {
+                micro_batch_size: 1,
+                tensor_parallel: 2,
+                eval_blocks: 1,
+            },
+        );
+        let hw1 = HwConfig::homogeneous(1, 1, ChipletClass::S, Dataflow::WeightStationary, 32.0, 64.0);
+        let hw4 = HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 64.0);
+        let m1 = presets::data_parallel(8, w.layers_per_mb, 1);
+        let m4 = presets::data_parallel(8, w.layers_per_mb, 4);
+        let r1 = run(&w, &hw1, &m1, &SimOptions::default());
+        let r4 = run(&w, &hw4, &m4, &SimOptions::default());
+        assert!(
+            r4.latency_cycles < r1.latency_cycles * 0.6,
+            "4 chips {} vs 1 chip {}",
+            r4.latency_cycles,
+            r1.latency_cycles
+        );
+    }
+
+    #[test]
+    fn higher_dram_bw_never_hurts() {
+        let (w, hw_lo) = setup(2, 4);
+        let mut hw_hi = hw_lo.clone();
+        hw_hi.dram_bw_gbs = 256.0;
+        let map = presets::data_parallel(2, w.layers_per_mb, 4);
+        let lo = run(&w, &hw_lo, &map, &SimOptions::default());
+        let hi = run(&w, &hw_hi, &map, &SimOptions::default());
+        assert!(hi.latency_cycles <= lo.latency_cycles + 1e-9);
+        assert!((hi.energy_pj - lo.energy_pj).abs() / lo.energy_pj < 1e-9);
+    }
+
+    #[test]
+    fn contention_model_is_never_faster() {
+        let (w, hw) = setup(4, 4);
+        let map = presets::data_parallel(4, w.layers_per_mb, 4);
+        let base = run(&w, &hw, &map, &SimOptions::default());
+        let cont = run(
+            &w,
+            &hw,
+            &map,
+            &SimOptions {
+                dram_contention: true,
+                ..Default::default()
+            },
+        );
+        assert!(cont.latency_cycles + 1e-9 >= base.latency_cycles);
+    }
+
+    #[test]
+    fn phase_energy_sums_to_total() {
+        let (w, hw) = setup(2, 4);
+        let map = presets::pipeline_parallel(2, w.layers_per_mb, 4);
+        let r = run(&w, &hw, &map, &SimOptions::default());
+        let sum: f64 = r.phase_energy.iter().map(|(_, e)| e).sum();
+        assert!((sum - r.energy_pj).abs() / r.energy_pj < 1e-9);
+    }
+}

@@ -1,0 +1,172 @@
+//! Top-level co-exploration driver (paper Fig. 6): ties the workload
+//! instantiation, the GA mapping generation engine, the BO hardware
+//! sampling engine, and the evaluation engine into the loop
+//!
+//!   hardware sample -> mapping search -> (L, E, MC) -> surrogate update
+//!
+//! `compass_dse` is the framework entrypoint; `search_mappings` is the
+//! inner mapping search reused by the baselines and benches.
+
+use crate::arch::{HwConfig, HwSpace};
+use crate::bo::{self, BoConfig, Gp};
+use crate::cost::{group_params, EvalResult, Evaluator};
+use crate::ga::{self, GaConfig};
+use crate::mapping::Mapping;
+use crate::workload::serving::Scenario;
+use crate::workload::{build_workload, ModelSpec};
+
+/// Full co-exploration budget.
+#[derive(Debug, Clone, Copy)]
+pub struct DseConfig {
+    pub ga: GaConfig,
+    pub bo: BoConfig,
+    /// Transformer blocks instantiated explicitly (0 = full depth).
+    pub eval_blocks: usize,
+}
+
+impl DseConfig {
+    pub fn reduced() -> Self {
+        DseConfig {
+            ga: GaConfig::reduced(),
+            bo: BoConfig::reduced(),
+            eval_blocks: 2,
+        }
+    }
+
+    pub fn paper() -> Self {
+        DseConfig {
+            ga: GaConfig::paper(),
+            bo: BoConfig::paper(),
+            eval_blocks: 4,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        DseConfig {
+            ga: GaConfig::tiny(),
+            bo: BoConfig::tiny(),
+            eval_blocks: 1,
+        }
+    }
+}
+
+/// Outcome of a co-exploration run.
+#[derive(Debug, Clone)]
+pub struct DseOutcome {
+    pub hw: HwConfig,
+    pub mappings: Vec<Mapping>,
+    pub eval: EvalResult,
+    /// Best-objective trajectory over BO rounds.
+    pub bo_history: Vec<f64>,
+    pub backend: &'static str,
+}
+
+/// Mapping-search result for a fixed hardware configuration.
+#[derive(Debug, Clone)]
+pub struct MappingSearch {
+    pub mappings: Vec<Mapping>,
+    pub eval: EvalResult,
+}
+
+/// Run the GA mapping search for every batch group of `scenario` on
+/// hardware `hw`, then evaluate the scenario end-to-end.
+pub fn search_mappings(
+    scenario: &Scenario,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    ga_cfg: &GaConfig,
+    eval_blocks: usize,
+) -> MappingSearch {
+    let ev = Evaluator::new();
+    let chips = hw.num_chiplets();
+    let mut mappings = Vec::with_capacity(scenario.groups.len());
+    for (gi, group) in scenario.groups.iter().enumerate() {
+        let params = group_params(hw, group.has_prefill, eval_blocks);
+        let w = build_workload(model, &group.batch, &params);
+        let rows = w.num_micro_batches();
+        let cols = w.layers_per_mb;
+        let mut cfg = *ga_cfg;
+        cfg.seed = ga_cfg.seed.wrapping_add(gi as u64);
+        let res = ga::search(rows, cols, chips, &cfg, |m| {
+            let r = ev.eval_batch(&w, hw, m);
+            r.latency_cycles * r.energy_pj
+        });
+        mappings.push(res.best);
+    }
+    let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);
+    MappingSearch { mappings, eval }
+}
+
+/// The Compass framework: BO over hardware, GA over mappings, the
+/// evaluation engine inside. `gp` selects the surrogate backend
+/// (PJRT artifacts or the native mirror).
+pub fn compass_dse(
+    scenario: &Scenario,
+    model: &ModelSpec,
+    space: &HwSpace,
+    cfg: &DseConfig,
+    gp: &mut dyn Gp,
+) -> DseOutcome {
+    let result = bo::optimize(space, &cfg.bo, gp, |hw| {
+        search_mappings(scenario, model, hw, &cfg.ga, cfg.eval_blocks)
+            .eval
+            .total_cost()
+    });
+    // re-derive the winning mappings for reporting
+    let best = search_mappings(scenario, model, &result.best.hw, &cfg.ga, cfg.eval_blocks);
+    DseOutcome {
+        hw: result.best.hw.clone(),
+        mappings: best.mappings,
+        eval: best.eval,
+        bo_history: result.history,
+        backend: result.backend,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bo::NativeGp;
+    use crate::workload::trace::{Trace, TraceSpec};
+
+    fn tiny_scenario() -> (Scenario, ModelSpec) {
+        let trace = Trace::new(&TraceSpec::sharegpt(), 64, 3);
+        (Scenario::prefill(&trace, 2, 1), ModelSpec::tiny())
+    }
+
+    #[test]
+    fn mapping_search_improves_over_first_generation() {
+        let (scen, model) = tiny_scenario();
+        let hw = crate::arch::HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let r = search_mappings(&scen, &model, &hw, &GaConfig::tiny(), 1);
+        assert_eq!(r.mappings.len(), 1);
+        assert!(r.mappings[0].is_valid(4));
+        assert!(r.eval.latency_cycles > 0.0);
+    }
+
+    #[test]
+    fn full_dse_runs_end_to_end_and_hits_target_tops() {
+        let (scen, model) = tiny_scenario();
+        let space = HwSpace::paper(64.0);
+        let cfg = DseConfig::tiny();
+        let mut gp = NativeGp::new();
+        let out = compass_dse(&scen, &model, &space, &cfg, &mut gp);
+        assert_eq!(out.backend, "native");
+        let tops = out.hw.total_tops();
+        assert!((tops - 64.0).abs() / 64.0 < 0.5, "tops {tops}");
+        assert_eq!(out.mappings.len(), scen.groups.len());
+        assert!(out.eval.total_cost() > 0.0);
+        // history covers every BO round and never regresses
+        assert_eq!(out.bo_history.len(), cfg.bo.rounds);
+        for w in out.bo_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+}

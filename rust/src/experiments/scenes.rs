@@ -1,0 +1,136 @@
+//! Scenario definitions for the paper's evaluation matrix (§VI-A):
+//! {ShareGPT, GovReport} x {prefill, decode} x {64, 512, 2048} TOPS.
+
+use crate::arch::HwSpace;
+use crate::workload::serving::Scenario;
+use crate::workload::trace::{Trace, TraceSpec};
+use crate::workload::ModelSpec;
+
+/// Model matched to a compute target (paper: parameter scale aligned
+/// with compute capacity).
+pub fn model_for_tops(tops: f64) -> ModelSpec {
+    if tops <= 64.0 {
+        ModelSpec::gpt3_7b()
+    } else if tops <= 512.0 {
+        ModelSpec::gpt3_13b()
+    } else {
+        ModelSpec::llama3_70b()
+    }
+}
+
+/// One cell of the paper's scenario matrix.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub trace_name: String,
+    pub prefill: bool,
+    pub tops: f64,
+    /// Batches sampled from the trace for distribution-aware DSE.
+    pub n_batches: usize,
+    /// Requests per batch (paper: prefill 4, decode 128).
+    pub batch_size: usize,
+}
+
+impl Scene {
+    pub fn new(trace_name: &str, prefill: bool, tops: f64) -> Self {
+        Scene {
+            trace_name: trace_name.to_string(),
+            prefill,
+            tops,
+            n_batches: 2,
+            batch_size: if prefill { 4 } else { 128 },
+        }
+    }
+
+    /// The full 12-scene matrix of Fig. 7 / Table VI.
+    pub fn paper_matrix() -> Vec<Scene> {
+        let mut out = Vec::new();
+        for trace in ["sharegpt", "govreport"] {
+            for prefill in [true, false] {
+                for tops in [64.0, 512.0, 2048.0] {
+                    out.push(Scene::new(trace, prefill, tops));
+                }
+            }
+        }
+        out
+    }
+
+    /// A reduced 4-scene matrix for CI-budget benches.
+    pub fn reduced_matrix() -> Vec<Scene> {
+        vec![
+            Scene::new("sharegpt", true, 64.0),
+            Scene::new("sharegpt", false, 64.0),
+            Scene::new("govreport", true, 512.0),
+            Scene::new("govreport", false, 512.0),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}T",
+            self.trace_name,
+            if self.prefill { "prefill" } else { "decode" },
+            self.tops as u64
+        )
+    }
+
+    pub fn space(&self) -> HwSpace {
+        HwSpace::paper(self.tops)
+    }
+
+    /// Build (fitting scenario, test scenario, fitting trace, model):
+    /// the fitting set guides DSE, the disjoint test set validates
+    /// (paper §VI-A scenario setup).
+    pub fn build(&self, seed: u64) -> (Scenario, Scenario, Trace, ModelSpec) {
+        let spec = TraceSpec::by_name(&self.trace_name).expect("known trace");
+        let fit = Trace::new(&spec, 512, seed);
+        let test = Trace::new(&spec, 512, seed.wrapping_add(0x9e37_79b9));
+        let mk = |t: &Trace| {
+            if self.prefill {
+                Scenario::prefill(t, self.batch_size, self.n_batches)
+            } else {
+                Scenario::decode(t, self.batch_size, self.n_batches)
+            }
+        };
+        (mk(&fit), mk(&test), fit, model_for_tops(self.tops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_matrix_has_12_scenes() {
+        let m = Scene::paper_matrix();
+        assert_eq!(m.len(), 12);
+        let labels: std::collections::HashSet<String> = m.iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), 12);
+    }
+
+    #[test]
+    fn model_matching_follows_paper() {
+        assert_eq!(model_for_tops(64.0).name, "GPT3-7B");
+        assert_eq!(model_for_tops(512.0).name, "GPT3-13B");
+        assert_eq!(model_for_tops(2048.0).name, "LLaMA3-70B");
+    }
+
+    #[test]
+    fn build_produces_disjoint_fit_test() {
+        let s = Scene::new("sharegpt", true, 64.0);
+        let (fit, test, trace, model) = s.build(3);
+        assert_eq!(model.name, "GPT3-7B");
+        assert_eq!(fit.groups.len(), 2);
+        assert_eq!(test.groups.len(), 2);
+        assert_ne!(
+            format!("{:?}", fit.groups[0].batch),
+            format!("{:?}", test.groups[0].batch)
+        );
+        assert!(trace.mean_in() > 1.0);
+    }
+
+    #[test]
+    fn batch_sizes_follow_paper_defaults() {
+        assert_eq!(Scene::new("sharegpt", true, 64.0).batch_size, 4);
+        assert_eq!(Scene::new("sharegpt", false, 64.0).batch_size, 128);
+    }
+}

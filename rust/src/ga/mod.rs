@@ -1,0 +1,298 @@
+//! Mapping generation engine: genetic algorithm over the mapping encoding
+//! (paper §V-A).
+//!
+//! * **Selection** — tournament selection (robust to multi-objective
+//!   fitness scales, avoids population degradation).
+//! * **Crossover** — bitwise for `segmentation`; subgraph-level for
+//!   `layer_to_chip` (subgraphs follow the child's crossed segmentation,
+//!   each inherited wholesale from one parent).
+//! * **Mutation** — `segmentation`: bit-flip and bit-swap;
+//!   `layer_to_chip`: the seven operators of Table III, with the
+//!   probability mass shifted from graph-level operators (6-7) early in
+//!   the run to layer-level operators (1-3) late (exploration ->
+//!   fine-tuning).
+
+pub mod ops;
+
+use crate::mapping::Mapping;
+use crate::util::Rng;
+
+/// GA hyperparameters (paper §VI-A: population 120, 100 iterations;
+/// defaults here are the reduced single-core budget, see DESIGN.md).
+#[derive(Debug, Clone, Copy)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament_k: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    /// Elites copied unchanged each generation.
+    pub elites: usize,
+    pub seed: u64,
+}
+
+impl GaConfig {
+    pub fn reduced() -> Self {
+        GaConfig {
+            population: 24,
+            generations: 20,
+            tournament_k: 3,
+            crossover_prob: 0.9,
+            mutation_prob: 0.35,
+            elites: 2,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// The paper's search budget.
+    pub fn paper() -> Self {
+        GaConfig {
+            population: 120,
+            generations: 100,
+            ..Self::reduced()
+        }
+    }
+
+    /// Tiny budget for unit tests.
+    pub fn tiny() -> Self {
+        GaConfig {
+            population: 10,
+            generations: 8,
+            ..Self::reduced()
+        }
+    }
+}
+
+/// Search statistics per generation (for convergence reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct GenStat {
+    pub generation: usize,
+    pub best: f64,
+    pub mean: f64,
+}
+
+/// Result of a GA run: the best mapping, its fitness (lower = better),
+/// and the convergence history.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best: Mapping,
+    pub best_fitness: f64,
+    pub history: Vec<GenStat>,
+    pub evaluations: usize,
+}
+
+/// Run the GA. `fitness` maps a mapping to a scalar cost (lower better);
+/// it is called once per new individual (memoise outside if desired).
+pub fn search<F: FnMut(&Mapping) -> f64>(
+    rows: usize,
+    cols: usize,
+    num_chips: usize,
+    cfg: &GaConfig,
+    mut fitness: F,
+) -> GaResult {
+    assert!(rows > 0 && cols > 0 && num_chips > 0);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut evaluations = 0usize;
+
+    // --- initial population: random + parallelism-preset seeds ---
+    let mut pop: Vec<Mapping> = Vec::with_capacity(cfg.population);
+    pop.push(crate::mapping::presets::data_parallel(rows, cols, num_chips));
+    pop.push(crate::mapping::presets::pipeline_parallel(rows, cols, num_chips));
+    {
+        // model-parallel pattern broadcast to all rows
+        let mp = crate::mapping::presets::model_parallel(cols, num_chips);
+        let mut m = Mapping::new(rows, cols);
+        for mb in 0..rows {
+            for l in 0..cols {
+                m.set_chip(mb, l, mp.chip(0, l));
+            }
+        }
+        pop.push(m);
+    }
+    while pop.len() < cfg.population {
+        pop.push(ops::random_mapping(rows, cols, num_chips, &mut rng));
+    }
+    pop.truncate(cfg.population);
+
+    let mut fits: Vec<f64> = pop
+        .iter()
+        .map(|m| {
+            evaluations += 1;
+            fitness(m)
+        })
+        .collect();
+
+    let mut history = Vec::with_capacity(cfg.generations);
+    for gen in 0..cfg.generations {
+        // phase in [0,1): early -> impactful mutations, late -> fine ones
+        let phase = gen as f64 / cfg.generations.max(1) as f64;
+
+        // elitism
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| fits[a].total_cmp(&fits[b]));
+        let mut next: Vec<Mapping> = order
+            .iter()
+            .take(cfg.elites)
+            .map(|&i| pop[i].clone())
+            .collect();
+        let mut next_fits: Vec<f64> = order.iter().take(cfg.elites).map(|&i| fits[i]).collect();
+
+        while next.len() < cfg.population {
+            let pa = tournament(&fits, cfg.tournament_k, &mut rng);
+            let pb = tournament(&fits, cfg.tournament_k, &mut rng);
+            let mut child = if rng.gen_bool(cfg.crossover_prob) {
+                ops::crossover(&pop[pa], &pop[pb], &mut rng)
+            } else {
+                pop[pa].clone()
+            };
+            if rng.gen_bool(cfg.mutation_prob) {
+                ops::mutate_segmentation(&mut child, &mut rng);
+            }
+            if rng.gen_bool(cfg.mutation_prob) {
+                ops::mutate_layer_to_chip(&mut child, num_chips, phase, &mut rng);
+            }
+            debug_assert!(child.is_valid(num_chips));
+            evaluations += 1;
+            next_fits.push(fitness(&child));
+            next.push(child);
+        }
+        pop = next;
+        fits = next_fits;
+
+        let best = fits.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean = fits.iter().sum::<f64>() / fits.len() as f64;
+        history.push(GenStat {
+            generation: gen,
+            best,
+            mean,
+        });
+    }
+
+    let (bi, bf) = fits
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, f)| (i, *f))
+        .unwrap();
+    GaResult {
+        best: pop[bi].clone(),
+        best_fitness: bf,
+        history,
+        evaluations,
+    }
+}
+
+/// Tournament selection: k uniform picks, return the fittest index.
+fn tournament(fits: &[f64], k: usize, rng: &mut Rng) -> usize {
+    let mut best = rng.gen_index(fits.len());
+    for _ in 1..k.max(1) {
+        let c = rng.gen_index(fits.len());
+        if fits[c] < fits[best] {
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy fitness: prefer chip == (layer % chips) and no segmentation --
+    /// the GA must drive toward the known optimum.
+    fn toy_fitness(m: &Mapping, chips: usize) -> f64 {
+        let mut cost = 0.0;
+        for mb in 0..m.rows {
+            for l in 0..m.cols {
+                if m.chip(mb, l) as usize != l % chips {
+                    cost += 1.0;
+                }
+            }
+        }
+        cost + m.segmentation.iter().filter(|&&s| s).count() as f64 * 0.25
+    }
+
+    #[test]
+    fn converges_on_toy_problem() {
+        let chips = 4;
+        let cfg = GaConfig {
+            population: 30,
+            generations: 40,
+            ..GaConfig::reduced()
+        };
+        let r = search(2, 12, chips, &cfg, |m| toy_fitness(m, chips));
+        assert!(
+            r.best_fitness <= 3.0,
+            "GA should approach optimum, got {}",
+            r.best_fitness
+        );
+        let first = r.history.first().unwrap().best;
+        let last = r.history.last().unwrap().best;
+        assert!(last <= first);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let cfg = GaConfig::tiny();
+        let a = search(2, 8, 4, &cfg, |m| toy_fitness(m, 4));
+        let b = search(2, 8, 4, &cfg, |m| toy_fitness(m, 4));
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_fitness, b.best_fitness);
+    }
+
+    #[test]
+    fn all_individuals_valid() {
+        let cfg = GaConfig::tiny();
+        let r = search(3, 10, 5, &cfg, |m| {
+            assert!(m.is_valid(5), "invalid individual reached fitness");
+            toy_fitness(m, 5)
+        });
+        assert!(r.best.is_valid(5));
+        // initial pop + (pop - elites) new children per generation
+        assert_eq!(
+            r.evaluations,
+            cfg.population + cfg.generations * (cfg.population - cfg.elites)
+        );
+    }
+
+    #[test]
+    fn elites_never_regress() {
+        let cfg = GaConfig {
+            population: 16,
+            generations: 25,
+            ..GaConfig::tiny()
+        };
+        let r = search(2, 10, 4, &cfg, |m| toy_fitness(m, 4));
+        let mut prev = f64::INFINITY;
+        for st in &r.history {
+            assert!(st.best <= prev + 1e-12, "best regressed at gen {}", st.generation);
+            prev = st.best;
+        }
+    }
+
+    #[test]
+    fn beats_random_search_same_budget() {
+        let chips = 6;
+        let rows = 2;
+        let cols = 16;
+        let cfg = GaConfig {
+            population: 20,
+            generations: 15,
+            ..GaConfig::reduced()
+        };
+        let ga = search(rows, cols, chips, &cfg, |m| toy_fitness(m, chips));
+        // random baseline with identical evaluation budget
+        let mut rng = Rng::seed_from_u64(1);
+        let budget = ga.evaluations;
+        let mut best = f64::INFINITY;
+        for _ in 0..budget {
+            let m = ops::random_mapping(rows, cols, chips, &mut rng);
+            best = best.min(toy_fitness(&m, chips));
+        }
+        assert!(
+            ga.best_fitness <= best,
+            "GA {} must beat random {best}",
+            ga.best_fitness
+        );
+    }
+}

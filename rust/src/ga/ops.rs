@@ -1,0 +1,327 @@
+//! GA variation operators (paper §V-A + Table III).
+
+use crate::mapping::Mapping;
+use crate::util::Rng;
+
+/// Uniformly random valid mapping.
+pub fn random_mapping(rows: usize, cols: usize, num_chips: usize, rng: &mut Rng) -> Mapping {
+    let mut m = Mapping::new(rows, cols);
+    for g in m.layer_to_chip.iter_mut() {
+        *g = rng.gen_index(num_chips) as u16;
+    }
+    for s in m.segmentation.iter_mut() {
+        *s = rng.gen_bool(0.15);
+    }
+    m
+}
+
+/// Crossover: bitwise for `segmentation` (each bit from a random parent);
+/// subgraph-level for `layer_to_chip` — subgraphs are determined by the
+/// *child's* crossed segmentation, and each (micro-batch, segment) block
+/// is inherited wholesale from one parent ("balances randomness and local
+/// stability of the computation graph").
+pub fn crossover(a: &Mapping, b: &Mapping, rng: &mut Rng) -> Mapping {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut child = Mapping::new(a.rows, a.cols);
+    for i in 0..child.segmentation.len() {
+        child.segmentation[i] = if rng.gen_bool(0.5) {
+            a.segmentation[i]
+        } else {
+            b.segmentation[i]
+        };
+    }
+    for (s, e) in child.segments() {
+        for mb in 0..child.rows {
+            let parent = if rng.gen_bool(0.5) { a } else { b };
+            for l in s..e {
+                child.set_chip(mb, l, parent.chip(mb, l));
+            }
+        }
+    }
+    child
+}
+
+/// Segmentation mutations: bit-flip or bit-swap (adjacent).
+pub fn mutate_segmentation(m: &mut Mapping, rng: &mut Rng) {
+    if m.segmentation.is_empty() {
+        return;
+    }
+    let i = rng.gen_index(m.segmentation.len());
+    if rng.gen_bool(0.5) {
+        // bit-flip
+        m.segmentation[i] = !m.segmentation[i];
+    } else {
+        // bit-swap with previous or next
+        let j = if i == 0 {
+            1.min(m.segmentation.len() - 1)
+        } else if i + 1 == m.segmentation.len() {
+            i - 1
+        } else if rng.gen_bool(0.5) {
+            i - 1
+        } else {
+            i + 1
+        };
+        m.segmentation.swap(i, j);
+    }
+}
+
+/// The seven `layer_to_chip` mutation operators of Table III.
+///
+/// `phase` in [0, 1) adapts the operator distribution: early phases favour
+/// the graph-level operators (6-7), late phases the layer-level ones (1-3).
+pub fn mutate_layer_to_chip(m: &mut Mapping, num_chips: usize, phase: f64, rng: &mut Rng) {
+    let op = pick_operator(phase, rng);
+    apply_operator(m, num_chips, op, rng);
+}
+
+/// Sample a Table-III operator id (1..=7) for the given phase.
+pub fn pick_operator(phase: f64, rng: &mut Rng) -> u8 {
+    // weights linearly interpolate between an exploration profile
+    // (graph-level heavy) and a fine-tuning profile (layer-level heavy)
+    let explore = [1.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+    let tune = [4.0, 3.0, 3.0, 1.5, 1.5, 0.5, 0.5];
+    let t = phase.clamp(0.0, 1.0);
+    let w: Vec<f64> = (0..7)
+        .map(|i| explore[i] * (1.0 - t) + tune[i] * t)
+        .collect();
+    let total: f64 = w.iter().sum();
+    let mut x = rng.gen_f64() * total;
+    for (i, wi) in w.iter().enumerate() {
+        x -= wi;
+        if x <= 0.0 {
+            return (i + 1) as u8;
+        }
+    }
+    7
+}
+
+/// Apply one Table-III operator.
+pub fn apply_operator(m: &mut Mapping, num_chips: usize, op: u8, rng: &mut Rng) {
+    let rows = m.rows;
+    let cols = m.cols;
+    match op {
+        // 1: replace one position with a new random chiplet
+        1 => {
+            let mb = rng.gen_index(rows);
+            let l = rng.gen_index(cols);
+            m.set_chip(mb, l, rng.gen_index(num_chips) as u16);
+        }
+        // 2: swap with the adjacent position along the layer dimension
+        2 => {
+            if cols < 2 {
+                return apply_operator(m, num_chips, 1, rng);
+            }
+            let mb = rng.gen_index(rows);
+            let l = rng.gen_index(cols - 1);
+            let (a, b) = (m.chip(mb, l), m.chip(mb, l + 1));
+            m.set_chip(mb, l, b);
+            m.set_chip(mb, l + 1, a);
+        }
+        // 3: swap with the adjacent position along the batch dimension
+        3 => {
+            if rows < 2 {
+                return apply_operator(m, num_chips, 1, rng);
+            }
+            let mb = rng.gen_index(rows - 1);
+            let l = rng.gen_index(cols);
+            let (a, b) = (m.chip(mb, l), m.chip(mb + 1, l));
+            m.set_chip(mb, l, b);
+            m.set_chip(mb + 1, l, a);
+        }
+        // 4: randomly permute the entries of one subgraph
+        4 => {
+            let segs = m.segments();
+            let (s, e) = *rng.choose(&segs);
+            let mb = rng.gen_index(rows);
+            let mut vals: Vec<u16> = (s..e).map(|l| m.chip(mb, l)).collect();
+            rng.shuffle(&mut vals);
+            for (l, v) in (s..e).zip(vals) {
+                m.set_chip(mb, l, v);
+            }
+        }
+        // 5: replace every entry of one subgraph with random chiplets
+        5 => {
+            let segs = m.segments();
+            let (s, e) = *rng.choose(&segs);
+            let mb = rng.gen_index(rows);
+            for l in s..e {
+                m.set_chip(mb, l, rng.gen_index(num_chips) as u16);
+            }
+        }
+        // 6: swap one column of subgraphs with another column
+        6 => {
+            let segs = m.segments();
+            if segs.len() < 2 {
+                // no second column: degrade to a multiset-preserving op
+                return apply_operator(m, num_chips, 4, rng);
+            }
+            let i = rng.gen_index(segs.len());
+            let j = rng.gen_index(segs.len());
+            if i == j {
+                return apply_operator(m, num_chips, 4, rng);
+            }
+            let (s0, e0) = segs[i];
+            let (s1, e1) = segs[j];
+            let w = (e0 - s0).min(e1 - s1);
+            for mb in 0..rows {
+                for off in 0..w {
+                    let (a, b) = (m.chip(mb, s0 + off), m.chip(mb, s1 + off));
+                    m.set_chip(mb, s0 + off, b);
+                    m.set_chip(mb, s1 + off, a);
+                }
+            }
+        }
+        // 7: swap the entries of one batch row with another
+        _ => {
+            if rows < 2 {
+                return apply_operator(m, num_chips, 4, rng);
+            }
+            let i = rng.gen_index(rows);
+            let mut j = rng.gen_index(rows);
+            if i == j {
+                j = (j + 1) % rows;
+            }
+            for l in 0..cols {
+                let (a, b) = (m.chip(i, l), m.chip(j, l));
+                m.set_chip(i, l, b);
+                m.set_chip(j, l, a);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rows: usize, cols: usize, chips: usize, seed: u64) -> (Mapping, Rng) {
+        let mut rng = Rng::seed_from_u64(seed);
+        (random_mapping(rows, cols, chips, &mut rng), rng)
+    }
+
+    #[test]
+    fn random_mapping_valid() {
+        let (m, _) = mk(4, 12, 6, 0);
+        assert!(m.is_valid(6));
+    }
+
+    #[test]
+    fn crossover_inherits_from_parents_only() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = random_mapping(3, 9, 5, &mut rng);
+        let b = random_mapping(3, 9, 5, &mut rng);
+        for _ in 0..20 {
+            let c = crossover(&a, &b, &mut rng);
+            assert!(c.is_valid(5));
+            for mb in 0..3 {
+                for l in 0..9 {
+                    let v = c.chip(mb, l);
+                    assert!(
+                        v == a.chip(mb, l) || v == b.chip(mb, l),
+                        "child gene not from a parent"
+                    );
+                }
+            }
+            for i in 0..c.segmentation.len() {
+                assert!(
+                    c.segmentation[i] == a.segmentation[i]
+                        || c.segmentation[i] == b.segmentation[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_subgraph_blocks_are_contiguous() {
+        // with distinct parent alphabets, each (mb, segment) block of the
+        // child must be uniformly from one parent
+        let mut rng = Rng::seed_from_u64(2);
+        let mut a = Mapping::new(2, 8);
+        let mut b = Mapping::new(2, 8);
+        for g in a.layer_to_chip.iter_mut() {
+            *g = 0;
+        }
+        for g in b.layer_to_chip.iter_mut() {
+            *g = 1;
+        }
+        for _ in 0..10 {
+            let c = crossover(&a, &b, &mut rng);
+            for (s, e) in c.segments() {
+                for mb in 0..2 {
+                    let first = c.chip(mb, s);
+                    assert!(
+                        (s..e).all(|l| c.chip(mb, l) == first),
+                        "block not inherited wholesale"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_operator_preserves_validity() {
+        for op in 1..=7u8 {
+            let (mut m, mut rng) = mk(4, 10, 6, op as u64);
+            for _ in 0..50 {
+                apply_operator(&mut m, 6, op, &mut rng);
+                assert!(m.is_valid(6), "operator {op} broke validity");
+            }
+        }
+    }
+
+    #[test]
+    fn operators_2_3_4_6_7_preserve_multiset() {
+        // swap/permute operators must not create or destroy chip ids
+        for op in [2u8, 3, 4, 6, 7] {
+            let (mut m, mut rng) = mk(4, 10, 6, 100 + op as u64);
+            let mut before = m.layer_to_chip.clone();
+            before.sort();
+            for _ in 0..25 {
+                apply_operator(&mut m, 6, op, &mut rng);
+            }
+            let mut after = m.layer_to_chip.clone();
+            after.sort();
+            assert_eq!(before, after, "operator {op} changed the multiset");
+        }
+    }
+
+    #[test]
+    fn segmentation_mutations_flip_or_swap() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut m = Mapping::new(2, 10);
+        m.segmentation = vec![true, false, true, false, false, true, false, true, false];
+        let count = |m: &Mapping| m.segmentation.iter().filter(|&&s| s).count();
+        for _ in 0..100 {
+            let before = count(&m);
+            mutate_segmentation(&mut m, &mut rng);
+            let after = count(&m);
+            assert!((before as i64 - after as i64).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn operator_schedule_shifts_with_phase() {
+        let mut rng = Rng::seed_from_u64(11);
+        let sample = |phase: f64, rng: &mut Rng| {
+            let mut counts = [0usize; 7];
+            for _ in 0..4000 {
+                counts[(pick_operator(phase, rng) - 1) as usize] += 1;
+            }
+            counts
+        };
+        let early = sample(0.0, &mut rng);
+        let late = sample(0.95, &mut rng);
+        let graph_early = early[5] + early[6];
+        let graph_late = late[5] + late[6];
+        let layer_early = early[0] + early[1] + early[2];
+        let layer_late = late[0] + late[1] + late[2];
+        assert!(
+            graph_early > graph_late,
+            "graph-level ops must fade: {graph_early} -> {graph_late}"
+        );
+        assert!(
+            layer_late > layer_early,
+            "layer-level ops must grow: {layer_early} -> {layer_late}"
+        );
+    }
+}

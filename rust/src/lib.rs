@@ -1,0 +1,32 @@
+//! # Compass (reproduction)
+//!
+//! Co-exploration of mapping and hardware for heterogeneous multi-chiplet
+//! accelerators targeting LLM inference service workloads.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`workload`] — LLM models, sequence-length traces, serving strategies,
+//!   and the 2-D computation execution graph;
+//! * [`mapping`]  — the paper's mapping encoding + Algorithm-1 presets;
+//! * [`arch`]     — the multi-chiplet hardware template (Table IV space);
+//! * [`cost`]     — the evaluation engine (intra-chiplet dataflow model,
+//!   Algorithm-2 access analysis, timeline, monetary cost);
+//! * [`ga`]       — genetic-algorithm mapping generation engine;
+//! * [`bo`]       — Bayesian-optimization hardware sampling engine (GP
+//!   surrogate executed via PJRT artifacts, two-tier SA acquisition);
+//! * [`baselines`]— Gemini-, MOHaM-, SCAR-style and random baselines;
+//! * [`runtime`]  — PJRT artifact loading/execution (`xla` crate);
+//! * [`dse`]      — the top-level co-exploration driver;
+//! * [`report`]   — table/figure writers mirroring the paper.
+
+pub mod arch;
+pub mod baselines;
+pub mod bo;
+pub mod cost;
+pub mod dse;
+pub mod experiments;
+pub mod ga;
+pub mod mapping;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,243 @@
+//! `repro` — the Compass reproduction launcher.
+//!
+//! One subcommand per paper artifact (see DESIGN.md experiment index):
+//!
+//! ```text
+//! repro table1    [--dram-bw N]                 # Table I  EDP ratios
+//! repro validate                                # Table V  engine validation
+//! repro compare   [--scenes all|reduced] ...    # Fig 7 + Table VI
+//! repro dse       --trace T --phase P --tops N  # single-scene DSE
+//! repro timeline                                # Fig 8    execution timeline
+//! repro serving-study [--decode-groups N]       # Fig 10 + Table VII
+//! repro ablation                                # Fig 11   ablations
+//! repro all                                     # everything above
+//! ```
+//!
+//! Common flags: `--full` (paper-scale budgets), `--seed S`,
+//! `--out-dir D` (CSV output), `--native` (skip PJRT artifacts).
+
+use compass::dse::DseConfig;
+use compass::experiments as exp;
+use compass::report::Table;
+use compass::runtime::Runtime;
+
+const HELP: &str = "repro <command> [flags]
+
+commands:
+  table1          Table I   EDP ratio (OS/WS) per phase x seq length
+  validate        Table V   evaluation-engine validation
+  compare         Fig 7     Gemini vs MOHaM vs Compass (+ Table VI)
+  dse             single-scene co-exploration (--trace/--phase/--tops)
+  timeline        Fig 8     execution timeline of the found mapping
+  serving-study   Fig 10    vLLM / Orca / ChunkedPrefill (+ Table VII)
+  ablation        Fig 11    GA->random, BO->random, SCAR mapping
+  all             everything above
+
+flags:
+  --full              paper-scale search budgets (GA 120x100, BO 100)
+  --native            force the native GP (skip PJRT artifacts)
+  --seed S            RNG seed (default 7)
+  --out-dir D         also write CSVs under D
+  --scenes all|reduced   scenario matrix for compare/all (default reduced)
+  --trace sharegpt|govreport   (default sharegpt)
+  --phase prefill|decode       (default prefill)
+  --tops N            compute target (default 64)
+  --dram-bw N         Table-I probe DRAM bandwidth (default 64)
+  --decode-groups N   serving-study decode batches (default 3)
+";
+
+struct Args {
+    cmd: String,
+    full: bool,
+    native: bool,
+    seed: u64,
+    out_dir: Option<String>,
+    scenes: String,
+    trace: String,
+    prefill: bool,
+    tops: f64,
+    dram_bw: f64,
+    decode_groups: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        cmd: String::new(),
+        full: false,
+        native: false,
+        seed: 7,
+        out_dir: None,
+        scenes: "reduced".into(),
+        trace: "sharegpt".into(),
+        prefill: true,
+        tops: 64.0,
+        dram_bw: 64.0,
+        decode_groups: 3,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--full" => args.full = true,
+            "--native" => args.native = true,
+            "--seed" => args.seed = next_val(&mut it, a),
+            "--out-dir" => args.out_dir = Some(next_str(&mut it, a)),
+            "--scenes" => args.scenes = next_str(&mut it, a),
+            "--trace" => args.trace = next_str(&mut it, a),
+            "--phase" => args.prefill = next_str(&mut it, a) != "decode",
+            "--tops" => args.tops = next_val(&mut it, a),
+            "--dram-bw" => args.dram_bw = next_val(&mut it, a),
+            "--decode-groups" => args.decode_groups = next_val(&mut it, a),
+            "-h" | "--help" => {
+                print!("{HELP}");
+                std::process::exit(0);
+            }
+            s if !s.starts_with('-') && args.cmd.is_empty() => args.cmd = s.to_string(),
+            other => {
+                eprintln!("unknown argument: {other}\n{HELP}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if args.cmd.is_empty() {
+        print!("{HELP}");
+        std::process::exit(2);
+    }
+    args
+}
+
+fn next_str(it: &mut std::iter::Peekable<std::slice::Iter<String>>, flag: &str) -> String {
+    it.next()
+        .unwrap_or_else(|| {
+            eprintln!("{flag} needs a value");
+            std::process::exit(2);
+        })
+        .clone()
+}
+
+fn next_val<T: std::str::FromStr>(
+    it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+    flag: &str,
+) -> T {
+    next_str(it, flag).parse().unwrap_or_else(|_| {
+        eprintln!("{flag}: invalid value");
+        std::process::exit(2);
+    })
+}
+
+fn save(t: &Table, out_dir: &Option<String>, name: &str) {
+    t.print();
+    if let Some(dir) = out_dir {
+        let path = format!("{dir}/{name}.csv");
+        if let Err(e) = t.write_csv(&path) {
+            eprintln!("[compass] csv write failed: {e}");
+        } else {
+            println!("[compass] wrote {path}");
+        }
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    let cfg = if args.full {
+        DseConfig::paper()
+    } else {
+        DseConfig::reduced()
+    };
+    let rt = if args.native {
+        None
+    } else {
+        match Runtime::from_env() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("[compass] PJRT unavailable ({e}); using native GP");
+                None
+            }
+        }
+    };
+    let rt_ref = rt.as_ref();
+    let t0 = std::time::Instant::now();
+
+    match args.cmd.as_str() {
+        "table1" => {
+            save(&exp::table1(args.dram_bw), &args.out_dir, "table1");
+        }
+        "validate" => {
+            save(&exp::table5(2), &args.out_dir, "table5");
+        }
+        "compare" => {
+            let scenes = if args.scenes == "all" {
+                exp::Scene::paper_matrix()
+            } else {
+                exp::Scene::reduced_matrix()
+            };
+            let rows = exp::fig7_compare(&scenes, &cfg, rt_ref, args.seed);
+            save(&exp::fig7_table(&rows), &args.out_dir, "fig7_normalized");
+            save(&exp::fig7_savings(&rows), &args.out_dir, "fig7_savings");
+            save(&exp::table6(&rows), &args.out_dir, "table6");
+        }
+        "dse" => {
+            let scene = exp::Scene::new(&args.trace, args.prefill, args.tops);
+            let rows = exp::fig7_compare(std::slice::from_ref(&scene), &cfg, rt_ref, args.seed);
+            save(&exp::fig7_table(&rows), &args.out_dir, "dse_compare");
+            save(&exp::table6(&rows), &args.out_dir, "dse_hw");
+        }
+        "timeline" => {
+            let scene = exp::Scene::new(&args.trace, true, args.tops);
+            println!("{}", exp::fig8_timeline(&scene, &cfg, rt_ref, args.seed));
+            let scene_d = exp::Scene::new(&args.trace, false, args.tops);
+            println!("{}", exp::fig8_timeline(&scene_d, &cfg, rt_ref, args.seed));
+        }
+        "serving-study" => {
+            let results = exp::fig10_serving(&cfg, rt_ref, args.seed, args.decode_groups);
+            save(&exp::fig10a_table(&results), &args.out_dir, "fig10a");
+            save(&exp::table7(&results), &args.out_dir, "table7");
+            let cp = results
+                .iter()
+                .find(|r| r.strategy == compass::workload::serving::ServingStrategy::ChunkedPrefill)
+                .expect("chunked prefill result");
+            save(
+                &exp::fig10b_homo_hetero(&cfg, &cp.hw, args.seed, args.decode_groups),
+                &args.out_dir,
+                "fig10b",
+            );
+        }
+        "ablation" => {
+            save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
+        }
+        "all" => {
+            save(&exp::table1(args.dram_bw), &args.out_dir, "table1");
+            save(&exp::table5(2), &args.out_dir, "table5");
+            let scenes = if args.scenes == "all" {
+                exp::Scene::paper_matrix()
+            } else {
+                exp::Scene::reduced_matrix()
+            };
+            let rows = exp::fig7_compare(&scenes, &cfg, rt_ref, args.seed);
+            save(&exp::fig7_table(&rows), &args.out_dir, "fig7_normalized");
+            save(&exp::fig7_savings(&rows), &args.out_dir, "fig7_savings");
+            save(&exp::table6(&rows), &args.out_dir, "table6");
+            let scene = exp::Scene::new("sharegpt", true, 64.0);
+            println!("{}", exp::fig8_timeline(&scene, &cfg, rt_ref, args.seed));
+            let results = exp::fig10_serving(&cfg, rt_ref, args.seed, args.decode_groups);
+            save(&exp::fig10a_table(&results), &args.out_dir, "fig10a");
+            save(&exp::table7(&results), &args.out_dir, "table7");
+            if let Some(cp) = results
+                .iter()
+                .find(|r| r.strategy == compass::workload::serving::ServingStrategy::ChunkedPrefill)
+            {
+                save(
+                    &exp::fig10b_homo_hetero(&cfg, &cp.hw, args.seed, args.decode_groups),
+                    &args.out_dir,
+                    "fig10b",
+                );
+            }
+            save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    eprintln!("[compass] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

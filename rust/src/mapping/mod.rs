@@ -1,0 +1,154 @@
+//! Computation-execution-graph-based mapping encoding (paper §IV).
+//!
+//! A workload with `R = N / micro_batch_size` micro-batches and `M` layers
+//! is encoded by three components:
+//!   * `micro_batch_size` — division along the micro-batch dimension
+//!     (searched by the hardware sampling engine, paper §V-A);
+//!   * `segmentation`    — binary vector of length `M-1` segmenting the
+//!     layer dimension;
+//!   * `layer_to_chip`   — an `R x M` matrix assigning every
+//!     (micro-batch, layer) cell to a chiplet.
+//!
+//! Scheduling order (paper Fig. 4 / Algorithm 2 loop order): segments in
+//! layer order; within a segment, micro-batches in order; within a
+//! micro-batch, layers in order. All-zero segmentation gives layer-first
+//! (row-wise) scheduling, all-ones gives micro-batch-first (column-wise).
+
+pub mod presets;
+
+
+/// The mapping genome explored by the GA (paper §IV).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    /// `R x M` row-major chiplet assignment.
+    pub layer_to_chip: Vec<u16>,
+    /// Segment boundary after layer `i` when `segmentation[i]` is true
+    /// (length `M - 1`).
+    pub segmentation: Vec<bool>,
+    /// Rows (`R` = number of micro-batches).
+    pub rows: usize,
+    /// Columns (`M` = layers per micro-batch).
+    pub cols: usize,
+}
+
+impl Mapping {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Mapping {
+            layer_to_chip: vec![0; rows * cols],
+            segmentation: vec![false; cols.saturating_sub(1)],
+            rows,
+            cols,
+        }
+    }
+
+    #[inline]
+    pub fn chip(&self, mb: usize, layer: usize) -> u16 {
+        self.layer_to_chip[mb * self.cols + layer]
+    }
+
+    #[inline]
+    pub fn set_chip(&mut self, mb: usize, layer: usize, chip: u16) {
+        self.layer_to_chip[mb * self.cols + layer] = chip;
+    }
+
+    /// Validity against a chiplet count.
+    pub fn is_valid(&self, num_chips: usize) -> bool {
+        self.layer_to_chip.len() == self.rows * self.cols
+            && self.segmentation.len() == self.cols.saturating_sub(1)
+            && self.layer_to_chip.iter().all(|&c| (c as usize) < num_chips)
+    }
+
+    /// Segment boundaries as `[start, end)` layer ranges.
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for (i, &cut) in self.segmentation.iter().enumerate() {
+            if cut {
+                out.push((start, i + 1));
+                start = i + 1;
+            }
+        }
+        if start < self.cols {
+            out.push((start, self.cols));
+        }
+        out
+    }
+
+    /// The scheduling order of paper Fig. 4: for each segment, for each
+    /// micro-batch, for each layer in the segment, yield `(mb, layer)`.
+    pub fn schedule_order(&self) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(self.rows * self.cols);
+        for (s, e) in self.segments() {
+            for mb in 0..self.rows {
+                for layer in s..e {
+                    order.push((mb, layer));
+                }
+            }
+        }
+        order
+    }
+
+    /// Distinct chiplets actually used.
+    pub fn chips_used(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        for &c in &self.layer_to_chip {
+            seen.insert(c);
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_cover_all_layers() {
+        let mut m = Mapping::new(2, 6);
+        m.segmentation = vec![false, true, false, false, true];
+        let segs = m.segments();
+        assert_eq!(segs, vec![(0, 2), (2, 5), (5, 6)]);
+        let total: usize = segs.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn all_zero_segmentation_is_layer_first() {
+        let m = Mapping::new(2, 3);
+        // one segment: mb0 runs all layers, then mb1 (row-wise)
+        assert_eq!(
+            m.schedule_order(),
+            vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+        );
+    }
+
+    #[test]
+    fn all_one_segmentation_is_micro_batch_first() {
+        let mut m = Mapping::new(2, 3);
+        m.segmentation = vec![true, true];
+        // per-layer segments: layer 0 across mbs, then layer 1 (column-wise)
+        assert_eq!(
+            m.schedule_order(),
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]
+        );
+    }
+
+    #[test]
+    fn schedule_is_a_permutation() {
+        let mut m = Mapping::new(3, 5);
+        m.segmentation = vec![false, true, true, false];
+        let order = m.schedule_order();
+        assert_eq!(order.len(), 15);
+        let set: std::collections::HashSet<_> = order.iter().collect();
+        assert_eq!(set.len(), 15);
+    }
+
+    #[test]
+    fn validity_checks_chip_range() {
+        let mut m = Mapping::new(2, 2);
+        assert!(m.is_valid(1));
+        m.set_chip(1, 1, 7);
+        assert!(!m.is_valid(4));
+        assert!(m.is_valid(8));
+    }
+}

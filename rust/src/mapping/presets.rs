@@ -1,0 +1,105 @@
+//! Algorithm 1 of the paper: the mapping-encoding representations of the
+//! three common parallelism paradigms, demonstrating the encoding's
+//! flexibility (data / model / pipeline parallelism are all special cases).
+
+use super::Mapping;
+
+/// Data parallelism: `micro_batch_size = 1`; each micro-batch (row `i`)
+/// independently executes all layers on chiplet `i mod C` — no
+/// inter-chiplet communication, inter-layer activations stay on-chiplet.
+///
+/// `rows` = batch size (B), `cols` = layers (L), `chips` = C.
+pub fn data_parallel(rows: usize, cols: usize, chips: usize) -> Mapping {
+    let mut m = Mapping::new(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m.set_chip(i, j, (i % chips) as u16);
+        }
+    }
+    m
+}
+
+/// Model parallelism: `micro_batch_size = B` (one fused micro-batch);
+/// layer `i` runs on chiplet `i mod C`; inter-layer activations travel
+/// over the NoP instead of DRAM.
+pub fn model_parallel(cols: usize, chips: usize) -> Mapping {
+    let mut m = Mapping::new(1, cols);
+    for j in 0..cols {
+        m.set_chip(0, j, (j % chips) as u16);
+    }
+    m
+}
+
+/// Pipeline parallelism: `micro_batch_size = k` (B/k rows); segmentation
+/// cuts after every C-th layer (Algorithm 1 lines 21-25); layer `j` is
+/// pinned to chiplet `j mod C` so batches stream through layer-stages
+/// like a pipeline.
+pub fn pipeline_parallel(rows: usize, cols: usize, chips: usize) -> Mapping {
+    let mut m = Mapping::new(rows, cols);
+    for i in 0..cols.saturating_sub(1) {
+        if (i + 1) % chips == 0 {
+            m.segmentation[i] = true;
+        }
+    }
+    for j in 0..cols {
+        for i in 0..rows {
+            m.set_chip(i, j, (j % chips) as u16);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_parallel_keeps_rows_on_one_chip() {
+        let m = data_parallel(8, 4, 4);
+        for i in 0..8 {
+            let c0 = m.chip(i, 0);
+            assert!((0..4).all(|j| m.chip(i, j) == c0));
+            assert_eq!(c0, (i % 4) as u16);
+        }
+        assert!(m.segmentation.iter().all(|&s| !s));
+    }
+
+    #[test]
+    fn model_parallel_spreads_layers() {
+        let m = model_parallel(6, 4);
+        assert_eq!(m.rows, 1);
+        let chips: Vec<u16> = (0..6).map(|j| m.chip(0, j)).collect();
+        assert_eq!(chips, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn pipeline_parallel_segments_every_c_layers() {
+        let m = pipeline_parallel(4, 8, 4);
+        // cuts after layers 3 (i=3 -> (3+1)%4==0) and 7 is last (no cut slot)
+        let cuts: Vec<usize> = m
+            .segmentation
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(cuts, vec![3]);
+        // layer j pinned to chip j % C for every micro-batch
+        for i in 0..4 {
+            for j in 0..8 {
+                assert_eq!(m.chip(i, j), (j % 4) as u16);
+            }
+        }
+        // schedule interleaves micro-batches within each segment
+        let order = m.schedule_order();
+        assert_eq!(order[0], (0, 0));
+        assert_eq!(order[4], (1, 0)); // second micro-batch enters stage set
+    }
+
+    #[test]
+    fn presets_are_valid() {
+        assert!(data_parallel(8, 4, 4).is_valid(4));
+        assert!(model_parallel(12, 8).is_valid(8));
+        assert!(pipeline_parallel(4, 12, 6).is_valid(6));
+    }
+}

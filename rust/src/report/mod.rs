@@ -1,0 +1,184 @@
+//! Report writers: markdown/CSV tables mirroring the paper's tables and
+//! figures (no external serialisation crates are vendored, so the
+//! writers are self-contained).
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// A printable table (markdown to stdout, CSV to disk).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as a markdown table string.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let inner: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", inner.join(" | "))
+        };
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+
+    /// Write as CSV (quotes cells containing separators).
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        writeln!(
+            f,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        )?;
+        for row in &self.rows {
+            writeln!(
+                f,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Normalise a metric series so the maximum is 1.0 (paper Fig. 7 style).
+pub fn normalize_max(xs: &[f64]) -> Vec<f64> {
+    let max = xs.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    xs.iter().map(|x| x / max).collect()
+}
+
+/// ASCII horizontal bar (for terminal "figures").
+pub fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(n), ".".repeat(width.saturating_sub(n)))
+}
+
+/// Render a spatio-temporal execution timeline (paper Fig. 5/8) as ASCII:
+/// one row per chiplet, time bucketed into `width` columns, cells showing
+/// the phase initial of the task occupying the bucket.
+pub fn ascii_timeline(
+    entries: &[crate::cost::TimelineEntry],
+    num_chips: usize,
+    width: usize,
+) -> String {
+    let t_end = entries.iter().map(|e| e.end).fold(0.0, f64::max).max(1e-9);
+    let mut grid = vec![vec![' '; width]; num_chips];
+    for e in entries {
+        let c = e.chip as usize;
+        if c >= num_chips {
+            continue;
+        }
+        let s = ((e.start / t_end) * width as f64) as usize;
+        let en = (((e.end / t_end) * width as f64).ceil() as usize).min(width);
+        let ch = match e.phase {
+            crate::workload::Phase::QkvGen => 'Q',
+            crate::workload::Phase::QkT | crate::workload::Phase::Av => 'A',
+            crate::workload::Phase::Proj => 'P',
+            crate::workload::Phase::Ffn1 => 'F',
+            crate::workload::Phase::Ffn2 => 'f',
+            crate::workload::Phase::Vector => 'v',
+        };
+        for cell in grid[c].iter_mut().take(en).skip(s) {
+            *cell = ch;
+        }
+    }
+    let mut out = String::new();
+    for (c, row) in grid.iter().enumerate() {
+        out.push_str(&format!("chip{c:>3} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "legend: Q=QKV A=MHA P=Proj F=FFN1 f=FFN2  (span = {:.3e} cycles)\n",
+        t_end
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_well_formed() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("## Demo"));
+        // leading blank + title + blank + header + separator + 2 rows
+        assert_eq!(md.matches('\n').count(), 7);
+        assert!(md.lines().skip(2).all(|l| l.is_empty() || l.starts_with('|')));
+    }
+
+    #[test]
+    fn csv_roundtrip_escaping() {
+        let dir = std::env::temp_dir().join("compass_test_csv");
+        let path = dir.join("t.csv");
+        let mut t = Table::new("x", &["h1", "h2"]);
+        t.row(vec!["plain".into(), "with,comma".into()]);
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"with,comma\""));
+        assert!(body.starts_with("h1,h2"));
+    }
+
+    #[test]
+    fn normalize_max_puts_max_at_one() {
+        let n = normalize_max(&[2.0, 4.0, 1.0]);
+        assert_eq!(n, vec![0.5, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn bar_width_clamped() {
+        assert_eq!(bar(0.5, 10), "#####.....");
+        assert_eq!(bar(2.0, 4), "####");
+        assert_eq!(bar(-1.0, 4), "....");
+    }
+}

@@ -1,0 +1,229 @@
+//! Small self-contained utilities: a seeded RNG (no external crates are
+//! vendored for randomness) and a micro-benchmark harness used by the
+//! `cargo bench` binaries.
+
+/// Deterministic 64-bit RNG: splitmix64 state update with an xorshift
+/// output mix. Statistical quality is ample for search heuristics and
+/// synthetic trace generation; determinism under a seed is the contract.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut r = Rng {
+            state: seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
+        };
+        // warm up so small seeds decorrelate
+        r.next_u64();
+        r.next_u64();
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // splitmix64
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)` (`hi > lo`).
+    #[inline]
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn gen_index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_index(xs.len())]
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(f64::EPSILON);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// Minimal wall-clock benchmark harness for `harness = false` benches
+/// (criterion is not vendored in this environment). Runs `f` in batches
+/// until `budget` elapses (at least `min_iters`), reports mean/min.
+pub struct Bench {
+    pub name: String,
+    budget: std::time::Duration,
+    min_iters: u32,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            budget: std::time::Duration::from_millis(400),
+            min_iters: 3,
+        }
+    }
+
+    pub fn budget_ms(mut self, ms: u64) -> Self {
+        self.budget = std::time::Duration::from_millis(ms);
+        self
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns mean seconds.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> f64 {
+        // warm-up
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed();
+        let mut times = vec![first.as_secs_f64()];
+        let start = std::time::Instant::now();
+        let mut iters = 1u32;
+        while (start.elapsed() < self.budget || iters < self.min_iters) && iters < 10_000 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(
+            "bench {:<44} iters {:>5}  mean {:>12}  min {:>12}",
+            self.name,
+            times.len(),
+            fmt_time(mean),
+            fmt_time(min)
+        );
+        mean
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Format a float with engineering suffixes for report tables.
+pub fn fmt_eng(x: f64) -> String {
+    let ax = x.abs();
+    if ax == 0.0 {
+        "0".into()
+    } else if ax >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else if ax >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.3e}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic_per_seed() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_respects_bounds_and_covers() {
+        let mut r = Rng::seed_from_u64(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.gen_range(5, 15);
+            assert!((5..15).contains(&x));
+            seen[(x - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_mean_and_var_sane() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_preserves_elements() {
+        let mut r = Rng::seed_from_u64(4);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(0.002).contains("ms"));
+        assert!(fmt_eng(2_500_000.0).contains('M'));
+    }
+}

@@ -1,0 +1,587 @@
+//! LLM inference-service workloads (paper §III-A, Fig. 2).
+//!
+//! A batch mixes requests of different *types* (prefill / decode) and
+//! *sequence lengths*. During execution the batch is **merged** into one
+//! tall GEMM for QKV generation, **split** per request for multi-head
+//! attention, and **re-merged** for the projection and FFN layers — the
+//! merge–split–merge pattern that distinguishes LLM serving workloads
+//! from traditional DNNs.
+
+pub mod models;
+pub mod serving;
+pub mod trace;
+
+
+pub use models::ModelSpec;
+
+/// A single request inside a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Request {
+    /// Prefill over `len` new tokens with `past` tokens of existing
+    /// context (``past > 0`` for chunked prefill continuation chunks).
+    Prefill { len: u64, past: u64 },
+    /// Decode of one token against a `ctx`-token KV cache.
+    Decode { ctx: u64 },
+}
+
+impl Request {
+    pub fn prefill(len: u64) -> Self {
+        Request::Prefill { len, past: 0 }
+    }
+
+    pub fn decode(ctx: u64) -> Self {
+        Request::Decode { ctx }
+    }
+
+    /// Query-side tokens this request contributes to merged GEMMs.
+    pub fn q_tokens(&self) -> u64 {
+        match *self {
+            Request::Prefill { len, .. } => len,
+            Request::Decode { .. } => 1,
+        }
+    }
+
+    /// KV-side context length attended over.
+    pub fn kv_tokens(&self) -> u64 {
+        match *self {
+            Request::Prefill { len, past } => len + past,
+            Request::Decode { ctx } => ctx + 1,
+        }
+    }
+
+    pub fn is_prefill(&self) -> bool {
+        matches!(self, Request::Prefill { .. })
+    }
+}
+
+/// Computation phase of a layer (paper Table I breakdown axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    QkvGen,
+    QkT,
+    Av,
+    Proj,
+    Ffn1,
+    Ffn2,
+    Vector,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::QkvGen => "QKV Gen",
+            Phase::QkT => "QK^T",
+            Phase::Av => "AV",
+            Phase::Proj => "Proj",
+            Phase::Ffn1 => "FFN1",
+            Phase::Ffn2 => "FFN2",
+            Phase::Vector => "Vector",
+        }
+    }
+}
+
+/// Computational shape of one schedulable layer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Dense GEMM `[m x k] @ [k x n]` with a resident `k x n` weight.
+    Gemm { m: u64, k: u64, n: u64 },
+    /// Per-request multi-head attention: for every `(s_q, s_kv)` request,
+    /// `heads` x (QK^T: [s_q x d_h][d_h x s_kv]; AV: [s_q x s_kv][s_kv x d_h]).
+    /// Both operands are activations (no resident weight).
+    Attention {
+        heads: u64,
+        head_dim: u64,
+        reqs: Vec<(u64, u64)>,
+    },
+}
+
+impl LayerKind {
+    /// Total multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        match self {
+            LayerKind::Gemm { m, k, n } => m * k * n,
+            LayerKind::Attention {
+                heads,
+                head_dim,
+                reqs,
+            } => reqs
+                .iter()
+                .map(|&(sq, skv)| 2 * heads * head_dim * sq * skv)
+                .sum(),
+        }
+    }
+}
+
+/// One schedulable node of the computation execution graph.
+#[derive(Debug, Clone)]
+pub struct LayerNode {
+    pub name: String,
+    pub phase: Phase,
+    pub kind: LayerKind,
+    /// Resident weight bytes (0 for attention).
+    pub weight_bytes: u64,
+    /// Activation bytes consumed from predecessor layers.
+    pub in_bytes: u64,
+    /// Activation bytes produced.
+    pub out_bytes: u64,
+    /// Bytes always read from DRAM regardless of mapping (KV-cache reads).
+    pub kv_read_bytes: u64,
+    /// Bytes always written to DRAM (KV-cache writes; paper: per-layer
+    /// mandatory write-out flags for KV management).
+    pub kv_write_bytes: u64,
+    /// Predecessor layer indices within the same micro-batch column.
+    pub preds: Vec<usize>,
+    /// Folded post-processing scalar ops (LayerNorm/softmax/activation/
+    /// residual/partial-sum reduction), costed on the vector unit.
+    pub vec_ops: u64,
+    /// Pinned DRAM chip for this layer's off-chip traffic (paper: per-layer
+    /// DRAM ID); `None` = nearest to the executing chiplet.
+    pub dram_id: Option<u8>,
+    /// Mandatory result write-out (paper: per-layer flags supporting
+    /// KV-cache management); the Algorithm-2 optimisation may not clear
+    /// this layer's write-back.
+    pub force_out: bool,
+    /// Shape-equivalence class id (layers with identical `kind`+`vec_ops`
+    /// share one id): the evaluation engine memoises per-class kernel
+    /// costs, the dominant win on batched workloads where micro-batches
+    /// and transformer blocks repeat the same GEMM shapes.
+    pub shape_class: u32,
+}
+
+/// The work of one micro-batch: requests fused per §III-A plus the layer
+/// column they expand into (identical *structure* across micro-batches;
+/// shapes differ with the fused sequence lengths).
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    pub requests: Vec<Request>,
+    pub layers: Vec<LayerNode>,
+}
+
+/// A fully instantiated workload: the 2-D computation execution graph
+/// (micro-batch x layer) of paper §IV.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub micro_batches: Vec<MicroBatch>,
+    /// Layers per micro-batch column (`M`).
+    pub layers_per_mb: usize,
+    /// Cost multiplier extrapolating the evaluated transformer blocks to
+    /// the full model depth (identical blocks -> steady state).
+    pub block_scale: f64,
+    pub model: String,
+}
+
+impl Workload {
+    pub fn num_micro_batches(&self) -> usize {
+        self.micro_batches.len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        let per: u64 = self
+            .micro_batches
+            .iter()
+            .flat_map(|mb| mb.layers.iter())
+            .map(|l| l.kind.macs())
+            .sum();
+        (per as f64 * self.block_scale) as u64
+    }
+}
+
+/// Workload-construction knobs that the DSE searches or the scenario fixes.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadParams {
+    /// Requests fused per micro-batch (must divide the batch size).
+    pub micro_batch_size: usize,
+    /// FFN partition count (tensor parallelism).
+    pub tensor_parallel: usize,
+    /// Transformer blocks instantiated explicitly; the rest are
+    /// extrapolated by `block_scale` (0 = all blocks).
+    pub eval_blocks: usize,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        WorkloadParams {
+            micro_batch_size: 1,
+            tensor_parallel: 8,
+            eval_blocks: 2,
+        }
+    }
+}
+
+/// Build the computation execution graph for `batch` on `model`.
+///
+/// Layer column per transformer block (paper Fig. 2):
+///   QKV(merged) -> MHA(split per request) -> Proj(merged)
+///   -> FFN1_0..FFN1_{tp-1} -> FFN2_0..FFN2_{tp-1}
+/// Norm/softmax/activation/residual/reduction costs are folded into the
+/// adjacent GEMM's `vec_ops` (post-processing unit, paper §V-C).
+pub fn build_workload(
+    model: &ModelSpec,
+    batch: &[Request],
+    params: &WorkloadParams,
+) -> Workload {
+    let mbs = params.micro_batch_size.clamp(1, batch.len().max(1));
+    let tp = params.tensor_parallel.max(1);
+    let eval_blocks = if params.eval_blocks == 0 {
+        model.n_blocks as usize
+    } else {
+        params.eval_blocks.min(model.n_blocks as usize)
+    };
+    let block_scale = model.n_blocks as f64 / eval_blocks as f64;
+
+    let mut micro_batches = Vec::new();
+    for chunk in batch.chunks(mbs) {
+        micro_batches.push(MicroBatch {
+            requests: chunk.to_vec(),
+            layers: build_mb_layers(model, chunk, tp, eval_blocks),
+        });
+    }
+    let layers_per_mb = micro_batches.first().map_or(0, |m| m.layers.len());
+    debug_assert!(micro_batches.iter().all(|m| m.layers.len() == layers_per_mb));
+    assign_shape_classes(&mut micro_batches);
+    Workload {
+        micro_batches,
+        layers_per_mb,
+        block_scale,
+        model: model.name.clone(),
+    }
+}
+
+/// Assign shape-equivalence class ids (see `LayerNode::shape_class`).
+/// Keys are 64-bit hashes of (kind, vec_ops) to avoid cloning attention
+/// request lists; a collision would only merge two cost-memo entries.
+fn assign_shape_classes(micro_batches: &mut [MicroBatch]) {
+    use std::hash::{Hash, Hasher};
+    let mut table: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    for mb in micro_batches.iter_mut() {
+        for layer in mb.layers.iter_mut() {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            layer.kind.hash(&mut h);
+            layer.vec_ops.hash(&mut h);
+            let key = h.finish();
+            let next = table.len() as u32;
+            layer.shape_class = *table.entry(key).or_insert(next);
+        }
+    }
+}
+
+fn build_mb_layers(
+    model: &ModelSpec,
+    reqs: &[Request],
+    tp: usize,
+    eval_blocks: usize,
+) -> Vec<LayerNode> {
+    let b = crate::arch::constants::BYTES_PER_ELEM;
+    let h = model.hidden;
+    let dh = model.head_dim;
+    let kv_dim = model.n_kv_heads * dh;
+    let qkv_n = h + 2 * kv_dim; // fused Q + K + V projection (GQA-aware)
+    let ffn = model.ffn_hidden;
+    let sum_s: u64 = reqs.iter().map(|r| r.q_tokens()).sum();
+    let act = |tokens: u64, width: u64| tokens * width * b;
+
+    let mut layers = Vec::with_capacity(eval_blocks * (3 + 2 * tp));
+    let mut prev_block_outs: Vec<usize> = Vec::new();
+
+    for blk in 0..eval_blocks {
+        let base = layers.len();
+        // --- QKV generation (merged across all requests) ---
+        // vec_ops: pre-LayerNorm + residual add + (if a previous block
+        // exists) the tp-way partial-sum reduction of its FFN2 outputs.
+        let mut qkv_vec = sum_s * h * 7 + sum_s * h;
+        if blk > 0 {
+            qkv_vec += sum_s * h * (tp as u64 - 1);
+        }
+        layers.push(LayerNode {
+            name: format!("b{blk}.qkv"),
+            phase: Phase::QkvGen,
+            kind: LayerKind::Gemm {
+                m: sum_s,
+                k: h,
+                n: qkv_n,
+            },
+            weight_bytes: h * qkv_n * b,
+            in_bytes: act(sum_s, h),
+            out_bytes: act(sum_s, qkv_n),
+            kv_read_bytes: 0,
+            kv_write_bytes: 0,
+            preds: prev_block_outs.clone(),
+            vec_ops: qkv_vec,
+            dram_id: None,
+            force_out: false,
+            shape_class: 0,
+        });
+        // --- MHA (split per request; KV cache traffic) ---
+        let att_reqs: Vec<(u64, u64)> = reqs.iter().map(|r| (r.q_tokens(), r.kv_tokens())).collect();
+        let kv_read: u64 = reqs
+            .iter()
+            .map(|r| match *r {
+                // past context K+V must come from the KV cache in DRAM
+                Request::Prefill { past, .. } => 2 * past * kv_dim * b,
+                Request::Decode { ctx } => 2 * ctx * kv_dim * b,
+            })
+            .sum();
+        // newly produced K+V of this step is appended to the cache
+        let kv_write: u64 = reqs.iter().map(|r| 2 * r.q_tokens() * kv_dim * b).sum();
+        let softmax_ops: u64 = att_reqs
+            .iter()
+            .map(|&(sq, skv)| model.n_heads * sq * skv * 5)
+            .sum();
+        layers.push(LayerNode {
+            name: format!("b{blk}.mha"),
+            phase: Phase::QkT, // split into QkT/Av inside the cost model
+            kind: LayerKind::Attention {
+                heads: model.n_heads,
+                head_dim: dh,
+                reqs: att_reqs,
+            },
+            weight_bytes: 0,
+            in_bytes: act(sum_s, qkv_n),
+            out_bytes: act(sum_s, h),
+            kv_read_bytes: kv_read,
+            kv_write_bytes: kv_write,
+            preds: vec![base],
+            vec_ops: softmax_ops,
+            dram_id: None,
+            force_out: false,
+            shape_class: 0,
+        });
+        // --- output projection (re-merged) ---
+        layers.push(LayerNode {
+            name: format!("b{blk}.proj"),
+            phase: Phase::Proj,
+            kind: LayerKind::Gemm { m: sum_s, k: h, n: h },
+            weight_bytes: h * h * b,
+            in_bytes: act(sum_s, h),
+            out_bytes: act(sum_s, h),
+            kv_read_bytes: 0,
+            kv_write_bytes: 0,
+            preds: vec![base + 1],
+            vec_ops: sum_s * h * 8, // residual + post-attn LayerNorm
+            dram_id: None,
+            force_out: false,
+            shape_class: 0,
+        });
+        let proj_idx = base + 2;
+        // --- FFN, tensor-parallel into `tp` column/row slices ---
+        // SwiGLU models fuse gate+up: widen FFN1 by the gate factor.
+        let ffn1_n_total = ffn * model.ffn1_mult();
+        let ffn1_slice = ffn1_n_total.div_ceil(tp as u64);
+        let ffn2_k_slice = ffn.div_ceil(tp as u64);
+        let mut ffn2_idxs = Vec::with_capacity(tp);
+        for j in 0..tp {
+            layers.push(LayerNode {
+                name: format!("b{blk}.ffn1.{j}"),
+                phase: Phase::Ffn1,
+                kind: LayerKind::Gemm {
+                    m: sum_s,
+                    k: h,
+                    n: ffn1_slice,
+                },
+                weight_bytes: h * ffn1_slice * b,
+                in_bytes: act(sum_s, h),
+                out_bytes: act(sum_s, ffn.div_ceil(tp as u64)),
+                kv_read_bytes: 0,
+                kv_write_bytes: 0,
+                preds: vec![proj_idx],
+                vec_ops: sum_s * ffn1_slice * 2, // activation (+ gating mul)
+                dram_id: None,
+                force_out: false,
+                shape_class: 0,
+            });
+        }
+        for j in 0..tp {
+            let idx = layers.len();
+            layers.push(LayerNode {
+                name: format!("b{blk}.ffn2.{j}"),
+                phase: Phase::Ffn2,
+                kind: LayerKind::Gemm {
+                    m: sum_s,
+                    k: ffn2_k_slice,
+                    n: h,
+                },
+                weight_bytes: ffn2_k_slice * h * b,
+                in_bytes: act(sum_s, ffn2_k_slice),
+                out_bytes: act(sum_s, h),
+                kv_read_bytes: 0,
+                kv_write_bytes: 0,
+                preds: vec![proj_idx + 1 + j],
+                vec_ops: 0, // reduction charged on the consumer (next QKV)
+                dram_id: None,
+                force_out: false,
+                shape_class: 0,
+            });
+            ffn2_idxs.push(idx);
+        }
+        prev_block_outs = ffn2_idxs;
+    }
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpt7b() -> ModelSpec {
+        ModelSpec::gpt3_7b()
+    }
+
+    #[test]
+    fn request_token_accounting() {
+        assert_eq!(Request::prefill(128).q_tokens(), 128);
+        assert_eq!(Request::prefill(128).kv_tokens(), 128);
+        assert_eq!(Request::Prefill { len: 64, past: 192 }.kv_tokens(), 256);
+        assert_eq!(Request::decode(500).q_tokens(), 1);
+        assert_eq!(Request::decode(500).kv_tokens(), 501);
+    }
+
+    #[test]
+    fn layer_column_structure() {
+        let m = gpt7b();
+        let batch = vec![Request::prefill(128); 4];
+        let params = WorkloadParams {
+            micro_batch_size: 2,
+            tensor_parallel: 4,
+            eval_blocks: 2,
+        };
+        let w = build_workload(&m, &batch, &params);
+        assert_eq!(w.num_micro_batches(), 2);
+        // per block: qkv + mha + proj + 4xffn1 + 4xffn2 = 11; x2 blocks
+        assert_eq!(w.layers_per_mb, 22);
+        assert!((w.block_scale - 16.0).abs() < 1e-9); // 32 blocks / 2
+    }
+
+    #[test]
+    fn merged_gemm_uses_sum_of_seq_lens() {
+        let m = gpt7b();
+        let batch = vec![Request::prefill(100), Request::prefill(28)];
+        let params = WorkloadParams {
+            micro_batch_size: 2,
+            tensor_parallel: 1,
+            eval_blocks: 1,
+        };
+        let w = build_workload(&m, &batch, &params);
+        match &w.micro_batches[0].layers[0].kind {
+            LayerKind::Gemm { m: mm, k, n } => {
+                assert_eq!(*mm, 128); // merged 100 + 28
+                assert_eq!(*k, m.hidden);
+                assert_eq!(*n, m.hidden + 2 * m.n_kv_heads * m.head_dim);
+            }
+            _ => panic!("expected gemm"),
+        }
+    }
+
+    #[test]
+    fn mha_splits_per_request() {
+        let m = gpt7b();
+        let batch = vec![Request::prefill(100), Request::decode(400)];
+        let params = WorkloadParams {
+            micro_batch_size: 2,
+            tensor_parallel: 1,
+            eval_blocks: 1,
+        };
+        let w = build_workload(&m, &batch, &params);
+        match &w.micro_batches[0].layers[1].kind {
+            LayerKind::Attention { reqs, .. } => {
+                assert_eq!(reqs.len(), 2);
+                assert_eq!(reqs[0], (100, 100));
+                assert_eq!(reqs[1], (1, 401));
+            }
+            _ => panic!("expected attention"),
+        }
+    }
+
+    #[test]
+    fn decode_reads_kv_cache_prefill_writes_it() {
+        let m = gpt7b();
+        let params = WorkloadParams {
+            micro_batch_size: 1,
+            tensor_parallel: 1,
+            eval_blocks: 1,
+        };
+        let wd = build_workload(&m, &[Request::decode(1000)], &params);
+        let mha = &wd.micro_batches[0].layers[1];
+        assert!(mha.kv_read_bytes > 0);
+        let wp = build_workload(&m, &[Request::prefill(512)], &params);
+        let mha_p = &wp.micro_batches[0].layers[1];
+        assert_eq!(mha_p.kv_read_bytes, 0); // first chunk: no past context
+        assert!(mha_p.kv_write_bytes > 0);
+    }
+
+    #[test]
+    fn chunked_prefill_reads_past_context() {
+        let m = gpt7b();
+        let params = WorkloadParams {
+            micro_batch_size: 1,
+            tensor_parallel: 1,
+            eval_blocks: 1,
+        };
+        let w = build_workload(&m, &[Request::Prefill { len: 512, past: 1024 }], &params);
+        let mha = &w.micro_batches[0].layers[1];
+        assert!(mha.kv_read_bytes > 0);
+        match &mha.kind {
+            LayerKind::Attention { reqs, .. } => assert_eq!(reqs[0], (512, 1536)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_projection() {
+        let llama = ModelSpec::llama3_70b();
+        let gpt = ModelSpec::gpt3_7b();
+        assert!(llama.n_kv_heads < llama.n_heads);
+        assert_eq!(gpt.n_kv_heads, gpt.n_heads);
+        let params = WorkloadParams::default();
+        let w = build_workload(&llama, &[Request::prefill(64)], &params);
+        match &w.micro_batches[0].layers[0].kind {
+            LayerKind::Gemm { n, .. } => {
+                assert_eq!(*n, llama.hidden + 2 * llama.n_kv_heads * llama.head_dim);
+                assert!(*n < 3 * llama.hidden);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn macs_scale_with_depth_extrapolation() {
+        let m = gpt7b();
+        let batch = vec![Request::prefill(64)];
+        let p1 = WorkloadParams {
+            eval_blocks: 1,
+            ..Default::default()
+        };
+        let p2 = WorkloadParams {
+            eval_blocks: 2,
+            ..Default::default()
+        };
+        let w1 = build_workload(&m, &batch, &p1);
+        let w2 = build_workload(&m, &batch, &p2);
+        // different eval depth, same extrapolated total (+-rounding)
+        let rel = (w1.total_macs() as f64 - w2.total_macs() as f64).abs()
+            / w2.total_macs() as f64;
+        assert!(rel < 1e-6, "rel={rel}");
+    }
+
+    #[test]
+    fn ffn_slices_cover_full_width() {
+        let m = gpt7b();
+        for tp in [1usize, 3, 8] {
+            let params = WorkloadParams {
+                micro_batch_size: 1,
+                tensor_parallel: tp,
+                eval_blocks: 1,
+            };
+            let w = build_workload(&m, &[Request::prefill(32)], &params);
+            let total_n: u64 = w.micro_batches[0]
+                .layers
+                .iter()
+                .filter(|l| l.phase == Phase::Ffn1)
+                .map(|l| match l.kind {
+                    LayerKind::Gemm { n, .. } => n,
+                    _ => 0,
+                })
+                .sum();
+            assert!(total_n >= m.ffn_hidden * m.ffn1_mult());
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! LLM architecture descriptions (paper §VI-A workload setup).
+
+
+/// Transformer architecture parameters sufficient to instantiate the
+/// per-layer GEMM shapes of the computation execution graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hidden: u64,
+    /// FFN inner width (for SwiGLU models this is the *per-branch* width).
+    pub ffn_hidden: u64,
+    pub n_heads: u64,
+    /// KV heads (< n_heads under GQA).
+    pub n_kv_heads: u64,
+    pub head_dim: u64,
+    pub n_blocks: u64,
+    /// SwiGLU FFNs compute gate and up projections (2 branches).
+    pub swiglu: bool,
+}
+
+impl ModelSpec {
+    /// Width multiplier of the first FFN GEMM (gate+up fused for SwiGLU).
+    pub fn ffn1_mult(&self) -> u64 {
+        if self.swiglu {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Approximate parameter count (embeddings excluded).
+    pub fn params(&self) -> u64 {
+        let h = self.hidden;
+        let qkv = h * (h + 2 * self.n_kv_heads * self.head_dim);
+        let proj = h * h;
+        let ffn = h * self.ffn_hidden * self.ffn1_mult() + self.ffn_hidden * h;
+        self.n_blocks * (qkv + proj + ffn)
+    }
+
+    /// GPT3-7B-class model (traditional transformer, paper 64-TOPS target).
+    pub fn gpt3_7b() -> Self {
+        ModelSpec {
+            name: "GPT3-7B".into(),
+            hidden: 4096,
+            ffn_hidden: 16384,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            n_blocks: 32,
+            swiglu: false,
+        }
+    }
+
+    /// GPT3-13B-class model (paper 512-TOPS target).
+    pub fn gpt3_13b() -> Self {
+        ModelSpec {
+            name: "GPT3-13B".into(),
+            hidden: 5120,
+            ffn_hidden: 20480,
+            n_heads: 40,
+            n_kv_heads: 40,
+            head_dim: 128,
+            n_blocks: 40,
+            swiglu: false,
+        }
+    }
+
+    /// LLaMA3-70B with GQA + SwiGLU (paper 2048-TOPS target).
+    pub fn llama3_70b() -> Self {
+        ModelSpec {
+            name: "LLaMA3-70B".into(),
+            hidden: 8192,
+            ffn_hidden: 28672,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            n_blocks: 80,
+            swiglu: true,
+        }
+    }
+
+    /// Tiny model for fast unit/property tests.
+    pub fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny".into(),
+            hidden: 64,
+            ffn_hidden: 256,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 16,
+            n_blocks: 4,
+            swiglu: false,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "gpt3-7b" | "gpt3_7b" | "7b" => Some(Self::gpt3_7b()),
+            "gpt3-13b" | "gpt3_13b" | "13b" => Some(Self::gpt3_13b()),
+            "llama3-70b" | "llama3_70b" | "70b" => Some(Self::llama3_70b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_are_in_class() {
+        let p7 = ModelSpec::gpt3_7b().params() as f64 / 1e9;
+        assert!((5.0..9.0).contains(&p7), "7B-class got {p7}B");
+        let p13 = ModelSpec::gpt3_13b().params() as f64 / 1e9;
+        assert!((10.0..16.0).contains(&p13), "13B-class got {p13}B");
+        let p70 = ModelSpec::llama3_70b().params() as f64 / 1e9;
+        assert!((55.0..80.0).contains(&p70), "70B-class got {p70}B");
+    }
+
+    #[test]
+    fn head_geometry_consistent() {
+        for m in [
+            ModelSpec::gpt3_7b(),
+            ModelSpec::gpt3_13b(),
+            ModelSpec::llama3_70b(),
+        ] {
+            assert_eq!(m.n_heads * m.head_dim, m.hidden, "{}", m.name);
+            assert!(m.n_kv_heads <= m.n_heads);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelSpec::by_name("GPT3-7B").is_some());
+        assert!(ModelSpec::by_name("llama3-70b").unwrap().swiglu);
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,266 @@
+//! System-level inference-serving orchestration strategies (paper §II,
+//! §VI-F, Fig. 9): how prefill and decode requests are arranged into the
+//! batches the accelerator sees.
+
+
+use super::trace::Trace;
+use super::Request;
+
+/// SOTA serving strategies compared in paper Fig. 9 / Fig. 10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingStrategy {
+    /// vLLM-style: a prefill request pauses decodes and runs as a
+    /// standalone batch (type-separated workloads).
+    Vllm,
+    /// Orca-style iteration-level batching: the prefill request is
+    /// co-executed with in-flight decode requests in one batch.
+    Orca,
+    /// Sarathi-style chunked prefill: the prefill is split into fixed-size
+    /// chunks, each interleaved with a decode batch.
+    ChunkedPrefill,
+}
+
+impl ServingStrategy {
+    pub const ALL: [ServingStrategy; 3] = [
+        ServingStrategy::Vllm,
+        ServingStrategy::Orca,
+        ServingStrategy::ChunkedPrefill,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServingStrategy::Vllm => "vLLM",
+            ServingStrategy::Orca => "Orca",
+            ServingStrategy::ChunkedPrefill => "ChunkedPrefill",
+        }
+    }
+}
+
+/// One batch group of a serving scenario: a batch composition plus how
+/// many times it repeats during the modeled window (paper §VI-F defines
+/// the GovReport-512TOPS workload as 1 prefill group + 5 decode groups).
+#[derive(Debug, Clone)]
+pub struct BatchGroup {
+    pub label: String,
+    pub batch: Vec<Request>,
+    /// Repetition weight in the scenario objective.
+    pub weight: f64,
+    /// True when this group contains prefill work (selects the prefill
+    /// micro-batch-size knob).
+    pub has_prefill: bool,
+}
+
+/// A serving scenario: the batch groups jointly optimized by the DSE.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub groups: Vec<BatchGroup>,
+}
+
+impl Scenario {
+    /// Pure prefill scenario (paper §VI-C comparisons: batch size 4).
+    pub fn prefill(trace: &Trace, batch_size: usize, n_batches: usize) -> Self {
+        let groups = trace
+            .batches(true, batch_size, n_batches)
+            .into_iter()
+            .enumerate()
+            .map(|(i, batch)| BatchGroup {
+                label: format!("prefill[{i}]"),
+                batch,
+                weight: 1.0,
+                has_prefill: true,
+            })
+            .collect();
+        Scenario {
+            name: "prefill".into(),
+            groups,
+        }
+    }
+
+    /// Pure decode scenario (paper §VI-C: batch size 128).
+    pub fn decode(trace: &Trace, batch_size: usize, n_batches: usize) -> Self {
+        let groups = trace
+            .batches(false, batch_size, n_batches)
+            .into_iter()
+            .enumerate()
+            .map(|(i, batch)| BatchGroup {
+                label: format!("decode[{i}]"),
+                batch,
+                weight: 1.0,
+                has_prefill: false,
+            })
+            .collect();
+        Scenario {
+            name: "decode".into(),
+            groups,
+        }
+    }
+
+    /// Mixed serving scenario of paper §VI-F: one prefill request of
+    /// `prefill_len` arriving amid `decode_groups` batches of
+    /// `decode_batch` in-flight decodes, orchestrated per `strategy`.
+    pub fn serving(
+        strategy: ServingStrategy,
+        trace: &Trace,
+        prefill_len: u64,
+        decode_batch: usize,
+        decode_groups: usize,
+        chunk_size: u64,
+    ) -> Self {
+        let decodes: Vec<Vec<Request>> = (0..decode_groups)
+            .map(|i| trace.decode_batch(decode_batch, i * decode_batch))
+            .collect();
+        let mut groups = Vec::new();
+        match strategy {
+            ServingStrategy::Vllm => {
+                // separated: prefill alone, decodes untouched
+                groups.push(BatchGroup {
+                    label: "prefill-solo".into(),
+                    batch: vec![Request::prefill(prefill_len)],
+                    weight: 1.0,
+                    has_prefill: true,
+                });
+                for (i, d) in decodes.into_iter().enumerate() {
+                    groups.push(BatchGroup {
+                        label: format!("decode[{i}]"),
+                        batch: d,
+                        weight: 1.0,
+                        has_prefill: false,
+                    });
+                }
+            }
+            ServingStrategy::Orca => {
+                // mixed: the whole prefill joins the first decode batch
+                let mut first = vec![Request::prefill(prefill_len)];
+                first.extend(decodes[0].iter().copied());
+                groups.push(BatchGroup {
+                    label: "mixed[0]".into(),
+                    batch: first,
+                    weight: 1.0,
+                    has_prefill: true,
+                });
+                for (i, d) in decodes.into_iter().enumerate().skip(1) {
+                    groups.push(BatchGroup {
+                        label: format!("decode[{i}]"),
+                        batch: d,
+                        weight: 1.0,
+                        has_prefill: false,
+                    });
+                }
+            }
+            ServingStrategy::ChunkedPrefill => {
+                // the prefill is chunked across the decode batches
+                let n_chunks = prefill_len.div_ceil(chunk_size).max(1);
+                let mut past = 0u64;
+                for i in 0..decodes.len() {
+                    let mut batch = Vec::new();
+                    if (i as u64) < n_chunks {
+                        let len = chunk_size.min(prefill_len - past);
+                        batch.push(Request::Prefill { len, past });
+                        past += len;
+                    }
+                    batch.extend(decodes[i].iter().copied());
+                    groups.push(BatchGroup {
+                        label: format!("chunk+decode[{i}]"),
+                        batch,
+                        weight: 1.0,
+                        has_prefill: (i as u64) < n_chunks,
+                    });
+                }
+            }
+        }
+        Scenario {
+            name: strategy.name().into(),
+            groups,
+        }
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.groups.iter().map(|g| g.weight).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::TraceSpec;
+
+    fn trace() -> Trace {
+        Trace::new(&TraceSpec::govreport(), 256, 9)
+    }
+
+    #[test]
+    fn vllm_separates_prefill() {
+        let s = Scenario::serving(ServingStrategy::Vllm, &trace(), 9652, 128, 5, 512);
+        assert_eq!(s.groups.len(), 6);
+        assert_eq!(s.groups[0].batch.len(), 1);
+        assert!(s.groups[0].has_prefill);
+        assert!(s.groups[1..].iter().all(|g| !g.has_prefill));
+    }
+
+    #[test]
+    fn orca_mixes_prefill_with_decodes() {
+        let s = Scenario::serving(ServingStrategy::Orca, &trace(), 9652, 128, 5, 512);
+        assert_eq!(s.groups.len(), 5);
+        assert_eq!(s.groups[0].batch.len(), 129); // prefill + 128 decodes
+        assert!(s.groups[0].batch[0].is_prefill());
+        assert!(s.groups[0].batch[1..].iter().all(|r| !r.is_prefill()));
+    }
+
+    #[test]
+    fn chunked_prefill_covers_whole_prompt() {
+        let len = 9652u64;
+        let chunk = 2048u64;
+        let s = Scenario::serving(
+            ServingStrategy::ChunkedPrefill,
+            &trace(),
+            len,
+            128,
+            5,
+            chunk,
+        );
+        assert_eq!(s.groups.len(), 5);
+        let covered: u64 = s
+            .groups
+            .iter()
+            .flat_map(|g| g.batch.iter())
+            .filter_map(|r| match r {
+                Request::Prefill { len, .. } => Some(*len),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(covered, len);
+        // continuation chunks carry their past context
+        match s.groups[1].batch[0] {
+            Request::Prefill { past, .. } => assert_eq!(past, chunk),
+            _ => panic!("second group must start with a chunk"),
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_balances_batches() {
+        let s = Scenario::serving(
+            ServingStrategy::ChunkedPrefill,
+            &trace(),
+            9652,
+            128,
+            5,
+            2048,
+        );
+        // every group has the decode payload; chunked groups have one more
+        for g in &s.groups {
+            assert!(g.batch.len() == 128 || g.batch.len() == 129);
+        }
+    }
+
+    #[test]
+    fn prefill_and_decode_scenarios() {
+        let t = Trace::new(&TraceSpec::sharegpt(), 512, 1);
+        let p = Scenario::prefill(&t, 4, 2);
+        assert_eq!(p.groups.len(), 2);
+        assert!(p.groups.iter().all(|g| g.batch.len() == 4));
+        let d = Scenario::decode(&t, 128, 2);
+        assert!(d.groups.iter().all(|g| g.batch.len() == 128));
+        assert!((d.total_weight() - 2.0).abs() < 1e-12);
+    }
+}

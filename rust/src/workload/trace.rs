@@ -1,0 +1,228 @@
+//! Sequence-length trace generation (paper §VI-A scenario setup).
+//!
+//! The paper samples ShareGPT (dialogue: short-in/long-out, means 78/483)
+//! and GovReport (summarisation: long-in/short-out, means 9652/602) into a
+//! *fitting set* that guides DSE and a *test set* that validates it. We
+//! synthesise traces from lognormal fits calibrated to those published
+//! means with heavy tails spanning the 1..161,281 range the paper cites
+//! (see DESIGN.md "Substitutions").
+
+use crate::util::Rng;
+
+use super::Request;
+
+/// Maximum sequence length observed in ShareGPT per the paper.
+pub const MAX_SEQ_LEN: u64 = 161_281;
+
+/// A (input_len, output_len) request-length pair.
+pub type LenPair = (u64, u64);
+
+/// Lognormal sequence-length distribution of one serving scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub mean_in: f64,
+    pub mean_out: f64,
+    /// Lognormal shape parameters (sigma of ln X).
+    pub sigma_in: f64,
+    pub sigma_out: f64,
+    pub max_len: u64,
+}
+
+impl TraceSpec {
+    /// ShareGPT-like dialogue scenario: short input, long output.
+    pub fn sharegpt() -> Self {
+        TraceSpec {
+            mean_in: 78.0,
+            mean_out: 483.0,
+            sigma_in: 1.2,
+            sigma_out: 0.9,
+            max_len: MAX_SEQ_LEN,
+        }
+    }
+
+    /// GovReport-like summarisation scenario: long input, short output.
+    pub fn govreport() -> Self {
+        TraceSpec {
+            mean_in: 9652.0,
+            mean_out: 602.0,
+            sigma_in: 0.6,
+            sigma_out: 0.5,
+            max_len: MAX_SEQ_LEN,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "sharegpt" => Some(Self::sharegpt()),
+            "govreport" => Some(Self::govreport()),
+            _ => None,
+        }
+    }
+
+    fn mu(mean: f64, sigma: f64) -> f64 {
+        // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2)
+        mean.ln() - 0.5 * sigma * sigma
+    }
+
+    fn sample_len(&self, rng: &mut Rng, mean: f64, sigma: f64) -> u64 {
+        let mu = Self::mu(mean, sigma);
+        let z = rng.gen_normal();
+        let x = (mu + sigma * z).exp();
+        (x.round() as u64).clamp(1, self.max_len)
+    }
+
+    /// Sample `n` request-length pairs.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<LenPair> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                (
+                    self.sample_len(&mut rng, self.mean_in, self.sigma_in),
+                    self.sample_len(&mut rng, self.mean_out, self.sigma_out),
+                )
+            })
+            .collect()
+    }
+
+    /// Disjoint fitting/test splits (paper: the fitting set guides DSE,
+    /// the test set validates the found designs on unseen lengths).
+    pub fn fit_test_split(&self, n_fit: usize, n_test: usize, seed: u64) -> (Vec<LenPair>, Vec<LenPair>) {
+        (self.sample(n_fit, seed), self.sample(n_test, seed.wrapping_add(0x9e37_79b9)))
+    }
+}
+
+/// A sampled trace with batch-builder helpers (paper: Compass "generates
+/// multiple batches from the input traces to capture average performance
+/// across the sequence-length distribution").
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub pairs: Vec<LenPair>,
+    pub seed: u64,
+}
+
+impl Trace {
+    pub fn new(spec: &TraceSpec, n: usize, seed: u64) -> Self {
+        Trace {
+            pairs: spec.sample(n, seed),
+            seed,
+        }
+    }
+
+    pub fn mean_in(&self) -> f64 {
+        self.pairs.iter().map(|p| p.0 as f64).sum::<f64>() / self.pairs.len().max(1) as f64
+    }
+
+    pub fn mean_out(&self) -> f64 {
+        self.pairs.iter().map(|p| p.1 as f64).sum::<f64>() / self.pairs.len().max(1) as f64
+    }
+
+    /// A prefill batch of `b` requests drawn round-robin from the trace.
+    pub fn prefill_batch(&self, b: usize, offset: usize) -> Vec<Request> {
+        (0..b)
+            .map(|i| Request::prefill(self.pairs[(offset + i) % self.pairs.len()].0))
+            .collect()
+    }
+
+    /// A decode batch: each request decodes against a context of its input
+    /// length plus a uniformly-progressed slice of its output.
+    pub fn decode_batch(&self, b: usize, offset: usize) -> Vec<Request> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ offset as u64);
+        (0..b)
+            .map(|i| {
+                let (inp, out) = self.pairs[(offset + i) % self.pairs.len()];
+                let progressed = rng.gen_range(0, out + 1);
+                Request::decode(inp + progressed)
+            })
+            .collect()
+    }
+
+    /// Multiple batches for distribution-aware DSE.
+    pub fn batches(
+        &self,
+        prefill: bool,
+        batch_size: usize,
+        n_batches: usize,
+    ) -> Vec<Vec<Request>> {
+        (0..n_batches)
+            .map(|i| {
+                if prefill {
+                    self.prefill_batch(batch_size, i * batch_size)
+                } else {
+                    self.decode_batch(batch_size, i * batch_size)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lognormal_means_match_paper() {
+        let s = TraceSpec::sharegpt();
+        let t = Trace::new(&s, 4000, 7);
+        assert!(
+            (t.mean_in() - 78.0).abs() / 78.0 < 0.15,
+            "sharegpt mean_in {}",
+            t.mean_in()
+        );
+        assert!(
+            (t.mean_out() - 483.0).abs() / 483.0 < 0.15,
+            "sharegpt mean_out {}",
+            t.mean_out()
+        );
+        let g = TraceSpec::govreport();
+        let t = Trace::new(&g, 2000, 11);
+        assert!(
+            (t.mean_in() - 9652.0).abs() / 9652.0 < 0.15,
+            "govreport mean_in {}",
+            t.mean_in()
+        );
+    }
+
+    #[test]
+    fn lengths_span_orders_of_magnitude() {
+        let t = Trace::new(&TraceSpec::sharegpt(), 8000, 3);
+        let min = t.pairs.iter().map(|p| p.0).min().unwrap();
+        let max = t.pairs.iter().map(|p| p.0).max().unwrap();
+        assert!(min <= 16, "min {min}");
+        assert!(max >= 1000, "max {max}");
+        assert!(t.pairs.iter().all(|p| p.0 >= 1 && p.0 <= MAX_SEQ_LEN));
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let spec = TraceSpec::govreport();
+        assert_eq!(spec.sample(100, 42), spec.sample(100, 42));
+        assert_ne!(spec.sample(100, 42), spec.sample(100, 43));
+    }
+
+    #[test]
+    fn fit_test_sets_disjoint_sampling() {
+        let spec = TraceSpec::sharegpt();
+        let (fit, test) = spec.fit_test_split(50, 50, 1);
+        assert_eq!(fit.len(), 50);
+        assert_eq!(test.len(), 50);
+        assert_ne!(fit, test);
+    }
+
+    #[test]
+    fn decode_batch_contexts_progress() {
+        let t = Trace::new(&TraceSpec::sharegpt(), 256, 5);
+        let batch = t.decode_batch(128, 0);
+        assert_eq!(batch.len(), 128);
+        assert!(batch.iter().all(|r| matches!(r, Request::Decode { .. })));
+        // contexts must vary (variable sequence lengths within a batch)
+        let ctxs: Vec<u64> = batch
+            .iter()
+            .map(|r| match r {
+                Request::Decode { ctx } => *ctx,
+                _ => 0,
+            })
+            .collect();
+        let uniq: std::collections::HashSet<_> = ctxs.iter().collect();
+        assert!(uniq.len() > 16);
+    }
+}

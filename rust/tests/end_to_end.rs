@@ -1,0 +1,200 @@
+//! End-to-end integration: full Compass runs (trace -> scenario ->
+//! co-exploration -> evaluation) at test-sized budgets, the baselines on
+//! the same footing, and the paper's qualitative claims as assertions.
+
+use compass::arch::HwSpace;
+use compass::baselines::{fixed_length_scenario, gemini, moham, random, scar};
+use compass::bo::NativeGp;
+use compass::dse::{self, DseConfig};
+use compass::experiments as exp;
+use compass::ga::GaConfig;
+use compass::workload::serving::{Scenario, ServingStrategy};
+use compass::workload::trace::{Trace, TraceSpec};
+use compass::workload::ModelSpec;
+
+fn test_cfg() -> DseConfig {
+    let mut cfg = DseConfig::reduced();
+    cfg.ga = GaConfig {
+        population: 8,
+        generations: 5,
+        ..GaConfig::tiny()
+    };
+    cfg.bo.rounds = 7;
+    cfg.bo.init = 4;
+    cfg.eval_blocks = 1;
+    cfg
+}
+
+#[test]
+fn compass_full_pipeline_on_sharegpt_decode() {
+    let scene = exp::Scene::new("sharegpt", false, 64.0);
+    let (scenario, test_scenario, _, model) = scene.build(3);
+    let space = scene.space();
+    let cfg = test_cfg();
+    let mut gp = NativeGp::new();
+    let out = dse::compass_dse(&scenario, &model, &space, &cfg, &mut gp);
+    assert!(out.eval.total_cost() > 0.0);
+    // transfers to the held-out test trace
+    let test = dse::search_mappings(&test_scenario, &model, &out.hw, &cfg.ga, cfg.eval_blocks);
+    assert!(test.eval.latency_cycles > 0.0);
+    assert!(test.eval.total_cost().is_finite());
+}
+
+#[test]
+fn compass_competitive_with_random_hardware_at_equal_budget() {
+    let scene = exp::Scene::new("sharegpt", false, 64.0);
+    let (scenario, _, _, model) = scene.build(5);
+    let space = scene.space();
+    let cfg = test_cfg();
+    let mut gp = NativeGp::new();
+    let out = dse::compass_dse(&scenario, &model, &space, &cfg, &mut gp);
+    let (_, rand_obj) = random::random_hardware(&space, &cfg.bo, |hw| {
+        dse::search_mappings(&scenario, &model, hw, &cfg.ga, cfg.eval_blocks)
+            .eval
+            .total_cost()
+    });
+    assert!(
+        out.eval.total_cost() <= rand_obj * 1.5,
+        "BO {:.3e} vs random {:.3e}",
+        out.eval.total_cost(),
+        rand_obj
+    );
+}
+
+#[test]
+fn ga_mapping_beats_random_and_competes_with_scar() {
+    let trace = Trace::new(&TraceSpec::sharegpt(), 128, 9);
+    let scen = Scenario::decode(&trace, 32, 1);
+    let model = ModelSpec::gpt3_7b();
+    let hw = compass::arch::HwConfig::homogeneous(
+        2,
+        4,
+        compass::arch::ChipletClass::M,
+        compass::arch::Dataflow::WeightStationary,
+        64.0,
+        32.0,
+    );
+    let ga_cfg = GaConfig {
+        population: 12,
+        generations: 10,
+        ..GaConfig::reduced()
+    };
+    let ga = dse::search_mappings(&scen, &model, &hw, &ga_cfg, 1);
+    let rand = random::random_mappings(&scen, &model, &hw, &ga_cfg, 1);
+    let scar_ms = scar::scar_mappings(&scen, &model, &hw, 1);
+    let edp = |e: &compass::cost::EvalResult| e.latency_cycles * e.energy_pj;
+    assert!(
+        edp(&ga.eval) <= edp(&rand.eval) * 1.001,
+        "GA {:.3e} must beat random {:.3e}",
+        edp(&ga.eval),
+        edp(&rand.eval)
+    );
+    assert!(
+        edp(&ga.eval) <= edp(&scar_ms.eval) * 1.05,
+        "GA {:.3e} must be competitive with SCAR {:.3e}",
+        edp(&ga.eval),
+        edp(&scar_ms.eval)
+    );
+}
+
+#[test]
+fn gemini_fixed_length_view_transfers_worse_than_direct_search() {
+    // the paper's core claim: padding to a fixed length misguides the
+    // search when the true batch is highly variable
+    let trace = Trace::new(&TraceSpec::sharegpt(), 256, 21);
+    let scen = Scenario::decode(&trace, 64, 1);
+    let fixed = fixed_length_scenario(&scen, &trace);
+    let model = ModelSpec::gpt3_7b();
+    let hw = compass::arch::HwConfig::homogeneous(
+        2,
+        4,
+        compass::arch::ChipletClass::M,
+        compass::arch::Dataflow::WeightStationary,
+        64.0,
+        32.0,
+    );
+    let sa = gemini::SaConfig {
+        iterations: 60,
+        t0: 1.0,
+        seed: 2,
+    };
+    let padded = gemini::gemini_mappings(&fixed, &model, &hw, &sa, 1);
+    let transferred = gemini::reevaluate(&scen, &model, &hw, &padded.mappings, 1);
+    let direct = gemini::gemini_mappings(&scen, &model, &hw, &sa, 1);
+    assert!(
+        direct.eval.latency_cycles * direct.eval.energy_pj
+            <= transferred.latency_cycles * transferred.energy_pj * 1.2,
+        "direct search should not lose to the padded-view transfer"
+    );
+}
+
+#[test]
+fn moham_restriction_costs_energy_on_batched_decode() {
+    // forcing micro_batch_size = 1 (independent models) forfeits the
+    // merged QKV/FFN GEMMs -> more weight traffic on decode batches
+    let trace = Trace::new(&TraceSpec::sharegpt(), 128, 33);
+    let scen = Scenario::decode(&trace, 32, 1);
+    let model = ModelSpec::gpt3_7b();
+    let space = HwSpace::paper(64.0);
+    let cfg = test_cfg();
+    let mut gp = NativeGp::new();
+    let compass = dse::compass_dse(&scen, &model, &space, &cfg, &mut gp);
+    let (_, mo) = moham::moham_dse(&scen, &model, &space, &cfg.ga, cfg.eval_blocks);
+    assert!(
+        compass.eval.energy_pj < mo.eval.energy_pj,
+        "compass {:.3e} pJ must beat moham {:.3e} pJ on batched decode",
+        compass.eval.energy_pj,
+        mo.eval.energy_pj
+    );
+}
+
+#[test]
+fn chunked_prefill_balances_batch_latencies() {
+    let trace = Trace::new(&TraceSpec::govreport(), 128, 17);
+    let model = ModelSpec::tiny();
+    let hw = compass::arch::HwConfig::homogeneous(
+        2,
+        2,
+        compass::arch::ChipletClass::S,
+        compass::arch::Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    );
+    let ga = GaConfig::tiny();
+    let imbalance = |strategy| {
+        let scen = Scenario::serving(strategy, &trace, 8192, 16, 3, 2048);
+        let ms = dse::search_mappings(&scen, &model, &hw, &ga, 1);
+        let ls: Vec<f64> = ms.eval.per_group.iter().map(|g| g.0).collect();
+        let max = ls.iter().cloned().fold(0.0, f64::max);
+        let min = ls.iter().cloned().fold(f64::INFINITY, f64::min);
+        max / min
+    };
+    let vllm = imbalance(ServingStrategy::Vllm);
+    let chunked = imbalance(ServingStrategy::ChunkedPrefill);
+    assert!(
+        chunked < vllm,
+        "chunked prefill must even out batches: chunked {chunked:.1}x vs vllm {vllm:.1}x"
+    );
+}
+
+#[test]
+fn table1_probe_matches_paper_sign_pattern() {
+    let t = exp::table1(64.0);
+    let parse = |s: &str| s.trim_end_matches('x').parse::<f64>().unwrap();
+    // every phase: WS superior at 128, OS superior at 10240
+    for col in 1..=4 {
+        assert!(parse(&t.rows[0][col]) > 1.0, "col {col} @128");
+        assert!(parse(&t.rows[3][col]) < 1.0, "col {col} @10240");
+    }
+    // QK^T flips earliest
+    assert!(parse(&t.rows[2][2]) < parse(&t.rows[2][1]));
+}
+
+#[test]
+fn validation_errors_stay_small() {
+    let t = exp::table5(1);
+    for cell in &t.rows[2][2..] {
+        let v: f64 = cell.trim_end_matches('%').parse().unwrap();
+        assert!(v < 15.0, "Table V error {cell} exceeds 15%");
+    }
+}

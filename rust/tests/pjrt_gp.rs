@@ -1,0 +1,139 @@
+//! Integration: the PJRT-executed GP artifacts must agree with the
+//! native Rust mirror (same composite kernel, fit, and EI math).
+//!
+//! Requires `make artifacts`; tests skip (pass trivially with a notice)
+//! when the artifacts directory is absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::bo::{featurize, Gp, Hyper, NativeGp, PjrtGp};
+use compass::util::Rng;
+
+fn runtime() -> Option<compass::runtime::Runtime> {
+    let rt = compass::runtime::Runtime::from_env().ok()?;
+    if !rt.artifacts_available() {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        return None;
+    }
+    Some(rt)
+}
+
+fn random_hw(rng: &mut Rng) -> HwConfig {
+    let class = *rng.choose(&ChipletClass::ALL);
+    let n = class.chiplets_for(64.0).min(64);
+    let (h, w) = compass::arch::HwSpace::grid_dims(n);
+    let mut hw = HwConfig::homogeneous(
+        h,
+        w,
+        class,
+        Dataflow::WeightStationary,
+        *rng.choose(&[32.0, 64.0, 128.0]),
+        *rng.choose(&[16.0, 32.0, 64.0]),
+    );
+    for d in hw.layout.iter_mut() {
+        *d = *rng.choose(&Dataflow::ALL);
+    }
+    hw.tensor_parallel = *rng.choose(&[4usize, 8, 16]);
+    hw
+}
+
+fn toy_set(n: usize, seed: u64) -> (Vec<compass::bo::HwFeatures>, Vec<f32>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let hws: Vec<HwConfig> = (0..n).map(|_| random_hw(&mut rng)).collect();
+    let xs: Vec<_> = hws.iter().map(featurize).collect();
+    let ys: Vec<f32> = hws
+        .iter()
+        .map(|h| ((h.nop_bw_gbs / h.dram_bw_gbs).ln() as f32) * 0.4)
+        .collect();
+    (xs, ys)
+}
+
+#[test]
+fn pjrt_fit_matches_native_mll_and_posterior() {
+    let Some(rt) = runtime() else { return };
+    let (xs, ys) = toy_set(12, 1);
+    let hyper = Hyper::default();
+
+    let mut pjrt = PjrtGp::new(&rt);
+    let mll_p = pjrt.fit(&xs, &ys, hyper).expect("pjrt fit");
+    let mut native = NativeGp::new();
+    let mll_n = native.fit(&xs, &ys, hyper).expect("native fit");
+    assert!(
+        (mll_p - mll_n).abs() / mll_n.abs().max(1.0) < 0.05,
+        "MLL mismatch: pjrt {mll_p} native {mll_n}"
+    );
+
+    let (cands, _) = toy_set(6, 99);
+    let f_best = ys.iter().cloned().fold(f32::INFINITY, f32::min);
+    let bp = pjrt.ei(&cands, f_best).expect("pjrt ei");
+    let bn = native.ei(&cands, f_best).expect("native ei");
+    for i in 0..cands.len() {
+        assert!(
+            (bp.mean[i] - bn.mean[i]).abs() < 0.05,
+            "mean[{i}]: pjrt {} native {}",
+            bp.mean[i],
+            bn.mean[i]
+        );
+        assert!(
+            (bp.var[i] - bn.var[i]).abs() < 0.05,
+            "var[{i}]: pjrt {} native {}",
+            bp.var[i],
+            bn.var[i]
+        );
+        assert!(
+            (bp.ei[i] - bn.ei[i]).abs() < 0.05,
+            "ei[{i}]: pjrt {} native {}",
+            bp.ei[i],
+            bn.ei[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_ei_ranks_candidates_like_native() {
+    let Some(rt) = runtime() else { return };
+    let (xs, ys) = toy_set(10, 3);
+    let mut pjrt = PjrtGp::new(&rt);
+    let mut native = NativeGp::new();
+    pjrt.fit(&xs, &ys, Hyper::default()).unwrap();
+    native.fit(&xs, &ys, Hyper::default()).unwrap();
+    let (cands, _) = toy_set(8, 77);
+    let f_best = ys.iter().cloned().fold(f32::INFINITY, f32::min);
+    let bp = pjrt.ei(&cands, f_best).unwrap();
+    let bn = native.ei(&cands, f_best).unwrap();
+    let argmax = |v: &[f32]| {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    // the top-EI candidate must agree (or have near-identical EI)
+    let (ip, iq) = (argmax(&bp.ei), argmax(&bn.ei));
+    assert!(
+        ip == iq || (bp.ei[ip] - bp.ei[iq]).abs() < 0.02,
+        "pjrt argmax {ip} vs native {iq} (pjrt eis {:?})",
+        bp.ei
+    );
+}
+
+#[test]
+fn pjrt_backed_bo_loop_runs() {
+    let Some(rt) = runtime() else { return };
+    let space = compass::arch::HwSpace::paper(64.0);
+    let cfg = compass::bo::BoConfig::tiny();
+    let mut gp = PjrtGp::new(&rt);
+    let r = compass::bo::optimize(&space, &cfg, &mut gp, |hw| {
+        // cheap synthetic objective
+        (hw.nop_bw_gbs - 64.0).abs() + (hw.dram_bw_gbs - 32.0).abs()
+    });
+    assert_eq!(r.backend, "pjrt");
+    assert_eq!(r.observations.len(), cfg.rounds);
+    assert!(r.best.objective.is_finite());
+}
+
+#[test]
+fn manifest_matches_runtime_constants() {
+    let Some(rt) = runtime() else { return };
+    rt.check_manifest().expect("manifest consistent");
+}

@@ -1,0 +1,277 @@
+//! Property-based tests over the coordinator's core invariants (routing,
+//! scheduling, access analysis, cost monotonicity). No proptest crate is
+//! vendored, so properties run over seeded random instance sweeps —
+//! every case prints its seed on failure for reproduction.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig, HwSpace};
+use compass::cost::access::{self, InputSrc};
+use compass::cost::{Evaluator, SimOptions};
+use compass::ga::ops;
+use compass::mapping::Mapping;
+use compass::util::Rng;
+use compass::workload::{build_workload, ModelSpec, Request, Workload, WorkloadParams};
+
+fn random_workload(rng: &mut Rng) -> (Workload, WorkloadParams) {
+    let model = ModelSpec::tiny();
+    let n = 1 + rng.gen_index(8);
+    let batch: Vec<Request> = (0..n)
+        .map(|_| {
+            if rng.gen_bool(0.5) {
+                Request::prefill(1 + rng.gen_range(1, 256))
+            } else {
+                Request::decode(rng.gen_range(1, 2048))
+            }
+        })
+        .collect();
+    let params = WorkloadParams {
+        micro_batch_size: 1 + rng.gen_index(n),
+        tensor_parallel: 1 + rng.gen_index(4),
+        eval_blocks: 1 + rng.gen_index(2),
+    };
+    (build_workload(&model, &batch, &params), params)
+}
+
+fn random_hw(rng: &mut Rng) -> HwConfig {
+    let n = [1usize, 2, 4, 6, 8, 9, 12, 16][rng.gen_index(8)];
+    let (h, w) = HwSpace::grid_dims(n);
+    let mut hw = HwConfig::homogeneous(
+        h,
+        w,
+        *rng.choose(&ChipletClass::ALL),
+        Dataflow::WeightStationary,
+        *rng.choose(&[32.0, 64.0, 128.0]),
+        *rng.choose(&[16.0, 32.0, 64.0]),
+    );
+    for d in hw.layout.iter_mut() {
+        *d = *rng.choose(&Dataflow::ALL);
+    }
+    hw
+}
+
+fn random_mapping(w: &Workload, chips: usize, rng: &mut Rng) -> Mapping {
+    ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, chips, rng)
+}
+
+const CASES: u64 = 60;
+
+/// Schedule order is always a permutation of all (mb, layer) cells, and
+/// within one micro-batch layers appear in increasing order.
+#[test]
+fn prop_schedule_order_is_valid_permutation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let (w, _) = random_workload(&mut rng);
+        let m = random_mapping(&w, 4, &mut rng);
+        let order = m.schedule_order();
+        assert_eq!(order.len(), m.rows * m.cols, "seed {seed}");
+        let uniq: std::collections::HashSet<_> = order.iter().collect();
+        assert_eq!(uniq.len(), order.len(), "seed {seed}");
+        let mut last = vec![-1i64; m.rows];
+        for &(mb, l) in &order {
+            assert!(last[mb] < l as i64, "seed {seed}: layers out of order");
+            last[mb] = l as i64;
+        }
+    }
+}
+
+/// Algorithm 2: a weight reload can only be skipped when the previous
+/// occupant of the chip was the same layer of another micro-batch, and
+/// every NoP source actually differs from the consuming chip.
+#[test]
+fn prop_access_flags_are_consistent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let (w, _) = random_workload(&mut rng);
+        let hw = random_hw(&mut rng);
+        let m = random_mapping(&w, hw.num_chiplets(), &mut rng);
+        let flags = access::analyze(&w, &m);
+        // reconstruct chip history to verify the weight-skip invariant
+        let mut prev_on_chip: Vec<Option<(usize, usize)>> = vec![None; hw.num_chiplets()];
+        for (mb, l) in m.schedule_order() {
+            let t = mb * m.cols + l;
+            let chip = m.chip(mb, l) as usize;
+            if !flags.is_load_wei[t] {
+                let (pmb, pl) = prev_on_chip[chip].expect("skip without predecessor");
+                assert_eq!(pl, l, "seed {seed}: skipped weights of another layer");
+                assert_ne!(pmb, mb, "seed {seed}: same micro-batch reuse");
+            }
+            for src in flags.srcs(t) {
+                if let InputSrc::Nop { chip: c } = src {
+                    assert_ne!(*c as usize, chip, "seed {seed}: NoP to itself");
+                }
+            }
+            prev_on_chip[chip] = Some((mb, l));
+        }
+    }
+}
+
+/// The last layer always writes out.
+#[test]
+fn prop_last_layer_always_writes_out() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let (w, _) = random_workload(&mut rng);
+        let m = random_mapping(&w, 6, &mut rng);
+        let flags = access::analyze(&w, &m);
+        for mb in 0..m.rows {
+            assert!(
+                flags.is_write_out[mb * m.cols + (m.cols - 1)],
+                "seed {seed}: final layer must write out"
+            );
+        }
+    }
+}
+
+/// Timeline invariants: dependencies respected, same-chip serialization,
+/// latency covers every task, energy strictly positive.
+#[test]
+fn prop_timeline_respects_dependencies_and_serialization() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let (w, _) = random_workload(&mut rng);
+        let hw = random_hw(&mut rng);
+        let m = random_mapping(&w, hw.num_chiplets(), &mut rng);
+        let ev = Evaluator {
+            opts: SimOptions {
+                record_timeline: true,
+                ..Default::default()
+            },
+        };
+        let r = ev.eval_batch(&w, &hw, &m);
+        let tl = r.timeline.as_ref().unwrap();
+        let mut end_of = std::collections::HashMap::new();
+        for e in tl.iter() {
+            end_of.insert((e.mb, e.layer), e.end);
+        }
+        let mut chip_tasks: std::collections::HashMap<u16, Vec<(f64, f64)>> = Default::default();
+        for e in tl.iter() {
+            for &p in &w.micro_batches[e.mb].layers[e.layer].preds {
+                assert!(
+                    e.start + 1e-6 >= end_of[&(e.mb, p)],
+                    "seed {seed}: dependency violated"
+                );
+            }
+            chip_tasks.entry(e.chip).or_default().push((e.start, e.end));
+            assert!(
+                e.end <= r.latency_cycles / w.block_scale + 1e-6,
+                "seed {seed}"
+            );
+        }
+        for (_, mut spans) in chip_tasks {
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for pair in spans.windows(2) {
+                assert!(
+                    pair[1].0 + 1e-6 >= pair[0].1,
+                    "seed {seed}: same-chip overlap"
+                );
+            }
+        }
+        assert!(r.energy_pj > 0.0);
+    }
+}
+
+/// Cost monotonicity: raising DRAM and NoP bandwidth never increases
+/// latency.
+#[test]
+fn prop_bandwidth_monotonicity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let (w, _) = random_workload(&mut rng);
+        let hw = random_hw(&mut rng);
+        let m = random_mapping(&w, hw.num_chiplets(), &mut rng);
+        let ev = Evaluator::new();
+        let base = ev.eval_batch(&w, &hw, &m);
+        let mut fast = hw.clone();
+        fast.dram_bw_gbs *= 4.0;
+        fast.nop_bw_gbs *= 4.0;
+        let faster = ev.eval_batch(&w, &fast, &m);
+        assert!(
+            faster.latency_cycles <= base.latency_cycles + 1e-6,
+            "seed {seed}: more bandwidth slowed things down"
+        );
+    }
+}
+
+/// GA operator closure: any sequence of Table-III operators and
+/// segmentation mutations keeps the mapping valid.
+#[test]
+fn prop_ga_operators_closed_over_validity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(5000 + seed);
+        let rows = 1 + rng.gen_index(6);
+        let cols = 2 + rng.gen_index(30);
+        let chips = 1 + rng.gen_index(16);
+        let mut m = ops::random_mapping(rows, cols, chips, &mut rng);
+        for step in 0..100 {
+            let op = 1 + (rng.gen_index(7) as u8);
+            ops::apply_operator(&mut m, chips, op, &mut rng);
+            ops::mutate_segmentation(&mut m, &mut rng);
+            assert!(m.is_valid(chips), "seed {seed} step {step} op {op}");
+        }
+    }
+}
+
+/// Crossover closure: children only contain parent genes and stay valid.
+#[test]
+fn prop_crossover_closed_over_validity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let rows = 1 + rng.gen_index(4);
+        let cols = 2 + rng.gen_index(20);
+        let chips = 2 + rng.gen_index(8);
+        let a = ops::random_mapping(rows, cols, chips, &mut rng);
+        let b = ops::random_mapping(rows, cols, chips, &mut rng);
+        let c = ops::crossover(&a, &b, &mut rng);
+        assert!(c.is_valid(chips), "seed {seed}");
+        for mb in 0..rows {
+            for l in 0..cols {
+                let v = c.chip(mb, l);
+                assert!(
+                    v == a.chip(mb, l) || v == b.chip(mb, l),
+                    "seed {seed}: foreign gene"
+                );
+            }
+        }
+    }
+}
+
+/// Workload invariant: merged GEMM rows equal the sum of per-request
+/// query tokens for every micro-batch, under any batch composition.
+#[test]
+fn prop_merged_gemm_rows_match_requests() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let (w, _) = random_workload(&mut rng);
+        for mb in &w.micro_batches {
+            let sum_s: u64 = mb.requests.iter().map(|r| r.q_tokens()).sum();
+            match &mb.layers[0].kind {
+                compass::workload::LayerKind::Gemm { m, .. } => {
+                    assert_eq!(*m, sum_s, "seed {seed}")
+                }
+                _ => panic!("first layer must be the merged QKV GEMM"),
+            }
+            match &mb.layers[1].kind {
+                compass::workload::LayerKind::Attention { reqs, .. } => {
+                    assert_eq!(reqs.len(), mb.requests.len(), "seed {seed}")
+                }
+                _ => panic!("second layer must be split MHA"),
+            }
+        }
+    }
+}
+
+/// Monetary cost is invariant to the dataflow layout (same silicon).
+#[test]
+fn prop_money_layout_invariant() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(8000 + seed);
+        let hw = random_hw(&mut rng);
+        let mc = compass::cost::money::monetary_cost(&hw).total;
+        let mut flipped = hw.clone();
+        for d in flipped.layout.iter_mut() {
+            *d = Dataflow::OutputStationary;
+        }
+        let mc2 = compass::cost::money::monetary_cost(&flipped).total;
+        assert!((mc - mc2).abs() < 1e-9, "seed {seed}: layout changed MC");
+    }
+}
