@@ -1,11 +1,14 @@
-//! Engine microbenchmarks (the §Perf hot paths): per-layer kernel cost,
-//! Algorithm-2 access analysis, timeline simulation, GA generation, and
-//! a full mapping-search fitness evaluation.
+//! Engine microbenchmarks (the EXPERIMENTS.md #Perf hot paths):
+//! per-layer kernel cost, Algorithm-2 access analysis, timeline
+//! simulation, batched generation evaluation, and full GA mapping
+//! searches — serial closure vs the parallel, allocation-free
+//! evaluation engine, with the speedups printed at the end.
 use compass::arch::{Chiplet, ChipletClass, Dataflow, HwConfig};
+use compass::cost::engine::{BatchEvaluator, EvalScratch, MappingEvaluator};
 use compass::cost::{access, dataflow::layer_cost, Evaluator};
-use compass::ga::{self, GaConfig};
-use compass::mapping::presets;
-use compass::util::Bench;
+use compass::ga::{self, ops, GaConfig};
+use compass::mapping::{presets, Mapping};
+use compass::util::{Bench, Rng};
 use compass::workload::{build_workload, LayerKind, ModelSpec, Request, WorkloadParams};
 
 fn main() {
@@ -29,7 +32,12 @@ fn main() {
     let m = presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 8);
     Bench::new("access_analysis/decode-128").run(|| access::analyze(&w, &m));
     let ev = Evaluator::new();
-    Bench::new("eval_batch/decode-128").run(|| ev.eval_batch(&w, &hw, &m));
+    let t_eval_oneshot = Bench::new("eval_batch/decode-128").run(|| ev.eval_batch(&w, &hw, &m));
+    // prepared + scratch-reusing hot path (what every search iteration pays)
+    let mev = MappingEvaluator::new(&w, &hw);
+    let mut scratch = EvalScratch::default();
+    let t_eval_prepared =
+        Bench::new("eval_batch/decode-128-prepared").run(|| mev.simulate(&m, &mut scratch));
     Bench::new("workload_build/decode-128").run(|| {
         build_workload(
             &model,
@@ -37,16 +45,53 @@ fn main() {
             &WorkloadParams { micro_batch_size: 64, tensor_parallel: 8, eval_blocks: 2 },
         )
     });
-    Bench::new("ga_search/pop12-gen8").budget_ms(1200).run(|| {
-        ga::search(
-            w.num_micro_batches(),
-            w.layers_per_mb,
-            8,
-            &GaConfig { population: 12, generations: 8, ..GaConfig::reduced() },
-            |m| {
-                let r = ev.eval_batch(&w, &hw, m);
+
+    // one GA generation's worth of distinct mappings, serial closure vs
+    // the batch engine (fresh evaluator per call so the fitness memo
+    // cannot serve repeats across bench iterations)
+    let mut rng = Rng::seed_from_u64(1);
+    let gen_maps: Vec<Mapping> = (0..24)
+        .map(|_| ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 8, &mut rng))
+        .collect();
+    let t_gen_serial = Bench::new("eval_batch/gen24-serial").run(|| {
+        gen_maps
+            .iter()
+            .map(|mm| {
+                let r = ev.eval_batch(&w, &hw, mm);
                 r.latency_cycles * r.energy_pj
-            },
-        )
+            })
+            .sum::<f64>()
     });
+    let mut fits = Vec::new();
+    let t_gen_parallel = Bench::new("eval_batch/gen24-parallel").run(|| {
+        let fresh = MappingEvaluator::new(&w, &hw);
+        fresh.eval_batch(&gen_maps, &mut fits);
+        fits.iter().sum::<f64>()
+    });
+
+    // full GA search: the seed's serial FnMut-closure path vs the engine
+    let cfg = GaConfig { population: 12, generations: 8, ..GaConfig::reduced() };
+    let t_ga_serial = Bench::new("ga_search/pop12-gen8-serial").budget_ms(1200).run(|| {
+        ga::search(w.num_micro_batches(), w.layers_per_mb, 8, &cfg, &|mm: &Mapping| {
+            let r = ev.eval_batch(&w, &hw, mm);
+            r.latency_cycles * r.energy_pj
+        })
+    });
+    let t_ga_engine = Bench::new("ga_search/pop12-gen8").budget_ms(1200).run(|| {
+        let fresh = MappingEvaluator::new(&w, &hw);
+        ga::search(w.num_micro_batches(), w.layers_per_mb, 8, &cfg, &fresh)
+    });
+
+    println!(
+        "speedup eval_batch/decode-128 (prepared vs one-shot): {:.2}x",
+        t_eval_oneshot / t_eval_prepared
+    );
+    println!(
+        "speedup eval_batch/gen24 (parallel engine vs serial): {:.2}x",
+        t_gen_serial / t_gen_parallel
+    );
+    println!(
+        "speedup ga_search/pop12-gen8 (engine vs serial closure): {:.2}x",
+        t_ga_serial / t_ga_engine
+    );
 }

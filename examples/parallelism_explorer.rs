@@ -73,11 +73,10 @@ fn main() {
         );
     }
 
-    // GA hybrid search over the same space
-    let res = ga::search(rows, cols, chips, &GaConfig::reduced(), |m| {
-        let r = Evaluator::new().eval_batch(&w, &hw, m);
-        r.latency_cycles * r.energy_pj
-    });
+    // GA hybrid search over the same space, through the batched
+    // multi-threaded evaluation engine
+    let mev = compass::cost::engine::MappingEvaluator::new(&w, &hw);
+    let res = ga::search(rows, cols, chips, &GaConfig::reduced(), &mev);
     let r = ev.eval_batch(&w, &hw, &res.best);
     println!(
         "=== GA hybrid: latency {:.3e} cyc, energy {:.3e} pJ, L*E {:.3e} ({:+.1}% vs best preset)",

@@ -3,6 +3,7 @@
 //! hardware, operating on a fixed (average) sequence length.
 
 use crate::arch::{Dataflow, HwConfig, HwSpace};
+use crate::cost::engine::{BatchEvaluator, MappingEvaluator};
 use crate::cost::{group_params, EvalResult, Evaluator};
 use crate::dse::MappingSearch;
 use crate::ga::ops;
@@ -31,16 +32,20 @@ impl SaConfig {
 
 /// Simulated-annealing search over the mapping encoding (Gemini's
 /// mapping method, ported onto the Compass representation).
-pub fn sa_mapping_search<F: FnMut(&Mapping) -> f64>(
+///
+/// SA is an inherently sequential chain, so it scores one candidate at a
+/// time; passing a [`MappingEvaluator`] still pays off through the
+/// prepared workload state and the fitness memo.
+pub fn sa_mapping_search<E: BatchEvaluator + ?Sized>(
     rows: usize,
     cols: usize,
     chips: usize,
     cfg: &SaConfig,
-    mut fitness: F,
+    evaluator: &E,
 ) -> (Mapping, f64) {
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let mut curr = presets::pipeline_parallel(rows, cols, chips);
-    let mut curr_f = fitness(&curr);
+    let mut curr_f = evaluator.eval_one(&curr);
     let mut best = curr.clone();
     let mut best_f = curr_f;
     for i in 0..cfg.iterations.saturating_sub(1) {
@@ -51,7 +56,7 @@ pub fn sa_mapping_search<F: FnMut(&Mapping) -> f64>(
         if rng.gen_bool(0.3) {
             ops::mutate_segmentation(&mut cand, &mut rng);
         }
-        let f = fitness(&cand);
+        let f = evaluator.eval_one(&cand);
         let accept = f < curr_f || {
             let d = (curr_f - f) / curr_f.abs().max(1e-300);
             rng.gen_bool((d / temp.max(1e-6)).exp().min(1.0))
@@ -83,10 +88,13 @@ pub fn gemini_mappings(
         let w = build_workload(model, &group.batch, &params);
         let mut cfg = *sa;
         cfg.seed = sa.seed.wrapping_add(gi as u64);
-        let (m, _) = sa_mapping_search(w.num_micro_batches(), w.layers_per_mb, hw.num_chiplets(), &cfg, |m| {
-            let r = ev.eval_batch(&w, hw, m);
-            r.latency_cycles * r.energy_pj
-        });
+        let (m, _) = sa_mapping_search(
+            w.num_micro_batches(),
+            w.layers_per_mb,
+            hw.num_chiplets(),
+            &cfg,
+            &MappingEvaluator::new(&w, hw),
+        );
         mappings.push(m);
     }
     let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);
@@ -181,10 +189,16 @@ mod tests {
             t0: 1.0,
             seed: 5,
         };
-        let (best, best_f) = sa_mapping_search(w.num_micro_batches(), w.layers_per_mb, 4, &sa, |m| {
-            let r = ev.eval_batch(&w, &hw, m);
-            r.latency_cycles * r.energy_pj
-        });
+        let (best, best_f) = sa_mapping_search(
+            w.num_micro_batches(),
+            w.layers_per_mb,
+            4,
+            &sa,
+            &|m: &Mapping| {
+                let r = ev.eval_batch(&w, &hw, m);
+                r.latency_cycles * r.energy_pj
+            },
+        );
         assert!(best.is_valid(4));
         assert!(best_f <= start_f, "SA must not regress: {best_f} vs {start_f}");
     }

@@ -5,15 +5,19 @@
 //! (the restriction the paper identifies as MOHaM's key limitation on
 //! LLM workloads).
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use crate::arch::{HwConfig, HwSpace};
 use crate::bo::sa::{inner_move, outer_move, random_config};
+use crate::cost::engine::{default_threads, par_map_f64};
 use crate::cost::Evaluator;
 use crate::dse::MappingSearch;
-use crate::ga::{ops, GaConfig};
+use crate::ga::{self, ops, GaConfig};
 use crate::mapping::Mapping;
 use crate::util::Rng;
 use crate::workload::serving::Scenario;
-use crate::workload::{build_workload, ModelSpec, WorkloadParams};
+use crate::workload::{build_workload, ModelSpec, Workload, WorkloadParams};
 
 /// A joint individual: hardware genes + one mapping per scenario group.
 #[derive(Clone)]
@@ -34,6 +38,12 @@ fn moham_params(hw: &HwConfig, eval_blocks: usize) -> WorkloadParams {
 /// Joint GA over (hardware, mappings). The budget is
 /// `population x (generations + 1)` full evaluations, comparable to
 /// Compass' BO rounds x GA budget scaled down (paper matches wall-clock).
+///
+/// Children of a generation are bred serially from the seeded RNG, then
+/// scored as one parallel batch; workloads are cached per tensor-parallel
+/// degree (the only hardware knob they depend on under the micro-batch-1
+/// restriction), so repeated hardware genes never rebuild the execution
+/// graph.
 pub fn moham_dse(
     scenario: &Scenario,
     model: &ModelSpec,
@@ -43,24 +53,42 @@ pub fn moham_dse(
 ) -> (HwConfig, MappingSearch) {
     let ev = Evaluator::new();
     let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x4d4f_4841_4d00);
+    let threads = default_threads();
 
-    let shapes = |hw: &HwConfig| -> Vec<(usize, usize)> {
-        scenario
+    // search-invariant workload cache: under micro_batch_size = 1 the
+    // instantiated workloads depend only on hw.tensor_parallel
+    let wl_cache: Mutex<HashMap<usize, Arc<Vec<Workload>>>> = Mutex::new(HashMap::new());
+    let workloads_for = |hw: &HwConfig| -> Arc<Vec<Workload>> {
+        let tp = hw.tensor_parallel;
+        if let Some(ws) = wl_cache.lock().unwrap().get(&tp) {
+            return ws.clone();
+        }
+        let ws: Vec<Workload> = scenario
             .groups
             .iter()
-            .map(|g| {
-                let w = build_workload(model, &g.batch, &moham_params(hw, eval_blocks));
-                (w.num_micro_batches(), w.layers_per_mb)
-            })
+            .map(|g| build_workload(model, &g.batch, &moham_params(hw, eval_blocks)))
+            .collect();
+        wl_cache
+            .lock()
+            .unwrap()
+            .entry(tp)
+            .or_insert_with(|| Arc::new(ws))
+            .clone()
+    };
+
+    let shapes = |hw: &HwConfig| -> Vec<(usize, usize)> {
+        workloads_for(hw)
+            .iter()
+            .map(|w| (w.num_micro_batches(), w.layers_per_mb))
             .collect()
     };
 
     let fitness = |ind: &Individual| -> f64 {
         let mut latency = 0.0;
         let mut energy = 0.0;
-        for (g, m) in scenario.groups.iter().zip(&ind.maps) {
-            let w = build_workload(model, &g.batch, &moham_params(&ind.hw, eval_blocks));
-            let r = ev.eval_batch(&w, &ind.hw, m);
+        let ws = workloads_for(&ind.hw);
+        for ((g, m), w) in scenario.groups.iter().zip(&ind.maps).zip(ws.iter()) {
+            let r = ev.eval_batch(w, &ind.hw, m);
             latency += r.latency_cycles * g.weight;
             energy += r.energy_pj * g.weight;
         }
@@ -78,32 +106,16 @@ pub fn moham_dse(
     };
 
     let mut pop: Vec<Individual> = (0..cfg.population).map(|_| spawn(&mut rng)).collect();
-    let mut fits: Vec<f64> = pop.iter().map(&fitness).collect();
+    let mut fits: Vec<f64> = par_map_f64(&pop, threads, &fitness);
 
     for gen in 0..cfg.generations {
         let phase = gen as f64 / cfg.generations.max(1) as f64;
-        let mut order: Vec<usize> = (0..pop.len()).collect();
-        order.sort_by(|&a, &b| fits[a].total_cmp(&fits[b]));
-        let mut next: Vec<Individual> = order
-            .iter()
-            .take(cfg.elites)
-            .map(|&i| pop[i].clone())
-            .collect();
-        let mut next_fits: Vec<f64> = order.iter().take(cfg.elites).map(|&i| fits[i]).collect();
-        while next.len() < cfg.population {
-            // tournament
-            let pick = |rng: &mut Rng, fits: &[f64]| {
-                let mut b = rng.gen_index(fits.len());
-                for _ in 1..cfg.tournament_k {
-                    let c = rng.gen_index(fits.len());
-                    if fits[c] < fits[b] {
-                        b = c;
-                    }
-                }
-                b
-            };
-            let pa = pick(&mut rng, &fits);
-            let pb = pick(&mut rng, &fits);
+        let (mut next, mut next_fits) = ga::select_elites(&pop, &fits, cfg.elites);
+        let mut children: Vec<Individual> =
+            Vec::with_capacity(cfg.population.saturating_sub(next.len()));
+        while next.len() + children.len() < cfg.population {
+            let pa = ga::tournament(&fits, cfg.tournament_k, &mut rng);
+            let pb = ga::tournament(&fits, cfg.tournament_k, &mut rng);
             let mut child = pop[pa].clone();
             // hardware genes: uniform crossover on sys, layout from one
             // parent when shapes agree; then a mutation move
@@ -147,9 +159,12 @@ pub fn moham_dse(
                 maps.push(m);
             }
             child.maps = maps;
-            next_fits.push(fitness(&child));
-            next.push(child);
+            children.push(child);
         }
+        // score the brood as one parallel batch
+        let mut child_fits = par_map_f64(&children, threads, &fitness);
+        next.append(&mut children);
+        next_fits.append(&mut child_fits);
         pop = next;
         fits = next_fits;
     }

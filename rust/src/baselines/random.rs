@@ -5,14 +5,19 @@
 use crate::arch::{HwConfig, HwSpace};
 use crate::bo::sa::random_config;
 use crate::bo::BoConfig;
+use crate::cost::engine::{BatchEvaluator, MappingEvaluator};
 use crate::cost::{group_params, Evaluator};
 use crate::dse::MappingSearch;
 use crate::ga::{ops, GaConfig};
+use crate::mapping::Mapping;
 use crate::util::Rng;
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
 
-/// Random mapping search with the GA's evaluation budget.
+/// Random mapping search with the GA's evaluation budget. Samples are
+/// drawn serially from the seeded RNG, then scored as one parallel batch
+/// through the evaluation engine (ties keep the first-drawn sample, so
+/// the result matches the serial loop exactly).
 pub fn random_mappings(
     scenario: &Scenario,
     model: &ModelSpec,
@@ -28,18 +33,25 @@ pub fn random_mappings(
         let params = group_params(hw, group.has_prefill, eval_blocks);
         let w = build_workload(model, &group.batch, &params);
         let mut rng = Rng::seed_from_u64(ga.seed.wrapping_add(777 + gi as u64));
-        let mut best = None;
-        let mut best_f = f64::INFINITY;
+        let mut samples: Vec<Mapping> = Vec::with_capacity(budget);
         for _ in 0..budget {
-            let m = ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, chips, &mut rng);
-            let r = ev.eval_batch(&w, hw, &m);
-            let f = r.latency_cycles * r.energy_pj;
-            if f < best_f {
-                best_f = f;
-                best = Some(m);
+            samples.push(ops::random_mapping(
+                w.num_micro_batches(),
+                w.layers_per_mb,
+                chips,
+                &mut rng,
+            ));
+        }
+        let mev = MappingEvaluator::new(&w, hw);
+        let mut fits = Vec::with_capacity(budget);
+        mev.eval_batch(&samples, &mut fits);
+        let mut best_i = 0usize;
+        for i in 1..fits.len() {
+            if fits[i] < fits[best_i] {
+                best_i = i;
             }
         }
-        mappings.push(best.unwrap());
+        mappings.push(samples.swap_remove(best_i));
     }
     let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);
     MappingSearch { mappings, eval }

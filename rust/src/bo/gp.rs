@@ -9,10 +9,13 @@
 //! * [`NativeGp`] — a pure-Rust mirror used for cross-validation tests
 //!   and as a fallback when `artifacts/` has not been built.
 
-use anyhow::Result;
-
-use crate::runtime::shapes::{CAND_Q, SLOTS, SYS_D, TRAIN_N, TYPES};
-use crate::runtime::Runtime;
+use crate::runtime::shapes::{SLOTS, SYS_D, TYPES};
+#[cfg(feature = "xla")]
+use crate::runtime::{
+    shapes::{CAND_Q, TRAIN_N},
+    Runtime,
+};
+use crate::util::{Error, Result};
 
 use super::features::{inv_lengthscales, manhattan_weights, HwFeatures};
 
@@ -62,9 +65,10 @@ pub trait Gp {
 }
 
 // ---------------------------------------------------------------------
-// shared feature packing
+// shared feature packing (PJRT artifact layout)
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 struct Packed {
     sys: Vec<f32>,    // (rows, SYS_D)
     layout: Vec<f32>, // (rows, SLOTS, TYPES)
@@ -72,6 +76,7 @@ struct Packed {
     rows: usize,
 }
 
+#[cfg(feature = "xla")]
 fn pack(xs: &[HwFeatures], rows: usize) -> Packed {
     assert!(xs.len() <= rows, "{} > {rows}", xs.len());
     let mut sys = vec![0f32; rows * SYS_D];
@@ -97,6 +102,7 @@ fn pack(xs: &[HwFeatures], rows: usize) -> Packed {
 // ---------------------------------------------------------------------
 
 /// GP executed on the AOT artifacts through PJRT.
+#[cfg(feature = "xla")]
 pub struct PjrtGp<'rt> {
     rt: &'rt Runtime,
     hyper: Hyper,
@@ -108,6 +114,7 @@ pub struct PjrtGp<'rt> {
     w: Vec<f32>,
 }
 
+#[cfg(feature = "xla")]
 impl<'rt> PjrtGp<'rt> {
     pub fn new(rt: &'rt Runtime) -> Self {
         PjrtGp {
@@ -123,12 +130,18 @@ impl<'rt> PjrtGp<'rt> {
     }
 }
 
+#[cfg(feature = "xla")]
 const N_I: i64 = TRAIN_N as i64;
+#[cfg(feature = "xla")]
 const Q_I: i64 = CAND_Q as i64;
+#[cfg(feature = "xla")]
 const S_I: i64 = SLOTS as i64;
+#[cfg(feature = "xla")]
 const T_I: i64 = TYPES as i64;
+#[cfg(feature = "xla")]
 const D_I: i64 = SYS_D as i64;
 
+#[cfg(feature = "xla")]
 impl Gp for PjrtGp<'_> {
     fn fit(&mut self, xs: &[HwFeatures], ys: &[f32], hyper: Hyper) -> Result<f32> {
         assert_eq!(xs.len(), ys.len());
@@ -401,7 +414,7 @@ impl Gp for NativeGp {
             k[i * n + i] += (hyper.noise + 1e-6) as f64;
         }
         let l = cholesky(&k, n)
-            .ok_or_else(|| anyhow::anyhow!("kernel matrix not positive definite"))?;
+            .ok_or_else(|| Error::msg("kernel matrix not positive definite"))?;
         let y64: Vec<f64> = ys.iter().map(|&v| v as f64).collect();
         let z = solve_lower(&l, &y64, n);
         self.alpha = solve_upper_t(&l, &z, n);
@@ -501,7 +514,13 @@ mod tests {
 
     #[test]
     fn erf_accuracy() {
-        for (x, want) in [(0.0, 0.0), (1.0, 0.8427007929), (-1.0, -0.8427007929), (2.0, 0.9953222650)] {
+        let cases = [
+            (0.0, 0.0),
+            (1.0, 0.8427007929),
+            (-1.0, -0.8427007929),
+            (2.0, 0.9953222650),
+        ];
+        for (x, want) in cases {
             assert!((erf(x) - want).abs() < 1e-6, "erf({x})");
         }
     }

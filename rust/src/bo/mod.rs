@@ -14,10 +14,13 @@ pub mod gp;
 pub mod sa;
 
 use crate::arch::{HwConfig, HwSpace};
+use crate::cost::engine::{default_threads, par_map_f64};
 use crate::util::Rng;
 
 pub use features::{featurize, HwFeatures};
-pub use gp::{Gp, Hyper, NativeGp, PjrtGp};
+#[cfg(feature = "xla")]
+pub use gp::PjrtGp;
+pub use gp::{Gp, Hyper, NativeGp};
 
 /// BO budget and annealing knobs (paper: 100 BO iterations).
 #[derive(Debug, Clone, Copy)]
@@ -91,11 +94,16 @@ pub struct BoResult {
 
 /// Run Bayesian optimization. `objective` is the expensive evaluation
 /// (mapping search + evaluation engine); lower is better.
-pub fn optimize<F: FnMut(&HwConfig) -> f64>(
+///
+/// BO rounds are sequential by construction (each observation feeds the
+/// surrogate guiding the next), but the initial design is a fixed set of
+/// independent evaluations: it is selected serially from the seeded RNG
+/// and then scored across threads, preserving the seeded result exactly.
+pub fn optimize<F: Fn(&HwConfig) -> f64 + Sync>(
     space: &HwSpace,
     cfg: &BoConfig,
     gp: &mut dyn Gp,
-    mut objective: F,
+    objective: F,
 ) -> BoResult {
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let mut obs: Vec<Observation> = Vec::with_capacity(cfg.rounds);
@@ -104,25 +112,33 @@ pub fn optimize<F: FnMut(&HwConfig) -> f64>(
     let mut hyper = Hyper::default();
 
     // --- initial design: homogeneous (class x dataflow) anchors at
-    // median bandwidths, topped up with random heterogeneous samples ---
+    // median bandwidths, topped up with random heterogeneous samples;
+    // selected serially, evaluated as one parallel batch ---
     let init = cfg.init.min(cfg.rounds).max(1);
+    let mut init_hws: Vec<HwConfig> = Vec::new();
     for hw in sa::homogeneous_seeds(space) {
-        if obs.len() >= init.max(2) && obs.len() >= cfg.rounds {
+        if init_hws.len() >= init.max(2) && init_hws.len() >= cfg.rounds {
             break;
         }
         if seen.insert(hw.describe()) {
-            let y = objective(&hw);
-            obs.push(Observation { hw, objective: y });
-            history.push(best_of(&obs));
+            init_hws.push(hw);
         }
     }
-    while obs.len() < init {
+    while init_hws.len() < init {
         let hw = sa::random_config(space, &mut rng);
         let key = hw.describe();
-        if !seen.insert(key) && obs.len() + 1 < init {
+        if !seen.insert(key) && init_hws.len() + 1 < init {
             continue;
         }
-        let y = objective(&hw);
+        init_hws.push(hw);
+    }
+    // narrow outer width: each objective (a full GA mapping search) is
+    // already internally parallel, so a wide outer fan-out would multiply
+    // thread pools; a few outer lanes only cover the inner loops' serial
+    // phases (breeding, workload build)
+    let outer = (default_threads() / 4).max(1);
+    let init_ys = par_map_f64(&init_hws, outer, &objective);
+    for (hw, y) in init_hws.into_iter().zip(init_ys) {
         obs.push(Observation { hw, objective: y });
         history.push(best_of(&obs));
     }

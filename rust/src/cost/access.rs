@@ -32,7 +32,7 @@ pub enum InputSrc {
 /// Input sources are stored flat (one entry per predecessor edge, in
 /// schedule-independent `[task][pred]` order) to keep the hot path
 /// allocation-free; access them via [`AccessFlags::srcs`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct AccessFlags {
     pub is_load_wei: Vec<bool>,
     pub is_write_out: Vec<bool>,
@@ -52,6 +52,62 @@ impl AccessFlags {
     pub fn srcs(&self, t: usize) -> &[InputSrc] {
         &self.srcs_flat[self.srcs_off[t] as usize..self.srcs_off[t + 1] as usize]
     }
+
+    /// Reset to the all-default state for `pred`'s workload shape,
+    /// reusing the existing buffers.
+    fn prepare(&mut self, pred: &PredEdges) {
+        let n = pred.rows * pred.cols;
+        self.cols = pred.cols;
+        self.is_load_wei.clear();
+        self.is_load_wei.resize(n, true);
+        self.is_write_out.clear();
+        self.is_write_out.resize(n, true);
+        self.srcs_off.clone_from(&pred.srcs_off);
+        self.srcs_flat.clear();
+        self.srcs_flat.resize(pred.srcs_off[n] as usize, InputSrc::Dram);
+    }
+}
+
+/// Schedule-independent predecessor-edge structure of a workload: flat
+/// pred-edge offsets and initial outstanding-successor counts. Depends
+/// only on the workload graph, never on the mapping — the evaluation
+/// engine computes it once per search and shares it read-only across
+/// every fitness evaluation (see EXPERIMENTS.md #Perf).
+#[derive(Debug, Clone, Default)]
+pub struct PredEdges {
+    /// Prefix offsets into the flat pred-edge array, len `n + 1`.
+    pub srcs_off: Vec<u32>,
+    /// layersNext seed: successor counts per task.
+    pub succ_init: Vec<u32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PredEdges {
+    pub fn build(workload: &Workload) -> Self {
+        let rows = workload.num_micro_batches();
+        let cols = workload.layers_per_mb;
+        let n = rows * cols;
+        let mut srcs_off = vec![0u32; n + 1];
+        let mut succ_init = vec![0u32; n];
+        for mb in 0..rows {
+            for (l, layer) in workload.micro_batches[mb].layers.iter().enumerate() {
+                srcs_off[mb * cols + l + 1] = layer.preds.len() as u32;
+                for &p in &layer.preds {
+                    succ_init[mb * cols + p] += 1;
+                }
+            }
+        }
+        for i in 0..n {
+            srcs_off[i + 1] += srcs_off[i];
+        }
+        PredEdges {
+            srcs_off,
+            succ_init,
+            rows,
+            cols,
+        }
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -59,6 +115,16 @@ struct ChipState {
     mb: usize,
     layer: usize,
     valid: bool,
+}
+
+/// Reusable working state of [`analyze_into`] — one per evaluation
+/// thread, so the Algorithm-2 walk allocates nothing per individual.
+#[derive(Default)]
+pub struct AccessScratch {
+    succ_left: Vec<u32>,
+    resident_on: Vec<Option<u16>>,
+    scheduled: Vec<bool>,
+    chip_state: Vec<ChipState>,
 }
 
 /// Run Algorithm 2 over `workload` scheduled by `mapping`.
@@ -76,40 +142,38 @@ pub fn analyze_with_order(
     mapping: &Mapping,
     order: &[(usize, usize)],
 ) -> AccessFlags {
-    let rows = mapping.rows;
+    let pred = PredEdges::build(workload);
+    let mut scratch = AccessScratch::default();
+    let mut flags = AccessFlags::default();
+    analyze_into(workload, mapping, order, &pred, &mut scratch, &mut flags);
+    flags
+}
+
+/// Allocation-free Algorithm 2: writes the flags into `flags`, reusing
+/// `scratch` buffers and the search-invariant `pred` structure. This is
+/// the evaluation engine's hot path (see EXPERIMENTS.md #Perf).
+pub fn analyze_into(
+    workload: &Workload,
+    mapping: &Mapping,
+    order: &[(usize, usize)],
+    pred: &PredEdges,
+    scratch: &mut AccessScratch,
+    flags: &mut AccessFlags,
+) {
     let cols = mapping.cols;
-    let n = rows * cols;
-    let mut is_load_wei = vec![true; n];
-    let mut is_write_out = vec![true; n];
-    // flat pred-edge storage: offsets from the (schedule-independent)
-    // layer structure, filled during the walk
-    let mut srcs_off = vec![0u32; n + 1];
-    for mb in 0..rows {
-        for (l, layer) in workload.micro_batches[mb].layers.iter().enumerate() {
-            srcs_off[mb * cols + l + 1] = layer.preds.len() as u32;
-        }
-    }
-    for i in 0..n {
-        srcs_off[i + 1] += srcs_off[i];
-    }
-    let mut srcs_flat = vec![InputSrc::Dram; srcs_off[n] as usize];
+    debug_assert_eq!((pred.rows, pred.cols), (mapping.rows, mapping.cols));
+    let n = pred.rows * pred.cols;
+    flags.prepare(pred);
 
     // layersNext: outstanding successor counts per (mb, layer);
     // layersPrev-style residency: which chip (if any) holds each layer's
     // output right now. Algorithm 2's chipState generalised to also track
     // eviction so input sources can be classified.
-    let mut succ_left: Vec<u32> = vec![0; n];
-    let mut resident_on: Vec<Option<u16>> = vec![None; n];
-    let mut scheduled: Vec<bool> = vec![false; n];
-    for mb in 0..rows {
-        let layers = &workload.micro_batches[mb].layers;
-        for layer in layers.iter() {
-            for &p in &layer.preds {
-                succ_left[mb * cols + p] += 1;
-            }
-        }
-    }
-
+    scratch.succ_left.clone_from(&pred.succ_init);
+    scratch.resident_on.clear();
+    scratch.resident_on.resize(n, None);
+    scratch.scheduled.clear();
+    scratch.scheduled.resize(n, false);
     let chips = mapping
         .layer_to_chip
         .iter()
@@ -117,14 +181,15 @@ pub fn analyze_with_order(
         .max()
         .unwrap_or(0)
         + 1;
-    let mut chip_state = vec![
+    scratch.chip_state.clear();
+    scratch.chip_state.resize(
+        chips,
         ChipState {
             mb: 0,
             layer: 0,
-            valid: false
-        };
-        chips
-    ];
+            valid: false,
+        },
+    );
 
     for &(mb, layer) in order {
         let t = mb * cols + layer;
@@ -133,16 +198,16 @@ pub fn analyze_with_order(
 
         // weight-residency check (Alg. 2 line 10-11): previous occupant of
         // this chiplet ran the same layer index for a different micro-batch
-        let st = chip_state[curr_chip as usize];
+        let st = scratch.chip_state[curr_chip as usize];
         if st.valid && st.layer == layer && st.mb != mb {
-            is_load_wei[t] = false;
+            flags.is_load_wei[t] = false;
         }
 
         // classify each predecessor's activation source
-        let base = srcs_off[t] as usize;
+        let base = flags.srcs_off[t] as usize;
         for (i, &p) in node.preds.iter().enumerate() {
             let pt = mb * cols + p;
-            srcs_flat[base + i] = match resident_on[pt] {
+            flags.srcs_flat[base + i] = match scratch.resident_on[pt] {
                 Some(c) if c == curr_chip => InputSrc::Local,
                 Some(c) => InputSrc::Nop { chip: c },
                 None => InputSrc::Dram,
@@ -152,7 +217,7 @@ pub fn analyze_with_order(
         // consume predecessor outputs (layersNext erase, Alg. 2 line 13)
         for &p in &node.preds {
             let pt = mb * cols + p;
-            succ_left[pt] = succ_left[pt].saturating_sub(1);
+            scratch.succ_left[pt] = scratch.succ_left[pt].saturating_sub(1);
         }
 
         // evict the chiplet's previous occupant (Alg. 2 lines 12-16):
@@ -161,32 +226,24 @@ pub fn analyze_with_order(
         if st.valid {
             let prev_t = st.mb * cols + st.layer;
             if prev_t != t {
-                if succ_left[prev_t] == 0
-                    && scheduled[prev_t]
+                if scratch.succ_left[prev_t] == 0
+                    && scratch.scheduled[prev_t]
                     && !is_last_layer(st.layer, cols)
                     && !workload.micro_batches[st.mb].layers[st.layer].force_writeout()
                 {
-                    is_write_out[prev_t] = false;
+                    flags.is_write_out[prev_t] = false;
                 }
-                resident_on[prev_t] = None;
+                scratch.resident_on[prev_t] = None;
             }
         }
 
-        chip_state[curr_chip as usize] = ChipState {
+        scratch.chip_state[curr_chip as usize] = ChipState {
             mb,
             layer,
             valid: true,
         };
-        resident_on[t] = Some(curr_chip);
-        scheduled[t] = true;
-    }
-
-    AccessFlags {
-        is_load_wei,
-        is_write_out,
-        srcs_flat,
-        srcs_off,
-        cols,
+        scratch.resident_on[t] = Some(curr_chip);
+        scratch.scheduled[t] = true;
     }
 }
 

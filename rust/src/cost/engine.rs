@@ -1,0 +1,419 @@
+//! Batched, multi-threaded mapping-evaluation engine (EXPERIMENTS.md
+//! #Perf).
+//!
+//! Every search loop (GA, SA, random, joint baselines, BO objectives)
+//! funnels its fitness evaluations through [`BatchEvaluator`], which
+//! scores a whole generation at once. [`MappingEvaluator`] is the
+//! production implementation:
+//!
+//! * search-invariant workload state ([`PreparedWorkload`]: pred-edge
+//!   offsets, successor counts, the per-(shape-class, chiplet-kind,
+//!   load-flag) kernel-cost table) is computed once per search and
+//!   shared read-only across threads;
+//! * per-thread [`EvalScratch`] arenas make each individual's
+//!   Algorithm-2 walk and timeline simulation allocation-free;
+//! * a fitness memo keyed by the mapping genome means duplicate
+//!   individuals (elites, crossover clones) are never re-simulated;
+//! * batches are split across scoped `std::thread`s. Each mapping's
+//!   score is computed independently and written back to its slot, so
+//!   results are bit-identical on 1 or N threads.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::arch::HwConfig;
+use crate::mapping::Mapping;
+use crate::workload::Workload;
+
+use super::access::{self, AccessFlags, AccessScratch, PredEdges};
+use super::timeline::{self, KernelMemo, SimOptions, SimResult, SimScratch};
+
+/// Worker-thread count for batch evaluation: `COMPASS_THREADS` when set,
+/// else the machine's available parallelism (capped to keep nested
+/// search loops from oversubscribing).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("COMPASS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// A batch fitness evaluator (lower is better). Implementations must
+/// fill `out[i]` with the score of `batch[i]` and be deterministic: the
+/// same mapping always gets the same score regardless of batch order or
+/// thread count.
+pub trait BatchEvaluator {
+    fn eval_batch(&self, batch: &[Mapping], out: &mut Vec<f64>);
+
+    /// Convenience for sequential searches (simulated annealing).
+    fn eval_one(&self, m: &Mapping) -> f64 {
+        let mut out = Vec::with_capacity(1);
+        self.eval_batch(std::slice::from_ref(m), &mut out);
+        out[0]
+    }
+}
+
+/// Any plain `Fn(&Mapping) -> f64` is a (serial) batch evaluator; used
+/// by tests and toy objectives.
+impl<F> BatchEvaluator for F
+where
+    F: Fn(&Mapping) -> f64 + Sync,
+{
+    fn eval_batch(&self, batch: &[Mapping], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(batch.iter().map(self));
+    }
+}
+
+/// Search-invariant precomputation for one (workload, hardware) pair:
+/// everything `eval` needs that does not depend on the mapping.
+pub struct PreparedWorkload<'a> {
+    pub workload: &'a Workload,
+    pub hw: &'a HwConfig,
+    pred: PredEdges,
+    memo: KernelMemo,
+}
+
+impl<'a> PreparedWorkload<'a> {
+    pub fn new(workload: &'a Workload, hw: &'a HwConfig) -> Self {
+        PreparedWorkload {
+            workload,
+            hw,
+            pred: PredEdges::build(workload),
+            memo: KernelMemo::build(workload, hw),
+        }
+    }
+
+    /// Full evaluation of one mapping, allocation-free given `scratch`.
+    pub fn evaluate(
+        &self,
+        mapping: &Mapping,
+        opts: &SimOptions,
+        scratch: &mut EvalScratch,
+    ) -> SimResult {
+        mapping.schedule_order_into(&mut scratch.order);
+        access::analyze_into(
+            self.workload,
+            mapping,
+            &scratch.order,
+            &self.pred,
+            &mut scratch.access,
+            &mut scratch.flags,
+        );
+        timeline::simulate_into(
+            self.workload,
+            self.hw,
+            mapping,
+            &scratch.flags,
+            opts,
+            &scratch.order,
+            &self.memo,
+            &mut scratch.sim,
+        )
+    }
+}
+
+/// Per-thread scratch arena: schedule order, access flags, Algorithm-2
+/// state, and timeline buffers, all reused across individuals.
+#[derive(Default)]
+pub struct EvalScratch {
+    order: Vec<(usize, usize)>,
+    flags: AccessFlags,
+    access: AccessScratch,
+    sim: SimScratch,
+}
+
+/// The production batch evaluator: EDP (`latency * energy`) of one
+/// workload batch under fixed hardware, parallel across threads, with a
+/// genome-keyed fitness memo.
+pub struct MappingEvaluator<'a> {
+    prep: PreparedWorkload<'a>,
+    pub opts: SimOptions,
+    threads: usize,
+    cache: Mutex<HashMap<Mapping, f64>>,
+    /// Reused by single-threaded paths (`eval_one`, 1-thread batches) so
+    /// sequential searches stay allocation-free too.
+    serial_scratch: Mutex<EvalScratch>,
+}
+
+impl<'a> MappingEvaluator<'a> {
+    pub fn new(workload: &'a Workload, hw: &'a HwConfig) -> Self {
+        MappingEvaluator {
+            prep: PreparedWorkload::new(workload, hw),
+            opts: SimOptions::default(),
+            threads: default_threads(),
+            cache: Mutex::new(HashMap::new()),
+            serial_scratch: Mutex::new(EvalScratch::default()),
+        }
+    }
+
+    /// Override the worker-thread count (1 = fully serial).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn prepared(&self) -> &PreparedWorkload<'a> {
+        &self.prep
+    }
+
+    /// Simulate one mapping with the prepared state (no memo).
+    pub fn simulate(&self, m: &Mapping, scratch: &mut EvalScratch) -> SimResult {
+        self.prep.evaluate(m, &self.opts, scratch)
+    }
+
+    fn edp(&self, m: &Mapping, scratch: &mut EvalScratch) -> f64 {
+        let r = self.prep.evaluate(m, &self.opts, scratch);
+        r.latency_cycles * r.energy_pj
+    }
+
+    /// Memoised single-mapping fitness.
+    pub fn fitness(&self, m: &Mapping) -> f64 {
+        if let Some(&f) = self.cache.lock().unwrap().get(m) {
+            return f;
+        }
+        let f = {
+            let mut scratch = self.serial_scratch.lock().unwrap();
+            self.edp(m, &mut scratch)
+        };
+        self.cache.lock().unwrap().insert(m.clone(), f);
+        f
+    }
+
+    /// Number of distinct mappings simulated so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl BatchEvaluator for MappingEvaluator<'_> {
+    fn eval_batch(&self, batch: &[Mapping], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(batch.len(), f64::NAN);
+
+        // memo lookup + within-batch dedup: collect distinct misses and
+        // the output slots each one feeds
+        let mut unique: Vec<&Mapping> = Vec::new();
+        let mut slots: Vec<Vec<usize>> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut index: HashMap<&Mapping, usize> = HashMap::new();
+            for (i, m) in batch.iter().enumerate() {
+                if let Some(&f) = cache.get(m) {
+                    out[i] = f;
+                    continue;
+                }
+                match index.get(m) {
+                    Some(&u) => slots[u].push(i),
+                    None => {
+                        index.insert(m, unique.len());
+                        unique.push(m);
+                        slots.push(vec![i]);
+                    }
+                }
+            }
+        }
+        if unique.is_empty() {
+            return;
+        }
+
+        // evaluate distinct misses, each into its own slot (deterministic
+        // regardless of chunking), with one scratch arena per thread
+        let mut fits = vec![0f64; unique.len()];
+        let threads = self.threads.min(unique.len()).max(1);
+        if threads == 1 {
+            let mut scratch = self.serial_scratch.lock().unwrap();
+            for (f, m) in fits.iter_mut().zip(&unique) {
+                *f = self.edp(m, &mut scratch);
+            }
+        } else {
+            let chunk = unique.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ms, fs) in unique.chunks(chunk).zip(fits.chunks_mut(chunk)) {
+                    s.spawn(move || {
+                        let mut scratch = EvalScratch::default();
+                        for (f, m) in fs.iter_mut().zip(ms) {
+                            *f = self.edp(m, &mut scratch);
+                        }
+                    });
+                }
+            });
+        }
+
+        let mut cache = self.cache.lock().unwrap();
+        for (u, &f) in fits.iter().enumerate() {
+            for &i in &slots[u] {
+                out[i] = f;
+            }
+            cache.insert(unique[u].clone(), f);
+        }
+    }
+
+    /// Sequential-search path (simulated annealing): reads the memo but
+    /// does not populate it — an SA chain almost never revisits a genome,
+    /// so inserting every candidate would only grow memory — and reuses
+    /// the evaluator's serial scratch arena instead of allocating.
+    fn eval_one(&self, m: &Mapping) -> f64 {
+        if let Some(&f) = self.cache.lock().unwrap().get(m) {
+            return f;
+        }
+        let mut scratch = self.serial_scratch.lock().unwrap();
+        self.edp(m, &mut scratch)
+    }
+}
+
+/// Deterministic parallel map for search loops whose individuals are not
+/// plain mappings (the joint hardware+mapping baseline, BO initial
+/// designs): `out[i] = f(&items[i])`, split across scoped threads.
+pub fn par_map_f64<T, F>(items: &[T], threads: usize, f: &F) -> Vec<f64>
+where
+    T: Sync,
+    F: Fn(&T) -> f64 + Sync,
+{
+    let mut out = vec![0f64; items.len()];
+    if items.is_empty() {
+        return out;
+    }
+    let threads = threads.min(items.len()).max(1);
+    if threads == 1 {
+        for (o, t) in out.iter_mut().zip(items) {
+            *o = f(t);
+        }
+    } else {
+        let chunk = items.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ts, os) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (o, t) in os.iter_mut().zip(ts) {
+                        *o = f(t);
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::cost::Evaluator;
+    use crate::ga::ops;
+    use crate::util::Rng;
+    use crate::workload::{build_workload, ModelSpec, Request, WorkloadParams};
+
+    fn setup() -> (Workload, HwConfig) {
+        let model = ModelSpec::tiny();
+        let batch = vec![Request::prefill(48); 4];
+        let w = build_workload(
+            &model,
+            &batch,
+            &WorkloadParams {
+                micro_batch_size: 2,
+                tensor_parallel: 2,
+                eval_blocks: 2,
+            },
+        );
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        (w, hw)
+    }
+
+    #[test]
+    fn batch_matches_reference_evaluator_bitwise() {
+        let (w, hw) = setup();
+        let mev = MappingEvaluator::new(&w, &hw).with_threads(3);
+        let ev = Evaluator::new();
+        let mut rng = Rng::seed_from_u64(7);
+        let maps: Vec<_> = (0..9)
+            .map(|_| ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 4, &mut rng))
+            .collect();
+        let mut fits = Vec::new();
+        mev.eval_batch(&maps, &mut fits);
+        assert_eq!(fits.len(), maps.len());
+        for (m, f) in maps.iter().zip(&fits) {
+            let r = ev.eval_batch(&w, &hw, m);
+            let reference = r.latency_cycles * r.energy_pj;
+            assert_eq!(f.to_bits(), reference.to_bits());
+        }
+    }
+
+    #[test]
+    fn one_and_many_threads_agree_bitwise() {
+        let (w, hw) = setup();
+        let mut rng = Rng::seed_from_u64(11);
+        let maps: Vec<_> = (0..16)
+            .map(|_| ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 4, &mut rng))
+            .collect();
+        let m1 = MappingEvaluator::new(&w, &hw).with_threads(1);
+        let m4 = MappingEvaluator::new(&w, &hw).with_threads(4);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        m1.eval_batch(&maps, &mut a);
+        m4.eval_batch(&maps, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn duplicates_hit_the_memo() {
+        let (w, hw) = setup();
+        let mev = MappingEvaluator::new(&w, &hw).with_threads(2);
+        let mut rng = Rng::seed_from_u64(3);
+        let a = ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 4, &mut rng);
+        let b = ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 4, &mut rng);
+        let batch = vec![a.clone(), b.clone(), a.clone(), a.clone(), b.clone()];
+        let mut fits = Vec::new();
+        mev.eval_batch(&batch, &mut fits);
+        // only two distinct genomes were ever simulated
+        assert_eq!(mev.cache_len(), 2);
+        assert_eq!(fits[0].to_bits(), fits[2].to_bits());
+        assert_eq!(fits[0].to_bits(), fits[3].to_bits());
+        assert_eq!(fits[1].to_bits(), fits[4].to_bits());
+        // a second batch is served from the memo and stays identical
+        let mut again = Vec::new();
+        mev.eval_batch(&batch, &mut again);
+        assert_eq!(mev.cache_len(), 2);
+        for (x, y) in fits.iter().zip(&again) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn closure_blanket_impl_is_serial_identity() {
+        let maps: Vec<_> = (0..5)
+            .map(|i| {
+                let mut m = Mapping::new(2, 3);
+                m.set_chip(0, 0, i as u16);
+                m
+            })
+            .collect();
+        let f = |m: &Mapping| m.chip(0, 0) as f64;
+        let mut out = Vec::new();
+        BatchEvaluator::eval_batch(&f, &maps, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(f.eval_one(&maps[3]), 3.0);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let f = |x: &u64| (*x * 3) as f64;
+        let serial = par_map_f64(&items, 1, &f);
+        let parallel = par_map_f64(&items, 7, &f);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[41], 123.0);
+    }
+}

@@ -5,9 +5,11 @@
 
 pub mod access;
 pub mod dataflow;
+pub mod engine;
 pub mod money;
 pub mod timeline;
 
+pub use engine::{BatchEvaluator, EvalScratch, MappingEvaluator, PreparedWorkload};
 
 use crate::arch::constants::CLOCK_HZ;
 use crate::arch::{Chiplet, HwConfig};
@@ -58,6 +60,11 @@ impl Evaluator {
     }
 
     /// Evaluate one batch (one workload) under one mapping.
+    ///
+    /// One-shot path: builds the search-invariant state and scratch
+    /// buffers fresh. Search loops evaluating many mappings against one
+    /// (workload, hardware) pair should use [`MappingEvaluator`], which
+    /// hoists that work out of the per-individual hot path.
     pub fn eval_batch(
         &self,
         workload: &Workload,

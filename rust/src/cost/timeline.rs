@@ -76,6 +76,96 @@ impl Default for SimOptions {
     }
 }
 
+/// Index of a chiplet's (capacity class, dataflow) pair in the
+/// kernel-cost memo: `class * 2 + dataflow`, 6 kinds total.
+#[inline]
+pub(crate) fn chip_kind(c: crate::arch::Chiplet) -> usize {
+    let cls = match c.class {
+        crate::arch::ChipletClass::S => 0,
+        crate::arch::ChipletClass::M => 1,
+        crate::arch::ChipletClass::L => 2,
+    };
+    let df = match c.dataflow {
+        crate::arch::Dataflow::WeightStationary => 0,
+        crate::arch::Dataflow::OutputStationary => 1,
+    };
+    cls * 2 + df
+}
+
+#[inline]
+fn chiplet_of_kind(kind: usize) -> crate::arch::Chiplet {
+    use crate::arch::{Chiplet, ChipletClass, Dataflow};
+    Chiplet {
+        class: [ChipletClass::S, ChipletClass::M, ChipletClass::L][kind / 2],
+        dataflow: [Dataflow::WeightStationary, Dataflow::OutputStationary][kind % 2],
+    }
+}
+
+/// Per-(shape-class, chiplet-kind, load-flag) kernel-cost memo. Kernel
+/// costs depend only on the layer shape and the executing chiplet's
+/// (class, dataflow, load) — never on the mapping — so the evaluation
+/// engine builds the full table once per (workload, hardware) search and
+/// shares it read-only across threads (see EXPERIMENTS.md #Perf).
+#[derive(Debug, Clone, Default)]
+pub struct KernelMemo {
+    /// `costs[class * 12 + chip_kind * 2 + load]`; entries stay `None`
+    /// for chiplet kinds absent from the hardware.
+    costs: Vec<Option<super::dataflow::KernelCost>>,
+}
+
+impl KernelMemo {
+    pub fn build(workload: &Workload, hw: &HwConfig) -> Self {
+        // cost memo: classes x (3 chiplet classes x 2 dataflows) x load flag
+        let n_classes = workload
+            .micro_batches
+            .iter()
+            .flat_map(|mb| mb.layers.iter())
+            .map(|l| l.shape_class + 1)
+            .max()
+            .unwrap_or(1) as usize;
+        let mut present = [false; 6];
+        for i in 0..hw.num_chiplets() {
+            present[chip_kind(hw.chiplet(i))] = true;
+        }
+        let mut costs = vec![None; n_classes * 12];
+        let mut seen = vec![false; n_classes];
+        for mb in &workload.micro_batches {
+            for node in &mb.layers {
+                let cls = node.shape_class as usize;
+                if seen[cls] {
+                    continue;
+                }
+                seen[cls] = true;
+                for (kind, &p) in present.iter().enumerate() {
+                    if !p {
+                        continue;
+                    }
+                    let chip = chiplet_of_kind(kind);
+                    for load in 0..2usize {
+                        costs[cls * 12 + kind * 2 + load] =
+                            Some(layer_cost(&node.kind, node.vec_ops, chip, load == 1));
+                    }
+                }
+            }
+        }
+        KernelMemo { costs }
+    }
+
+    #[inline]
+    fn get(&self, key: usize) -> super::dataflow::KernelCost {
+        self.costs[key].expect("kernel memo built for a different workload/hardware")
+    }
+}
+
+/// Reusable per-thread working state of [`simulate_into`], so the
+/// timeline walk allocates nothing per individual.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    chip_avail: Vec<f64>,
+    dram_avail: Vec<f64>,
+    layer_end: Vec<f64>,
+}
+
 /// Simulate one batch. `flags` must come from `access::analyze` on the
 /// same (workload, mapping).
 pub fn simulate(
@@ -88,9 +178,9 @@ pub fn simulate(
     simulate_with_order(workload, hw, mapping, flags, opts, &mapping.schedule_order())
 }
 
-/// `simulate` with a precomputed schedule order and a per-(shape-class,
-/// chiplet-kind, weight-flag) kernel-cost memo -- the evaluation engine's
-/// hot-path variant (see EXPERIMENTS.md #Perf).
+/// `simulate` with a precomputed schedule order (builds the kernel-cost
+/// memo and scratch buffers fresh; searches should use [`simulate_into`]
+/// through the evaluation engine instead).
 pub fn simulate_with_order(
     workload: &Workload,
     hw: &HwConfig,
@@ -99,34 +189,38 @@ pub fn simulate_with_order(
     opts: &SimOptions,
     order: &[(usize, usize)],
 ) -> SimResult {
-    // cost memo: classes x (3 chiplet classes x 2 dataflows) x load flag
-    let n_classes = workload
-        .micro_batches
-        .iter()
-        .flat_map(|mb| mb.layers.iter())
-        .map(|l| l.shape_class + 1)
-        .max()
-        .unwrap_or(1) as usize;
-    let mut memo: Vec<Option<super::dataflow::KernelCost>> = vec![None; n_classes * 12];
-    let chip_kind = |c: crate::arch::Chiplet| -> usize {
-        let cls = match c.class {
-            crate::arch::ChipletClass::S => 0,
-            crate::arch::ChipletClass::M => 1,
-            crate::arch::ChipletClass::L => 2,
-        };
-        let df = match c.dataflow {
-            crate::arch::Dataflow::WeightStationary => 0,
-            crate::arch::Dataflow::OutputStationary => 1,
-        };
-        cls * 2 + df
-    };
+    let memo = KernelMemo::build(workload, hw);
+    let mut scratch = SimScratch::default();
+    simulate_into(workload, hw, mapping, flags, opts, order, &memo, &mut scratch)
+}
+
+/// Allocation-free timeline simulation: reuses `scratch` buffers and the
+/// search-invariant kernel-cost `memo` — the evaluation engine's
+/// hot-path variant (see EXPERIMENTS.md #Perf).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_into(
+    workload: &Workload,
+    hw: &HwConfig,
+    mapping: &Mapping,
+    flags: &AccessFlags,
+    opts: &SimOptions,
+    order: &[(usize, usize)],
+    memo: &KernelMemo,
+    scratch: &mut SimScratch,
+) -> SimResult {
     let cols = mapping.cols;
     let nop_bytes_per_cycle = hw.nop_bw_gbs * 1e9 / CLOCK_HZ;
     let dram_bytes_per_cycle = hw.dram_bw_gbs * 1e9 / CLOCK_HZ;
 
-    let mut chip_avail = vec![0.0f64; hw.num_chiplets()];
-    let mut dram_avail = vec![0.0f64; NUM_DRAM_CHIPS];
-    let mut layer_end = vec![0.0f64; mapping.rows * cols];
+    scratch.chip_avail.clear();
+    scratch.chip_avail.resize(hw.num_chiplets(), 0.0);
+    scratch.dram_avail.clear();
+    scratch.dram_avail.resize(NUM_DRAM_CHIPS, 0.0);
+    scratch.layer_end.clear();
+    scratch.layer_end.resize(mapping.rows * cols, 0.0);
+    let chip_avail = &mut scratch.chip_avail;
+    let dram_avail = &mut scratch.dram_avail;
+    let layer_end = &mut scratch.layer_end;
     let mut bd = Breakdown::default();
     let mut phase_energy: Vec<(Phase, f64)> = Vec::new();
     let mut timeline = if opts.record_timeline {
@@ -148,14 +242,7 @@ pub fn simulate_with_order(
         let write_out = flags.is_write_out[t] || node.force_out;
 
         let key = (node.shape_class as usize * 12) + chip_kind(chip) * 2 + load_wei as usize;
-        let cost = match memo[key] {
-            Some(c) => c,
-            None => {
-                let c = layer_cost(&node.kind, node.vec_ops, chip, load_wei);
-                memo[key] = Some(c);
-                c
-            }
-        };
+        let cost = memo.get(key);
 
         // --- classify activation traffic ---
         let n_preds = node.preds.len().max(1) as f64;
@@ -179,7 +266,8 @@ pub fn simulate_with_order(
                 }
             }
         }
-        let dram_wr = if write_out { node.out_bytes as f64 } else { 0.0 } + node.kv_write_bytes as f64;
+        let dram_wr =
+            if write_out { node.out_bytes as f64 } else { 0.0 } + node.kv_write_bytes as f64;
         let dram_bytes = dram_rd + dram_wr;
 
         // --- per-layer times (double buffering: overlap, take max) ---

@@ -9,7 +9,7 @@
 
 use crate::arch::{HwConfig, HwSpace};
 use crate::bo::{self, BoConfig, Gp};
-use crate::cost::{group_params, EvalResult, Evaluator};
+use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
 use crate::workload::serving::Scenario;
@@ -70,6 +70,12 @@ pub struct MappingSearch {
 
 /// Run the GA mapping search for every batch group of `scenario` on
 /// hardware `hw`, then evaluate the scenario end-to-end.
+///
+/// Each group's search runs through a [`MappingEvaluator`]: the
+/// search-invariant workload state is prepared once, generations are
+/// scored batch-parallel across threads, and duplicate individuals hit
+/// the fitness memo (EXPERIMENTS.md #Perf). Results are bit-identical to
+/// the serial closure path for a given seed.
 pub fn search_mappings(
     scenario: &Scenario,
     model: &ModelSpec,
@@ -87,10 +93,7 @@ pub fn search_mappings(
         let cols = w.layers_per_mb;
         let mut cfg = *ga_cfg;
         cfg.seed = ga_cfg.seed.wrapping_add(gi as u64);
-        let res = ga::search(rows, cols, chips, &cfg, |m| {
-            let r = ev.eval_batch(&w, hw, m);
-            r.latency_cycles * r.energy_pj
-        });
+        let res = ga::search(rows, cols, chips, &cfg, &MappingEvaluator::new(&w, hw));
         mappings.push(res.best);
     }
     let eval = ev.eval_scenario(scenario, model, hw, &mappings, eval_blocks);

@@ -7,7 +7,9 @@ pub mod scenes;
 
 use crate::arch::{Chiplet, ChipletClass, Dataflow, HwConfig, HwSpace};
 use crate::baselines::{fixed_length_scenario, gemini, moham, random, scar};
-use crate::bo::{Gp, NativeGp, PjrtGp};
+#[cfg(feature = "xla")]
+use crate::bo::PjrtGp;
+use crate::bo::{Gp, NativeGp};
 use crate::cost::{edp_of, edp_probe, Evaluator, SimOptions};
 use crate::dse::{self, DseConfig};
 use crate::ga::GaConfig;
@@ -19,9 +21,11 @@ use crate::workload::{ModelSpec, Phase};
 
 pub use scenes::{model_for_tops, Scene};
 
-/// Select a GP backend: PJRT artifacts when available, else the native
-/// mirror (prints which one was picked).
+/// Select a GP backend: PJRT artifacts when available (and the `xla`
+/// feature is compiled in), else the native mirror (prints which one was
+/// picked).
 pub fn make_gp(rt: Option<&Runtime>) -> Box<dyn Gp + '_> {
+    #[cfg(feature = "xla")]
     if let Some(rt) = rt {
         if rt.artifacts_available() {
             if let Err(e) = rt.check_manifest() {
@@ -36,6 +40,8 @@ pub fn make_gp(rt: Option<&Runtime>) -> Box<dyn Gp + '_> {
             );
         }
     }
+    #[cfg(not(feature = "xla"))]
+    let _ = rt;
     Box::new(NativeGp::new())
 }
 
@@ -293,15 +299,22 @@ pub fn fig7_compare(
             let mut hw1 = mhw.clone();
             hw1.micro_batch_prefill = 1;
             hw1.micro_batch_decode = 1;
-            let ms = moham::moham_dse(&test_scenario, &model, &space_fixed_to(&space, &mhw), &GaConfig {
-                population: 6,
-                generations: 3,
-                ..mo_cfg
-            }, cfg.eval_blocks);
+            let ms = moham::moham_dse(
+                &test_scenario,
+                &model,
+                &space_fixed_to(&space, &mhw),
+                &GaConfig {
+                    population: 6,
+                    generations: 3,
+                    ..mo_cfg
+                },
+                cfg.eval_blocks,
+            );
             ms.1.eval
         };
 
-        let pack = |e: &crate::cost::EvalResult| [e.latency_cycles, e.energy_pj, e.mc_usd, e.total_cost()];
+        let pack =
+            |e: &crate::cost::EvalResult| [e.latency_cycles, e.energy_pj, e.mc_usd, e.total_cost()];
         rows.push(CompareRow {
             scene: scene.clone(),
             gemini: pack(&gem_eval),
@@ -609,7 +622,8 @@ pub fn fig11_ablation(cfg: &DseConfig, rt: Option<&Runtime>, seed: u64) -> Table
     let model = model_for_tops(512.0);
     let space = HwSpace::paper(512.0);
     let prefill_len = trace.mean_in().round() as u64;
-    let scen = Scenario::serving(ServingStrategy::ChunkedPrefill, &trace, prefill_len, 128, 2, 2048);
+    let scen =
+        Scenario::serving(ServingStrategy::ChunkedPrefill, &trace, prefill_len, 128, 2, 2048);
 
     let mut t = Table::new(
         "Fig 11 - ablation (chunked-prefill scenario), lower total = better",
@@ -683,7 +697,8 @@ mod tests {
     #[test]
     fn steady_state_reference_close_to_timeline_for_pipeline() {
         let model = ModelSpec::tiny();
-        let hw = HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
+        let hw =
+            HwConfig::homogeneous(2, 2, ChipletClass::S, Dataflow::WeightStationary, 32.0, 16.0);
         let batch = vec![crate::workload::Request::prefill(64); 8];
         let params = crate::workload::WorkloadParams {
             micro_batch_size: 2,
@@ -691,7 +706,8 @@ mod tests {
             eval_blocks: 2,
         };
         let w = crate::workload::build_workload(&model, &batch, &params);
-        let m = crate::mapping::presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 4);
+        let m =
+            crate::mapping::presets::pipeline_parallel(w.num_micro_batches(), w.layers_per_mb, 4);
         let r = Evaluator::new().eval_batch(&w, &hw, &m);
         let (lref, eref) = steady_state_reference(&w, &hw, &m);
         // independent methodology, same scale: agreement within 25%

@@ -17,6 +17,8 @@ pub mod ops;
 use crate::mapping::Mapping;
 use crate::util::Rng;
 
+pub use crate::cost::engine::BatchEvaluator;
+
 /// GA hyperparameters (paper §VI-A: population 120, 100 iterations;
 /// defaults here are the reduced single-core budget, see DESIGN.md).
 #[derive(Debug, Clone, Copy)]
@@ -81,18 +83,24 @@ pub struct GaResult {
     pub evaluations: usize,
 }
 
-/// Run the GA. `fitness` maps a mapping to a scalar cost (lower better);
-/// it is called once per new individual (memoise outside if desired).
-pub fn search<F: FnMut(&Mapping) -> f64>(
+/// Run the GA against a batch evaluator (see
+/// [`crate::cost::engine::MappingEvaluator`] for the parallel,
+/// allocation-free production implementation; any
+/// `Fn(&Mapping) -> f64 + Sync` closure also works, serially).
+///
+/// Children of a generation are produced serially from the seeded RNG
+/// and only then scored as one batch, so `GaResult` is bit-identical for
+/// a given `GaConfig::seed` whether the evaluator runs on 1 or N
+/// threads.
+pub fn search<E: BatchEvaluator + ?Sized>(
     rows: usize,
     cols: usize,
     num_chips: usize,
     cfg: &GaConfig,
-    mut fitness: F,
+    evaluator: &E,
 ) -> GaResult {
     assert!(rows > 0 && cols > 0 && num_chips > 0);
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    let mut evaluations = 0usize;
 
     // --- initial population: random + parallelism-preset seeds ---
     let mut pop: Vec<Mapping> = Vec::with_capacity(cfg.population);
@@ -114,30 +122,22 @@ pub fn search<F: FnMut(&Mapping) -> f64>(
     }
     pop.truncate(cfg.population);
 
-    let mut fits: Vec<f64> = pop
-        .iter()
-        .map(|m| {
-            evaluations += 1;
-            fitness(m)
-        })
-        .collect();
+    let mut fits: Vec<f64> = Vec::with_capacity(cfg.population);
+    evaluator.eval_batch(&pop, &mut fits);
+    let mut evaluations = pop.len();
 
+    let mut child_fits: Vec<f64> = Vec::with_capacity(cfg.population);
     let mut history = Vec::with_capacity(cfg.generations);
     for gen in 0..cfg.generations {
         // phase in [0,1): early -> impactful mutations, late -> fine ones
         let phase = gen as f64 / cfg.generations.max(1) as f64;
 
-        // elitism
-        let mut order: Vec<usize> = (0..pop.len()).collect();
-        order.sort_by(|&a, &b| fits[a].total_cmp(&fits[b]));
-        let mut next: Vec<Mapping> = order
-            .iter()
-            .take(cfg.elites)
-            .map(|&i| pop[i].clone())
-            .collect();
-        let mut next_fits: Vec<f64> = order.iter().take(cfg.elites).map(|&i| fits[i]).collect();
+        let (mut next, mut next_fits) = select_elites(&pop, &fits, cfg.elites);
 
-        while next.len() < cfg.population {
+        // generate the whole brood serially (deterministic RNG stream) ...
+        let mut children: Vec<Mapping> =
+            Vec::with_capacity(cfg.population.saturating_sub(next.len()));
+        while next.len() + children.len() < cfg.population {
             let pa = tournament(&fits, cfg.tournament_k, &mut rng);
             let pb = tournament(&fits, cfg.tournament_k, &mut rng);
             let mut child = if rng.gen_bool(cfg.crossover_prob) {
@@ -152,10 +152,14 @@ pub fn search<F: FnMut(&Mapping) -> f64>(
                 ops::mutate_layer_to_chip(&mut child, num_chips, phase, &mut rng);
             }
             debug_assert!(child.is_valid(num_chips));
-            evaluations += 1;
-            next_fits.push(fitness(&child));
-            next.push(child);
+            children.push(child);
         }
+
+        // ... then score the generation as one (parallel) batch
+        evaluations += children.len();
+        evaluator.eval_batch(&children, &mut child_fits);
+        next_fits.append(&mut child_fits);
+        next.append(&mut children);
         pop = next;
         fits = next_fits;
 
@@ -182,8 +186,19 @@ pub fn search<F: FnMut(&Mapping) -> f64>(
     }
 }
 
+/// Elitism: clone the `elites` fittest individuals (ties broken by
+/// population order) together with their fitness. Shared between the GA
+/// and the joint hardware+mapping baseline.
+pub fn select_elites<T: Clone>(pop: &[T], fits: &[f64], elites: usize) -> (Vec<T>, Vec<f64>) {
+    let mut order: Vec<usize> = (0..pop.len()).collect();
+    order.sort_by(|&a, &b| fits[a].total_cmp(&fits[b]));
+    let next = order.iter().take(elites).map(|&i| pop[i].clone()).collect();
+    let next_fits = order.iter().take(elites).map(|&i| fits[i]).collect();
+    (next, next_fits)
+}
+
 /// Tournament selection: k uniform picks, return the fittest index.
-fn tournament(fits: &[f64], k: usize, rng: &mut Rng) -> usize {
+pub fn tournament(fits: &[f64], k: usize, rng: &mut Rng) -> usize {
     let mut best = rng.gen_index(fits.len());
     for _ in 1..k.max(1) {
         let c = rng.gen_index(fits.len());
@@ -220,7 +235,7 @@ mod tests {
             generations: 40,
             ..GaConfig::reduced()
         };
-        let r = search(2, 12, chips, &cfg, |m| toy_fitness(m, chips));
+        let r = search(2, 12, chips, &cfg, &|m: &Mapping| toy_fitness(m, chips));
         assert!(
             r.best_fitness <= 3.0,
             "GA should approach optimum, got {}",
@@ -234,8 +249,8 @@ mod tests {
     #[test]
     fn deterministic_under_seed() {
         let cfg = GaConfig::tiny();
-        let a = search(2, 8, 4, &cfg, |m| toy_fitness(m, 4));
-        let b = search(2, 8, 4, &cfg, |m| toy_fitness(m, 4));
+        let a = search(2, 8, 4, &cfg, &|m: &Mapping| toy_fitness(m, 4));
+        let b = search(2, 8, 4, &cfg, &|m: &Mapping| toy_fitness(m, 4));
         assert_eq!(a.best, b.best);
         assert_eq!(a.best_fitness, b.best_fitness);
     }
@@ -243,7 +258,7 @@ mod tests {
     #[test]
     fn all_individuals_valid() {
         let cfg = GaConfig::tiny();
-        let r = search(3, 10, 5, &cfg, |m| {
+        let r = search(3, 10, 5, &cfg, &|m: &Mapping| {
             assert!(m.is_valid(5), "invalid individual reached fitness");
             toy_fitness(m, 5)
         });
@@ -262,7 +277,7 @@ mod tests {
             generations: 25,
             ..GaConfig::tiny()
         };
-        let r = search(2, 10, 4, &cfg, |m| toy_fitness(m, 4));
+        let r = search(2, 10, 4, &cfg, &|m: &Mapping| toy_fitness(m, 4));
         let mut prev = f64::INFINITY;
         for st in &r.history {
             assert!(st.best <= prev + 1e-12, "best regressed at gen {}", st.generation);
@@ -280,7 +295,7 @@ mod tests {
             generations: 15,
             ..GaConfig::reduced()
         };
-        let ga = search(rows, cols, chips, &cfg, |m| toy_fitness(m, chips));
+        let ga = search(rows, cols, chips, &cfg, &|m: &Mapping| toy_fitness(m, chips));
         // random baseline with identical evaluation budget
         let mut rng = Rng::seed_from_u64(1);
         let budget = ga.evaluations;

@@ -9,12 +9,14 @@
 //! * [`mapping`]  — the paper's mapping encoding + Algorithm-1 presets;
 //! * [`arch`]     — the multi-chiplet hardware template (Table IV space);
 //! * [`cost`]     — the evaluation engine (intra-chiplet dataflow model,
-//!   Algorithm-2 access analysis, timeline, monetary cost);
+//!   Algorithm-2 access analysis, timeline, monetary cost, and the
+//!   batched multi-threaded search evaluator in [`cost::engine`]);
 //! * [`ga`]       — genetic-algorithm mapping generation engine;
 //! * [`bo`]       — Bayesian-optimization hardware sampling engine (GP
 //!   surrogate executed via PJRT artifacts, two-tier SA acquisition);
 //! * [`baselines`]— Gemini-, MOHaM-, SCAR-style and random baselines;
-//! * [`runtime`]  — PJRT artifact loading/execution (`xla` crate);
+//! * [`runtime`]  — PJRT artifact loading/execution (`xla` crate, behind
+//!   the non-default `xla` feature; a stub otherwise);
 //! * [`dse`]      — the top-level co-exploration driver;
 //! * [`report`]   — table/figure writers mirroring the paper.
 

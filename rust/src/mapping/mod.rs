@@ -18,7 +18,11 @@ pub mod presets;
 
 
 /// The mapping genome explored by the GA (paper §IV).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `Hash`/`Eq` make the genome usable as a fitness-memo key, so duplicate
+/// individuals (elites, crossover clones) are never re-simulated (see
+/// EXPERIMENTS.md #Perf).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Mapping {
     /// `R x M` row-major chiplet assignment.
     pub layer_to_chip: Vec<u16>,
@@ -78,14 +82,32 @@ impl Mapping {
     /// micro-batch, for each layer in the segment, yield `(mb, layer)`.
     pub fn schedule_order(&self) -> Vec<(usize, usize)> {
         let mut order = Vec::with_capacity(self.rows * self.cols);
-        for (s, e) in self.segments() {
+        self.schedule_order_into(&mut order);
+        order
+    }
+
+    /// [`Mapping::schedule_order`] into a reused buffer — the evaluation
+    /// engine's allocation-free hot path (see EXPERIMENTS.md #Perf).
+    pub fn schedule_order_into(&self, out: &mut Vec<(usize, usize)>) {
+        out.clear();
+        out.reserve(self.rows * self.cols);
+        let mut push_segment = |s: usize, e: usize| {
             for mb in 0..self.rows {
                 for layer in s..e {
-                    order.push((mb, layer));
+                    out.push((mb, layer));
                 }
             }
+        };
+        let mut start = 0usize;
+        for (i, &cut) in self.segmentation.iter().enumerate() {
+            if cut {
+                push_segment(start, i + 1);
+                start = i + 1;
+            }
         }
-        order
+        if start < self.cols {
+            push_segment(start, self.cols);
+        }
     }
 
     /// Distinct chiplets actually used.

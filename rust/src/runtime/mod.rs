@@ -8,12 +8,14 @@
 //! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The whole runtime is gated behind the non-default `xla` cargo feature
+//! (it needs the vendored `xla` crate); without it a stub [`Runtime`]
+//! reports artifacts as unavailable so every caller falls back to the
+//! native GP, and the default build stays dependency-free.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "xla"))]
+use crate::util::{Error, Result};
 
 /// Fixed artifact shapes — must match `python/compile/constants.py`
 /// (checked against `artifacts/manifest.json` at load time).
@@ -30,130 +32,177 @@ pub mod shapes {
     pub const SYS_D: usize = 8;
 }
 
-/// A loaded, compiled artifact cache keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    execs: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// Stub runtime for builds without the `xla` feature: construction
+/// fails, artifacts never exist, so callers take the native-GP path.
+#[cfg(not(feature = "xla"))]
+#[derive(Debug, Default)]
+pub struct Runtime;
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    pub fn new<P: AsRef<std::path::Path>>(_artifacts_dir: P) -> Result<Self> {
+        Err(Error::msg("compass was built without the `xla` feature"))
+    }
+
+    /// Always errors: no PJRT backend is compiled in.
+    pub fn from_env() -> Result<Self> {
+        Err(Error::msg("compass was built without the `xla` feature"))
+    }
+
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        std::path::Path::new("artifacts")
+    }
+
+    pub fn artifacts_available(&self) -> bool {
+        false
+    }
+
+    pub fn check_manifest(&self) -> Result<()> {
+        Err(Error::msg("compass was built without the `xla` feature"))
+    }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir,
-            execs: Mutex::new(HashMap::new()),
-        })
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use super::shapes;
+    use crate::util::{Error, Result};
+
+    /// A loaded, compiled artifact cache keyed by artifact name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        execs: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    /// Default artifacts location (`$COMPASS_ARTIFACTS` or `./artifacts`).
-    pub fn from_env() -> Result<Self> {
-        let dir = std::env::var("COMPASS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::new(dir)
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// True when every artifact named in the manifest is present.
-    pub fn artifacts_available(&self) -> bool {
-        self.dir.join("manifest.json").exists()
-            && ["gram_train", "gram_cross", "gram_diag", "gp_fit", "gp_ei"]
-                .iter()
-                .all(|n| self.dir.join(format!("{n}.hlo.txt")).exists())
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.execs
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute an artifact on f32 tensors; returns the flat f32 outputs.
-    ///
-    /// Inputs are `(data, dims)` pairs; the jax side lowers with
-    /// `return_tuple=True`, so the single result literal is a tuple with
-    /// one entry per graph output.
-    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.executable(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let l = xla::Literal::vec1(data);
-                if dims.len() == 1 && dims[0] as usize == data.len() {
-                    Ok(l)
-                } else {
-                    l.reshape(dims)
-                        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
-                }
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+            let dir = artifacts_dir.as_ref().to_path_buf();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::msg(format!("PJRT cpu client: {e:?}")))?;
+            Ok(Runtime {
+                client,
+                dir,
+                execs: Mutex::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-
-    /// Sanity-check the manifest shape constants against `shapes`.
-    pub fn check_manifest(&self) -> Result<()> {
-        let path = self.dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read {}", path.display()))?;
-        for (key, want) in [
-            ("\"SLOTS\"", shapes::SLOTS),
-            ("\"TYPES\"", shapes::TYPES),
-            ("\"TRAIN_N\"", shapes::TRAIN_N),
-            ("\"CAND_Q\"", shapes::CAND_Q),
-            ("\"SYS_D\"", shapes::SYS_D),
-        ] {
-            let found = text
-                .split(key)
-                .nth(1)
-                .and_then(|s| s.split(':').nth(1))
-                .and_then(|s| {
-                    let digits: String = s
-                        .chars()
-                        .skip_while(|c| c.is_whitespace())
-                        .take_while(|c| c.is_ascii_digit())
-                        .collect();
-                    digits.parse::<usize>().ok()
-                })
-                .ok_or_else(|| anyhow!("manifest missing {key}"))?;
-            if found != want {
-                return Err(anyhow!(
-                    "artifact shape mismatch for {key}: manifest {found} != runtime {want}; \
-                     re-run `make artifacts`"
-                ));
-            }
         }
-        Ok(())
+
+        /// Default artifacts location (`$COMPASS_ARTIFACTS` or `./artifacts`).
+        pub fn from_env() -> Result<Self> {
+            let dir = std::env::var("COMPASS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Self::new(dir)
+        }
+
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// True when every artifact named in the manifest is present.
+        pub fn artifacts_available(&self) -> bool {
+            self.dir.join("manifest.json").exists()
+                && ["gram_train", "gram_cross", "gram_diag", "gp_fit", "gp_ei"]
+                    .iter()
+                    .all(|n| self.dir.join(format!("{n}.hlo.txt")).exists())
+        }
+
+        /// Load + compile an artifact (cached).
+        pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.execs.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::msg(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::msg(format!("compile {name}: {e:?}")))?;
+            let exe = std::sync::Arc::new(exe);
+            self.execs
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute an artifact on f32 tensors; returns the flat f32 outputs.
+        ///
+        /// Inputs are `(data, dims)` pairs; the jax side lowers with
+        /// `return_tuple=True`, so the single result literal is a tuple with
+        /// one entry per graph output.
+        pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let exe = self.executable(name)?;
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let l = xla::Literal::vec1(data);
+                    if dims.len() == 1 && dims[0] as usize == data.len() {
+                        Ok(l)
+                    } else {
+                        l.reshape(dims)
+                            .map_err(|e| Error::msg(format!("reshape {dims:?}: {e:?}")))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| Error::msg(format!("execute {name}: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::msg(format!("sync {name}: {e:?}")))?;
+            let parts = result
+                .to_tuple()
+                .map_err(|e| Error::msg(format!("tuple {name}: {e:?}")))?;
+            parts
+                .into_iter()
+                .map(|p| {
+                    p.to_vec::<f32>()
+                        .map_err(|e| Error::msg(format!("to_vec: {e:?}")))
+                })
+                .collect()
+        }
+
+        /// Sanity-check the manifest shape constants against `shapes`.
+        pub fn check_manifest(&self) -> Result<()> {
+            let path = self.dir.join("manifest.json");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+            for (key, want) in [
+                ("\"SLOTS\"", shapes::SLOTS),
+                ("\"TYPES\"", shapes::TYPES),
+                ("\"TRAIN_N\"", shapes::TRAIN_N),
+                ("\"CAND_Q\"", shapes::CAND_Q),
+                ("\"SYS_D\"", shapes::SYS_D),
+            ] {
+                let found = text
+                    .split(key)
+                    .nth(1)
+                    .and_then(|s| s.split(':').nth(1))
+                    .and_then(|s| {
+                        let digits: String = s
+                            .chars()
+                            .skip_while(|c| c.is_whitespace())
+                            .take_while(|c| c.is_ascii_digit())
+                            .collect();
+                        digits.parse::<usize>().ok()
+                    })
+                    .ok_or_else(|| Error::msg(format!("manifest missing {key}")))?;
+                if found != want {
+                    return Err(Error::msg(format!(
+                        "artifact shape mismatch for {key}: manifest {found} != runtime {want}; \
+                         re-run `make artifacts`"
+                    )));
+                }
+            }
+            Ok(())
+        }
     }
 }
 
@@ -164,6 +213,7 @@ mod tests {
     // PJRT-backed integration tests live in rust/tests/pjrt_gp.rs (they
     // need `make artifacts` first); here we cover the artifact-less paths.
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_artifacts_detected() {
         let rt = Runtime::new("/nonexistent-dir");
@@ -174,6 +224,17 @@ mod tests {
             assert!(rt.executable("gram_train").is_err());
             assert!(rt.check_manifest().is_err());
         }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        assert!(Runtime::from_env().is_err());
+        assert!(Runtime::new("artifacts").is_err());
+        let rt = Runtime;
+        assert!(!rt.artifacts_available());
+        assert!(rt.check_manifest().is_err());
+        assert_eq!(rt.artifacts_dir(), std::path::Path::new("artifacts"));
     }
 
     #[test]

@@ -1,6 +1,30 @@
 //! Small self-contained utilities: a seeded RNG (no external crates are
-//! vendored for randomness) and a micro-benchmark harness used by the
+//! vendored for randomness), a string error type keeping the default
+//! build dependency-free, and a micro-benchmark harness used by the
 //! `cargo bench` binaries.
+
+/// Minimal string error for the crate's fallible APIs (GP fit, PJRT
+/// runtime). The default build vendors no error-handling crates, so this
+/// stands in for `anyhow`: message-only, `Display`/`Error`-compatible.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg<S: Into<String>>(s: S) -> Self {
+        Error(s.into())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias over [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Deterministic 64-bit RNG: splitmix64 state update with an xorshift
 /// output mix. Statistical quality is ample for search heuristics and

@@ -1,0 +1,148 @@
+//! Integration tests for the batched, multi-threaded evaluation engine:
+//! thread-count invariance of GA results under a fixed seed, equivalence
+//! with the serial closure path, and memo-cache consistency against the
+//! one-shot reference evaluator.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::cost::engine::{BatchEvaluator, MappingEvaluator};
+use compass::cost::Evaluator;
+use compass::ga::{self, ops, GaConfig};
+use compass::mapping::Mapping;
+use compass::util::Rng;
+use compass::workload::{build_workload, ModelSpec, Request, Workload, WorkloadParams};
+
+fn setup() -> (Workload, HwConfig) {
+    let model = ModelSpec::tiny();
+    let batch: Vec<Request> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                Request::prefill(32 + 16 * i as u64)
+            } else {
+                Request::decode(200 + 50 * i as u64)
+            }
+        })
+        .collect();
+    let w = build_workload(
+        &model,
+        &batch,
+        &WorkloadParams {
+            micro_batch_size: 2,
+            tensor_parallel: 2,
+            eval_blocks: 2,
+        },
+    );
+    let hw = HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    );
+    (w, hw)
+}
+
+/// Same seed, 1 thread vs N threads: bit-identical GA outcome.
+#[test]
+fn ga_results_identical_across_thread_counts() {
+    let (w, hw) = setup();
+    let rows = w.num_micro_batches();
+    let cols = w.layers_per_mb;
+    let cfg = GaConfig::tiny();
+    let serial = ga::search(
+        rows,
+        cols,
+        4,
+        &cfg,
+        &MappingEvaluator::new(&w, &hw).with_threads(1),
+    );
+    let parallel = ga::search(
+        rows,
+        cols,
+        4,
+        &cfg,
+        &MappingEvaluator::new(&w, &hw).with_threads(4),
+    );
+    assert_eq!(serial.best, parallel.best);
+    assert_eq!(
+        serial.best_fitness.to_bits(),
+        parallel.best_fitness.to_bits()
+    );
+    assert_eq!(serial.evaluations, parallel.evaluations);
+    assert_eq!(serial.history.len(), parallel.history.len());
+    for (a, b) in serial.history.iter().zip(&parallel.history) {
+        assert_eq!(a.best.to_bits(), b.best.to_bits());
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+    }
+}
+
+/// The engine-backed GA reproduces the seed's serial-closure GA exactly:
+/// the batch refactor changed scheduling of evaluations, not results.
+#[test]
+fn engine_ga_matches_serial_closure_ga() {
+    let (w, hw) = setup();
+    let rows = w.num_micro_batches();
+    let cols = w.layers_per_mb;
+    let cfg = GaConfig::tiny();
+    let ev = Evaluator::new();
+    let closure = ga::search(rows, cols, 4, &cfg, &|m: &Mapping| {
+        let r = ev.eval_batch(&w, &hw, m);
+        r.latency_cycles * r.energy_pj
+    });
+    let engine = ga::search(rows, cols, 4, &cfg, &MappingEvaluator::new(&w, &hw));
+    assert_eq!(closure.best, engine.best);
+    assert_eq!(closure.best_fitness.to_bits(), engine.best_fitness.to_bits());
+}
+
+/// Property sweep: memoised fitness (first call, cached call, and batch
+/// path) equals a fresh `Evaluator::eval_batch` for random mappings.
+#[test]
+fn memoised_fitness_equals_fresh_eval_batch() {
+    let (w, hw) = setup();
+    let ev = Evaluator::new();
+    let mev = MappingEvaluator::new(&w, &hw).with_threads(3);
+    let mut rng = Rng::seed_from_u64(42);
+    let mut maps = Vec::new();
+    for _ in 0..40 {
+        maps.push(ops::random_mapping(
+            w.num_micro_batches(),
+            w.layers_per_mb,
+            4,
+            &mut rng,
+        ));
+    }
+    let mut batch_fits = Vec::new();
+    mev.eval_batch(&maps, &mut batch_fits);
+    for (i, m) in maps.iter().enumerate() {
+        let r = ev.eval_batch(&w, &hw, m);
+        let reference = r.latency_cycles * r.energy_pj;
+        assert!(reference.is_finite() && reference > 0.0, "case {i}");
+        let first = mev.fitness(m);
+        let cached = mev.fitness(m);
+        assert_eq!(first.to_bits(), reference.to_bits(), "case {i}");
+        assert_eq!(cached.to_bits(), reference.to_bits(), "case {i}");
+        assert_eq!(batch_fits[i].to_bits(), reference.to_bits(), "case {i}");
+    }
+}
+
+/// Duplicate-heavy batches (elites + crossover clones) are only ever
+/// simulated once per distinct genome.
+#[test]
+fn batch_dedup_simulates_each_genome_once() {
+    let (w, hw) = setup();
+    let mev = MappingEvaluator::new(&w, &hw).with_threads(2);
+    let mut rng = Rng::seed_from_u64(5);
+    let distinct: Vec<Mapping> = (0..3)
+        .map(|_| ops::random_mapping(w.num_micro_batches(), w.layers_per_mb, 4, &mut rng))
+        .collect();
+    let mut batch = Vec::new();
+    for i in 0..12 {
+        batch.push(distinct[i % 3].clone());
+    }
+    let mut fits = Vec::new();
+    mev.eval_batch(&batch, &mut fits);
+    assert_eq!(mev.cache_len(), 3);
+    for i in 0..12 {
+        assert_eq!(fits[i].to_bits(), fits[i % 3].to_bits());
+    }
+}
