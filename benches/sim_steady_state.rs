@@ -1,0 +1,63 @@
+//! Serving-simulator throughput bench: how many simulated seconds of
+//! continuous-batching traffic one wall-clock second buys, per serving
+//! strategy, plus the composition-memo hit behaviour that makes the
+//! steady state cheap (EXPERIMENTS.md "Serving simulator").
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{self, SimConfig};
+use compass::util::Bench;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn main() {
+    let model = ModelSpec::gpt3_7b();
+    let hw = HwConfig::homogeneous(
+        2,
+        4,
+        ChipletClass::M,
+        Dataflow::WeightStationary,
+        64.0,
+        32.0,
+    );
+    let spec = TraceSpec {
+        mean_in: 256.0,
+        mean_out: 64.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 16_384,
+    };
+    let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    cfg.max_batch = 16;
+    cfg.eval_blocks = 1;
+    cfg.ctx_bucket = 256;
+    let probe = sim::probe(&model, &hw, &cfg, &spec);
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rate = 0.9 * probe.capacity_rps();
+    let stream = sim::RequestStream::poisson(&spec, rate, 64, 7);
+
+    println!(
+        "sim_steady_state: 64 requests @ {:.3} req/s (0.9x capacity), \
+         model {}, hw {}",
+        rate,
+        model.name,
+        hw.describe()
+    );
+    for strategy in ServingStrategy::ALL {
+        let c = cfg.with_strategy(strategy);
+        // one cold run for the shape/iteration counts
+        let cold = sim::simulate_serving(&stream, &model, &hw, &c);
+        let wall = Bench::new(&format!("sim_steady_state/{}", strategy.name()))
+            .budget_ms(1500)
+            .run(|| sim::simulate_serving(&stream, &model, &hw, &c));
+        println!(
+            "    {:<14} sim {:>9.3}s / wall -> {:>10.1} sim-s per wall-s | \
+             {} iterations, {} distinct shapes",
+            strategy.name(),
+            cold.makespan_s,
+            cold.makespan_s / wall.max(1e-12),
+            cold.n_iterations,
+            cold.distinct_shapes,
+        );
+    }
+}

@@ -12,6 +12,7 @@ use crate::bo::{self, BoConfig, Gp};
 use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
+use crate::sim::{self, MappingPolicy, RequestStream, ServingMetrics, SimConfig};
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
 
@@ -126,6 +127,57 @@ pub fn compass_dse(
     }
 }
 
+/// Outcome of a serving-simulator-backed co-exploration run.
+#[derive(Debug, Clone)]
+pub struct ServingDseOutcome {
+    pub hw: HwConfig,
+    pub metrics: ServingMetrics,
+    /// Best-objective trajectory over BO rounds (negated SLO-constrained
+    /// goodput; lower is better).
+    pub bo_history: Vec<f64>,
+    pub backend: &'static str,
+}
+
+/// Sim-backed mapping search for a fixed hardware configuration: replay
+/// `stream` through the continuous-batching scheduler with a GA mapping
+/// search per distinct batch shape (`MappingPolicy::Searched`, memoized
+/// so each shape is searched exactly once), and return the resulting
+/// serving metrics. The dynamic counterpart of [`search_mappings`].
+pub fn search_serving(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    ga_cfg: &GaConfig,
+    sim_cfg: &SimConfig,
+) -> ServingMetrics {
+    let cfg = sim_cfg.with_policy(MappingPolicy::Searched(*ga_cfg));
+    sim::simulate_serving(stream, model, hw, &cfg)
+}
+
+/// Compass with the time-domain objective (paper north star: serving
+/// quality, not static-group latency): BO over hardware, GA over
+/// per-shape mappings, the serving simulator inside. Maximizes
+/// SLO-constrained goodput via [`ServingMetrics::objective`].
+pub fn compass_dse_serving(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    space: &HwSpace,
+    cfg: &DseConfig,
+    sim_cfg: &SimConfig,
+    gp: &mut dyn Gp,
+) -> ServingDseOutcome {
+    let result = bo::optimize(space, &cfg.bo, gp, |hw| {
+        search_serving(stream, model, hw, &cfg.ga, sim_cfg).objective()
+    });
+    let metrics = search_serving(stream, model, &result.best.hw, &cfg.ga, sim_cfg);
+    ServingDseOutcome {
+        hw: result.best.hw.clone(),
+        metrics,
+        bo_history: result.history,
+        backend: result.backend,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +220,67 @@ mod tests {
         assert!(out.eval.total_cost() > 0.0);
         // history covers every BO round and never regresses
         assert_eq!(out.bo_history.len(), cfg.bo.rounds);
+        for w in out.bo_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    fn tiny_sim_setup() -> (RequestStream, ModelSpec, SimConfig) {
+        let spec = TraceSpec {
+            mean_in: 48.0,
+            mean_out: 6.0,
+            sigma_in: 0.4,
+            sigma_out: 0.3,
+            max_len: 2048,
+        };
+        let mut cfg = SimConfig::new(crate::workload::serving::ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.chunk_tokens = 32;
+        cfg.kv_budget_tokens = 2048;
+        cfg.ctx_bucket = 64;
+        cfg.eval_blocks = 1;
+        cfg.slo = crate::sim::SloSpec::new(1.0, 0.5);
+        (
+            RequestStream::poisson(&spec, 50.0, 6, 13),
+            ModelSpec::tiny(),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn search_serving_is_deterministic_and_conserves() {
+        let (stream, model, cfg) = tiny_sim_setup();
+        let hw = crate::arch::HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let a = search_serving(&stream, &model, &hw, &GaConfig::tiny(), &cfg);
+        let b = search_serving(&stream, &model, &hw, &GaConfig::tiny(), &cfg);
+        assert_eq!(a.n_completed + a.n_rejected, a.n_arrived);
+        assert!(a.n_completed > 0);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
+        assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits());
+        assert!(a.distinct_shapes > 0);
+    }
+
+    #[test]
+    fn serving_dse_runs_end_to_end() {
+        let (stream, model, cfg) = tiny_sim_setup();
+        let space = HwSpace::paper(64.0);
+        let dse_cfg = DseConfig::tiny();
+        let mut gp = NativeGp::new();
+        let out = compass_dse_serving(&stream, &model, &space, &dse_cfg, &cfg, &mut gp);
+        assert_eq!(out.backend, "native");
+        assert_eq!(out.bo_history.len(), dse_cfg.bo.rounds);
+        assert_eq!(
+            out.metrics.n_completed + out.metrics.n_rejected,
+            out.metrics.n_arrived
+        );
         for w in out.bo_history.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
         }

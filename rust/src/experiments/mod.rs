@@ -13,13 +13,14 @@ use crate::bo::{Gp, NativeGp};
 use crate::cost::{edp_of, edp_probe, Evaluator, SimOptions};
 use crate::dse::{self, DseConfig};
 use crate::ga::GaConfig;
-use crate::report::{ascii_timeline, normalize_max, Table};
+use crate::report::{ascii_occupancy, ascii_timeline, normalize_max, Table};
 use crate::runtime::Runtime;
+use crate::sim;
 use crate::workload::serving::{Scenario, ServingStrategy};
 use crate::workload::trace::{Trace, TraceSpec};
 use crate::workload::{ModelSpec, Phase};
 
-pub use scenes::{model_for_tops, Scene};
+pub use scenes::{model_for_tops, Scene, SimScene};
 
 /// Select a GP backend: PJRT artifacts when available (and the `xla`
 /// feature is compiled in), else the native mirror (prints which one was
@@ -612,6 +613,136 @@ pub fn fig10b_homo_hetero(
 }
 
 // ---------------------------------------------------------------------
+// Serving-simulator study — arrival rate x strategy (EXPERIMENTS.md
+// "Serving simulator")
+// ---------------------------------------------------------------------
+
+/// One cell of the serving-simulator sweep.
+#[derive(Debug, Clone)]
+pub struct SimStudyRow {
+    pub strategy: ServingStrategy,
+    pub rate_rps: f64,
+    pub metrics: sim::ServingMetrics,
+}
+
+/// A representative fixed hardware configuration for a compute target:
+/// the largest feasible chiplet class (fewest chiplets), a near-square
+/// grid, median Table-IV bandwidths. Used when the study sweeps serving
+/// dynamics rather than searching hardware.
+pub fn sim_default_hw(tops: f64) -> HwConfig {
+    let space = HwSpace::paper(tops);
+    let class = space
+        .feasible_classes()
+        .last()
+        .copied()
+        .unwrap_or(ChipletClass::L);
+    let n = class.chiplets_for(tops);
+    let (h, w) = HwSpace::grid_dims(n);
+    HwConfig::homogeneous(h, w, class, Dataflow::WeightStationary, 128.0, 64.0)
+}
+
+/// Sweep arrival rate x serving strategy on one [`SimScene`] with fixed
+/// hardware. SLO targets are calibrated once from the unloaded probe
+/// (TTFT <= 3x solo prefill, TPOT <= 4x an unloaded decode iteration)
+/// and shared by every cell, so attainment is comparable across
+/// strategies and rates. Deterministic for a fixed `seed`.
+pub fn sim_serving_study(
+    scene: &SimScene,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    seed: u64,
+) -> Vec<SimStudyRow> {
+    let model = scene.model();
+    let spec = scene.spec();
+    let probe = sim::probe(&model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        probe.sweep_rates()
+    } else {
+        scene.rates_rps.clone()
+    };
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        let stream = scene.stream(rate, seed);
+        for strategy in ServingStrategy::ALL {
+            let metrics = sim::simulate_serving(&stream, &model, hw, &cfg.with_strategy(strategy));
+            rows.push(SimStudyRow {
+                strategy,
+                rate_rps: rate,
+                metrics,
+            });
+        }
+    }
+    rows
+}
+
+/// Format the sweep as the study table (TTFT/TPOT tails, SLO
+/// attainment, goodput, utilization, EDP-under-load).
+pub fn sim_study_table(scene: &SimScene, rows: &[SimStudyRow]) -> Table {
+    let title = format!(
+        "Serving simulator [{}] - arrival rate x strategy (continuous batching)",
+        scene.label()
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "Rate (r/s)",
+            "Strategy",
+            "Tok/s",
+            "TTFT p50 (s)",
+            "TTFT p99 (s)",
+            "TPOT p99 (s)",
+            "SLO %",
+            "Goodput (tok/s)",
+            "Util %",
+            "EDP load (sJ)",
+            "Preempt",
+            "Queue max",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            format!("{:.3}", r.rate_rps),
+            r.strategy.name().to_string(),
+            format!("{:.1}", m.throughput_tps),
+            format!("{:.4}", m.ttft.p50),
+            format!("{:.4}", m.ttft.p99),
+            format!("{:.5}", m.tpot.p99),
+            format!("{:.1}", 100.0 * m.slo_attainment),
+            format!("{:.1}", m.slo_goodput_tps),
+            format!("{:.1}", 100.0 * m.utilization),
+            format!("{:.3e}", m.edp_under_load),
+            m.n_preemptions.to_string(),
+            m.max_queue_depth.to_string(),
+        ]);
+    }
+    t
+}
+
+/// ASCII occupancy plot for one strategy at the highest swept rate.
+pub fn sim_study_occupancy(
+    rows: &[SimStudyRow],
+    strategy: ServingStrategy,
+    max_batch: usize,
+) -> String {
+    let row = rows
+        .iter()
+        .filter(|r| r.strategy == strategy)
+        .max_by(|a, b| a.rate_rps.total_cmp(&b.rate_rps));
+    match row {
+        Some(r) => format!(
+            "occupancy [{} @ {:.3} req/s]\n{}",
+            strategy.name(),
+            r.rate_rps,
+            ascii_occupancy(&r.metrics.iters, max_batch, 96)
+        ),
+        None => String::new(),
+    }
+}
+
+// ---------------------------------------------------------------------
 // Fig. 11 — ablations
 // ---------------------------------------------------------------------
 
@@ -692,6 +823,33 @@ mod tests {
             let v: f64 = cell.trim_end_matches('%').parse().unwrap();
             assert!(v < 25.0, "validation error {cell} too large");
         }
+    }
+
+    #[test]
+    fn sim_study_covers_strategy_rate_grid() {
+        let mut scene = SimScene::new("sharegpt", 64.0, 5);
+        scene.rates_rps = vec![2.0, 8.0];
+        let hw = sim_default_hw(64.0);
+        let mut cfg = sim::SimConfig::new(ServingStrategy::Orca);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let rows = sim_serving_study(&scene, &hw, &cfg, 3);
+        assert_eq!(rows.len(), 2 * ServingStrategy::ALL.len());
+        for r in &rows {
+            assert_eq!(
+                r.metrics.n_completed + r.metrics.n_rejected,
+                r.metrics.n_arrived,
+                "{:?}@{}",
+                r.strategy,
+                r.rate_rps
+            );
+        }
+        let t = sim_study_table(&scene, &rows);
+        assert_eq!(t.rows.len(), rows.len());
+        let occ = sim_study_occupancy(&rows, ServingStrategy::ChunkedPrefill, cfg.max_batch);
+        assert!(occ.contains("occupancy"));
+        assert!(occ.contains("batch |"));
     }
 
     #[test]

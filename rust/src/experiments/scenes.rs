@@ -95,6 +95,54 @@ impl Scene {
     }
 }
 
+/// A serving-simulator scene: a trace distribution plus a compute
+/// target, swept over arrival rates by the sim study (the time-domain
+/// counterpart of [`Scene`]).
+#[derive(Debug, Clone)]
+pub struct SimScene {
+    pub trace_name: String,
+    pub tops: f64,
+    /// Requests per simulated stream.
+    pub n_requests: usize,
+    /// Arrival rates to sweep (req/s); empty = auto-calibrated
+    /// {0.4, 0.8, 1.3} x estimated capacity.
+    pub rates_rps: Vec<f64>,
+}
+
+impl SimScene {
+    pub fn new(trace_name: &str, tops: f64, n_requests: usize) -> Self {
+        SimScene {
+            trace_name: trace_name.to_string(),
+            tops,
+            n_requests,
+            rates_rps: Vec::new(),
+        }
+    }
+
+    /// The paper-§VI-F-flavoured default: mixed GovReport traffic
+    /// (long prompts, decode-heavy token mix) at 512 TOPS.
+    pub fn govreport_512() -> Self {
+        SimScene::new("govreport", 512.0, 24)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-serve-{}T", self.trace_name, self.tops as u64)
+    }
+
+    pub fn spec(&self) -> TraceSpec {
+        TraceSpec::by_name(&self.trace_name).expect("known trace")
+    }
+
+    pub fn model(&self) -> ModelSpec {
+        model_for_tops(self.tops)
+    }
+
+    /// A Poisson request stream at `rate_rps` for this scene.
+    pub fn stream(&self, rate_rps: f64, seed: u64) -> crate::sim::RequestStream {
+        crate::sim::RequestStream::poisson(&self.spec(), rate_rps, self.n_requests, seed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +180,15 @@ mod tests {
     fn batch_sizes_follow_paper_defaults() {
         assert_eq!(Scene::new("sharegpt", true, 64.0).batch_size, 4);
         assert_eq!(Scene::new("sharegpt", false, 64.0).batch_size, 128);
+    }
+
+    #[test]
+    fn sim_scene_builds_streams() {
+        let s = SimScene::govreport_512();
+        assert_eq!(s.label(), "govreport-serve-512T");
+        assert_eq!(s.model().name, "GPT3-13B");
+        let stream = s.stream(2.0, 7);
+        assert_eq!(stream.len(), s.n_requests);
+        assert_eq!(stream.requests, s.stream(2.0, 7).requests);
     }
 }

@@ -18,6 +18,8 @@
 //! * [`runtime`]  — PJRT artifact loading/execution (`xla` crate, behind
 //!   the non-default `xla` feature; a stub otherwise);
 //! * [`dse`]      — the top-level co-exploration driver;
+//! * [`sim`]      — discrete-event continuous-batching serving simulator
+//!   (timed request streams, KV-budgeted scheduler, SLO metrics);
 //! * [`report`]   — table/figure writers mirroring the paper.
 
 pub mod arch;
@@ -30,5 +32,6 @@ pub mod ga;
 pub mod mapping;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 pub mod util;
 pub mod workload;

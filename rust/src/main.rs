@@ -9,6 +9,7 @@
 //! repro dse       --trace T --phase P --tops N  # single-scene DSE
 //! repro timeline                                # Fig 8    execution timeline
 //! repro serving-study [--decode-groups N]       # Fig 10 + Table VII
+//! repro sim-study [--rates A,B,C] [--requests N]# serving simulator sweep
 //! repro ablation                                # Fig 11   ablations
 //! repro all                                     # everything above
 //! ```
@@ -30,6 +31,7 @@ commands:
   dse             single-scene co-exploration (--trace/--phase/--tops)
   timeline        Fig 8     execution timeline of the found mapping
   serving-study   Fig 10    vLLM / Orca / ChunkedPrefill (+ Table VII)
+  sim-study       serving simulator: arrival rate x strategy sweep
   ablation        Fig 11    GA->random, BO->random, SCAR mapping
   all             everything above
 
@@ -44,6 +46,9 @@ flags:
   --tops N            compute target (default 64)
   --dram-bw N         Table-I probe DRAM bandwidth (default 64)
   --decode-groups N   serving-study decode batches (default 3)
+  --rates A,B,C       sim-study arrival rates in req/s (default: auto
+                      {0.4,0.8,1.3} x estimated capacity)
+  --requests N        sim-study requests per stream (default 24)
 ";
 
 struct Args {
@@ -58,6 +63,8 @@ struct Args {
     tops: f64,
     dram_bw: f64,
     decode_groups: usize,
+    rates: Vec<f64>,
+    requests: usize,
 }
 
 fn parse_args() -> Args {
@@ -73,6 +80,8 @@ fn parse_args() -> Args {
         tops: 64.0,
         dram_bw: 64.0,
         decode_groups: 3,
+        rates: Vec::new(),
+        requests: 24,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -88,6 +97,18 @@ fn parse_args() -> Args {
             "--tops" => args.tops = next_val(&mut it, a),
             "--dram-bw" => args.dram_bw = next_val(&mut it, a),
             "--decode-groups" => args.decode_groups = next_val(&mut it, a),
+            "--rates" => {
+                args.rates = next_str(&mut it, a)
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse().unwrap_or_else(|_| {
+                            eprintln!("--rates: invalid value {s}");
+                            std::process::exit(2);
+                        })
+                    })
+                    .collect();
+            }
+            "--requests" => args.requests = next_val(&mut it, a),
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -135,6 +156,34 @@ fn save(t: &Table, out_dir: &Option<String>, name: &str) {
             println!("[compass] wrote {path}");
         }
     }
+}
+
+fn run_sim_study(args: &Args) {
+    let mut scene = exp::SimScene::new(&args.trace, args.tops, args.requests);
+    scene.rates_rps = args.rates.clone();
+    let hw = exp::sim_default_hw(args.tops);
+    let cfg = compass::sim::SimConfig::new(
+        compass::workload::serving::ServingStrategy::ChunkedPrefill,
+    );
+    println!(
+        "sim-study [{}] on fixed hw: {}",
+        scene.label(),
+        hw.describe()
+    );
+    let rows = exp::sim_serving_study(&scene, &hw, &cfg, args.seed);
+    save(
+        &exp::sim_study_table(&scene, &rows),
+        &args.out_dir,
+        "sim_study",
+    );
+    println!(
+        "\n{}",
+        exp::sim_study_occupancy(
+            &rows,
+            compass::workload::serving::ServingStrategy::ChunkedPrefill,
+            cfg.max_batch,
+        )
+    );
 }
 
 fn main() {
@@ -202,6 +251,9 @@ fn main() {
                 "fig10b",
             );
         }
+        "sim-study" => {
+            run_sim_study(&args);
+        }
         "ablation" => {
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
@@ -232,6 +284,7 @@ fn main() {
                     "fig10b",
                 );
             }
+            run_sim_study(&args);
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
         other => {

@@ -141,6 +141,53 @@ pub fn ascii_timeline(
     out
 }
 
+/// Render a serving-simulator run as an ASCII occupancy plot: three
+/// sparkline rows (batch-slot occupancy, admission-queue depth,
+/// KV-cache fill) over wall-clock time, each bucketed into `width`
+/// columns with time-weighted averaging. Idle gaps count as zero.
+pub fn ascii_occupancy(
+    iters: &[crate::sim::IterRecord],
+    max_batch: usize,
+    width: usize,
+) -> String {
+    const RAMP: [char; 10] = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let width = width.max(1);
+    let t_end = iters.iter().map(|i| i.end_s).fold(0.0, f64::max).max(1e-12);
+    let max_queue = iters.iter().map(|i| i.queue_depth).max().unwrap_or(0).max(1) as f64;
+    let col_w = t_end / width as f64;
+    let mut rows = [vec![0.0f64; width], vec![0.0f64; width], vec![0.0f64; width]];
+    for it in iters {
+        let occ = (it.n_decode + it.n_prefill) as f64 / max_batch.max(1) as f64;
+        let vals = [occ, it.queue_depth as f64 / max_queue, it.kv_frac];
+        let c0 = ((it.start_s / col_w) as usize).min(width - 1);
+        let c1 = ((it.end_s / col_w) as usize).min(width - 1);
+        for c in c0..=c1 {
+            let lo = (c as f64 * col_w).max(it.start_s);
+            let hi = ((c + 1) as f64 * col_w).min(it.end_s);
+            let w = (hi - lo).max(0.0) / col_w;
+            for (row, v) in rows.iter_mut().zip(vals) {
+                row[c] += v * w;
+            }
+        }
+    }
+    let mut out = String::new();
+    for (name, row) in ["batch", "queue", "kv   "].iter().zip(&rows) {
+        out.push_str(&format!("{name} |"));
+        for &v in row {
+            let idx = (v.clamp(0.0, 1.0) * (RAMP.len() - 1) as f64).round() as usize;
+            out.push(RAMP[idx.min(RAMP.len() - 1)]);
+        }
+        out.push_str("|\n");
+    }
+    out.push_str(&format!(
+        "span {:.3}s | batch /{} | queue /{} | kv = cache fill\n",
+        t_end,
+        max_batch,
+        max_queue as usize
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +227,42 @@ mod tests {
         assert_eq!(bar(0.5, 10), "#####.....");
         assert_eq!(bar(2.0, 4), "####");
         assert_eq!(bar(-1.0, 4), "....");
+    }
+
+    #[test]
+    fn occupancy_plot_shape_and_saturation() {
+        let iters = vec![
+            crate::sim::IterRecord {
+                start_s: 0.0,
+                end_s: 1.0,
+                n_decode: 8,
+                n_prefill: 0,
+                prefill_tokens: 0,
+                queue_depth: 4,
+                kv_frac: 1.0,
+            },
+            crate::sim::IterRecord {
+                start_s: 1.0,
+                end_s: 2.0,
+                n_decode: 0,
+                n_prefill: 1,
+                prefill_tokens: 64,
+                queue_depth: 0,
+                kv_frac: 0.0,
+            },
+        ];
+        let s = ascii_occupancy(&iters, 8, 20);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("batch |"));
+        // first half of the batch row is saturated ('@'), kv too
+        assert!(lines[0].contains('@'));
+        assert!(lines[2].contains('@'));
+        assert!(lines[3].contains("span"));
+        // every sparkline row has exactly `width` cells between pipes
+        for line in &lines[..3] {
+            let inner = line.split('|').nth(1).unwrap();
+            assert_eq!(inner.chars().count(), 20);
+        }
     }
 }

@@ -1,0 +1,238 @@
+//! Iteration costing: every scheduler iteration's batch composition is
+//! costed through the existing `PreparedWorkload`/`MappingEvaluator`
+//! path, behind a composition-keyed memo so repeated batch shapes are
+//! never re-simulated.
+//!
+//! Compositions are quantized before costing (context lengths rounded up
+//! to `ctx_bucket`), which bounds the number of distinct shapes a long
+//! simulation can produce: steady-state serving then pays one hash
+//! lookup per iteration instead of one timeline simulation.
+
+use std::collections::HashMap;
+
+use crate::arch::HwConfig;
+use crate::cost::{group_params, EvalScratch, Evaluator, MappingEvaluator};
+use crate::ga::{self, GaConfig};
+use crate::mapping::presets;
+use crate::workload::{build_workload, ModelSpec, Request};
+
+/// How the simulator maps each iteration's workload onto the chiplets.
+#[derive(Debug, Clone, Copy)]
+pub enum MappingPolicy {
+    /// Layer-pipeline preset (Algorithm 1), instantiated per batch shape.
+    Pipeline,
+    /// Data-parallel preset: each micro-batch on one chiplet.
+    DataParallel,
+    /// GA mapping search per distinct batch shape (the sim-backed
+    /// objective of `dse::compass_dse_serving`); results are memoized so
+    /// each shape is searched exactly once.
+    Searched(GaConfig),
+}
+
+impl MappingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MappingPolicy::Pipeline => "pipeline",
+            MappingPolicy::DataParallel => "data-parallel",
+            MappingPolicy::Searched(_) => "searched",
+        }
+    }
+}
+
+/// Cost of one scheduler iteration (one full forward pass of the batch).
+#[derive(Debug, Clone, Copy)]
+pub struct IterCost {
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    /// Total MACs of the (quantized) batch, for utilization accounting.
+    pub macs: u64,
+}
+
+/// Canonical (sorted, quantized) batch composition: `(tag, len, past)`
+/// triples with tag 0 = prefill, 1 = decode.
+type CompKey = Vec<(u8, u64, u64)>;
+
+/// Composition-memoized batch coster.
+pub struct BatchCoster<'a> {
+    model: &'a ModelSpec,
+    hw: &'a HwConfig,
+    policy: MappingPolicy,
+    eval_blocks: usize,
+    ctx_bucket: u64,
+    memo: HashMap<CompKey, IterCost>,
+    lookups: usize,
+}
+
+impl<'a> BatchCoster<'a> {
+    pub fn new(
+        model: &'a ModelSpec,
+        hw: &'a HwConfig,
+        policy: MappingPolicy,
+        eval_blocks: usize,
+        ctx_bucket: u64,
+    ) -> Self {
+        BatchCoster {
+            model,
+            hw,
+            policy,
+            eval_blocks,
+            ctx_bucket,
+            memo: HashMap::new(),
+            lookups: 0,
+        }
+    }
+
+    #[inline]
+    fn quantize(&self, x: u64) -> u64 {
+        let b = self.ctx_bucket.max(1);
+        x.div_ceil(b) * b
+    }
+
+    /// Canonical quantized composition key of a batch.
+    fn key_of(&self, batch: &[Request]) -> CompKey {
+        let mut key: CompKey = batch
+            .iter()
+            .map(|r| match *r {
+                Request::Prefill { len, past } => {
+                    (0u8, self.quantize(len.max(1)), self.quantize(past))
+                }
+                Request::Decode { ctx } => (1u8, self.quantize(ctx.max(1)), 0),
+            })
+            .collect();
+        key.sort_unstable();
+        key
+    }
+
+    /// Distinct batch shapes simulated so far.
+    pub fn distinct_shapes(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Total `cost` calls (memo hits + misses).
+    pub fn lookups(&self) -> usize {
+        self.lookups
+    }
+
+    /// Cost one iteration batch; memo hits never re-simulate.
+    pub fn cost(&mut self, batch: &[Request]) -> IterCost {
+        debug_assert!(!batch.is_empty(), "cannot cost an empty batch");
+        self.lookups += 1;
+        let key = self.key_of(batch);
+        if let Some(c) = self.memo.get(&key) {
+            return *c;
+        }
+        // the quantized key *is* the costed batch: decode it back
+        let qbatch: Vec<Request> = key
+            .iter()
+            .map(|&(tag, len, past)| {
+                if tag == 0 {
+                    Request::Prefill { len, past }
+                } else {
+                    Request::Decode { ctx: len }
+                }
+            })
+            .collect();
+        let has_prefill = qbatch.iter().any(|r| r.is_prefill());
+        let params = group_params(self.hw, has_prefill, self.eval_blocks);
+        let w = build_workload(self.model, &qbatch, &params);
+        let (rows, cols) = (w.num_micro_batches(), w.layers_per_mb);
+        let chips = self.hw.num_chiplets();
+        let (latency_cycles, energy_pj) = match self.policy {
+            MappingPolicy::Pipeline => {
+                let m = presets::pipeline_parallel(rows, cols, chips);
+                let r = Evaluator::new().eval_batch(&w, self.hw, &m);
+                (r.latency_cycles, r.energy_pj)
+            }
+            MappingPolicy::DataParallel => {
+                let m = presets::data_parallel(rows, cols, chips);
+                let r = Evaluator::new().eval_batch(&w, self.hw, &m);
+                (r.latency_cycles, r.energy_pj)
+            }
+            MappingPolicy::Searched(ga_cfg) => {
+                // per-shape seed: order-independent, deterministic
+                let mut cfg = ga_cfg;
+                cfg.seed = ga_cfg.seed ^ key_hash(&key);
+                let mev = MappingEvaluator::new(&w, self.hw);
+                let res = ga::search(rows, cols, chips, &cfg, &mev);
+                let mut scratch = EvalScratch::default();
+                let r = mev.simulate(&res.best, &mut scratch);
+                (r.latency_cycles, r.energy_pj)
+            }
+        };
+        let c = IterCost {
+            latency_cycles,
+            energy_pj,
+            macs: w.total_macs(),
+        };
+        self.memo.insert(key, c);
+        c
+    }
+}
+
+/// Deterministic 64-bit hash of a composition key (`DefaultHasher::new`
+/// is keyed with fixed constants, so this is stable across runs).
+fn key_hash(key: &CompKey) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+
+    fn setup() -> (ModelSpec, HwConfig) {
+        let model = ModelSpec::tiny();
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        (model, hw)
+    }
+
+    #[test]
+    fn memo_hits_on_quantized_repeats() {
+        let (model, hw) = setup();
+        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 64);
+        let a = c.cost(&[Request::decode(100), Request::decode(120)]);
+        // same bucket (128) for both contexts -> same shape, no re-sim
+        let b = c.cost(&[Request::decode(97), Request::decode(128)]);
+        assert_eq!(c.distinct_shapes(), 1);
+        assert_eq!(c.lookups(), 2);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        // crossing a bucket boundary is a new shape
+        c.cost(&[Request::decode(200), Request::decode(128)]);
+        assert_eq!(c.distinct_shapes(), 2);
+    }
+
+    #[test]
+    fn key_is_order_invariant() {
+        let (model, hw) = setup();
+        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32);
+        let x = c.cost(&[Request::prefill(60), Request::decode(40)]);
+        let y = c.cost(&[Request::decode(40), Request::prefill(60)]);
+        assert_eq!(c.distinct_shapes(), 1);
+        assert_eq!(x.latency_cycles.to_bits(), y.latency_cycles.to_bits());
+    }
+
+    #[test]
+    fn searched_policy_is_deterministic() {
+        let (model, hw) = setup();
+        let cfg = crate::ga::GaConfig::tiny();
+        let batch = vec![Request::decode(50); 4];
+        let mut c1 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32);
+        let mut c2 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32);
+        let a = c1.cost(&batch);
+        let b = c2.cost(&batch);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert!(a.macs > 0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Serving quality metrics: TTFT/TPOT distributions, SLO attainment,
+//! goodput, utilization and EDP-under-load, plus the per-iteration
+//! occupancy trace behind the report's ASCII occupancy plot.
+
+use crate::arch::constants::CLOCK_HZ;
+
+/// Service-level objectives on per-request latency.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// Time-to-first-token target (s): arrival -> first output token.
+    pub ttft_s: f64,
+    /// Time-per-output-token target (s): mean decode-token gap.
+    pub tpot_s: f64,
+}
+
+impl SloSpec {
+    pub fn new(ttft_s: f64, tpot_s: f64) -> Self {
+        SloSpec { ttft_s, tpot_s }
+    }
+}
+
+/// Mean / median / tail summary of a latency sample.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub n: usize,
+}
+
+impl LatencyStats {
+    /// Summarise a sample (empty samples yield zeros).
+    pub fn from(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        LatencyStats {
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: percentile(&sorted, 0.50),
+            p99: percentile(&sorted, 0.99),
+            n: sorted.len(),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One scheduler iteration in the occupancy trace.
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Decode requests co-batched this iteration.
+    pub n_decode: usize,
+    /// Prefill requests (or chunks) co-batched this iteration.
+    pub n_prefill: usize,
+    /// Prefill tokens scheduled this iteration.
+    pub prefill_tokens: u64,
+    /// Admission-queue depth after batch formation.
+    pub queue_depth: usize,
+    /// KV-cache occupancy after this iteration's writes (0..=1).
+    pub kv_frac: f64,
+}
+
+/// End-to-end serving quality of one simulated run.
+#[derive(Debug, Clone)]
+pub struct ServingMetrics {
+    pub n_arrived: usize,
+    pub n_completed: usize,
+    /// Requests rejected at arrival (can never fit the KV budget).
+    pub n_rejected: usize,
+    /// KV-pressure preemptions (request re-queued, prefill recomputed).
+    pub n_preemptions: usize,
+    pub n_iterations: usize,
+    /// True when the run stopped at the iteration safety valve with
+    /// requests still in flight: the other metrics then cover only the
+    /// surviving subset and must not be compared against full runs.
+    pub truncated: bool,
+    /// Distinct batch shapes actually simulated (memo size).
+    pub distinct_shapes: usize,
+    /// Wall-clock span of the simulated run (s).
+    pub makespan_s: f64,
+    /// Generated output tokens per second over the makespan.
+    pub throughput_tps: f64,
+    /// SLO-satisfying completed requests per second.
+    pub goodput_rps: f64,
+    /// Output tokens of SLO-satisfying requests per second — the
+    /// SLO-constrained goodput objective of the sim-backed DSE.
+    pub slo_goodput_tps: f64,
+    pub ttft: LatencyStats,
+    pub tpot: LatencyStats,
+    /// Fraction of completed requests meeting both TTFT and TPOT SLOs.
+    pub slo_attainment: f64,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// Mean batch slots filled per iteration / `max_batch`.
+    pub mean_batch_occupancy: f64,
+    /// Compute utilization: ideal MAC cycles / elapsed cycles.
+    pub utilization: f64,
+    pub energy_pj: f64,
+    /// EDP under load: total energy (J) x makespan (s).
+    pub edp_under_load: f64,
+    /// Per-iteration occupancy trace (for the ASCII plot).
+    pub iters: Vec<IterRecord>,
+}
+
+/// Raw per-request outcomes collected by the scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub arrival_s: f64,
+    pub output_len: u64,
+    pub first_token_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    pub rejected: bool,
+}
+
+/// Aggregate raw scheduler state into `ServingMetrics`.
+#[allow(clippy::too_many_arguments)]
+pub fn finalize(
+    outcomes: &[RequestOutcome],
+    iters: Vec<IterRecord>,
+    slo: &SloSpec,
+    max_batch: usize,
+    makespan_s: f64,
+    energy_pj: f64,
+    ideal_cycles: f64,
+    gen_tokens: u64,
+    n_preemptions: usize,
+    distinct_shapes: usize,
+    truncated: bool,
+) -> ServingMetrics {
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    let mut n_completed = 0usize;
+    let mut n_rejected = 0usize;
+    let mut slo_ok = 0usize;
+    let mut slo_ok_tokens = 0u64;
+    for o in outcomes {
+        if o.rejected {
+            n_rejected += 1;
+            continue;
+        }
+        let (Some(first), Some(finish)) = (o.first_token_s, o.finish_s) else {
+            continue; // truncated run (iteration cap): not completed
+        };
+        n_completed += 1;
+        let ttft = first - o.arrival_s;
+        ttfts.push(ttft);
+        let tpot = if o.output_len > 1 {
+            (finish - first) / (o.output_len - 1) as f64
+        } else {
+            0.0
+        };
+        tpots.push(tpot);
+        if ttft <= slo.ttft_s && tpot <= slo.tpot_s {
+            slo_ok += 1;
+            slo_ok_tokens += o.output_len;
+        }
+    }
+    let span = makespan_s.max(1e-12);
+    let n_iter = iters.len();
+    let mean_queue_depth = if n_iter > 0 {
+        iters.iter().map(|i| i.queue_depth as f64).sum::<f64>() / n_iter as f64
+    } else {
+        0.0
+    };
+    let max_queue_depth = iters.iter().map(|i| i.queue_depth).max().unwrap_or(0);
+    let mean_batch_occupancy = if n_iter > 0 {
+        iters
+            .iter()
+            .map(|i| (i.n_decode + i.n_prefill) as f64 / max_batch.max(1) as f64)
+            .sum::<f64>()
+            / n_iter as f64
+    } else {
+        0.0
+    };
+    ServingMetrics {
+        n_arrived: outcomes.len(),
+        n_completed,
+        n_rejected,
+        n_preemptions,
+        n_iterations: n_iter,
+        truncated,
+        distinct_shapes,
+        makespan_s,
+        throughput_tps: gen_tokens as f64 / span,
+        goodput_rps: slo_ok as f64 / span,
+        slo_goodput_tps: slo_ok_tokens as f64 / span,
+        ttft: LatencyStats::from(&ttfts),
+        tpot: LatencyStats::from(&tpots),
+        slo_attainment: if n_completed > 0 {
+            slo_ok as f64 / n_completed as f64
+        } else {
+            0.0
+        },
+        mean_queue_depth,
+        max_queue_depth,
+        mean_batch_occupancy,
+        utilization: ideal_cycles / (span * CLOCK_HZ),
+        energy_pj,
+        edp_under_load: (energy_pj * 1e-12) * makespan_s,
+        iters,
+    }
+}
+
+impl ServingMetrics {
+    /// Scalar objective for the DSE (lower is better): negated
+    /// SLO-constrained goodput with a small throughput tiebreak so the
+    /// surrogate keeps gradient signal when attainment saturates at 0/1.
+    /// Truncated runs score 0 (worse than any run with progress) so the
+    /// search never prefers a configuration it could not fully simulate.
+    pub fn objective(&self) -> f64 {
+        if self.truncated {
+            return 0.0;
+        }
+        -(self.slo_goodput_tps + 1e-3 * self.throughput_tps)
+    }
+
+    /// One-line summary for logs and examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "done {}/{} (rej {}, preempt {}) | {:.1} tok/s | ttft p99 {:.3}s | \
+             tpot p99 {:.4}s | SLO {:.0}% | util {:.0}% | queue mean {:.1}",
+            self.n_completed,
+            self.n_arrived,
+            self.n_rejected,
+            self.n_preemptions,
+            self.throughput_tps,
+            self.ttft.p99,
+            self.tpot.p99,
+            100.0 * self.slo_attainment,
+            100.0 * self.utilization,
+            self.mean_queue_depth,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0); // round(0.5 * 99) = 50
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_stats_of_constant_sample() {
+        let s = LatencyStats::from(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p99, 2.0);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn finalize_counts_slo_and_rejections() {
+        let slo = SloSpec::new(1.0, 0.1);
+        let outcomes = vec![
+            // meets both SLOs
+            RequestOutcome {
+                arrival_s: 0.0,
+                output_len: 11,
+                first_token_s: Some(0.5),
+                finish_s: Some(1.4), // tpot 0.09
+                rejected: false,
+            },
+            // misses TPOT
+            RequestOutcome {
+                arrival_s: 0.0,
+                output_len: 11,
+                first_token_s: Some(0.5),
+                finish_s: Some(3.0), // tpot 0.25
+                rejected: false,
+            },
+            RequestOutcome {
+                arrival_s: 0.0,
+                output_len: 5,
+                first_token_s: None,
+                finish_s: None,
+                rejected: true,
+            },
+        ];
+        let m = finalize(&outcomes, Vec::new(), &slo, 8, 10.0, 1e12, 0.0, 21, 0, 3, false);
+        assert!(!m.truncated);
+        assert_eq!(m.n_arrived, 3);
+        assert_eq!(m.n_completed, 2);
+        assert_eq!(m.n_rejected, 1);
+        assert!((m.slo_attainment - 0.5).abs() < 1e-12);
+        assert!((m.goodput_rps - 0.1).abs() < 1e-12);
+        assert!((m.slo_goodput_tps - 1.1).abs() < 1e-12);
+        assert!((m.throughput_tps - 2.1).abs() < 1e-12);
+        assert!((m.edp_under_load - 10.0).abs() < 1e-9); // 1 J x 10 s
+        assert!(m.objective() < 0.0);
+        assert!(!m.summary().is_empty());
+    }
+}

@@ -1,0 +1,206 @@
+//! Discrete-event continuous-batching serving simulator (the repo's
+//! time-domain layer).
+//!
+//! Static scenario evaluation (`workload::serving::Scenario`) captures
+//! *which* batches a strategy composes; this module captures *when*: a
+//! timed request stream ([`stream::RequestStream`]) is replayed through
+//! an iteration-level scheduler ([`sched::simulate_serving`]) that
+//! implements all three `ServingStrategy` policies dynamically, with an
+//! admission queue, a KV-cache budget per `HwConfig` DRAM capacity, and
+//! per-request lifecycle tracking. Each iteration's batch composition is
+//! costed through the existing `PreparedWorkload`/`MappingEvaluator`
+//! path behind a composition-keyed memo ([`coster::BatchCoster`]), and
+//! the run aggregates into [`metrics::ServingMetrics`]: throughput,
+//! TTFT/TPOT tails, SLO attainment and EDP-under-load — the
+//! SLO-constrained goodput objective consumed by
+//! `dse::compass_dse_serving`.
+
+pub mod coster;
+pub mod metrics;
+pub mod sched;
+pub mod stream;
+
+pub use coster::{BatchCoster, IterCost, MappingPolicy};
+pub use metrics::{IterRecord, LatencyStats, ServingMetrics, SloSpec};
+pub use sched::simulate_serving;
+pub use stream::{RequestStream, TimedRequest};
+
+use crate::arch::constants::CLOCK_HZ;
+use crate::arch::HwConfig;
+use crate::workload::serving::ServingStrategy;
+use crate::workload::trace::TraceSpec;
+use crate::workload::{ModelSpec, Request};
+
+/// Simulator knobs (scheduler policy + costing + SLO targets).
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub strategy: ServingStrategy,
+    /// How each iteration's batch is mapped onto the chiplets.
+    pub policy: MappingPolicy,
+    /// Maximum co-resident (admitted) requests, also the batch-slot cap.
+    pub max_batch: usize,
+    /// Sarathi chunk budget: prefill tokens per mixed iteration.
+    pub chunk_tokens: u64,
+    /// KV-cache budget in tokens; 0 derives it from `dram_gb`.
+    pub kv_budget_tokens: u64,
+    /// Package DRAM capacity reserved for KV cache (GB) when
+    /// `kv_budget_tokens` is 0.
+    pub dram_gb: f64,
+    /// Costing quantization: context lengths are rounded up to this
+    /// bucket so repeated batch shapes hit the latency memo.
+    pub ctx_bucket: u64,
+    /// Transformer blocks instantiated explicitly per costing call.
+    pub eval_blocks: usize,
+    pub slo: SloSpec,
+    /// Safety valve on scheduler iterations per run.
+    pub max_iterations: usize,
+}
+
+impl SimConfig {
+    pub fn new(strategy: ServingStrategy) -> Self {
+        SimConfig {
+            strategy,
+            policy: MappingPolicy::Pipeline,
+            max_batch: 64,
+            // the paper's Fig. 9/10 chunk size
+            chunk_tokens: 2048,
+            kv_budget_tokens: 0,
+            dram_gb: 64.0,
+            ctx_bucket: 256,
+            eval_blocks: 2,
+            slo: SloSpec::new(1.0, 0.1),
+            max_iterations: 1_000_000,
+        }
+    }
+
+    pub fn with_strategy(mut self, strategy: ServingStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: MappingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// KV-cache budget in tokens for `model`.
+    pub fn kv_budget(&self, model: &ModelSpec) -> u64 {
+        if self.kv_budget_tokens > 0 {
+            return self.kv_budget_tokens;
+        }
+        let per_token = model.kv_bytes_per_token().max(1);
+        ((self.dram_gb * 1e9) as u64 / per_token).max(2)
+    }
+}
+
+/// Calibration probe: single-request prefill latency and one full
+/// decode-iteration latency at the stream's mean lengths, plus the
+/// KV-feasible concurrency. Used to set scale-free SLO targets and
+/// arrival-rate sweeps that stay meaningful across models/hardware.
+#[derive(Debug, Clone, Copy)]
+pub struct SimProbe {
+    pub t_prefill_s: f64,
+    pub t_decode_iter_s: f64,
+    /// KV-budget-limited concurrent requests (<= max_batch).
+    pub concurrency: usize,
+    pub mean_in: u64,
+    pub mean_out: u64,
+}
+
+impl SimProbe {
+    /// Steady-state service capacity estimate (requests/s): each request
+    /// costs one prefill plus its share of `mean_out` decode iterations.
+    pub fn capacity_rps(&self) -> f64 {
+        let per_req = self.t_prefill_s
+            + self.mean_out as f64 * self.t_decode_iter_s / self.concurrency.max(1) as f64;
+        1.0 / per_req.max(1e-12)
+    }
+
+    /// SLO targets as multiples of the unloaded latencies.
+    pub fn slo(&self, ttft_mult: f64, tpot_mult: f64) -> SloSpec {
+        SloSpec::new(ttft_mult * self.t_prefill_s, tpot_mult * self.t_decode_iter_s)
+    }
+
+    /// Default under/at/over-load sweep: {0.4, 0.8, 1.3} x capacity.
+    pub fn sweep_rates(&self) -> Vec<f64> {
+        let mu = self.capacity_rps();
+        vec![0.4 * mu, 0.8 * mu, 1.3 * mu]
+    }
+}
+
+/// Run the calibration probe for `(model, hw, spec)` under `cfg`
+/// (always costed with the pipeline preset so SLOs are policy-neutral).
+pub fn probe(model: &ModelSpec, hw: &HwConfig, cfg: &SimConfig, spec: &TraceSpec) -> SimProbe {
+    let mut coster = BatchCoster::new(
+        model,
+        hw,
+        MappingPolicy::Pipeline,
+        cfg.eval_blocks,
+        cfg.ctx_bucket,
+    );
+    let mean_in = (spec.mean_in.round() as u64).max(1);
+    let mean_out = (spec.mean_out.round() as u64).max(1);
+    let budget = cfg.kv_budget(model);
+    let per_req = (mean_in + mean_out).max(1);
+    let concurrency = ((budget / per_req) as usize).clamp(1, cfg.max_batch.max(1));
+    let pre = coster.cost(&[Request::prefill(mean_in)]);
+    let ctx = mean_in + mean_out / 2;
+    let dec_batch = vec![Request::decode(ctx); concurrency];
+    let dec = coster.cost(&dec_batch);
+    SimProbe {
+        t_prefill_s: pre.latency_cycles / CLOCK_HZ,
+        t_decode_iter_s: dec.latency_cycles / CLOCK_HZ,
+        concurrency,
+        mean_in,
+        mean_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+
+    #[test]
+    fn kv_budget_derivation() {
+        let model = ModelSpec::gpt3_13b();
+        let mut cfg = SimConfig::new(ServingStrategy::Orca);
+        cfg.dram_gb = 64.0;
+        // 13B: 2 * 40 kv-heads * 128 * 2 B * 40 blocks = 819200 B/token
+        assert_eq!(model.kv_bytes_per_token(), 819_200);
+        let budget = cfg.kv_budget(&model);
+        assert_eq!(budget, 64_000_000_000 / 819_200);
+        cfg.kv_budget_tokens = 1234;
+        assert_eq!(cfg.kv_budget(&model), 1234);
+    }
+
+    #[test]
+    fn probe_yields_positive_calibration() {
+        let model = ModelSpec::tiny();
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let cfg = SimConfig::new(ServingStrategy::Orca);
+        let spec = TraceSpec {
+            mean_in: 512.0,
+            mean_out: 16.0,
+            sigma_in: 0.4,
+            sigma_out: 0.3,
+            max_len: 8192,
+        };
+        let p = probe(&model, &hw, &cfg, &spec);
+        assert!(p.t_prefill_s > 0.0 && p.t_decode_iter_s > 0.0);
+        assert!(p.capacity_rps() > 0.0);
+        assert!(p.concurrency >= 1);
+        let rates = p.sweep_rates();
+        assert_eq!(rates.len(), 3);
+        assert!(rates[0] < rates[1] && rates[1] < rates[2]);
+        let slo = p.slo(3.0, 4.0);
+        assert!(slo.ttft_s > 0.0 && slo.tpot_s > 0.0);
+    }
+}

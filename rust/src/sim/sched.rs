@@ -1,0 +1,485 @@
+//! Deterministic discrete-event, iteration-level continuous-batching
+//! scheduler (paper §II / Fig. 9, made dynamic).
+//!
+//! The simulator replays a [`RequestStream`] through one of the three
+//! `ServingStrategy` policies:
+//!
+//! * **vLLM-style** — prefill priority: waiting prompts pause decodes
+//!   and run as a standalone batch;
+//! * **Orca-style** — iteration-level mixed batches: new prompts join
+//!   the in-flight decode batch wholesale;
+//! * **Sarathi-style chunked prefill** — each decode iteration carries
+//!   at most `chunk_tokens` prompt tokens from the admission queue.
+//!
+//! All three share an admission queue, a KV-cache token budget derived
+//! from the hardware's DRAM capacity (admission stalls when full;
+//! youngest-first preemption with prefill recomputation under decode
+//! pressure), and per-request lifecycle tracking (arrival → first token
+//! → completion). The clock advances by each iteration's simulated
+//! latency, costed through [`BatchCoster`]; when nothing is runnable it
+//! jumps to the next arrival. Everything is pure `f64`/integer
+//! arithmetic on a fixed event order, so a fixed stream produces
+//! bit-identical metrics on every run.
+
+use std::collections::VecDeque;
+
+use crate::arch::constants::CLOCK_HZ;
+use crate::arch::HwConfig;
+use crate::workload::serving::ServingStrategy;
+use crate::workload::{ModelSpec, Request};
+
+use super::coster::BatchCoster;
+use super::metrics::{finalize, IterRecord, RequestOutcome, ServingMetrics};
+use super::stream::RequestStream;
+use super::SimConfig;
+
+/// Per-request lifecycle state.
+#[derive(Debug, Clone, Copy)]
+struct Live {
+    arrival_s: f64,
+    input_len: u64,
+    output_len: u64,
+    /// Context tokens the current admission must prefill (prompt plus
+    /// any tokens generated before a preemption).
+    prefill_target: u64,
+    prefill_done: u64,
+    generated: u64,
+    /// KV-cache tokens currently held.
+    kv_held: u64,
+    first_token_s: Option<f64>,
+    finish_s: Option<f64>,
+    rejected: bool,
+}
+
+impl Live {
+    /// An admitted request is decoding once its prefill is complete.
+    fn decoding(&self) -> bool {
+        self.finish_s.is_none() && self.prefill_done >= self.prefill_target
+    }
+
+    /// Context tokens a (re-)admission must cover.
+    fn context_needed(&self) -> u64 {
+        self.input_len + self.generated
+    }
+}
+
+/// What a request does in one iteration batch.
+#[derive(Debug, Clone, Copy)]
+enum Role {
+    /// Generate one token against the current context.
+    Decode,
+    /// Prefill `t` prompt tokens (the whole prompt for vLLM/Orca).
+    Chunk(u64),
+}
+
+fn admit(r: &mut Live, idx: usize, running: &mut Vec<usize>) {
+    r.prefill_target = r.context_needed();
+    r.prefill_done = 0;
+    running.push(idx);
+}
+
+fn preempt(r: &mut Live, kv_used: &mut u64) {
+    *kv_used -= r.kv_held;
+    r.kv_held = 0;
+    r.prefill_done = 0;
+}
+
+/// Replay `stream` on `(model, hw)` under `cfg` and aggregate serving
+/// metrics. Deterministic: identical inputs give bit-identical output.
+pub fn simulate_serving(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+) -> ServingMetrics {
+    let kv_budget = cfg.kv_budget(model).max(2);
+    let mut coster = BatchCoster::new(model, hw, cfg.policy, cfg.eval_blocks, cfg.ctx_bucket);
+    let n = stream.requests.len();
+    let mut reqs: Vec<Live> = stream
+        .requests
+        .iter()
+        .map(|r| Live {
+            arrival_s: r.arrival_s,
+            input_len: r.input_len.max(1),
+            output_len: r.output_len.max(1),
+            prefill_target: r.input_len.max(1),
+            prefill_done: 0,
+            generated: 0,
+            kv_held: 0,
+            first_token_s: None,
+            finish_s: None,
+            rejected: false,
+        })
+        .collect();
+
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut running: Vec<usize> = Vec::new(); // admission order: oldest first
+    let mut kv_used = 0u64;
+    let mut clock = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut iters: Vec<IterRecord> = Vec::new();
+    let (mut done, mut rejected) = (0usize, 0usize);
+    let mut preemptions = 0usize;
+    let mut energy = 0.0f64;
+    let mut ideal_cycles = 0.0f64;
+    let mut gen_tokens = 0u64;
+    let peak_macs_per_cycle = (hw.num_chiplets() as f64) * (hw.class.macs() as f64);
+
+    while done + rejected < n {
+        if iters.len() >= cfg.max_iterations {
+            break; // safety valve; `ServingMetrics::truncated` is set
+        }
+
+        // --- arrivals up to the current clock ---
+        while next_arrival < n && reqs[next_arrival].arrival_s <= clock + 1e-12 {
+            let i = next_arrival;
+            next_arrival += 1;
+            if reqs[i].input_len + reqs[i].output_len + 1 > kv_budget {
+                // can never fit, even alone: explicit rejection
+                reqs[i].rejected = true;
+                rejected += 1;
+            } else {
+                queue.push_back(i);
+            }
+        }
+
+        // --- KV pressure: evict youngest (never the oldest) so the
+        // in-flight decodes can write this iteration's tokens ---
+        loop {
+            let writes = running.iter().filter(|&&i| reqs[i].decoding()).count() as u64;
+            if kv_used + writes <= kv_budget || running.len() <= 1 {
+                break;
+            }
+            let victim = running.pop().unwrap();
+            preempt(&mut reqs[victim], &mut kv_used);
+            queue.push_front(victim);
+            preemptions += 1;
+        }
+
+        // --- batch formation ---
+        let decoding: Vec<usize> = running
+            .iter()
+            .copied()
+            .filter(|&i| reqs[i].decoding())
+            .collect();
+        let mut batch: Vec<(usize, Role)> = Vec::new();
+        let mut head = kv_budget - kv_used; // token headroom this iteration
+        match cfg.strategy {
+            ServingStrategy::Vllm => {
+                while running.len() < cfg.max_batch {
+                    let Some(&q) = queue.front() else { break };
+                    let need = reqs[q].context_needed();
+                    if need + 1 > head {
+                        break;
+                    }
+                    queue.pop_front();
+                    admit(&mut reqs[q], q, &mut running);
+                    head -= need;
+                    batch.push((q, Role::Chunk(need)));
+                }
+                if batch.is_empty() {
+                    batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
+                }
+            }
+            ServingStrategy::Orca => {
+                batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
+                head = head.saturating_sub(decoding.len() as u64);
+                while running.len() < cfg.max_batch {
+                    let Some(&q) = queue.front() else { break };
+                    let need = reqs[q].context_needed();
+                    if need + 1 > head {
+                        break;
+                    }
+                    queue.pop_front();
+                    admit(&mut reqs[q], q, &mut running);
+                    head -= need;
+                    batch.push((q, Role::Chunk(need)));
+                }
+            }
+            ServingStrategy::ChunkedPrefill => {
+                batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
+                head = head.saturating_sub(decoding.len() as u64);
+                let mut budget = cfg.chunk_tokens.max(1);
+                // continue in-flight prefills first, admission order
+                let prefilling: Vec<usize> = running
+                    .iter()
+                    .copied()
+                    .filter(|&i| !reqs[i].decoding())
+                    .collect();
+                for i in prefilling {
+                    if budget == 0 || head == 0 {
+                        break;
+                    }
+                    let rem = reqs[i].prefill_target - reqs[i].prefill_done;
+                    let t = rem.min(budget).min(head);
+                    if t > 0 {
+                        budget -= t;
+                        head -= t;
+                        batch.push((i, Role::Chunk(t)));
+                    }
+                }
+                // then admit new prompts; reserve their full context so
+                // later chunks are guaranteed to fit
+                while budget > 0 && running.len() < cfg.max_batch {
+                    let Some(&q) = queue.front() else { break };
+                    let need = reqs[q].context_needed();
+                    if need + 1 > head {
+                        break;
+                    }
+                    queue.pop_front();
+                    admit(&mut reqs[q], q, &mut running);
+                    head -= need;
+                    let t = need.min(budget);
+                    budget -= t;
+                    batch.push((q, Role::Chunk(t)));
+                }
+            }
+        }
+
+        if batch.is_empty() {
+            // KV-blocked prefills with no runnable decode: free the
+            // youngest and retry (the oldest always keeps its cache, so
+            // the system is guaranteed to make progress)
+            if running.len() > 1 {
+                let victim = running.pop().unwrap();
+                preempt(&mut reqs[victim], &mut kv_used);
+                queue.push_front(victim);
+                preemptions += 1;
+                continue;
+            }
+            if next_arrival < n {
+                // idle: jump to the next arrival
+                clock = clock.max(reqs[next_arrival].arrival_s);
+                continue;
+            }
+            break; // defensive: no work left that can run
+        }
+
+        // --- cost the composed batch ---
+        let mut cost_batch: Vec<Request> = Vec::with_capacity(batch.len());
+        let mut n_prefill = 0usize;
+        let mut prefill_tokens = 0u64;
+        for &(i, role) in &batch {
+            match role {
+                Role::Decode => {
+                    cost_batch.push(Request::decode(reqs[i].context_needed()));
+                }
+                Role::Chunk(t) => {
+                    n_prefill += 1;
+                    prefill_tokens += t;
+                    cost_batch.push(Request::Prefill {
+                        len: t,
+                        past: reqs[i].prefill_done,
+                    });
+                }
+            }
+        }
+        let n_decode = batch.len() - n_prefill;
+        let c = coster.cost(&cost_batch);
+        let dt = c.latency_cycles / CLOCK_HZ;
+        let end = clock + dt;
+        energy += c.energy_pj;
+        ideal_cycles += c.macs as f64 / peak_macs_per_cycle;
+
+        // --- apply iteration effects at its completion time ---
+        let mut freed: Vec<usize> = Vec::new();
+        for &(i, role) in &batch {
+            let r = &mut reqs[i];
+            match role {
+                Role::Decode => {
+                    r.generated += 1;
+                    r.kv_held += 1;
+                    kv_used += 1;
+                    gen_tokens += 1;
+                    if r.generated >= r.output_len {
+                        r.finish_s = Some(end);
+                        done += 1;
+                        kv_used -= r.kv_held;
+                        r.kv_held = 0;
+                        freed.push(i);
+                    }
+                }
+                Role::Chunk(t) => {
+                    r.prefill_done += t;
+                    r.kv_held += t;
+                    kv_used += t;
+                    if r.prefill_done >= r.prefill_target && r.first_token_s.is_none() {
+                        // prefill completion emits the first output token
+                        r.first_token_s = Some(end);
+                        r.generated += 1;
+                        gen_tokens += 1;
+                        if r.generated >= r.output_len {
+                            r.finish_s = Some(end);
+                            done += 1;
+                            kv_used -= r.kv_held;
+                            r.kv_held = 0;
+                            freed.push(i);
+                        }
+                    }
+                }
+            }
+        }
+        if !freed.is_empty() {
+            running.retain(|i| !freed.contains(i));
+        }
+        iters.push(IterRecord {
+            start_s: clock,
+            end_s: end,
+            n_decode,
+            n_prefill,
+            prefill_tokens,
+            queue_depth: queue.len(),
+            kv_frac: kv_used as f64 / kv_budget as f64,
+        });
+        clock = end;
+    }
+
+    let outcomes: Vec<RequestOutcome> = reqs
+        .iter()
+        .map(|r| RequestOutcome {
+            arrival_s: r.arrival_s,
+            output_len: r.output_len,
+            first_token_s: r.first_token_s,
+            finish_s: r.finish_s,
+            rejected: r.rejected,
+        })
+        .collect();
+    finalize(
+        &outcomes,
+        iters,
+        &cfg.slo,
+        cfg.max_batch,
+        clock,
+        energy,
+        ideal_cycles,
+        gen_tokens,
+        preemptions,
+        coster.distinct_shapes(),
+        done + rejected < n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::sim::coster::MappingPolicy;
+    use crate::sim::metrics::SloSpec;
+    use crate::workload::trace::TraceSpec;
+
+    fn tiny_spec() -> TraceSpec {
+        TraceSpec {
+            mean_in: 48.0,
+            mean_out: 8.0,
+            sigma_in: 0.4,
+            sigma_out: 0.3,
+            max_len: 4096,
+        }
+    }
+
+    fn tiny_hw() -> HwConfig {
+        HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        )
+    }
+
+    fn tiny_cfg(strategy: ServingStrategy) -> SimConfig {
+        SimConfig {
+            strategy,
+            policy: MappingPolicy::Pipeline,
+            max_batch: 8,
+            chunk_tokens: 32,
+            kv_budget_tokens: 4096,
+            dram_gb: 1.0,
+            ctx_bucket: 32,
+            eval_blocks: 1,
+            slo: SloSpec::new(1.0, 0.5),
+            max_iterations: 200_000,
+        }
+    }
+
+    fn run(strategy: ServingStrategy, rate_scale: f64, kv_tokens: u64) -> ServingMetrics {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(strategy);
+        cfg.kv_budget_tokens = kv_tokens;
+        let probe = crate::sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let stream = RequestStream::poisson(
+            &tiny_spec(),
+            probe.capacity_rps() * rate_scale,
+            12,
+            5,
+        );
+        simulate_serving(&stream, &model, &hw, &cfg)
+    }
+
+    #[test]
+    fn all_strategies_complete_all_requests() {
+        for strategy in ServingStrategy::ALL {
+            let m = run(strategy, 0.8, 4096);
+            assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "{strategy:?}");
+            assert_eq!(m.n_rejected, 0, "{strategy:?}");
+            assert!(m.throughput_tps > 0.0);
+            assert!(m.ttft.n == m.n_completed);
+        }
+    }
+
+    #[test]
+    fn vllm_never_mixes_prefill_and_decode() {
+        let m = run(ServingStrategy::Vllm, 1.2, 4096);
+        for it in &m.iters {
+            assert!(
+                it.n_prefill == 0 || it.n_decode == 0,
+                "mixed batch at t={}",
+                it.start_s
+            );
+        }
+    }
+
+    #[test]
+    fn orca_and_chunked_do_mix() {
+        for strategy in [ServingStrategy::Orca, ServingStrategy::ChunkedPrefill] {
+            let m = run(strategy, 1.2, 4096);
+            assert!(
+                m.iters.iter().any(|it| it.n_prefill > 0 && it.n_decode > 0),
+                "{strategy:?} never mixed"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_respects_chunk_budget() {
+        let m = run(ServingStrategy::ChunkedPrefill, 1.0, 4096);
+        for it in &m.iters {
+            assert!(it.prefill_tokens <= 32, "chunk {}", it.prefill_tokens);
+        }
+    }
+
+    #[test]
+    fn tight_kv_budget_rejects_or_preempts_but_conserves() {
+        let m = run(ServingStrategy::Orca, 1.0, 150);
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+        // tight budget must visibly constrain the run
+        assert!(m.n_rejected > 0 || m.n_preemptions > 0 || m.max_queue_depth > 0);
+        for it in &m.iters {
+            assert!(it.kv_frac <= 1.0 + 1e-9, "kv over budget: {}", it.kv_frac);
+        }
+    }
+
+    #[test]
+    fn clock_is_monotone_and_iters_ordered() {
+        let m = run(ServingStrategy::ChunkedPrefill, 1.3, 1024);
+        for it in &m.iters {
+            assert!(it.end_s >= it.start_s);
+        }
+        for w in m.iters.windows(2) {
+            assert!(w[1].start_s >= w[0].start_s - 1e-12);
+        }
+        assert!(m.makespan_s >= m.iters.last().map_or(0.0, |i| i.end_s) - 1e-12);
+    }
+}

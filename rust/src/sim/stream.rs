@@ -1,0 +1,129 @@
+//! Timed request streams: arrival processes layered on the paper's
+//! sequence-length distributions (`TraceSpec`), feeding the serving
+//! simulator with (arrival time, input length, output length) triples.
+
+use crate::util::Rng;
+use crate::workload::trace::TraceSpec;
+
+/// One request of a serving trace: a prompt of `input_len` tokens
+/// arriving at `arrival_s`, expecting `output_len` generated tokens.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedRequest {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub input_len: u64,
+    pub output_len: u64,
+}
+
+/// A timed request trace, sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct RequestStream {
+    pub name: String,
+    pub requests: Vec<TimedRequest>,
+    /// Mean request arrival rate used to generate the stream (req/s).
+    pub rate_rps: f64,
+    pub seed: u64,
+}
+
+impl RequestStream {
+    /// Poisson arrivals at `rate_rps` requests/s: exponential
+    /// inter-arrival gaps layered on lengths sampled from `spec`.
+    /// Deterministic for a fixed `seed`.
+    pub fn poisson(spec: &TraceSpec, rate_rps: f64, n: usize, seed: u64) -> Self {
+        Self::generate(spec, rate_rps, n, seed, true)
+    }
+
+    /// Fixed-rate arrivals: one request every `1/rate_rps` seconds.
+    pub fn fixed_rate(spec: &TraceSpec, rate_rps: f64, n: usize, seed: u64) -> Self {
+        Self::generate(spec, rate_rps, n, seed, false)
+    }
+
+    fn generate(spec: &TraceSpec, rate_rps: f64, n: usize, seed: u64, poisson: bool) -> Self {
+        assert!(rate_rps > 0.0, "arrival rate must be positive");
+        let lens = spec.sample(n, seed);
+        let mut gap_rng = Rng::seed_from_u64(seed ^ 0x5157_6172_7269_7661); // "arrival"
+        let mut t = 0.0f64;
+        let requests = lens
+            .into_iter()
+            .enumerate()
+            .map(|(id, (input_len, output_len))| {
+                let gap = if poisson {
+                    // exponential inter-arrival: -ln(1 - u) / rate
+                    let u = gap_rng.gen_f64();
+                    -(1.0 - u).max(f64::EPSILON).ln() / rate_rps
+                } else {
+                    1.0 / rate_rps
+                };
+                t += gap;
+                TimedRequest {
+                    id,
+                    arrival_s: t,
+                    input_len,
+                    output_len,
+                }
+            })
+            .collect();
+        RequestStream {
+            name: format!("{}req@{:.3}rps", n, rate_rps),
+            requests,
+            rate_rps,
+            seed,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Arrival time of the last request (the load window).
+    pub fn horizon_s(&self) -> f64 {
+        self.requests.last().map_or(0.0, |r| r.arrival_s)
+    }
+
+    /// Total output tokens the stream asks for.
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        TraceSpec::sharegpt()
+    }
+
+    #[test]
+    fn arrivals_sorted_and_deterministic() {
+        let a = RequestStream::poisson(&spec(), 2.0, 64, 9);
+        let b = RequestStream::poisson(&spec(), 2.0, 64, 9);
+        assert_eq!(a.requests, b.requests);
+        for w in a.requests.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let c = RequestStream::poisson(&spec(), 2.0, 64, 10);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn poisson_mean_rate_matches() {
+        let s = RequestStream::poisson(&spec(), 4.0, 2000, 3);
+        let rate = s.len() as f64 / s.horizon_s();
+        assert!((rate - 4.0).abs() / 4.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn fixed_rate_is_evenly_spaced() {
+        let s = RequestStream::fixed_rate(&spec(), 2.0, 10, 1);
+        for w in s.requests.windows(2) {
+            assert!((w[1].arrival_s - w[0].arrival_s - 0.5).abs() < 1e-12);
+        }
+        assert_eq!(s.requests[0].id, 0);
+        assert!(s.total_output_tokens() > 0);
+    }
+}

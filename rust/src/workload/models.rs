@@ -28,6 +28,13 @@ impl ModelSpec {
         }
     }
 
+    /// KV-cache bytes appended per generated/prefilled token across the
+    /// whole model (K + V, GQA-aware): used by the serving simulator's
+    /// KV budget accounting.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_kv_heads * self.head_dim * crate::arch::constants::BYTES_PER_ELEM * self.n_blocks
+    }
+
     /// Approximate parameter count (embeddings excluded).
     pub fn params(&self) -> u64 {
         let h = self.hidden;

@@ -131,17 +131,21 @@ impl Scenario {
             }
             ServingStrategy::Orca => {
                 // mixed: the whole prefill joins the first decode batch
+                // (a prefill-only group when there are no decodes)
                 let mut first = vec![Request::prefill(prefill_len)];
-                first.extend(decodes[0].iter().copied());
+                let mut rest = decodes.into_iter();
+                if let Some(d0) = rest.next() {
+                    first.extend(d0);
+                }
                 groups.push(BatchGroup {
                     label: "mixed[0]".into(),
                     batch: first,
                     weight: 1.0,
                     has_prefill: true,
                 });
-                for (i, d) in decodes.into_iter().enumerate().skip(1) {
+                for (i, d) in rest.enumerate() {
                     groups.push(BatchGroup {
-                        label: format!("decode[{i}]"),
+                        label: format!("decode[{}]", i + 1),
                         batch: d,
                         weight: 1.0,
                         has_prefill: false,
@@ -149,22 +153,34 @@ impl Scenario {
                 }
             }
             ServingStrategy::ChunkedPrefill => {
-                // the prefill is chunked across the decode batches
-                let n_chunks = prefill_len.div_ceil(chunk_size).max(1);
+                // the prefill is chunked across the decode batches; when
+                // there are more chunks than decode batches the tail runs
+                // as trailing chunk-only groups so the whole prompt is
+                // always covered
+                let n_chunks = prefill_len.div_ceil(chunk_size).max(1) as usize;
+                let n_groups = decodes.len().max(n_chunks);
                 let mut past = 0u64;
-                for i in 0..decodes.len() {
+                for (i, d) in decodes
+                    .into_iter()
+                    .map(Some)
+                    .chain(std::iter::repeat_with(|| None))
+                    .take(n_groups)
+                    .enumerate()
+                {
                     let mut batch = Vec::new();
-                    if (i as u64) < n_chunks {
+                    if i < n_chunks {
                         let len = chunk_size.min(prefill_len - past);
                         batch.push(Request::Prefill { len, past });
                         past += len;
                     }
-                    batch.extend(decodes[i].iter().copied());
+                    if let Some(d) = d {
+                        batch.extend(d);
+                    }
                     groups.push(BatchGroup {
                         label: format!("chunk+decode[{i}]"),
                         batch,
                         weight: 1.0,
-                        has_prefill: (i as u64) < n_chunks,
+                        has_prefill: i < n_chunks,
                     });
                 }
             }
@@ -250,6 +266,64 @@ mod tests {
         // every group has the decode payload; chunked groups have one more
         for g in &s.groups {
             assert!(g.batch.len() == 128 || g.batch.len() == 129);
+        }
+    }
+
+    #[test]
+    fn orca_zero_decode_groups_degrades_to_prefill_only() {
+        // regression: decode_groups == 0 used to index decodes[0]
+        let s = Scenario::serving(ServingStrategy::Orca, &trace(), 1024, 128, 0, 512);
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].batch.len(), 1);
+        assert!(s.groups[0].has_prefill);
+        assert!(s.groups[0].batch[0].is_prefill());
+        // the other strategies also tolerate an empty decode side
+        let v = Scenario::serving(ServingStrategy::Vllm, &trace(), 1024, 128, 0, 512);
+        assert_eq!(v.groups.len(), 1);
+        let c = Scenario::serving(ServingStrategy::ChunkedPrefill, &trace(), 1024, 128, 0, 512);
+        assert_eq!(c.groups.len(), 2); // 1024 / 512 = 2 chunk-only groups
+        assert!(c.groups.iter().all(|g| g.has_prefill && g.batch.len() == 1));
+    }
+
+    #[test]
+    fn chunked_prefill_keeps_trailing_chunks_when_groups_scarce() {
+        // regression: chunks beyond the decode groups were silently
+        // dropped, truncating the prompt
+        let len = 9652u64;
+        let chunk = 2048u64;
+        let decode_groups = 2; // n_chunks = 5 > 2
+        let s = Scenario::serving(
+            ServingStrategy::ChunkedPrefill,
+            &trace(),
+            len,
+            128,
+            decode_groups,
+            chunk,
+        );
+        assert_eq!(s.groups.len(), 5);
+        let covered: u64 = s
+            .groups
+            .iter()
+            .flat_map(|g| g.batch.iter())
+            .filter_map(|r| match r {
+                Request::Prefill { len, .. } => Some(*len),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(covered, len, "whole prompt must be prefilled");
+        // first two groups mix chunk + decodes; the tail is chunk-only
+        for (i, g) in s.groups.iter().enumerate() {
+            assert!(g.has_prefill);
+            if i < decode_groups {
+                assert_eq!(g.batch.len(), 129);
+            } else {
+                assert_eq!(g.batch.len(), 1);
+            }
+        }
+        // past context still accumulates across the chunk-only tail
+        match s.groups[4].batch[0] {
+            Request::Prefill { past, .. } => assert_eq!(past, 4 * chunk),
+            _ => panic!("tail group must be a chunk"),
         }
     }
 

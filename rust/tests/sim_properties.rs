@@ -1,0 +1,164 @@
+//! Property tests for the continuous-batching serving simulator:
+//! conservation (every admitted request eventually completes or is
+//! explicitly rejected), clock monotonicity, and bit-identical metrics
+//! across repeated runs with the same seed — over randomized streams,
+//! strategies and KV budgets.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{self, MappingPolicy, ServingMetrics, SimConfig, SloSpec};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+/// Run one simulation at `rate_scale` x the probe-estimated service
+/// capacity (absolute rates are meaningless at tiny-model latencies).
+fn run(
+    strategy: ServingStrategy,
+    kv_tokens: u64,
+    rate_scale: f64,
+    n: usize,
+    seed: u64,
+) -> ServingMetrics {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(strategy, kv_tokens);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let stream =
+        sim::RequestStream::poisson(&tiny_spec(), rate_scale * probe.capacity_rps(), n, seed);
+    sim::simulate_serving(&stream, &model, &hw, &cfg)
+}
+
+/// Conservation: arrived == completed + rejected, for every strategy
+/// across randomized seeds, rates and KV budgets (including budgets
+/// tight enough to force queue stalls, preemptions and rejections).
+#[test]
+fn conservation_across_randomized_runs() {
+    let mut rng = Rng::seed_from_u64(42);
+    for trial in 0..12 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let kv_tokens = *rng.choose(&[4096u64, 512, 160]);
+        let rate_scale = 0.3 + rng.gen_f64() * 2.5;
+        let n = 6 + rng.gen_index(8);
+        let seed = rng.next_u64();
+        let m = run(strategy, kv_tokens, rate_scale, n, seed);
+        assert_eq!(
+            m.n_completed + m.n_rejected,
+            m.n_arrived,
+            "{strategy:?} kv={kv_tokens} scale={rate_scale} n={n} seed={seed}"
+        );
+        assert!(
+            !m.truncated,
+            "iteration cap hit: {strategy:?} kv={kv_tokens}"
+        );
+    }
+}
+
+/// The simulated clock never runs backwards: iterations are ordered,
+/// non-negative, and per-request timestamps respect
+/// arrival <= first token <= completion.
+#[test]
+fn clock_monotonicity_and_causality() {
+    for strategy in ServingStrategy::ALL {
+        let m = run(strategy, 1024, 1.5, 10, 9);
+        let mut prev_start = 0.0f64;
+        for it in &m.iters {
+            assert!(it.end_s >= it.start_s, "{strategy:?}");
+            assert!(it.start_s >= prev_start - 1e-12, "{strategy:?}");
+            assert!(it.kv_frac <= 1.0 + 1e-9, "{strategy:?}");
+            prev_start = it.start_s;
+        }
+        // TTFT/TPOT samples are non-negative by construction
+        assert!(m.ttft.mean >= 0.0 && m.ttft.p99 >= 0.0);
+        assert!(m.tpot.mean >= 0.0 && m.tpot.p99 >= 0.0);
+        assert!(m.makespan_s >= m.iters.last().map_or(0.0, |i| i.end_s) - 1e-12);
+    }
+}
+
+/// Bit-identical metrics across repeated runs with the same seed, and
+/// different results for a different stream seed.
+#[test]
+fn metrics_bit_identical_for_same_seed() {
+    for strategy in ServingStrategy::ALL {
+        let a = run(strategy, 768, 1.2, 9, 21);
+        let b = run(strategy, 768, 1.2, 9, 21);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{strategy:?}");
+        assert_eq!(
+            a.throughput_tps.to_bits(),
+            b.throughput_tps.to_bits(),
+            "{strategy:?}"
+        );
+        assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits(), "{strategy:?}");
+        assert_eq!(a.tpot.p99.to_bits(), b.tpot.p99.to_bits(), "{strategy:?}");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{strategy:?}");
+        assert_eq!(a.n_iterations, b.n_iterations, "{strategy:?}");
+        assert_eq!(a.n_preemptions, b.n_preemptions, "{strategy:?}");
+        assert_eq!(format!("{:?}", a.iters), format!("{:?}", b.iters));
+        let c = run(strategy, 768, 1.2, 9, 22);
+        assert_ne!(
+            a.makespan_s.to_bits(),
+            c.makespan_s.to_bits(),
+            "{strategy:?} should differ across seeds"
+        );
+    }
+}
+
+/// A KV budget below a request's total footprint rejects it explicitly
+/// instead of deadlocking, and the rest of the stream still completes.
+#[test]
+fn infeasible_requests_are_rejected_not_stuck() {
+    // budget of 64 tokens: most ~48-token prompts plus outputs won't fit
+    let m = run(ServingStrategy::Orca, 64, 1.0, 12, 3);
+    assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+    assert!(m.n_rejected > 0, "expected rejections under a 64-token budget");
+}
+
+/// Preemption path: a budget that admits more optimistic decodes than
+/// it can grow still conserves requests and stays within budget.
+#[test]
+fn preemption_conserves_and_respects_budget() {
+    let mut any_preempt = false;
+    for seed in [1u64, 2, 3, 4, 5] {
+        let m = run(ServingStrategy::ChunkedPrefill, 160, 2.5, 10, seed);
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "seed {seed}");
+        for it in &m.iters {
+            assert!(it.kv_frac <= 1.0 + 1e-9, "seed {seed}");
+        }
+        any_preempt |= m.n_preemptions > 0;
+    }
+    assert!(any_preempt, "no preemption was ever exercised");
+}
