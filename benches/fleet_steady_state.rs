@@ -1,0 +1,71 @@
+//! Fleet-simulator throughput bench: how many simulated seconds of
+//! multi-replica traffic one wall-clock second buys, per router policy
+//! (EXPERIMENTS.md "Fleet serving"). Complements `sim_steady_state`,
+//! which measures one package.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{self, FleetConfig, RouterPolicy, SimConfig};
+use compass::util::Bench;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn main() {
+    let model = ModelSpec::gpt3_7b();
+    let hw = HwConfig::homogeneous(
+        2,
+        4,
+        ChipletClass::M,
+        Dataflow::WeightStationary,
+        64.0,
+        32.0,
+    );
+    let spec = TraceSpec {
+        mean_in: 256.0,
+        mean_out: 64.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 16_384,
+    };
+    let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    cfg.max_batch = 16;
+    cfg.eval_blocks = 1;
+    cfg.ctx_bucket = 256;
+    let probe = sim::probe(&model, &hw, &cfg, &spec);
+    cfg.slo = probe.slo(3.0, 4.0);
+    let n_replicas = 4usize;
+    let rate = 0.9 * n_replicas as f64 * probe.capacity_rps();
+    let stream = sim::RequestStream::poisson(&spec, rate, 96, 7);
+    let fleets = [
+        FleetConfig::homogeneous(n_replicas, RouterPolicy::RoundRobin),
+        FleetConfig::homogeneous(n_replicas, RouterPolicy::JoinShortestQueue),
+        FleetConfig::disaggregated(1, n_replicas - 1, 1e-8),
+    ];
+
+    println!(
+        "fleet_steady_state: 96 requests @ {:.3} req/s (0.9x fleet capacity), \
+         model {}, {} replicas of {}",
+        rate,
+        model.name,
+        n_replicas,
+        hw.describe()
+    );
+    for fleet in &fleets {
+        // one cold run for the shape/iteration counts
+        let cold = sim::simulate_fleet(&stream, &model, &hw, &cfg, fleet);
+        let iters: usize = cold.per_replica.iter().map(|m| m.n_iterations).sum();
+        let wall = Bench::new(&format!("fleet_steady_state/{}", fleet.router.name()))
+            .budget_ms(2000)
+            .run(|| sim::simulate_fleet(&stream, &model, &hw, &cfg, fleet));
+        println!(
+            "    {:<22} sim {:>9.3}s / wall -> {:>10.1} sim-s per wall-s | \
+             {} iterations total | imbalance {:.3} | kv-handoff {} tok",
+            fleet.describe(),
+            cold.makespan_s,
+            cold.makespan_s / wall.max(1e-12),
+            iters,
+            cold.load_imbalance,
+            cold.kv_transfer_tokens,
+        );
+    }
+}

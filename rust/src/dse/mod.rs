@@ -12,7 +12,10 @@ use crate::bo::{self, BoConfig, Gp};
 use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
-use crate::sim::{self, MappingPolicy, RequestStream, ServingMetrics, SimConfig};
+use crate::sim::{
+    self, FleetConfig, FleetMetrics, MappingPolicy, RequestStream, RouterPolicy, ServingMetrics,
+    SimConfig,
+};
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
 
@@ -178,6 +181,130 @@ pub fn compass_dse_serving(
     }
 }
 
+// ---------------------------------------------------------------------
+// Fleet co-exploration (multi-replica / disaggregated serving)
+// ---------------------------------------------------------------------
+
+/// Fleet design space under a total compute budget: candidate replica
+/// counts (served by the JSQ router) and disaggregated prefill/decode
+/// splits, each replica sized to `total_tops / total_replicas` so every
+/// shape spends the same silicon.
+#[derive(Debug, Clone)]
+pub struct FleetSpace {
+    /// Total compute budget across the fleet (TOPS).
+    pub total_tops: f64,
+    /// Homogeneous fleet sizes to consider (JSQ-routed).
+    pub replica_counts: Vec<usize>,
+    /// Disaggregated (prefill, decode) splits to consider.
+    pub splits: Vec<(usize, usize)>,
+    /// KV handoff cost per migrated token for the splits (s/token).
+    pub handoff_s_per_token: f64,
+}
+
+impl FleetSpace {
+    pub fn new(total_tops: f64) -> Self {
+        FleetSpace {
+            total_tops,
+            replica_counts: vec![1, 2, 4],
+            splits: vec![(1, 1), (1, 3)],
+            handoff_s_per_token: 1e-8,
+        }
+    }
+
+    /// All fleet shapes the search scores.
+    pub fn shapes(&self) -> Vec<FleetConfig> {
+        let mut out: Vec<FleetConfig> = self
+            .replica_counts
+            .iter()
+            .map(|&n| FleetConfig::homogeneous(n, RouterPolicy::JoinShortestQueue))
+            .collect();
+        out.extend(
+            self.splits
+                .iter()
+                .map(|&(p, d)| FleetConfig::disaggregated(p, d, self.handoff_s_per_token)),
+        );
+        out
+    }
+
+    /// Per-replica hardware space for one fleet shape: the paper's
+    /// Table-IV space at the budget's per-replica share.
+    pub fn space_for(&self, fleet: &FleetConfig) -> HwSpace {
+        HwSpace::paper((self.total_tops / fleet.total_replicas() as f64).max(1.0))
+    }
+}
+
+/// Outcome of a fleet co-exploration run.
+#[derive(Debug, Clone)]
+pub struct FleetDseOutcome {
+    /// Winning fleet shape.
+    pub fleet: FleetConfig,
+    /// Winning per-replica hardware configuration.
+    pub hw: HwConfig,
+    pub metrics: FleetMetrics,
+    /// Best-objective trajectory of the winning shape's BO run.
+    pub bo_history: Vec<f64>,
+    /// Best objective reached per candidate fleet shape.
+    pub per_shape: Vec<(FleetConfig, f64)>,
+    pub backend: &'static str,
+}
+
+/// Sim-backed fleet evaluation for a fixed per-replica hardware
+/// configuration: replay `stream` across the fleet with a GA mapping
+/// search per distinct batch shape on every replica (memoized per
+/// replica, exactly like [`search_serving`]).
+pub fn search_fleet(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    ga_cfg: &GaConfig,
+    sim_cfg: &SimConfig,
+    fleet: &FleetConfig,
+) -> FleetMetrics {
+    let cfg = sim_cfg.with_policy(MappingPolicy::Searched(*ga_cfg));
+    sim::simulate_fleet(stream, model, hw, &cfg, fleet)
+}
+
+/// Compass scaled out: BO over per-replica hardware *per fleet shape*
+/// (replica count or prefill/decode split under the shared total-TOPS
+/// budget), the fleet simulator inside, maximizing fleet SLO-constrained
+/// goodput via [`FleetMetrics::objective`]. The same `gp` is reused
+/// across shapes (each `fit` retrains from scratch on its own
+/// observations).
+pub fn compass_dse_fleet(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    fspace: &FleetSpace,
+    cfg: &DseConfig,
+    sim_cfg: &SimConfig,
+    gp: &mut dyn Gp,
+) -> FleetDseOutcome {
+    let mut per_shape: Vec<(FleetConfig, f64)> = Vec::new();
+    let mut best: Option<(FleetConfig, bo::BoResult)> = None;
+    for fleet in fspace.shapes() {
+        let space = fspace.space_for(&fleet);
+        let result = bo::optimize(&space, &cfg.bo, gp, |hw| {
+            search_fleet(stream, model, hw, &cfg.ga, sim_cfg, &fleet).objective()
+        });
+        per_shape.push((fleet.clone(), result.best.objective));
+        if best
+            .as_ref()
+            .map_or(true, |(_, b)| result.best.objective < b.best.objective)
+        {
+            best = Some((fleet, result));
+        }
+    }
+    let (fleet, result) = best.expect("fleet space yields at least one shape");
+    let metrics = search_fleet(stream, model, &result.best.hw, &cfg.ga, sim_cfg, &fleet);
+    FleetDseOutcome {
+        fleet,
+        hw: result.best.hw.clone(),
+        metrics,
+        bo_history: result.history,
+        per_shape,
+        backend: result.backend,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +393,60 @@ mod tests {
         assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
         assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits());
         assert!(a.distinct_shapes > 0);
+    }
+
+    #[test]
+    fn search_fleet_is_deterministic_and_conserves() {
+        let (stream, model, cfg) = tiny_sim_setup();
+        let hw = crate::arch::HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+        let a = search_fleet(&stream, &model, &hw, &GaConfig::tiny(), &cfg, &fleet);
+        let b = search_fleet(&stream, &model, &hw, &GaConfig::tiny(), &cfg, &fleet);
+        assert_eq!(a.n_completed + a.n_rejected, a.n_arrived);
+        assert_eq!(a.per_replica.len(), 2);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.slo_goodput_tps.to_bits(), b.slo_goodput_tps.to_bits());
+    }
+
+    #[test]
+    fn fleet_dse_runs_end_to_end_over_shapes() {
+        let (stream, model, cfg) = tiny_sim_setup();
+        let mut fspace = FleetSpace::new(64.0);
+        fspace.replica_counts = vec![1, 2];
+        fspace.splits = vec![(1, 1)];
+        let dse_cfg = DseConfig::tiny();
+        let mut gp = NativeGp::new();
+        let out = compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &mut gp);
+        assert_eq!(out.backend, "native");
+        assert_eq!(out.per_shape.len(), 3);
+        assert_eq!(out.bo_history.len(), dse_cfg.bo.rounds);
+        assert_eq!(
+            out.metrics.n_completed + out.metrics.n_rejected,
+            out.metrics.n_arrived
+        );
+        // the winner's objective is the minimum over shapes
+        let min = out
+            .per_shape
+            .iter()
+            .map(|(_, o)| *o)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(
+            out.per_shape
+                .iter()
+                .find(|(f, _)| f.describe() == out.fleet.describe())
+                .map(|(_, o)| *o),
+            Some(min)
+        );
+        for w in out.bo_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::workload::serving::{Scenario, ServingStrategy};
 use crate::workload::trace::{Trace, TraceSpec};
 use crate::workload::{ModelSpec, Phase};
 
-pub use scenes::{model_for_tops, Scene, SimScene};
+pub use scenes::{model_for_tops, FleetScene, Scene, SimScene};
 
 /// Select a GP backend: PJRT artifacts when available (and the `xla`
 /// feature is compiled in), else the native mirror (prints which one was
@@ -743,6 +743,117 @@ pub fn sim_study_occupancy(
 }
 
 // ---------------------------------------------------------------------
+// Fleet serving study — arrival rate x router policy x fleet shape
+// (EXPERIMENTS.md "Fleet serving")
+// ---------------------------------------------------------------------
+
+/// One cell of the fleet-serving sweep.
+#[derive(Debug, Clone)]
+pub struct FleetStudyRow {
+    pub fleet: sim::FleetConfig,
+    pub rate_rps: f64,
+    pub metrics: sim::FleetMetrics,
+}
+
+/// The default fleet shapes for an N-replica study: round-robin and
+/// join-shortest-queue over N identical replicas, plus a disaggregated
+/// split of ceil(N/4) prefill + rest decode replicas with a handoff
+/// link costed per migrated KV token. N is clamped to >= 2 (a
+/// one-replica "fleet comparison" has nothing to compare) — keep the
+/// caller's scene in lockstep, as `repro fleet-study` does.
+pub fn default_fleet_shapes(n_replicas: usize, handoff_s_per_token: f64) -> Vec<sim::FleetConfig> {
+    let n = n_replicas.max(2);
+    let p = n.div_ceil(4);
+    vec![
+        sim::FleetConfig::homogeneous(n, sim::RouterPolicy::RoundRobin),
+        sim::FleetConfig::homogeneous(n, sim::RouterPolicy::JoinShortestQueue),
+        sim::FleetConfig::disaggregated(p, n - p, handoff_s_per_token),
+    ]
+}
+
+/// Sweep arrival rate x fleet shape on one [`FleetScene`] with fixed
+/// per-replica hardware. SLO targets are calibrated once from the
+/// unloaded single-replica probe (as in [`sim_serving_study`]) and
+/// shared by every cell; rates default to {0.4, 0.8, 1.3} x the fleet
+/// capacity (n_replicas x per-replica capacity). Deterministic for a
+/// fixed `seed`.
+pub fn fleet_study(
+    scene: &FleetScene,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    fleets: &[sim::FleetConfig],
+    seed: u64,
+) -> Vec<FleetStudyRow> {
+    let model = scene.model();
+    let spec = scene.spec();
+    let probe = sim::probe(&model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let fleet_mu = scene.n_replicas as f64 * probe.capacity_rps();
+        vec![0.4 * fleet_mu, 0.8 * fleet_mu, 1.3 * fleet_mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        let stream = scene.stream(rate, seed);
+        for fleet in fleets {
+            let metrics = sim::simulate_fleet(&stream, &model, hw, &cfg, fleet);
+            rows.push(FleetStudyRow {
+                fleet: fleet.clone(),
+                rate_rps: rate,
+                metrics,
+            });
+        }
+    }
+    rows
+}
+
+/// Format the fleet sweep as the study table.
+pub fn fleet_study_table(scene: &FleetScene, rows: &[FleetStudyRow]) -> Table {
+    let title = format!(
+        "Fleet serving [{}] - arrival rate x router policy ({} replicas, {} TOPS total)",
+        scene.label(),
+        scene.n_replicas,
+        scene.total_tops as u64,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "Rate (r/s)",
+            "Fleet",
+            "Tok/s",
+            "Goodput (tok/s)",
+            "TTFT p99 (s)",
+            "TPOT p99 (s)",
+            "SLO %",
+            "Imbalance",
+            "KV-handoff (tok)",
+            "Energy (pJ)",
+            "Rej",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            format!("{:.3}", r.rate_rps),
+            r.fleet.describe(),
+            format!("{:.1}", m.throughput_tps),
+            format!("{:.1}", m.slo_goodput_tps),
+            format!("{:.4}", m.ttft.p99),
+            format!("{:.5}", m.tpot.p99),
+            format!("{:.1}", 100.0 * m.slo_attainment),
+            format!("{:.3}", m.load_imbalance),
+            m.kv_transfer_tokens.to_string(),
+            format!("{:.3e}", m.energy_pj),
+            m.n_rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
 // Fig. 11 — ablations
 // ---------------------------------------------------------------------
 
@@ -850,6 +961,37 @@ mod tests {
         let occ = sim_study_occupancy(&rows, ServingStrategy::ChunkedPrefill, cfg.max_batch);
         assert!(occ.contains("occupancy"));
         assert!(occ.contains("batch |"));
+    }
+
+    #[test]
+    fn fleet_study_covers_shape_rate_grid() {
+        let mut scene = FleetScene::new("sharegpt", 64.0, 2, 6);
+        scene.rates_rps = vec![4.0, 16.0];
+        let hw = sim_default_hw(scene.tops_per_replica());
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let shapes = default_fleet_shapes(scene.n_replicas, 1e-8);
+        assert_eq!(shapes.len(), 3);
+        let rows = fleet_study(&scene, &hw, &cfg, &shapes, 3);
+        assert_eq!(rows.len(), 2 * shapes.len());
+        for r in &rows {
+            assert_eq!(
+                r.metrics.n_completed + r.metrics.n_rejected,
+                r.metrics.n_arrived,
+                "{}@{}",
+                r.fleet.describe(),
+                r.rate_rps
+            );
+        }
+        // the disaggregated shape reports handoff traffic
+        assert!(rows
+            .iter()
+            .filter(|r| r.fleet.router == sim::RouterPolicy::PrefillDecode)
+            .any(|r| r.metrics.kv_transfer_tokens > 0));
+        let t = fleet_study_table(&scene, &rows);
+        assert_eq!(t.rows.len(), rows.len());
     }
 
     #[test]

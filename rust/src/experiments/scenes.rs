@@ -143,6 +143,73 @@ impl SimScene {
     }
 }
 
+/// A fleet-serving scene: a trace distribution plus a *total* compute
+/// budget split evenly across the replicas of every fleet shape under
+/// study (the scale-out counterpart of [`SimScene`]).
+#[derive(Debug, Clone)]
+pub struct FleetScene {
+    pub trace_name: String,
+    /// Total compute budget across the fleet (TOPS).
+    pub total_tops: f64,
+    /// Replicas per fleet shape (disaggregated splits partition it).
+    pub n_replicas: usize,
+    /// Requests per simulated stream.
+    pub n_requests: usize,
+    /// Arrival rates to sweep (req/s); empty = auto-calibrated
+    /// {0.4, 0.8, 1.3} x (n_replicas x per-replica capacity).
+    pub rates_rps: Vec<f64>,
+}
+
+impl FleetScene {
+    /// `n_replicas` is clamped to >= 2 — the study's comparison set
+    /// (`default_fleet_shapes`) needs at least two replicas, and the
+    /// clamp must happen here so per-replica sizing
+    /// (`tops_per_replica`) and the auto rate sweep stay in lockstep
+    /// with the fleets actually simulated.
+    pub fn new(trace_name: &str, total_tops: f64, n_replicas: usize, n_requests: usize) -> Self {
+        FleetScene {
+            trace_name: trace_name.to_string(),
+            total_tops,
+            n_replicas: n_replicas.max(2),
+            n_requests,
+            rates_rps: Vec::new(),
+        }
+    }
+
+    /// Default study: GovReport traffic on 4 x 128-TOPS replicas.
+    pub fn govreport_512x4() -> Self {
+        FleetScene::new("govreport", 512.0, 4, 32)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-fleet{}x{}T",
+            self.trace_name,
+            self.n_replicas,
+            self.tops_per_replica() as u64
+        )
+    }
+
+    pub fn tops_per_replica(&self) -> f64 {
+        self.total_tops / self.n_replicas as f64
+    }
+
+    pub fn spec(&self) -> TraceSpec {
+        TraceSpec::by_name(&self.trace_name).expect("known trace")
+    }
+
+    /// Model matched to the *total* budget: the fleet serves one model,
+    /// however many packages it spans.
+    pub fn model(&self) -> ModelSpec {
+        model_for_tops(self.total_tops)
+    }
+
+    /// A Poisson request stream at `rate_rps` for this scene.
+    pub fn stream(&self, rate_rps: f64, seed: u64) -> crate::sim::RequestStream {
+        crate::sim::RequestStream::poisson(&self.spec(), rate_rps, self.n_requests, seed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +247,17 @@ mod tests {
     fn batch_sizes_follow_paper_defaults() {
         assert_eq!(Scene::new("sharegpt", true, 64.0).batch_size, 4);
         assert_eq!(Scene::new("sharegpt", false, 64.0).batch_size, 128);
+    }
+
+    #[test]
+    fn fleet_scene_splits_the_budget() {
+        let s = FleetScene::govreport_512x4();
+        assert_eq!(s.label(), "govreport-fleet4x128T");
+        assert_eq!(s.tops_per_replica(), 128.0);
+        assert_eq!(s.model().name, "GPT3-13B");
+        let stream = s.stream(2.0, 7);
+        assert_eq!(stream.len(), s.n_requests);
+        assert_eq!(stream.requests, s.stream(2.0, 7).requests);
     }
 
     #[test]

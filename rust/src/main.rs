@@ -10,6 +10,7 @@
 //! repro timeline                                # Fig 8    execution timeline
 //! repro serving-study [--decode-groups N]       # Fig 10 + Table VII
 //! repro sim-study [--rates A,B,C] [--requests N]# serving simulator sweep
+//! repro fleet-study [--replicas N] ...          # multi-replica fleet sweep
 //! repro ablation                                # Fig 11   ablations
 //! repro all                                     # everything above
 //! ```
@@ -32,6 +33,7 @@ commands:
   timeline        Fig 8     execution timeline of the found mapping
   serving-study   Fig 10    vLLM / Orca / ChunkedPrefill (+ Table VII)
   sim-study       serving simulator: arrival rate x strategy sweep
+  fleet-study     fleet serving: rate x router policy x fleet shape
   ablation        Fig 11    GA->random, BO->random, SCAR mapping
   all             everything above
 
@@ -49,6 +51,10 @@ flags:
   --rates A,B,C       sim-study arrival rates in req/s (default: auto
                       {0.4,0.8,1.3} x estimated capacity)
   --requests N        sim-study requests per stream (default 24)
+  --replicas N        fleet-study replicas; --tops is the fleet's *total*
+                      budget, split evenly (default 4)
+  --handoff S         fleet-study KV handoff cost, s per migrated token
+                      (default 1e-8)
 ";
 
 struct Args {
@@ -65,6 +71,8 @@ struct Args {
     decode_groups: usize,
     rates: Vec<f64>,
     requests: usize,
+    replicas: usize,
+    handoff: f64,
 }
 
 fn parse_args() -> Args {
@@ -82,6 +90,8 @@ fn parse_args() -> Args {
         decode_groups: 3,
         rates: Vec::new(),
         requests: 24,
+        replicas: 4,
+        handoff: 1e-8,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -109,6 +119,8 @@ fn parse_args() -> Args {
                     .collect();
             }
             "--requests" => args.requests = next_val(&mut it, a),
+            "--replicas" => args.replicas = next_val(&mut it, a),
+            "--handoff" => args.handoff = next_val(&mut it, a),
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -186,6 +198,35 @@ fn run_sim_study(args: &Args) {
     );
 }
 
+fn run_fleet_study(args: &Args) {
+    // the comparison set (round-robin vs JSQ vs a P+D split) needs at
+    // least two replicas; keep the scene in lockstep so per-replica
+    // sizing and the auto rate sweep match the simulated fleet
+    let replicas = args.replicas.max(2);
+    if replicas != args.replicas {
+        eprintln!("[compass] fleet-study needs >= 2 replicas; using {replicas}");
+    }
+    let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
+    scene.rates_rps = args.rates.clone();
+    let hw = exp::sim_default_hw(scene.tops_per_replica());
+    let cfg = compass::sim::SimConfig::new(
+        compass::workload::serving::ServingStrategy::ChunkedPrefill,
+    );
+    println!(
+        "fleet-study [{}]: {} replicas, per-replica hw: {}",
+        scene.label(),
+        scene.n_replicas,
+        hw.describe()
+    );
+    let shapes = exp::default_fleet_shapes(scene.n_replicas, args.handoff);
+    let rows = exp::fleet_study(&scene, &hw, &cfg, &shapes, args.seed);
+    save(
+        &exp::fleet_study_table(&scene, &rows),
+        &args.out_dir,
+        "fleet_study",
+    );
+}
+
 fn main() {
     let args = parse_args();
     let cfg = if args.full {
@@ -254,6 +295,9 @@ fn main() {
         "sim-study" => {
             run_sim_study(&args);
         }
+        "fleet-study" => {
+            run_fleet_study(&args);
+        }
         "ablation" => {
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
@@ -285,6 +329,7 @@ fn main() {
                 );
             }
             run_sim_study(&args);
+            run_fleet_study(&args);
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
         other => {

@@ -45,13 +45,16 @@ impl LatencyStats {
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample.
+/// True nearest-rank percentile of an ascending-sorted sample: the
+/// element at 1-based rank `ceil(q * n)` (so p50 of 1..=100 is 50, not
+/// the interpolation-index 51 a rounded `q * (n-1)` would give).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let n = sorted.len();
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(n - 1)]
 }
 
 /// One scheduler iteration in the occupancy trace.
@@ -71,6 +74,94 @@ pub struct IterRecord {
     pub kv_frac: f64,
 }
 
+/// Bounded occupancy trace: keeps exact running aggregates (iteration
+/// count, queue-depth and batch-slot sums, busy time) for the metrics,
+/// while the stored [`IterRecord`]s are capped at `2 * cap` entries by
+/// deterministic pairwise merging (duration-weighted), so a 1M-iteration
+/// run keeps a plottable trace in O(cap) memory instead of ~72 MB.
+#[derive(Debug, Clone)]
+pub struct TraceBuffer {
+    /// Target record count; 0 = unbounded (keep every iteration).
+    cap: usize,
+    records: Vec<IterRecord>,
+    n_iters: usize,
+    sum_queue_depth: f64,
+    max_queue_depth: usize,
+    sum_slots: f64,
+    busy_s: f64,
+}
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> Self {
+        TraceBuffer {
+            cap,
+            records: Vec::new(),
+            n_iters: 0,
+            sum_queue_depth: 0.0,
+            max_queue_depth: 0,
+            sum_slots: 0.0,
+            busy_s: 0.0,
+        }
+    }
+
+    /// Exact number of iterations pushed (not the stored record count).
+    pub fn n_iters(&self) -> usize {
+        self.n_iters
+    }
+
+    /// Time spent inside iterations (s), exact across downsampling.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    pub fn records(&self) -> &[IterRecord] {
+        &self.records
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.n_iters += 1;
+        self.sum_queue_depth += rec.queue_depth as f64;
+        self.max_queue_depth = self.max_queue_depth.max(rec.queue_depth);
+        self.sum_slots += (rec.n_decode + rec.n_prefill) as f64;
+        self.busy_s += (rec.end_s - rec.start_s).max(0.0);
+        self.records.push(rec);
+        if self.cap > 0 && self.records.len() >= 2 * self.cap {
+            self.compact();
+        }
+    }
+
+    /// Merge adjacent record pairs (duration-weighted averages for the
+    /// occupancy fields, summed prefill tokens), halving the trace while
+    /// keeping `ascii_occupancy`'s time-bucketed rendering faithful.
+    fn compact(&mut self) {
+        let mut out = Vec::with_capacity(self.records.len() / 2 + 1);
+        let mut it = self.records.chunks_exact(2);
+        for pair in &mut it {
+            let (a, b) = (pair[0], pair[1]);
+            let (wa, wb) = ((a.end_s - a.start_s).max(0.0), (b.end_s - b.start_s).max(0.0));
+            let w = wa + wb;
+            let mix = |x: f64, y: f64| {
+                if w > 0.0 {
+                    (x * wa + y * wb) / w
+                } else {
+                    0.5 * (x + y)
+                }
+            };
+            out.push(IterRecord {
+                start_s: a.start_s,
+                end_s: b.end_s,
+                n_decode: mix(a.n_decode as f64, b.n_decode as f64).round() as usize,
+                n_prefill: mix(a.n_prefill as f64, b.n_prefill as f64).round() as usize,
+                prefill_tokens: a.prefill_tokens + b.prefill_tokens,
+                queue_depth: mix(a.queue_depth as f64, b.queue_depth as f64).round() as usize,
+                kv_frac: mix(a.kv_frac, b.kv_frac),
+            });
+        }
+        out.extend(it.remainder().iter().copied());
+        self.records = out;
+    }
+}
+
 /// End-to-end serving quality of one simulated run.
 #[derive(Debug, Clone)]
 pub struct ServingMetrics {
@@ -78,6 +169,11 @@ pub struct ServingMetrics {
     pub n_completed: usize,
     /// Requests rejected at arrival (can never fit the KV budget).
     pub n_rejected: usize,
+    /// Requests still in flight when the run stopped (nonzero only for
+    /// truncated runs): admitted or queued, neither completed nor
+    /// rejected. Their TTFT samples (when the first token was emitted)
+    /// are included in `ttft` so capped runs keep their tail signal.
+    pub n_in_flight: usize,
     /// KV-pressure preemptions (request re-queued, prefill recomputed).
     pub n_preemptions: usize,
     pub n_iterations: usize,
@@ -89,6 +185,11 @@ pub struct ServingMetrics {
     pub distinct_shapes: usize,
     /// Wall-clock span of the simulated run (s).
     pub makespan_s: f64,
+    /// Time spent inside scheduler iterations (s); `makespan_s` minus
+    /// idle gaps. The fleet layer's load-imbalance signal.
+    pub busy_s: f64,
+    /// Generated output tokens over the run.
+    pub gen_tokens: u64,
     /// Generated output tokens per second over the makespan.
     pub throughput_tps: f64,
     /// SLO-satisfying completed requests per second.
@@ -109,7 +210,12 @@ pub struct ServingMetrics {
     pub energy_pj: f64,
     /// EDP under load: total energy (J) x makespan (s).
     pub edp_under_load: f64,
-    /// Per-iteration occupancy trace (for the ASCII plot).
+    /// KV tokens materialized from a fleet handoff (disaggregated
+    /// prefill/decode migration traffic landing on this replica).
+    pub kv_transfer_tokens: u64,
+    /// Per-iteration occupancy trace (for the ASCII plot); downsampled
+    /// to the configured cap on long runs — use `n_iterations` for the
+    /// exact count, never `iters.len()`.
     pub iters: Vec<IterRecord>,
 }
 
@@ -117,98 +223,122 @@ pub struct ServingMetrics {
 #[derive(Debug, Clone, Copy)]
 pub struct RequestOutcome {
     pub arrival_s: f64,
+    pub input_len: u64,
     pub output_len: u64,
     pub first_token_s: Option<f64>,
     pub finish_s: Option<f64>,
     pub rejected: bool,
 }
 
-/// Aggregate raw scheduler state into `ServingMetrics`.
-#[allow(clippy::too_many_arguments)]
-pub fn finalize(
-    outcomes: &[RequestOutcome],
-    iters: Vec<IterRecord>,
-    slo: &SloSpec,
-    max_batch: usize,
-    makespan_s: f64,
-    energy_pj: f64,
-    ideal_cycles: f64,
-    gen_tokens: u64,
-    n_preemptions: usize,
-    distinct_shapes: usize,
-    truncated: bool,
-) -> ServingMetrics {
-    let mut ttfts = Vec::new();
-    let mut tpots = Vec::new();
-    let mut n_completed = 0usize;
-    let mut n_rejected = 0usize;
-    let mut slo_ok = 0usize;
-    let mut slo_ok_tokens = 0u64;
+/// Per-request latency/SLO tallies shared by the single-replica
+/// `finalize` and the fleet-level aggregation.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct OutcomeStats {
+    pub ttfts: Vec<f64>,
+    pub tpots: Vec<f64>,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub n_in_flight: usize,
+    pub slo_ok: usize,
+    pub slo_ok_tokens: u64,
+}
+
+pub(crate) fn outcome_stats(outcomes: &[RequestOutcome], slo: &SloSpec) -> OutcomeStats {
+    let mut s = OutcomeStats::default();
     for o in outcomes {
         if o.rejected {
-            n_rejected += 1;
+            s.n_rejected += 1;
             continue;
         }
-        let (Some(first), Some(finish)) = (o.first_token_s, o.finish_s) else {
-            continue; // truncated run (iteration cap): not completed
+        let ttft = o.first_token_s.map(|f| f - o.arrival_s);
+        let Some(finish) = o.finish_s else {
+            // still in flight (iteration-capped run): keep the TTFT
+            // sample when the first token was emitted — capped runs
+            // under-report tail TTFT exactly when it matters otherwise
+            s.n_in_flight += 1;
+            if let Some(t) = ttft {
+                s.ttfts.push(t);
+            }
+            continue;
         };
-        n_completed += 1;
-        let ttft = first - o.arrival_s;
-        ttfts.push(ttft);
+        let first = o.first_token_s.unwrap_or(finish);
+        let ttft = ttft.unwrap_or(finish - o.arrival_s);
+        s.n_completed += 1;
+        s.ttfts.push(ttft);
         let tpot = if o.output_len > 1 {
             (finish - first) / (o.output_len - 1) as f64
         } else {
             0.0
         };
-        tpots.push(tpot);
+        s.tpots.push(tpot);
         if ttft <= slo.ttft_s && tpot <= slo.tpot_s {
-            slo_ok += 1;
-            slo_ok_tokens += o.output_len;
+            s.slo_ok += 1;
+            s.slo_ok_tokens += o.output_len;
         }
     }
-    let span = makespan_s.max(1e-12);
-    let n_iter = iters.len();
+    s
+}
+
+/// Scalar run totals carried from the scheduler into [`finalize`].
+#[derive(Debug, Clone, Copy)]
+pub struct RunTotals {
+    pub slo: SloSpec,
+    pub max_batch: usize,
+    pub makespan_s: f64,
+    pub energy_pj: f64,
+    pub ideal_cycles: f64,
+    pub gen_tokens: u64,
+    pub n_preemptions: usize,
+    pub distinct_shapes: usize,
+    pub kv_transfer_tokens: u64,
+    pub truncated: bool,
+}
+
+/// Aggregate raw scheduler state into `ServingMetrics`.
+pub fn finalize(outcomes: &[RequestOutcome], trace: TraceBuffer, t: &RunTotals) -> ServingMetrics {
+    let s = outcome_stats(outcomes, &t.slo);
+    let span = t.makespan_s.max(1e-12);
+    let n_iter = trace.n_iters();
     let mean_queue_depth = if n_iter > 0 {
-        iters.iter().map(|i| i.queue_depth as f64).sum::<f64>() / n_iter as f64
+        trace.sum_queue_depth / n_iter as f64
     } else {
         0.0
     };
-    let max_queue_depth = iters.iter().map(|i| i.queue_depth).max().unwrap_or(0);
     let mean_batch_occupancy = if n_iter > 0 {
-        iters
-            .iter()
-            .map(|i| (i.n_decode + i.n_prefill) as f64 / max_batch.max(1) as f64)
-            .sum::<f64>()
-            / n_iter as f64
+        trace.sum_slots / (n_iter * t.max_batch.max(1)) as f64
     } else {
         0.0
     };
     ServingMetrics {
         n_arrived: outcomes.len(),
-        n_completed,
-        n_rejected,
-        n_preemptions,
+        n_completed: s.n_completed,
+        n_rejected: s.n_rejected,
+        n_in_flight: s.n_in_flight,
+        n_preemptions: t.n_preemptions,
         n_iterations: n_iter,
-        truncated,
-        distinct_shapes,
-        makespan_s,
-        throughput_tps: gen_tokens as f64 / span,
-        goodput_rps: slo_ok as f64 / span,
-        slo_goodput_tps: slo_ok_tokens as f64 / span,
-        ttft: LatencyStats::from(&ttfts),
-        tpot: LatencyStats::from(&tpots),
-        slo_attainment: if n_completed > 0 {
-            slo_ok as f64 / n_completed as f64
+        truncated: t.truncated,
+        distinct_shapes: t.distinct_shapes,
+        makespan_s: t.makespan_s,
+        busy_s: trace.busy_s(),
+        gen_tokens: t.gen_tokens,
+        throughput_tps: t.gen_tokens as f64 / span,
+        goodput_rps: s.slo_ok as f64 / span,
+        slo_goodput_tps: s.slo_ok_tokens as f64 / span,
+        ttft: LatencyStats::from(&s.ttfts),
+        tpot: LatencyStats::from(&s.tpots),
+        slo_attainment: if s.n_completed > 0 {
+            s.slo_ok as f64 / s.n_completed as f64
         } else {
             0.0
         },
         mean_queue_depth,
-        max_queue_depth,
+        max_queue_depth: trace.max_queue_depth,
         mean_batch_occupancy,
-        utilization: ideal_cycles / (span * CLOCK_HZ),
-        energy_pj,
-        edp_under_load: (energy_pj * 1e-12) * makespan_s,
-        iters,
+        utilization: t.ideal_cycles / (span * CLOCK_HZ),
+        energy_pj: t.energy_pj,
+        edp_under_load: (t.energy_pj * 1e-12) * t.makespan_s,
+        kv_transfer_tokens: t.kv_transfer_tokens,
+        iters: trace.records,
     }
 }
 
@@ -253,9 +383,12 @@ mod tests {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 100.0);
-        assert_eq!(percentile(&xs, 0.5), 51.0); // round(0.5 * 99) = 50
+        assert_eq!(percentile(&xs, 0.5), 50.0); // ceil(0.5 * 100) = rank 50
         assert_eq!(percentile(&xs, 0.99), 99.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+        // odd-length sample: p50 of {1,2,3} is the true median
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 0.5), 2.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
     }
 
     #[test]
@@ -267,6 +400,21 @@ mod tests {
         assert_eq!(s.n, 10);
     }
 
+    fn totals(slo: SloSpec, makespan_s: f64) -> RunTotals {
+        RunTotals {
+            slo,
+            max_batch: 8,
+            makespan_s,
+            energy_pj: 1e12,
+            ideal_cycles: 0.0,
+            gen_tokens: 21,
+            n_preemptions: 0,
+            distinct_shapes: 3,
+            kv_transfer_tokens: 0,
+            truncated: false,
+        }
+    }
+
     #[test]
     fn finalize_counts_slo_and_rejections() {
         let slo = SloSpec::new(1.0, 0.1);
@@ -274,6 +422,7 @@ mod tests {
             // meets both SLOs
             RequestOutcome {
                 arrival_s: 0.0,
+                input_len: 16,
                 output_len: 11,
                 first_token_s: Some(0.5),
                 finish_s: Some(1.4), // tpot 0.09
@@ -282,6 +431,7 @@ mod tests {
             // misses TPOT
             RequestOutcome {
                 arrival_s: 0.0,
+                input_len: 16,
                 output_len: 11,
                 first_token_s: Some(0.5),
                 finish_s: Some(3.0), // tpot 0.25
@@ -289,17 +439,19 @@ mod tests {
             },
             RequestOutcome {
                 arrival_s: 0.0,
+                input_len: 16,
                 output_len: 5,
                 first_token_s: None,
                 finish_s: None,
                 rejected: true,
             },
         ];
-        let m = finalize(&outcomes, Vec::new(), &slo, 8, 10.0, 1e12, 0.0, 21, 0, 3, false);
+        let m = finalize(&outcomes, TraceBuffer::new(0), &totals(slo, 10.0));
         assert!(!m.truncated);
         assert_eq!(m.n_arrived, 3);
         assert_eq!(m.n_completed, 2);
         assert_eq!(m.n_rejected, 1);
+        assert_eq!(m.n_in_flight, 0);
         assert!((m.slo_attainment - 0.5).abs() < 1e-12);
         assert!((m.goodput_rps - 0.1).abs() < 1e-12);
         assert!((m.slo_goodput_tps - 1.1).abs() < 1e-12);
@@ -307,5 +459,95 @@ mod tests {
         assert!((m.edp_under_load - 10.0).abs() < 1e-9); // 1 J x 10 s
         assert!(m.objective() < 0.0);
         assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn finalize_keeps_in_flight_ttft_samples() {
+        let slo = SloSpec::new(1.0, 0.1);
+        let outcomes = vec![
+            // completed, fast first token
+            RequestOutcome {
+                arrival_s: 0.0,
+                input_len: 16,
+                output_len: 4,
+                first_token_s: Some(0.2),
+                finish_s: Some(0.5),
+                rejected: false,
+            },
+            // truncated mid-decode: first token seen at 5.0s — the tail
+            // sample a capped run must not lose
+            RequestOutcome {
+                arrival_s: 0.0,
+                input_len: 16,
+                output_len: 64,
+                first_token_s: Some(5.0),
+                finish_s: None,
+                rejected: false,
+            },
+            // truncated while still queued: in flight, no TTFT sample
+            RequestOutcome {
+                arrival_s: 1.0,
+                input_len: 16,
+                output_len: 8,
+                first_token_s: None,
+                finish_s: None,
+                rejected: false,
+            },
+        ];
+        let mut t = totals(slo, 10.0);
+        t.truncated = true;
+        let m = finalize(&outcomes, TraceBuffer::new(0), &t);
+        assert_eq!(m.n_completed, 1);
+        assert_eq!(m.n_in_flight, 2);
+        assert_eq!(m.ttft.n, 2, "in-flight TTFT sample must be included");
+        assert_eq!(m.ttft.p99, 5.0, "tail TTFT comes from the in-flight request");
+        assert_eq!(m.tpot.n, 1, "TPOT needs a completion");
+        assert_eq!(m.objective(), 0.0, "truncated runs score 0");
+    }
+
+    fn rec(start_s: f64, end_s: f64, queue_depth: usize, kv_frac: f64) -> IterRecord {
+        IterRecord {
+            start_s,
+            end_s,
+            n_decode: 2,
+            n_prefill: 1,
+            prefill_tokens: 8,
+            queue_depth,
+            kv_frac,
+        }
+    }
+
+    #[test]
+    fn trace_buffer_caps_records_but_keeps_exact_aggregates() {
+        let mut t = TraceBuffer::new(8);
+        for i in 0..1000 {
+            t.push(rec(i as f64, i as f64 + 1.0, i % 5, 0.5));
+        }
+        assert_eq!(t.n_iters(), 1000);
+        assert!(t.records().len() < 16, "trace grew to {}", t.records().len());
+        assert!((t.busy_s() - 1000.0).abs() < 1e-6);
+        assert_eq!(t.max_queue_depth, 4);
+        // records stay time-ordered with monotone spans
+        for w in t.records().windows(2) {
+            assert!(w[1].start_s >= w[0].start_s);
+            assert!(w[0].end_s >= w[0].start_s);
+        }
+        // prefill tokens are conserved by pairwise merging
+        let toks: u64 = t.records().iter().map(|r| r.prefill_tokens).sum();
+        assert_eq!(toks, 8 * 1000);
+        // kv_frac is a weighted average, so it stays in [0, 1]
+        for r in t.records() {
+            assert!(r.kv_frac >= 0.0 && r.kv_frac <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_buffer_unbounded_when_cap_zero() {
+        let mut t = TraceBuffer::new(0);
+        for i in 0..100 {
+            t.push(rec(i as f64, i as f64 + 0.5, 0, 0.1));
+        }
+        assert_eq!(t.records().len(), 100);
+        assert_eq!(t.n_iters(), 100);
     }
 }

@@ -16,13 +16,15 @@
 //! `dse::compass_dse_serving`.
 
 pub mod coster;
+pub mod fleet;
 pub mod metrics;
 pub mod sched;
 pub mod stream;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
+pub use fleet::{simulate_fleet, FleetConfig, FleetMetrics, RouterPolicy};
 pub use metrics::{IterRecord, LatencyStats, ServingMetrics, SloSpec};
-pub use sched::simulate_serving;
+pub use sched::{simulate_serving, ReplicaResult, Scheduler};
 pub use stream::{RequestStream, TimedRequest};
 
 use crate::arch::constants::CLOCK_HZ;
@@ -54,6 +56,11 @@ pub struct SimConfig {
     pub slo: SloSpec,
     /// Safety valve on scheduler iterations per run.
     pub max_iterations: usize,
+    /// Occupancy-trace record cap (0 = keep every iteration): long runs
+    /// downsample the stored `IterRecord`s by deterministic pairwise
+    /// merging, bounding memory at ~`2 * trace_cap` records per replica
+    /// while the aggregate metrics stay exact.
+    pub trace_cap: usize,
 }
 
 impl SimConfig {
@@ -70,6 +77,7 @@ impl SimConfig {
             eval_blocks: 2,
             slo: SloSpec::new(1.0, 0.1),
             max_iterations: 1_000_000,
+            trace_cap: 4096,
         }
     }
 

@@ -1,0 +1,206 @@
+//! Property tests for the multi-replica fleet simulator: fleet-level
+//! request conservation (completed + rejected == arrived across
+//! replicas), bit-identical reruns, single-replica equivalence with
+//! `simulate_serving`, and disaggregation invariants — over randomized
+//! streams, router policies, fleet shapes and KV budgets.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{self, FleetConfig, FleetMetrics, MappingPolicy, RouterPolicy, SimConfig, SloSpec};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+fn run(
+    fleet: &FleetConfig,
+    strategy: ServingStrategy,
+    kv_tokens: u64,
+    rate_scale: f64,
+    n: usize,
+    seed: u64,
+) -> FleetMetrics {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(strategy, kv_tokens);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let rate = rate_scale * fleet.total_replicas() as f64 * probe.capacity_rps();
+    let stream = sim::RequestStream::poisson(&tiny_spec(), rate, n, seed);
+    sim::simulate_fleet(&stream, &model, &hw, &cfg, fleet)
+}
+
+fn shapes() -> Vec<FleetConfig> {
+    vec![
+        FleetConfig::homogeneous(2, RouterPolicy::RoundRobin),
+        FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue),
+        FleetConfig::disaggregated(1, 2, 1e-7),
+    ]
+}
+
+/// Fleet-level conservation: arrived == completed + rejected across
+/// replicas, for every router policy over randomized seeds, rates,
+/// strategies and KV budgets (including budgets tight enough to force
+/// rejections and preemptions on individual replicas).
+#[test]
+fn fleet_conservation_across_randomized_runs() {
+    let mut rng = Rng::seed_from_u64(1234);
+    let shapes = shapes();
+    for trial in 0..9 {
+        let fleet = &shapes[trial % shapes.len()];
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let kv_tokens = *rng.choose(&[4096u64, 512, 160]);
+        let rate_scale = 0.3 + rng.gen_f64() * 2.0;
+        let n = 8 + rng.gen_index(10);
+        let seed = rng.next_u64();
+        let m = run(fleet, strategy, kv_tokens, rate_scale, n, seed);
+        assert_eq!(
+            m.n_completed + m.n_rejected,
+            m.n_arrived,
+            "{} {strategy:?} kv={kv_tokens} scale={rate_scale} n={n} seed={seed}",
+            fleet.describe()
+        );
+        assert!(
+            !m.truncated,
+            "iteration cap hit: {} {strategy:?} kv={kv_tokens}",
+            fleet.describe()
+        );
+        // per-replica arrivals partition the stream (prefill stage sees
+        // every request; homogeneous fleets split it)
+        let replica_arrivals: usize = match fleet.router {
+            RouterPolicy::PrefillDecode => m.per_replica[..fleet.n_prefill]
+                .iter()
+                .map(|r| r.n_arrived)
+                .sum(),
+            _ => m.per_replica.iter().map(|r| r.n_arrived).sum(),
+        };
+        assert_eq!(replica_arrivals, m.n_arrived, "{}", fleet.describe());
+    }
+}
+
+/// Bit-identical fleet metrics across repeated runs with the same seed,
+/// and different results for a different stream seed.
+#[test]
+fn fleet_metrics_bit_identical_for_same_seed() {
+    for fleet in shapes() {
+        let a = run(&fleet, ServingStrategy::ChunkedPrefill, 768, 1.2, 12, 21);
+        let b = run(&fleet, ServingStrategy::ChunkedPrefill, 768, 1.2, 12, 21);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{}", fleet.describe());
+        assert_eq!(
+            a.throughput_tps.to_bits(),
+            b.throughput_tps.to_bits(),
+            "{}",
+            fleet.describe()
+        );
+        assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits(), "{}", fleet.describe());
+        assert_eq!(a.tpot.p99.to_bits(), b.tpot.p99.to_bits(), "{}", fleet.describe());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{}", fleet.describe());
+        assert_eq!(a.kv_transfer_tokens, b.kv_transfer_tokens, "{}", fleet.describe());
+        for (x, y) in a.per_replica.iter().zip(&b.per_replica) {
+            assert_eq!(x.n_iterations, y.n_iterations, "{}", fleet.describe());
+            assert_eq!(x.n_preemptions, y.n_preemptions, "{}", fleet.describe());
+        }
+        let c = run(&fleet, ServingStrategy::ChunkedPrefill, 768, 1.2, 12, 22);
+        assert_ne!(
+            a.makespan_s.to_bits(),
+            c.makespan_s.to_bits(),
+            "{} should differ across seeds",
+            fleet.describe()
+        );
+    }
+}
+
+/// A one-replica fleet is the single-package simulator, bit for bit:
+/// both run the same `Scheduler` under the same driver.
+#[test]
+fn one_replica_fleet_equals_simulate_serving() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    for strategy in ServingStrategy::ALL {
+        let cfg = cfg_for(strategy, 1024);
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let stream =
+            sim::RequestStream::poisson(&tiny_spec(), 1.4 * probe.capacity_rps(), 11, 9);
+        let single = sim::simulate_serving(&stream, &model, &hw, &cfg);
+        let fleet = sim::simulate_fleet(
+            &stream,
+            &model,
+            &hw,
+            &cfg,
+            &FleetConfig::homogeneous(1, RouterPolicy::RoundRobin),
+        );
+        let m = &fleet.per_replica[0];
+        assert_eq!(m.makespan_s.to_bits(), single.makespan_s.to_bits(), "{strategy:?}");
+        assert_eq!(m.energy_pj.to_bits(), single.energy_pj.to_bits(), "{strategy:?}");
+        assert_eq!(m.n_iterations, single.n_iterations, "{strategy:?}");
+        assert_eq!(m.n_preemptions, single.n_preemptions, "{strategy:?}");
+        assert_eq!(fleet.n_completed, single.n_completed, "{strategy:?}");
+        assert_eq!(fleet.ttft.p99.to_bits(), single.ttft.p99.to_bits(), "{strategy:?}");
+        assert_eq!(fleet.tpot.p99.to_bits(), single.tpot.p99.to_bits(), "{strategy:?}");
+    }
+}
+
+/// Disaggregation invariants: prefill replicas never decode more than
+/// one token per request, decode replicas never run prefill compute,
+/// and the KV handoff covers every migrated context.
+#[test]
+fn disaggregation_splits_phases() {
+    let fleet = FleetConfig::disaggregated(1, 2, 1e-7);
+    let m = run(&fleet, ServingStrategy::ChunkedPrefill, 2048, 1.2, 14, 33);
+    assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+    assert!(m.kv_transfer_tokens > 0, "no KV migrated");
+    let (pre, dec) = m.per_replica.split_at(fleet.n_prefill);
+    // prefill pool: every request runs exactly to its first token
+    for r in pre {
+        for it in &r.iters {
+            assert!(
+                it.n_decode == 0,
+                "prefill replica ran a decode iteration"
+            );
+        }
+    }
+    // decode pool: pure decode, KV arrives by transfer
+    for r in dec {
+        assert_eq!(r.kv_transfer_tokens > 0, r.n_arrived > 0);
+        for it in &r.iters {
+            assert_eq!(it.n_prefill, 0, "decode replica ran prefill compute");
+            assert_eq!(it.prefill_tokens, 0);
+        }
+    }
+    // TPOT includes the handoff: a pricier link can only raise the tail
+    let slow = FleetConfig::disaggregated(1, 2, 1e-4);
+    let ms = run(&slow, ServingStrategy::ChunkedPrefill, 2048, 1.2, 14, 33);
+    assert!(ms.tpot.p99 >= m.tpot.p99 - 1e-12);
+}
