@@ -26,6 +26,7 @@ fn main() {
         sigma_in: 0.5,
         sigma_out: 0.4,
         max_len: 16_384,
+        shared_prefix_tokens: 0,
     };
     let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
     cfg.max_batch = 16;

@@ -57,6 +57,7 @@ fn setup(tiny: bool) -> Setup {
                 sigma_in: 0.5,
                 sigma_out: 0.4,
                 max_len: 4096,
+                shared_prefix_tokens: 0,
             },
             hw: HwConfig::homogeneous(
                 2,

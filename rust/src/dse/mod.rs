@@ -13,8 +13,8 @@ use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
 use crate::sim::{
-    self, FleetConfig, FleetMetrics, MappingPolicy, RequestStream, RouterPolicy, ServingMetrics,
-    SimConfig,
+    self, FleetConfig, FleetMetrics, KvSpec, MappingPolicy, RequestStream, RouterPolicy,
+    ServingMetrics, SimConfig,
 };
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
@@ -179,6 +179,31 @@ pub fn compass_dse_serving(
         bo_history: result.history,
         backend: result.backend,
     }
+}
+
+/// Sweep KV-cache layouts (block size x dtype x sharing x eviction) on
+/// fixed hardware, scoring each by the serving objective, and return
+/// the winner plus every candidate's metrics. The KV analogue of the
+/// shape loop in [`compass_dse_fleet`]: capacity-side design choices
+/// change which configurations win before any hardware is re-searched.
+pub fn search_kv(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    sim_cfg: &SimConfig,
+    specs: &[KvSpec],
+) -> (KvSpec, Vec<(KvSpec, ServingMetrics)>) {
+    let mut rows: Vec<(KvSpec, ServingMetrics)> = Vec::with_capacity(specs.len());
+    for &spec in specs {
+        let cfg = sim_cfg.with_kv(spec);
+        rows.push((spec, sim::simulate_serving(stream, model, hw, &cfg)));
+    }
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.objective().total_cmp(&b.1.objective()))
+        .map(|(s, _)| *s)
+        .unwrap_or(sim_cfg.kv);
+    (best, rows)
 }
 
 // ---------------------------------------------------------------------
@@ -359,6 +384,7 @@ mod tests {
             sigma_in: 0.4,
             sigma_out: 0.3,
             max_len: 2048,
+            shared_prefix_tokens: 0,
         };
         let mut cfg = SimConfig::new(crate::workload::serving::ServingStrategy::ChunkedPrefill);
         cfg.max_batch = 8;
@@ -446,6 +472,39 @@ mod tests {
         );
         for w in out.bo_history.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn kv_search_scores_every_spec_and_picks_the_best() {
+        let (stream, model, mut cfg) = tiny_sim_setup();
+        cfg.policy = MappingPolicy::Pipeline;
+        let hw = crate::arch::HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let specs = [
+            KvSpec::token_granular(),
+            KvSpec::paged(16),
+            KvSpec::token_granular().with_dtype(crate::sim::KvDtype::Int4),
+        ];
+        let (best, rows) = search_kv(&stream, &model, &hw, &cfg, &specs);
+        assert_eq!(rows.len(), specs.len());
+        let best_obj = rows
+            .iter()
+            .map(|(_, m)| m.objective())
+            .fold(f64::INFINITY, f64::min);
+        let found = rows
+            .iter()
+            .find(|(s, _)| s.describe() == best.describe())
+            .expect("winner is one of the candidates");
+        assert_eq!(found.1.objective().to_bits(), best_obj.to_bits());
+        for (_, m) in &rows {
+            assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
         }
     }
 

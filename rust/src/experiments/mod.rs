@@ -697,6 +697,8 @@ pub fn sim_study_table(scene: &SimScene, rows: &[SimStudyRow]) -> Table {
             "Goodput (tok/s)",
             "Util %",
             "EDP load (sJ)",
+            "KV frag %",
+            "Share %",
             "Preempt",
             "Queue max",
         ],
@@ -714,6 +716,8 @@ pub fn sim_study_table(scene: &SimScene, rows: &[SimStudyRow]) -> Table {
             format!("{:.1}", m.slo_goodput_tps),
             format!("{:.1}", 100.0 * m.utilization),
             format!("{:.3e}", m.edp_under_load),
+            format!("{:.1}", 100.0 * m.kv_fragmentation),
+            format!("{:.1}", 100.0 * m.kv_sharing_hit_rate),
             m.n_preemptions.to_string(),
             m.max_queue_depth.to_string(),
         ]);
@@ -740,6 +744,169 @@ pub fn sim_study_occupancy(
         ),
         None => String::new(),
     }
+}
+
+// ---------------------------------------------------------------------
+// KV paging & quantization study — cache layout x arrival rate
+// (EXPERIMENTS.md "KV paging & quantization")
+// ---------------------------------------------------------------------
+
+/// One cell of the KV-cache layout sweep.
+#[derive(Debug, Clone)]
+pub struct KvStudyRow {
+    pub kv: sim::KvSpec,
+    pub rate_rps: f64,
+    /// Token capacity this layout gets from the same DRAM budget.
+    pub capacity_tokens: u64,
+    pub metrics: sim::ServingMetrics,
+}
+
+/// The default candidate set: the fp16 token-granular baseline (the
+/// pre-paging semantics), quantized token-granular caches, paged fp16
+/// and paged-int4, and — when the trace carries a shared system prompt —
+/// a paged + prefix-sharing + cost-based-eviction layout.
+pub fn default_kv_specs(block_tokens: u64, prefix_tokens: u64) -> Vec<sim::KvSpec> {
+    use crate::sim::{EvictionPolicy, KvDtype, KvSpec};
+    let bt = block_tokens.max(2);
+    let mut specs = vec![
+        KvSpec::token_granular(),
+        KvSpec::token_granular().with_dtype(KvDtype::Fp8),
+        KvSpec::token_granular().with_dtype(KvDtype::Int4),
+        KvSpec::paged(bt),
+        KvSpec::paged(bt).with_dtype(KvDtype::Int4),
+    ];
+    if prefix_tokens > 0 {
+        specs.push(
+            KvSpec::paged(bt)
+                .with_prefix(prefix_tokens)
+                .with_eviction(EvictionPolicy::CostBased),
+        );
+        specs.push(
+            KvSpec::paged(bt)
+                .with_dtype(KvDtype::Int4)
+                .with_prefix(prefix_tokens)
+                .with_eviction(EvictionPolicy::CostBased),
+        );
+    }
+    specs
+}
+
+/// Sweep KV-cache layouts x arrival rates on one [`SimScene`] with
+/// fixed hardware. Every request carries a `prefix_tokens`-token shared
+/// system prompt (inflating all prompts identically, so sharing-off
+/// layouts pay for it and sharing-on layouts deduplicate it). SLO
+/// targets and rates are calibrated once from the fp16 token-granular
+/// baseline and shared by every cell; rates default to {0.8, 1.3} x
+/// the baseline capacity so the overload point is always swept.
+/// Deterministic for a fixed `seed`.
+pub fn kv_paging_study(
+    scene: &SimScene,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    specs: &[sim::KvSpec],
+    prefix_tokens: u64,
+    seed: u64,
+) -> Vec<KvStudyRow> {
+    kv_paging_study_with_model(scene, &scene.model(), hw, base, specs, prefix_tokens, seed)
+}
+
+/// [`kv_paging_study`] with an explicit model override (the CI tiny
+/// smoke swaps in `ModelSpec::tiny`; everything else about the
+/// protocol — calibration, rates, streams — is shared, so the smoke
+/// and the acceptance run can never drift apart).
+pub fn kv_paging_study_with_model(
+    scene: &SimScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    specs: &[sim::KvSpec],
+    prefix_tokens: u64,
+    seed: u64,
+) -> Vec<KvStudyRow> {
+    let trace_spec = scene.spec().with_prefix(prefix_tokens);
+    let mut base_cfg = *base;
+    base_cfg.kv = sim::KvSpec::token_granular();
+    let probe = sim::probe(model, hw, &base_cfg, &trace_spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let mu = probe.capacity_rps();
+        vec![0.8 * mu, 1.3 * mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        let stream = scene_stream(&trace_spec, scene, rate, seed);
+        for &kv in specs {
+            let c = cfg.with_kv(kv);
+            let metrics = sim::simulate_serving(&stream, model, hw, &c);
+            rows.push(KvStudyRow {
+                kv,
+                rate_rps: rate,
+                // the block-floored capacity the run actually used, so
+                // the table never disagrees with the metrics
+                capacity_tokens: metrics.kv_capacity_tokens,
+                metrics,
+            });
+        }
+    }
+    rows
+}
+
+/// Build the study stream from an already-prefixed trace spec.
+fn scene_stream(
+    trace_spec: &TraceSpec,
+    scene: &SimScene,
+    rate_rps: f64,
+    seed: u64,
+) -> sim::RequestStream {
+    sim::RequestStream::poisson(trace_spec, rate_rps, scene.n_requests, seed)
+}
+
+/// Format the KV sweep as the study table.
+pub fn kv_study_table(scene: &SimScene, rows: &[KvStudyRow]) -> Table {
+    let title = format!(
+        "KV paging & quantization [{}] - cache layout x arrival rate (fixed hw)",
+        scene.label()
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "Rate (r/s)",
+            "KV layout",
+            "Cap (tok)",
+            "Tok/s",
+            "Goodput (tok/s)",
+            "TTFT p99 (s)",
+            "TPOT p99 (s)",
+            "SLO %",
+            "Frag %",
+            "Share %",
+            "EffConc",
+            "Preempt",
+            "Rej",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            format!("{:.3}", r.rate_rps),
+            r.kv.describe(),
+            r.capacity_tokens.to_string(),
+            format!("{:.1}", m.throughput_tps),
+            format!("{:.1}", m.slo_goodput_tps),
+            format!("{:.4}", m.ttft.p99),
+            format!("{:.5}", m.tpot.p99),
+            format!("{:.1}", 100.0 * m.slo_attainment),
+            format!("{:.1}", 100.0 * m.kv_fragmentation),
+            format!("{:.1}", 100.0 * m.kv_sharing_hit_rate),
+            format!("{:.1}", m.effective_concurrency),
+            m.n_preemptions.to_string(),
+            m.n_rejected.to_string(),
+        ]);
+    }
+    t
 }
 
 // ---------------------------------------------------------------------
@@ -830,6 +997,8 @@ pub fn fleet_study_table(scene: &FleetScene, rows: &[FleetStudyRow]) -> Table {
             "SLO %",
             "Imbalance",
             "KV-handoff (tok)",
+            "KV frag %",
+            "Share %",
             "Energy (pJ)",
             "Rej",
         ],
@@ -846,6 +1015,8 @@ pub fn fleet_study_table(scene: &FleetScene, rows: &[FleetStudyRow]) -> Table {
             format!("{:.1}", 100.0 * m.slo_attainment),
             format!("{:.3}", m.load_imbalance),
             m.kv_transfer_tokens.to_string(),
+            format!("{:.1}", 100.0 * m.kv_fragmentation),
+            format!("{:.1}", 100.0 * m.kv_sharing_hit_rate),
             format!("{:.3e}", m.energy_pj),
             m.n_rejected.to_string(),
         ]);
@@ -961,6 +1132,53 @@ mod tests {
         let occ = sim_study_occupancy(&rows, ServingStrategy::ChunkedPrefill, cfg.max_batch);
         assert!(occ.contains("occupancy"));
         assert!(occ.contains("batch |"));
+    }
+
+    #[test]
+    fn kv_study_covers_layout_rate_grid() {
+        let mut scene = SimScene::new("sharegpt", 64.0, 6);
+        // second rate floods all requests in at once: admissions overlap,
+        // so the materialized prefix is referenced by later requests
+        scene.rates_rps = vec![3.0, 500.0];
+        let hw = sim_default_hw(64.0);
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        // chunked admissions spread over iterations, so the prefix is
+        // Ready before the later admissions (they skip it)
+        cfg.chunk_tokens = 64;
+        // tight DRAM so the cache layout actually binds
+        cfg.kv_budget_tokens = 0;
+        cfg.dram_gb = 2048.0 * ModelSpec::gpt3_7b().kv_bytes_per_token() as f64 / 1e9;
+        let specs = default_kv_specs(16, 64);
+        assert_eq!(specs.len(), 7);
+        let rows = kv_paging_study(&scene, &hw, &cfg, &specs, 64, 3);
+        assert_eq!(rows.len(), 2 * specs.len());
+        for r in &rows {
+            assert_eq!(
+                r.metrics.n_completed + r.metrics.n_rejected,
+                r.metrics.n_arrived,
+                "{}@{}",
+                r.kv.describe(),
+                r.rate_rps
+            );
+        }
+        // quantized layouts get more tokens from the same DRAM
+        let cap_of = |name: &str| {
+            rows.iter()
+                .find(|r| r.kv.describe() == name)
+                .map(|r| r.capacity_tokens)
+                .unwrap()
+        };
+        assert!(cap_of("int4/bt1") >= 4 * cap_of("fp16/bt1"));
+        // sharing layouts record hits on the prefixed trace
+        assert!(rows
+            .iter()
+            .filter(|r| r.kv.prefix_tokens > 0)
+            .any(|r| r.metrics.kv_shared_tokens > 0));
+        let t = kv_study_table(&scene, &rows);
+        assert_eq!(t.rows.len(), rows.len());
     }
 
     #[test]

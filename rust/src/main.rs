@@ -11,6 +11,7 @@
 //! repro serving-study [--decode-groups N]       # Fig 10 + Table VII
 //! repro sim-study [--rates A,B,C] [--requests N]# serving simulator sweep
 //! repro fleet-study [--replicas N] ...          # multi-replica fleet sweep
+//! repro kv-study  [--block-tokens N] [--prefix N] # KV paging/quantization
 //! repro ablation                                # Fig 11   ablations
 //! repro all                                     # everything above
 //! ```
@@ -34,6 +35,7 @@ commands:
   serving-study   Fig 10    vLLM / Orca / ChunkedPrefill (+ Table VII)
   sim-study       serving simulator: arrival rate x strategy sweep
   fleet-study     fleet serving: rate x router policy x fleet shape
+  kv-study        KV cache: paged-vs-token x dtype x sharing sweep
   ablation        Fig 11    GA->random, BO->random, SCAR mapping
   all             everything above
 
@@ -55,6 +57,12 @@ flags:
                       budget, split evenly (default 4)
   --handoff S         fleet-study KV handoff cost, s per migrated token
                       (default 1e-8)
+  --block-tokens N    kv-study paged block size in tokens (default 16)
+  --prefix N          kv-study shared system-prompt prefix length
+                      (default 64; 0 disables the sharing layouts)
+  --kv-gb G           kv-study DRAM reserved for KV; default auto-sizes
+                      so the fp16 baseline holds ~8x the mean request
+                      footprint (KV-bound on purpose)
 ";
 
 struct Args {
@@ -73,6 +81,9 @@ struct Args {
     requests: usize,
     replicas: usize,
     handoff: f64,
+    block_tokens: u64,
+    prefix: u64,
+    kv_gb: f64,
 }
 
 fn parse_args() -> Args {
@@ -92,6 +103,9 @@ fn parse_args() -> Args {
         requests: 24,
         replicas: 4,
         handoff: 1e-8,
+        block_tokens: 16,
+        prefix: 64,
+        kv_gb: 0.0,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -121,6 +135,9 @@ fn parse_args() -> Args {
             "--requests" => args.requests = next_val(&mut it, a),
             "--replicas" => args.replicas = next_val(&mut it, a),
             "--handoff" => args.handoff = next_val(&mut it, a),
+            "--block-tokens" => args.block_tokens = next_val(&mut it, a),
+            "--prefix" => args.prefix = next_val(&mut it, a),
+            "--kv-gb" => args.kv_gb = next_val(&mut it, a),
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -227,6 +244,65 @@ fn run_fleet_study(args: &Args) {
     );
 }
 
+fn run_kv_study(args: &Args) {
+    let mut scene = exp::SimScene::new(&args.trace, args.tops, args.requests);
+    scene.rates_rps = args.rates.clone();
+    let hw = exp::sim_default_hw(args.tops);
+    let model = scene.model();
+    let spec = scene.spec();
+    let mut cfg = compass::sim::SimConfig::new(
+        compass::workload::serving::ServingStrategy::ChunkedPrefill,
+    );
+    // KV-bound on purpose: size the DRAM so the fp16 token-granular
+    // baseline holds ~8x the mean request footprint — then dtype, block
+    // size and sharing decide the effective concurrency
+    cfg.kv_budget_tokens = 0;
+    let mean_footprint = spec.mean_in + spec.mean_out + args.prefix as f64;
+    cfg.dram_gb = if args.kv_gb > 0.0 {
+        args.kv_gb
+    } else {
+        8.0 * mean_footprint * model.kv_bytes_per_token() as f64 / 1e9
+    };
+    println!(
+        "kv-study [{}] on fixed hw: {} | kv dram {:.4} GB | prefix {} tok | block {} tok",
+        scene.label(),
+        hw.describe(),
+        cfg.dram_gb,
+        args.prefix,
+        args.block_tokens,
+    );
+    let specs = exp::default_kv_specs(args.block_tokens, args.prefix);
+    let rows = exp::kv_paging_study(&scene, &hw, &cfg, &specs, args.prefix, args.seed);
+    save(&exp::kv_study_table(&scene, &rows), &args.out_dir, "kv_study");
+    // headline: best non-baseline layout vs the fp16 token-granular
+    // baseline at the overload (highest) rate
+    let hi = rows
+        .iter()
+        .map(|r| r.rate_rps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at_hi: Vec<_> = rows.iter().filter(|r| r.rate_rps == hi).collect();
+    let base = at_hi
+        .iter()
+        .find(|r| r.kv == compass::sim::KvSpec::token_granular())
+        .expect("baseline layout present");
+    if let Some(best) = at_hi
+        .iter()
+        .filter(|r| r.kv != base.kv)
+        .max_by(|a, b| a.metrics.slo_goodput_tps.total_cmp(&b.metrics.slo_goodput_tps))
+    {
+        println!(
+            "\nkv-study @ {:.3} req/s (overload): best layout {} goodput {:.1} tok/s \
+             vs fp16 token-granular {:.1} tok/s ({:+.1}%)",
+            hi,
+            best.kv.describe(),
+            best.metrics.slo_goodput_tps,
+            base.metrics.slo_goodput_tps,
+            100.0 * (best.metrics.slo_goodput_tps - base.metrics.slo_goodput_tps)
+                / base.metrics.slo_goodput_tps.max(1e-9),
+        );
+    }
+}
+
 fn main() {
     let args = parse_args();
     let cfg = if args.full {
@@ -298,6 +374,9 @@ fn main() {
         "fleet-study" => {
             run_fleet_study(&args);
         }
+        "kv-study" => {
+            run_kv_study(&args);
+        }
         "ablation" => {
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
@@ -330,6 +409,7 @@ fn main() {
             }
             run_sim_study(&args);
             run_fleet_study(&args);
+            run_kv_study(&args);
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
         other => {

@@ -141,10 +141,12 @@ pub fn ascii_timeline(
     out
 }
 
-/// Render a serving-simulator run as an ASCII occupancy plot: three
+/// Render a serving-simulator run as an ASCII occupancy plot: four
 /// sparkline rows (batch-slot occupancy, admission-queue depth,
-/// KV-cache fill) over wall-clock time, each bucketed into `width`
-/// columns with time-weighted averaging. Idle gaps count as zero.
+/// KV-cache fill, KV-block internal fragmentation) over wall-clock
+/// time, each bucketed into `width` columns with time-weighted
+/// averaging. Idle gaps count as zero; the fragmentation row is blank
+/// for token-granular caches.
 pub fn ascii_occupancy(
     iters: &[crate::sim::IterRecord],
     max_batch: usize,
@@ -155,10 +157,15 @@ pub fn ascii_occupancy(
     let t_end = iters.iter().map(|i| i.end_s).fold(0.0, f64::max).max(1e-12);
     let max_queue = iters.iter().map(|i| i.queue_depth).max().unwrap_or(0).max(1) as f64;
     let col_w = t_end / width as f64;
-    let mut rows = [vec![0.0f64; width], vec![0.0f64; width], vec![0.0f64; width]];
+    let mut rows = [
+        vec![0.0f64; width],
+        vec![0.0f64; width],
+        vec![0.0f64; width],
+        vec![0.0f64; width],
+    ];
     for it in iters {
         let occ = (it.n_decode + it.n_prefill) as f64 / max_batch.max(1) as f64;
-        let vals = [occ, it.queue_depth as f64 / max_queue, it.kv_frac];
+        let vals = [occ, it.queue_depth as f64 / max_queue, it.kv_frac, it.kv_frag];
         let c0 = ((it.start_s / col_w) as usize).min(width - 1);
         let c1 = ((it.end_s / col_w) as usize).min(width - 1);
         for c in c0..=c1 {
@@ -171,7 +178,7 @@ pub fn ascii_occupancy(
         }
     }
     let mut out = String::new();
-    for (name, row) in ["batch", "queue", "kv   "].iter().zip(&rows) {
+    for (name, row) in ["batch", "queue", "kv   ", "frag "].iter().zip(&rows) {
         out.push_str(&format!("{name} |"));
         for &v in row {
             let idx = (v.clamp(0.0, 1.0) * (RAMP.len() - 1) as f64).round() as usize;
@@ -180,7 +187,7 @@ pub fn ascii_occupancy(
         out.push_str("|\n");
     }
     out.push_str(&format!(
-        "span {:.3}s | batch /{} | queue /{} | kv = cache fill\n",
+        "span {:.3}s | batch /{} | queue /{} | kv = cache fill | frag = block waste\n",
         t_end,
         max_batch,
         max_queue as usize
@@ -240,6 +247,8 @@ mod tests {
                 prefill_tokens: 0,
                 queue_depth: 4,
                 kv_frac: 1.0,
+                kv_frag: 1.0,
+                n_running: 8,
             },
             crate::sim::IterRecord {
                 start_s: 1.0,
@@ -249,18 +258,22 @@ mod tests {
                 prefill_tokens: 64,
                 queue_depth: 0,
                 kv_frac: 0.0,
+                kv_frag: 0.0,
+                n_running: 1,
             },
         ];
         let s = ascii_occupancy(&iters, 8, 20);
         let lines: Vec<&str> = s.lines().collect();
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 5);
         assert!(lines[0].starts_with("batch |"));
-        // first half of the batch row is saturated ('@'), kv too
+        assert!(lines[3].starts_with("frag "));
+        // first half of the batch row is saturated ('@'), kv + frag too
         assert!(lines[0].contains('@'));
         assert!(lines[2].contains('@'));
-        assert!(lines[3].contains("span"));
+        assert!(lines[3].contains('@'));
+        assert!(lines[4].contains("span"));
         // every sparkline row has exactly `width` cells between pipes
-        for line in &lines[..3] {
+        for line in &lines[..4] {
             let inner = line.split('|').nth(1).unwrap();
             assert_eq!(inner.chars().count(), 20);
         }

@@ -59,6 +59,10 @@ pub struct BatchCoster<'a> {
     policy: MappingPolicy,
     eval_blocks: usize,
     ctx_bucket: u64,
+    /// KV-cache element width (bits): quantized caches (fp8/int4) move
+    /// proportionally fewer KV bytes per iteration, so decode-phase
+    /// attention gets cheaper along with the capacity gain.
+    kv_bits: u64,
     memo: HashMap<CompKey, IterCost>,
     lookups: usize,
 }
@@ -70,6 +74,7 @@ impl<'a> BatchCoster<'a> {
         policy: MappingPolicy,
         eval_blocks: usize,
         ctx_bucket: u64,
+        kv_dtype: super::kv::KvDtype,
     ) -> Self {
         BatchCoster {
             model,
@@ -77,6 +82,7 @@ impl<'a> BatchCoster<'a> {
             policy,
             eval_blocks,
             ctx_bucket,
+            kv_bits: kv_dtype.bits(),
             memo: HashMap::new(),
             lookups: 0,
         }
@@ -134,7 +140,17 @@ impl<'a> BatchCoster<'a> {
             .collect();
         let has_prefill = qbatch.iter().any(|r| r.is_prefill());
         let params = group_params(self.hw, has_prefill, self.eval_blocks);
-        let w = build_workload(self.model, &qbatch, &params);
+        let mut w = build_workload(self.model, &qbatch, &params);
+        if self.kv_bits != 16 {
+            // scale the fp16-sized KV traffic to the cache dtype; the
+            // uniform factor keeps shape-class cost memoization sound
+            for mb in w.micro_batches.iter_mut() {
+                for l in mb.layers.iter_mut() {
+                    l.kv_read_bytes = l.kv_read_bytes * self.kv_bits / 16;
+                    l.kv_write_bytes = l.kv_write_bytes * self.kv_bits / 16;
+                }
+            }
+        }
         let (rows, cols) = (w.num_micro_batches(), w.layers_per_mb);
         let chips = self.hw.num_chiplets();
         let (latency_cycles, energy_pj) = match self.policy {
@@ -182,6 +198,7 @@ fn key_hash(key: &CompKey) -> u64 {
 mod tests {
     use super::*;
     use crate::arch::{ChipletClass, Dataflow};
+    use crate::sim::kv::KvDtype;
 
     fn setup() -> (ModelSpec, HwConfig) {
         let model = ModelSpec::tiny();
@@ -199,7 +216,7 @@ mod tests {
     #[test]
     fn memo_hits_on_quantized_repeats() {
         let (model, hw) = setup();
-        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 64);
+        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 64, KvDtype::Fp16);
         let a = c.cost(&[Request::decode(100), Request::decode(120)]);
         // same bucket (128) for both contexts -> same shape, no re-sim
         let b = c.cost(&[Request::decode(97), Request::decode(128)]);
@@ -215,7 +232,7 @@ mod tests {
     #[test]
     fn key_is_order_invariant() {
         let (model, hw) = setup();
-        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32);
+        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32, KvDtype::Fp16);
         let x = c.cost(&[Request::prefill(60), Request::decode(40)]);
         let y = c.cost(&[Request::decode(40), Request::prefill(60)]);
         assert_eq!(c.distinct_shapes(), 1);
@@ -223,12 +240,31 @@ mod tests {
     }
 
     #[test]
+    fn quantized_kv_never_costs_more_than_fp16() {
+        let (model, hw) = setup();
+        // long-context decode batch: KV traffic dominates the iteration
+        let batch = vec![Request::decode(2048); 8];
+        let mut fp16 = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32, KvDtype::Fp16);
+        let mut int4 = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32, KvDtype::Int4);
+        let a = fp16.cost(&batch);
+        let b = int4.cost(&batch);
+        assert!(
+            b.latency_cycles <= a.latency_cycles,
+            "int4 KV slower than fp16: {} > {}",
+            b.latency_cycles,
+            a.latency_cycles
+        );
+        assert!(b.energy_pj <= a.energy_pj);
+        assert_eq!(a.macs, b.macs, "quantization must not change the math");
+    }
+
+    #[test]
     fn searched_policy_is_deterministic() {
         let (model, hw) = setup();
         let cfg = crate::ga::GaConfig::tiny();
         let batch = vec![Request::decode(50); 4];
-        let mut c1 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32);
-        let mut c2 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32);
+        let mut c1 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32, KvDtype::Fp16);
+        let mut c2 = BatchCoster::new(&model, &hw, MappingPolicy::Searched(cfg), 1, 32, KvDtype::Fp16);
         let a = c1.cost(&batch);
         let b = c2.cost(&batch);
         assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());

@@ -29,6 +29,7 @@ use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
 use super::coster::BatchCoster;
+use super::kv::KvCache;
 use super::metrics::{outcome_stats, LatencyStats, RequestOutcome, ServingMetrics};
 use super::sched::Scheduler;
 use super::stream::RequestStream;
@@ -137,8 +138,16 @@ pub struct FleetMetrics {
     pub makespan_s: f64,
     pub energy_pj: f64,
     pub edp_under_load: f64,
-    /// KV tokens migrated prefill -> decode (0 for homogeneous routers).
+    /// KV tokens migrated prefill -> decode (0 for homogeneous routers;
+    /// block-granular for paged caches — whole blocks move).
     pub kv_transfer_tokens: u64,
+    /// Busy-time-weighted mean KV-block internal fragmentation across
+    /// replicas (0 for token-granular caches).
+    pub kv_fragmentation: f64,
+    /// Fleet-wide prefill tokens served from shared prefixes.
+    pub kv_shared_tokens: u64,
+    /// Fleet-wide sharing hit rate: shared tokens / prefill demand.
+    pub kv_sharing_hit_rate: f64,
     /// Busy-time imbalance across replicas: `(max - min) / mean` of
     /// per-replica busy seconds (0 = perfectly balanced).
     pub load_imbalance: f64,
@@ -188,6 +197,7 @@ fn shared_coster<'a>(
         cfg.policy,
         cfg.eval_blocks,
         cfg.ctx_bucket,
+        cfg.kv.dtype,
     )))
 }
 
@@ -281,7 +291,9 @@ fn simulate_disaggregated(
 ) -> FleetMetrics {
     let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
     let coster = shared_coster(model, hw, cfg);
-    let kv_budget = cfg.kv_budget(model).max(2);
+    // spec-aware footprint probe (paging + sharing + dtype), the same
+    // test every scheduler applies at arrival
+    let fit_probe = KvCache::new(cfg.kv, cfg.kv_budget(model).max(2));
     // --- stage 1: prompts JSQ-routed over the prefill pool, truncated
     // to a single output token (emitted at prefill completion). A
     // request whose *full* footprint can never fit is injected with its
@@ -297,7 +309,7 @@ fn simulate_disaggregated(
         }
         let k = jsq_pick(&pre);
         let out = r.output_len.max(1);
-        if r.input_len.max(1) + out + 1 > kv_budget {
+        if !fit_probe.can_ever_fit(r.input_len.max(1), out) {
             pre[k].inject(r.id, r.arrival_s, r.input_len, out);
         } else {
             pre[k].inject(r.id, r.arrival_s, r.input_len, 1);
@@ -331,8 +343,11 @@ fn simulate_disaggregated(
             continue; // single-token request: done at prefill
         }
         let ctx = o.input_len + 1;
+        // whole blocks migrate: the link moves the context rounded up to
+        // the KV block size (exact at block_tokens = 1)
+        let link_tokens = cfg.kv.block_round(ctx);
         migs.push(Migration {
-            t: finish + ctx as f64 * fleet.handoff_s_per_token.max(0.0),
+            t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
             id,
             ctx,
             rest,
@@ -400,9 +415,23 @@ fn aggregate(
     let gen_tokens: u64 = per_replica.iter().map(|m| m.gen_tokens).sum();
     let energy_pj: f64 = per_replica.iter().map(|m| m.energy_pj).sum();
     let kv_transfer_tokens: u64 = per_replica.iter().map(|m| m.kv_transfer_tokens).sum();
+    let kv_shared_tokens: u64 = per_replica.iter().map(|m| m.kv_shared_tokens).sum();
+    let kv_demand_tokens: u64 = per_replica.iter().map(|m| m.kv_demand_tokens).sum();
     let truncated = per_replica.iter().any(|m| m.truncated);
     let busy: Vec<f64> = per_replica.iter().map(|m| m.busy_s).collect();
-    let mean_busy = busy.iter().sum::<f64>() / busy.len().max(1) as f64;
+    let busy_sum: f64 = busy.iter().sum();
+    // per-replica fragmentation is already busy-weighted, so the fleet
+    // mean re-weights by each replica's busy time
+    let kv_fragmentation = if busy_sum > 1e-12 {
+        per_replica
+            .iter()
+            .map(|m| m.kv_fragmentation * m.busy_s)
+            .sum::<f64>()
+            / busy_sum
+    } else {
+        0.0
+    };
+    let mean_busy = busy_sum / busy.len().max(1) as f64;
     let load_imbalance = if mean_busy > 1e-12 {
         let max = busy.iter().cloned().fold(f64::MIN, f64::max);
         let min = busy.iter().cloned().fold(f64::MAX, f64::min);
@@ -429,6 +458,13 @@ fn aggregate(
         energy_pj,
         edp_under_load: (energy_pj * 1e-12) * makespan_s,
         kv_transfer_tokens,
+        kv_fragmentation,
+        kv_shared_tokens,
+        kv_sharing_hit_rate: if kv_demand_tokens > 0 {
+            kv_shared_tokens as f64 / kv_demand_tokens as f64
+        } else {
+            0.0
+        },
         load_imbalance,
         truncated,
         per_replica,
@@ -463,6 +499,7 @@ mod tests {
             sigma_in: 0.5,
             sigma_out: 0.4,
             max_len: 4096,
+            shared_prefix_tokens: 0,
         }
     }
 
@@ -599,6 +636,46 @@ mod tests {
             rr.load_imbalance,
             rr.makespan_s
         );
+    }
+
+    /// Paged + prefix-sharing caches across a fleet: runs conserve,
+    /// handoff traffic is block-rounded, and the aggregated sharing /
+    /// fragmentation stats are populated.
+    #[test]
+    fn paged_shared_fleet_conserves_and_rounds_handoff() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg();
+        cfg.kv_budget_tokens = 1024;
+        cfg.kv = crate::sim::KvSpec::paged(16).with_prefix(32);
+        let spec = tiny_spec().with_prefix(32);
+        let probe = crate::sim::probe(&model, &hw, &cfg, &spec);
+        // heavy overload: admissions overlap, so the materialized prefix
+        // is referenced by co-resident requests (sharing hits)
+        let stream = RequestStream::poisson(&spec, 2.5 * probe.capacity_rps(), 12, 9);
+        for fleet in [
+            FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue),
+            FleetConfig::disaggregated(1, 1, 1e-7),
+        ] {
+            let m = simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
+            assert_eq!(
+                m.n_completed + m.n_rejected,
+                m.n_arrived,
+                "{}",
+                fleet.describe()
+            );
+            assert!(m.kv_shared_tokens > 0, "{}: no sharing hits", fleet.describe());
+            assert!(m.kv_sharing_hit_rate > 0.0);
+            assert!(m.kv_fragmentation >= 0.0 && m.kv_fragmentation <= 1.0);
+            if fleet.router == RouterPolicy::PrefillDecode {
+                // whole 16-token blocks migrate
+                assert!(m.kv_transfer_tokens > 0);
+                assert_eq!(m.kv_transfer_tokens % 16, 0, "handoff not block-granular");
+            }
+            // deterministic
+            let b = simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
+            assert_eq!(m.makespan_s.to_bits(), b.makespan_s.to_bits());
+        }
     }
 
     #[test]

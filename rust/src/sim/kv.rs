@@ -1,0 +1,732 @@
+//! Paged, quantized, prefix-sharing KV-cache subsystem.
+//!
+//! The serving simulator's KV budget used to be a pair of raw token
+//! counters (`kv_used`/`kv_reserved`) hand-threaded through the
+//! scheduler. This module extracts all KV accounting into one object:
+//!
+//! * **Paged allocation** — capacity is divided into fixed-size blocks
+//!   of [`KvSpec::block_tokens`] tokens (vLLM-style paging). Requests
+//!   allocate whole blocks; the trailing partially-filled block is
+//!   internal fragmentation, reported per iteration. `block_tokens = 1`
+//!   degenerates to exact token-granular accounting — the bitwise
+//!   equivalence anchor against the pre-refactor scalar counters.
+//! * **Reservation leases** — admission books the full prefill context
+//!   as reserved blocks; chunk writes realize the lease block by block.
+//!   All arithmetic is checked ([`take`]): an accounting bug panics
+//!   loudly instead of wrapping a `u64` silently in release builds.
+//! * **Quantized dtypes** — [`KvDtype`] (fp16/fp8/int4) parameterizes
+//!   both the bytes-per-token capacity derivation and the per-iteration
+//!   KV DRAM traffic seen by the batch coster.
+//! * **Copy-on-write prefix sharing** — a system-prompt prefix of
+//!   [`KvSpec::prefix_tokens`] tokens (from `TraceSpec`) is materialized
+//!   once into shared blocks and referenced by every later request;
+//!   their prefills skip the prefix (chunks carry `past >= prefix`).
+//!   Generated tokens always land in private blocks, so the shared
+//!   blocks are never written after they fill (the "write" side of COW
+//!   never copies in an append-only cache); shared blocks are freed only
+//!   when the reference count drops to zero.
+//! * **Pluggable eviction** — [`EvictionPolicy`]: the scheduler keeps
+//!   its youngest-first default, or picks the victim with the lowest
+//!   recompute loss (cost-based).
+//!
+//! Global invariant, `debug_assert`ed after every mutation:
+//! `used_blocks + reserved_blocks + free_blocks == capacity_blocks`,
+//! with the per-sequence states summing exactly to the global counters.
+
+use crate::workload::ModelSpec;
+
+/// KV-cache element type (paper's fp16 baseline plus the two
+/// quantized variants the capacity study sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    Fp16,
+    Fp8,
+    Int4,
+}
+
+impl KvDtype {
+    pub const ALL: [KvDtype; 3] = [KvDtype::Fp16, KvDtype::Fp8, KvDtype::Int4];
+
+    /// Bits per stored KV element.
+    pub fn bits(self) -> u64 {
+        match self {
+            KvDtype::Fp16 => 16,
+            KvDtype::Fp8 => 8,
+            KvDtype::Int4 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::Fp16 => "fp16",
+            KvDtype::Fp8 => "fp8",
+            KvDtype::Int4 => "int4",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "fp16" => Some(KvDtype::Fp16),
+            "fp8" => Some(KvDtype::Fp8),
+            "int4" => Some(KvDtype::Int4),
+            _ => None,
+        }
+    }
+
+    /// KV-cache bytes appended per token across the whole model at this
+    /// dtype (the fp16 value is exactly `ModelSpec::kv_bytes_per_token`).
+    pub fn bytes_per_token(self, model: &ModelSpec) -> u64 {
+        model.kv_bytes_per_token_bits(self.bits())
+    }
+}
+
+/// Which running request the scheduler preempts under KV pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Preempt the most recently admitted request (the pre-refactor
+    /// behavior, and the equivalence-anchor default).
+    YoungestFirst,
+    /// Preempt the non-oldest request whose re-admission costs the
+    /// least prefill recompute (smallest context).
+    CostBased,
+}
+
+impl EvictionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictionPolicy::YoungestFirst => "youngest",
+            EvictionPolicy::CostBased => "cost-based",
+        }
+    }
+}
+
+/// KV-cache configuration carried by `SimConfig`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvSpec {
+    /// Tokens per allocation block (1 = exact token-granular).
+    pub block_tokens: u64,
+    pub dtype: KvDtype,
+    /// Shared system-prompt prefix length (0 = sharing off). Requests
+    /// whose prompt is longer than the prefix share its KV blocks.
+    pub prefix_tokens: u64,
+    pub eviction: EvictionPolicy,
+}
+
+impl KvSpec {
+    /// The pre-refactor semantics: token-granular fp16, no sharing,
+    /// youngest-first eviction. Paged simulation under this spec is
+    /// bitwise-equal to the old scalar-counter path.
+    pub fn token_granular() -> Self {
+        KvSpec {
+            block_tokens: 1,
+            dtype: KvDtype::Fp16,
+            prefix_tokens: 0,
+            eviction: EvictionPolicy::YoungestFirst,
+        }
+    }
+
+    pub fn paged(block_tokens: u64) -> Self {
+        KvSpec {
+            block_tokens: block_tokens.max(1),
+            ..Self::token_granular()
+        }
+    }
+
+    pub fn with_dtype(mut self, dtype: KvDtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    pub fn with_prefix(mut self, prefix_tokens: u64) -> Self {
+        self.prefix_tokens = prefix_tokens;
+        self
+    }
+
+    pub fn with_eviction(mut self, eviction: EvictionPolicy) -> Self {
+        self.eviction = eviction;
+        self
+    }
+
+    /// Round a token count up to whole blocks (the granularity at which
+    /// KV migrates over a fleet handoff link).
+    pub fn block_round(&self, tokens: u64) -> u64 {
+        let bt = self.block_tokens.max(1);
+        tokens.div_ceil(bt) * bt
+    }
+
+    pub fn describe(&self) -> String {
+        let mut s = format!("{}/bt{}", self.dtype.name(), self.block_tokens.max(1));
+        if self.prefix_tokens > 0 {
+            s.push_str(&format!("/pfx{}", self.prefix_tokens));
+        }
+        if self.eviction == EvictionPolicy::CostBased {
+            s.push_str("/cb");
+        }
+        s
+    }
+}
+
+impl Default for KvSpec {
+    fn default() -> Self {
+        Self::token_granular()
+    }
+}
+
+/// Checked decrement: a KV accounting bug fails loudly (in release
+/// builds too) instead of wrapping around and silently inflating the
+/// budget — the latent hazard of the pre-refactor `-=` sites.
+#[track_caller]
+fn take(slot: &mut u64, amount: u64, what: &str) {
+    *slot = slot
+        .checked_sub(amount)
+        .unwrap_or_else(|| panic!("KV accounting underflow: {what}: {} - {}", *slot, amount));
+}
+
+/// Lifecycle of the shared system-prompt prefix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PrefixState {
+    Absent,
+    /// Being prefilled into shared blocks by the sequence that first
+    /// needed it (the materializer); not yet referenceable.
+    Filling,
+    Ready,
+}
+
+/// Per-request cache state, indexed by the scheduler's request index.
+#[derive(Debug, Clone, Copy, Default)]
+struct SeqState {
+    active: bool,
+    /// Tokens written into this sequence's private blocks.
+    priv_tokens: u64,
+    priv_blocks: u64,
+    /// Blocks still set aside for this sequence's prefill lease.
+    reserved_blocks: u64,
+    /// Prefill tokens still to write under the lease.
+    reserved_tokens: u64,
+    /// Prefix tokens this sequence writes into the shared blocks
+    /// (nonzero only for the materializer).
+    shared_goal: u64,
+    shared_written: u64,
+    /// Holds one reference on the shared prefix blocks.
+    holds_ref: bool,
+}
+
+/// Outcome of a prefill admission.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitGrant {
+    /// Context tokens served by the shared prefix: the request's prefill
+    /// shrinks by this many tokens and its chunks carry `past >= skip`.
+    pub skip: u64,
+}
+
+/// Admission sizing shared by `can_admit` and `lease`.
+#[derive(Debug, Clone, Copy)]
+struct Plan {
+    skip: u64,
+    shared_goal: u64,
+    priv_total: u64,
+    lease_blocks: u64,
+}
+
+/// The paged KV cache of one scheduler (one package).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    spec: KvSpec,
+    capacity_blocks: u64,
+    used_blocks: u64,
+    reserved_blocks: u64,
+    /// Tokens resident across all blocks (private + shared), for the
+    /// internal-fragmentation stat.
+    written_tokens: u64,
+    seqs: Vec<SeqState>,
+    prefix: PrefixState,
+    prefix_filled: u64,
+    prefix_refs: usize,
+    // --- stats ---
+    shared_tokens: u64,
+    demand_tokens: u64,
+    prefix_materializations: usize,
+}
+
+impl KvCache {
+    /// `budget_tokens` is the raw token budget (DRAM bytes / dtype
+    /// bytes-per-token); capacity is floored to whole blocks. A block
+    /// size larger than the whole budget is clamped down to it, so
+    /// `capacity_tokens() <= budget_tokens` always holds — the cache
+    /// never promises more memory than the DRAM it models.
+    pub fn new(spec: KvSpec, budget_tokens: u64) -> Self {
+        let budget = budget_tokens.max(1);
+        let bt = spec.block_tokens.max(1).min(budget);
+        KvCache {
+            spec: KvSpec {
+                block_tokens: bt,
+                ..spec
+            },
+            capacity_blocks: budget / bt,
+            used_blocks: 0,
+            reserved_blocks: 0,
+            written_tokens: 0,
+            seqs: Vec::new(),
+            prefix: PrefixState::Absent,
+            prefix_filled: 0,
+            prefix_refs: 0,
+            shared_tokens: 0,
+            demand_tokens: 0,
+            prefix_materializations: 0,
+        }
+    }
+
+    #[inline]
+    fn blocks_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.spec.block_tokens)
+    }
+
+    pub fn spec(&self) -> &KvSpec {
+        &self.spec
+    }
+
+    pub fn capacity_blocks(&self) -> u64 {
+        self.capacity_blocks
+    }
+
+    /// Token capacity actually addressable (whole blocks).
+    pub fn capacity_tokens(&self) -> u64 {
+        self.capacity_blocks * self.spec.block_tokens
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.used_blocks
+    }
+
+    pub fn reserved_blocks(&self) -> u64 {
+        self.reserved_blocks
+    }
+
+    pub fn free_blocks(&self) -> u64 {
+        self.capacity_blocks - self.used_blocks - self.reserved_blocks
+    }
+
+    /// Cache fill fraction (written blocks / capacity): the occupancy
+    /// trace's `kv_frac`.
+    pub fn frac(&self) -> f64 {
+        self.used_blocks as f64 / self.capacity_blocks as f64
+    }
+
+    /// Internal fragmentation right now: the fraction of allocated-block
+    /// capacity holding no token (0 when `block_tokens = 1`).
+    pub fn fragmentation(&self) -> f64 {
+        if self.used_blocks == 0 {
+            return 0.0;
+        }
+        let cap = (self.used_blocks * self.spec.block_tokens) as f64;
+        1.0 - self.written_tokens as f64 / cap
+    }
+
+    /// Prefill tokens served from the shared prefix instead of computed.
+    pub fn shared_tokens(&self) -> u64 {
+        self.shared_tokens
+    }
+
+    /// Context tokens requested across all prefill admissions (the
+    /// sharing-hit-rate denominator).
+    pub fn demand_tokens(&self) -> u64 {
+        self.demand_tokens
+    }
+
+    /// Times the shared prefix was (re-)materialized into blocks.
+    pub fn prefix_materializations(&self) -> usize {
+        self.prefix_materializations
+    }
+
+    /// Whether a request of this shape could ever be served, even alone
+    /// (the arrival-time rejection test).
+    pub fn can_ever_fit(&self, input_len: u64, output_len: u64) -> bool {
+        let p = self.spec.prefix_tokens;
+        let sharing = p > 0 && input_len > p;
+        let skip = if sharing { p } else { 0 };
+        let need = input_len + output_len + 1 - skip;
+        let blocks = self.blocks_for(need) + if sharing { self.blocks_for(p) } else { 0 };
+        blocks <= self.capacity_blocks
+    }
+
+    fn plan(&self, context: u64, input_len: u64) -> Plan {
+        let p = self.spec.prefix_tokens;
+        let sharing = p > 0 && input_len > p;
+        let (skip, shared_goal) = if !sharing {
+            (0, 0)
+        } else {
+            match self.prefix {
+                PrefixState::Ready => (p, 0),
+                PrefixState::Absent => (0, p),
+                // someone else is still filling it: go fully private
+                PrefixState::Filling => (0, 0),
+            }
+        };
+        let priv_total = context - skip - shared_goal;
+        let lease_blocks = self.blocks_for(priv_total)
+            + if shared_goal > 0 {
+                self.blocks_for(shared_goal)
+            } else {
+                0
+            };
+        Plan {
+            skip,
+            shared_goal,
+            priv_total,
+            lease_blocks,
+        }
+    }
+
+    /// Can a prompt with `context` total tokens be admitted now?
+    /// `extra_growth_blocks` covers co-scheduled decode writes; the `+1`
+    /// block headroom for the first generated token mirrors the
+    /// pre-refactor `need + 1` check.
+    pub fn can_admit(&self, context: u64, input_len: u64, extra_growth_blocks: u64) -> bool {
+        let pl = self.plan(context, input_len);
+        let plus1 = self.blocks_for(pl.priv_total + 1) - self.blocks_for(pl.priv_total);
+        pl.lease_blocks + plus1 + extra_growth_blocks <= self.free_blocks()
+    }
+
+    /// Can a KV-migrated request (context materializes without prefill,
+    /// fully private) be admitted now?
+    pub fn can_admit_written(&self, context: u64, extra_growth_blocks: u64) -> bool {
+        let blocks = self.blocks_for(context);
+        let plus1 = self.blocks_for(context + 1) - blocks;
+        blocks + plus1 + extra_growth_blocks <= self.free_blocks()
+    }
+
+    fn seq_slot(&mut self, idx: usize) -> &mut SeqState {
+        if idx >= self.seqs.len() {
+            self.seqs.resize_with(idx + 1, SeqState::default);
+        }
+        &mut self.seqs[idx]
+    }
+
+    /// Admit a prompt: book the full prefill context as a reservation
+    /// lease (the caller must have checked [`Self::can_admit`]). Returns
+    /// the shared-prefix skip; the request's prefill target is
+    /// `context - skip`.
+    pub fn lease(&mut self, idx: usize, context: u64, input_len: u64) -> AdmitGrant {
+        let pl = self.plan(context, input_len);
+        self.demand_tokens += context;
+        if pl.skip > 0 {
+            self.prefix_refs += 1;
+            self.shared_tokens += pl.skip;
+        }
+        if pl.shared_goal > 0 {
+            debug_assert_eq!(self.prefix_filled, 0, "materializing a non-empty prefix");
+            self.prefix = PrefixState::Filling;
+            self.prefix_refs += 1;
+            self.prefix_materializations += 1;
+        }
+        self.reserved_blocks += pl.lease_blocks;
+        let s = self.seq_slot(idx);
+        assert!(!s.active, "KV lease for an already-admitted sequence {idx}");
+        *s = SeqState {
+            active: true,
+            priv_tokens: 0,
+            priv_blocks: 0,
+            reserved_blocks: pl.lease_blocks,
+            reserved_tokens: pl.priv_total + pl.shared_goal,
+            shared_goal: pl.shared_goal,
+            shared_written: 0,
+            holds_ref: pl.skip > 0 || pl.shared_goal > 0,
+        };
+        self.assert_conserved();
+        AdmitGrant { skip: pl.skip }
+    }
+
+    /// Admit a KV-migrated request: its context materializes immediately
+    /// into private blocks (no prefill compute, no sharing — the KV
+    /// arrives over the handoff link). Returns the tokens actually
+    /// transferred, rounded up to whole blocks (block-granular handoff).
+    pub fn admit_written(&mut self, idx: usize, context: u64) -> u64 {
+        let blocks = self.blocks_for(context);
+        self.used_blocks += blocks;
+        self.written_tokens += context;
+        let bt = self.spec.block_tokens;
+        let s = self.seq_slot(idx);
+        assert!(!s.active, "KV admit for an already-admitted sequence {idx}");
+        *s = SeqState {
+            active: true,
+            priv_tokens: context,
+            priv_blocks: blocks,
+            ..SeqState::default()
+        };
+        debug_assert!(
+            self.used_blocks + self.reserved_blocks <= self.capacity_blocks,
+            "migrated admission over capacity"
+        );
+        self.assert_conserved();
+        blocks * bt
+    }
+
+    /// Write `t` prefill tokens for `idx`, drawing on its lease. The
+    /// materializer's leading tokens fill the shared prefix blocks;
+    /// everything else is private.
+    pub fn write_chunk(&mut self, idx: usize, t: u64) {
+        let mut s = self.seqs[idx];
+        assert!(s.active, "KV chunk write for an inactive sequence {idx}");
+        take(&mut s.reserved_tokens, t, "lease tokens");
+        let to_shared = t.min(s.shared_goal - s.shared_written);
+        if to_shared > 0 {
+            let old = self.blocks_for(self.prefix_filled);
+            self.prefix_filled += to_shared;
+            s.shared_written += to_shared;
+            let delta = self.blocks_for(self.prefix_filled) - old;
+            self.used_blocks += delta;
+            take(&mut self.reserved_blocks, delta, "reserved blocks (shared)");
+            take(&mut s.reserved_blocks, delta, "seq reserved blocks (shared)");
+            if s.shared_written == s.shared_goal {
+                self.prefix = PrefixState::Ready;
+            }
+        }
+        let to_priv = t - to_shared;
+        if to_priv > 0 {
+            let old = s.priv_blocks;
+            s.priv_tokens += to_priv;
+            s.priv_blocks = self.blocks_for(s.priv_tokens);
+            let delta = s.priv_blocks - old;
+            self.used_blocks += delta;
+            take(&mut self.reserved_blocks, delta, "reserved blocks");
+            take(&mut s.reserved_blocks, delta, "seq reserved blocks");
+        }
+        self.written_tokens += t;
+        if s.reserved_tokens == 0 {
+            debug_assert_eq!(s.reserved_blocks, 0, "lease fully written but blocks remain");
+        }
+        self.seqs[idx] = s;
+        self.assert_conserved();
+    }
+
+    /// Append one generated token (always private, even for
+    /// prefix-sharing sequences: that is the copy-on-write rule).
+    pub fn write_decode(&mut self, idx: usize) {
+        let mut s = self.seqs[idx];
+        assert!(s.active, "KV decode write for an inactive sequence {idx}");
+        debug_assert_eq!(s.reserved_tokens, 0, "decode write during prefill");
+        let old = s.priv_blocks;
+        s.priv_tokens += 1;
+        s.priv_blocks = self.blocks_for(s.priv_tokens);
+        self.used_blocks += s.priv_blocks - old;
+        self.written_tokens += 1;
+        debug_assert!(
+            self.used_blocks + self.reserved_blocks <= self.capacity_blocks,
+            "decode write over capacity"
+        );
+        self.seqs[idx] = s;
+        self.assert_conserved();
+    }
+
+    /// Blocks a decode write for `idx` would newly allocate (0 when its
+    /// tail block has room; always 1 at `block_tokens = 1`).
+    pub fn decode_growth_one(&self, idx: usize) -> u64 {
+        let s = &self.seqs[idx];
+        debug_assert!(s.active);
+        self.blocks_for(s.priv_tokens + 1) - s.priv_blocks
+    }
+
+    /// Would `growth` more blocks of decode writes fit without eviction?
+    pub fn fits_growth(&self, growth: u64) -> bool {
+        self.used_blocks + self.reserved_blocks + growth <= self.capacity_blocks
+    }
+
+    /// Free everything `idx` holds (completion or preemption): private
+    /// blocks, outstanding lease, and its shared-prefix reference.
+    /// Shared blocks are freed only when the last reference drops.
+    pub fn release(&mut self, idx: usize) {
+        let s = self.seqs[idx];
+        assert!(s.active, "KV double free of sequence {idx}");
+        take(&mut self.used_blocks, s.priv_blocks, "used blocks");
+        take(&mut self.reserved_blocks, s.reserved_blocks, "reserved blocks");
+        take(&mut self.written_tokens, s.priv_tokens, "written tokens");
+        if s.holds_ref {
+            assert!(self.prefix_refs > 0, "prefix refcount underflow");
+            self.prefix_refs -= 1;
+            if self.prefix_refs == 0 {
+                let pb = self.blocks_for(self.prefix_filled);
+                take(&mut self.used_blocks, pb, "shared prefix blocks");
+                take(&mut self.written_tokens, self.prefix_filled, "shared prefix tokens");
+                self.prefix_filled = 0;
+                self.prefix = PrefixState::Absent;
+            }
+        }
+        self.seqs[idx] = SeqState::default();
+        self.assert_conserved();
+    }
+
+    /// Whether `idx` currently holds or reserves any cache space.
+    pub fn is_active(&self, idx: usize) -> bool {
+        self.seqs.get(idx).is_some_and(|s| s.active)
+    }
+
+    #[cfg(debug_assertions)]
+    fn assert_conserved(&self) {
+        let mut used = 0u64;
+        let mut resv = 0u64;
+        let mut toks = 0u64;
+        for s in &self.seqs {
+            if s.active {
+                used += s.priv_blocks;
+                resv += s.reserved_blocks;
+                toks += s.priv_tokens;
+            }
+        }
+        if self.prefix_refs > 0 {
+            used += self.blocks_for(self.prefix_filled);
+            toks += self.prefix_filled;
+        }
+        debug_assert_eq!(used, self.used_blocks, "used-block conservation");
+        debug_assert_eq!(resv, self.reserved_blocks, "reserved-block conservation");
+        debug_assert_eq!(toks, self.written_tokens, "written-token conservation");
+        debug_assert!(
+            self.used_blocks + self.reserved_blocks <= self.capacity_blocks,
+            "cache over capacity: used {} + reserved {} > {}",
+            self.used_blocks,
+            self.reserved_blocks,
+            self.capacity_blocks
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn assert_conserved(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes_scale_with_bits() {
+        let m = ModelSpec::gpt3_13b();
+        let fp16 = KvDtype::Fp16.bytes_per_token(&m);
+        assert_eq!(fp16, m.kv_bytes_per_token());
+        assert_eq!(KvDtype::Fp8.bytes_per_token(&m), fp16 / 2);
+        assert_eq!(KvDtype::Int4.bytes_per_token(&m), fp16 / 4);
+        assert_eq!(KvDtype::by_name("INT4"), Some(KvDtype::Int4));
+        assert_eq!(KvDtype::by_name("bf16"), None);
+    }
+
+    #[test]
+    fn token_granular_mirrors_scalar_counters() {
+        let mut kv = KvCache::new(KvSpec::token_granular(), 100);
+        assert_eq!(kv.capacity_blocks(), 100);
+        assert!(kv.can_ever_fit(60, 39)); // 60 + 39 + 1 == 100
+        assert!(!kv.can_ever_fit(60, 40));
+        assert!(kv.can_admit(60, 60, 0)); // 60 + 1 <= 100
+        let g = kv.lease(0, 60, 60);
+        assert_eq!(g.skip, 0);
+        assert_eq!(kv.reserved_blocks(), 60);
+        assert_eq!(kv.free_blocks(), 40);
+        // the old `need + 1 > head` check: 39 + 1 <= 40 admits, 40+1 not
+        assert!(kv.can_admit(39, 39, 0));
+        assert!(!kv.can_admit(40, 40, 0));
+        kv.write_chunk(0, 16);
+        assert_eq!(kv.used_blocks(), 16);
+        assert_eq!(kv.reserved_blocks(), 44);
+        kv.write_chunk(0, 44);
+        assert_eq!(kv.reserved_blocks(), 0);
+        kv.write_decode(0);
+        assert_eq!(kv.used_blocks(), 61);
+        assert_eq!(kv.fragmentation(), 0.0);
+        kv.release(0);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.free_blocks(), 100);
+    }
+
+    #[test]
+    fn paged_blocks_round_up_and_report_fragmentation() {
+        let mut kv = KvCache::new(KvSpec::paged(16), 160);
+        assert_eq!(kv.capacity_blocks(), 10);
+        kv.lease(0, 20, 20); // 2 blocks leased
+        assert_eq!(kv.reserved_blocks(), 2);
+        kv.write_chunk(0, 20);
+        assert_eq!(kv.used_blocks(), 2);
+        // 20 tokens in 32 token-slots: 37.5% internal fragmentation
+        assert!((kv.fragmentation() - 0.375).abs() < 1e-12);
+        // 12 decode writes fill the tail block without allocating
+        for _ in 0..12 {
+            assert_eq!(kv.decode_growth_one(0), 0);
+            kv.write_decode(0);
+        }
+        assert_eq!(kv.used_blocks(), 2);
+        assert_eq!(kv.decode_growth_one(0), 1);
+        kv.write_decode(0);
+        assert_eq!(kv.used_blocks(), 3);
+        kv.release(0);
+        assert_eq!(kv.free_blocks(), 10);
+    }
+
+    #[test]
+    fn prefix_shared_blocks_freed_only_at_refcount_zero() {
+        let spec = KvSpec::paged(8).with_prefix(16);
+        let mut kv = KvCache::new(spec, 160);
+        // materializer: no skip, prefix lands in shared blocks
+        let g = kv.lease(0, 24, 24);
+        assert_eq!(g.skip, 0);
+        assert_eq!(kv.prefix_materializations(), 1);
+        kv.write_chunk(0, 24); // 16 shared + 8 private
+        assert_eq!(kv.used_blocks(), 3);
+        // second request skips the ready prefix
+        let g1 = kv.lease(1, 20, 20);
+        assert_eq!(g1.skip, 16);
+        assert_eq!(kv.shared_tokens(), 16);
+        kv.write_chunk(1, 4);
+        assert_eq!(kv.used_blocks(), 4); // shared 2 + priv 1 + priv 1
+        // releasing the materializer keeps the shared blocks alive
+        kv.release(0);
+        assert_eq!(kv.used_blocks(), 3);
+        assert!(kv.fragmentation() > 0.0);
+        // last reference drops: shared blocks freed
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.free_blocks(), kv.capacity_blocks());
+        // next admission re-materializes
+        let g2 = kv.lease(2, 24, 24);
+        assert_eq!(g2.skip, 0);
+        assert_eq!(kv.prefix_materializations(), 2);
+    }
+
+    #[test]
+    fn evicted_materializer_tears_down_partial_prefix() {
+        let spec = KvSpec::paged(4).with_prefix(8);
+        let mut kv = KvCache::new(spec, 64);
+        kv.lease(0, 12, 12);
+        kv.write_chunk(0, 6); // prefix only partially filled
+        kv.release(0); // preempted: sole ref, partial prefix torn down
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.reserved_blocks(), 0);
+        // a fresh admission starts a new materialization from zero
+        let g = kv.lease(1, 12, 12);
+        assert_eq!(g.skip, 0);
+        assert_eq!(kv.prefix_materializations(), 2);
+    }
+
+    #[test]
+    fn migrated_admission_transfers_whole_blocks() {
+        let mut kv = KvCache::new(KvSpec::paged(16), 320);
+        let transferred = kv.admit_written(0, 50);
+        assert_eq!(transferred, 64); // 4 blocks of 16
+        assert_eq!(kv.used_blocks(), 4);
+        // token-granular transfer is exact
+        let mut kv1 = KvCache::new(KvSpec::token_granular(), 320);
+        assert_eq!(kv1.admit_written(0, 50), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut kv = KvCache::new(KvSpec::token_granular(), 64);
+        kv.lease(0, 8, 8);
+        kv.release(0);
+        kv.release(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn overdrawn_lease_panics_not_wraps() {
+        let mut kv = KvCache::new(KvSpec::token_granular(), 64);
+        kv.lease(0, 8, 8);
+        kv.write_chunk(0, 9); // one more token than the lease booked
+    }
+}

@@ -72,6 +72,12 @@ pub struct IterRecord {
     pub queue_depth: usize,
     /// KV-cache occupancy after this iteration's writes (0..=1).
     pub kv_frac: f64,
+    /// KV-block internal fragmentation after this iteration's writes
+    /// (0..=1; always 0 for token-granular caches).
+    pub kv_frag: f64,
+    /// Co-resident admitted requests during this iteration (the
+    /// effective concurrency the KV capacity sustains).
+    pub n_running: usize,
 }
 
 /// Bounded occupancy trace: keeps exact running aggregates (iteration
@@ -89,6 +95,11 @@ pub struct TraceBuffer {
     max_queue_depth: usize,
     sum_slots: f64,
     busy_s: f64,
+    /// Duration-weighted fragmentation integral (frag x dt), exact
+    /// across downsampling.
+    sum_frag_dt: f64,
+    /// Duration-weighted co-resident-request integral (n_running x dt).
+    sum_running_dt: f64,
 }
 
 impl TraceBuffer {
@@ -101,6 +112,8 @@ impl TraceBuffer {
             max_queue_depth: 0,
             sum_slots: 0.0,
             busy_s: 0.0,
+            sum_frag_dt: 0.0,
+            sum_running_dt: 0.0,
         }
     }
 
@@ -118,12 +131,33 @@ impl TraceBuffer {
         &self.records
     }
 
+    /// Duration-weighted mean KV fragmentation over the run's busy time.
+    pub fn kv_fragmentation(&self) -> f64 {
+        if self.busy_s > 1e-12 {
+            self.sum_frag_dt / self.busy_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Duration-weighted mean co-resident requests over busy time.
+    pub fn effective_concurrency(&self) -> f64 {
+        if self.busy_s > 1e-12 {
+            self.sum_running_dt / self.busy_s
+        } else {
+            0.0
+        }
+    }
+
     pub fn push(&mut self, rec: IterRecord) {
         self.n_iters += 1;
         self.sum_queue_depth += rec.queue_depth as f64;
         self.max_queue_depth = self.max_queue_depth.max(rec.queue_depth);
         self.sum_slots += (rec.n_decode + rec.n_prefill) as f64;
-        self.busy_s += (rec.end_s - rec.start_s).max(0.0);
+        let dt = (rec.end_s - rec.start_s).max(0.0);
+        self.busy_s += dt;
+        self.sum_frag_dt += rec.kv_frag * dt;
+        self.sum_running_dt += rec.n_running as f64 * dt;
         self.records.push(rec);
         if self.cap > 0 && self.records.len() >= 2 * self.cap {
             self.compact();
@@ -155,6 +189,8 @@ impl TraceBuffer {
                 prefill_tokens: a.prefill_tokens + b.prefill_tokens,
                 queue_depth: mix(a.queue_depth as f64, b.queue_depth as f64).round() as usize,
                 kv_frac: mix(a.kv_frac, b.kv_frac),
+                kv_frag: mix(a.kv_frag, b.kv_frag),
+                n_running: mix(a.n_running as f64, b.n_running as f64).round() as usize,
             });
         }
         out.extend(it.remainder().iter().copied());
@@ -211,8 +247,27 @@ pub struct ServingMetrics {
     /// EDP under load: total energy (J) x makespan (s).
     pub edp_under_load: f64,
     /// KV tokens materialized from a fleet handoff (disaggregated
-    /// prefill/decode migration traffic landing on this replica).
+    /// prefill/decode migration traffic landing on this replica;
+    /// block-granular for paged caches).
     pub kv_transfer_tokens: u64,
+    /// KV-cache token capacity (whole blocks) this run was given.
+    pub kv_capacity_tokens: u64,
+    /// Duration-weighted mean internal fragmentation of allocated KV
+    /// blocks (0 for token-granular caches).
+    pub kv_fragmentation: f64,
+    /// Prefill tokens served from the shared system-prompt prefix
+    /// instead of recomputed.
+    pub kv_shared_tokens: u64,
+    /// Context tokens requested across prefill admissions (the
+    /// sharing-hit-rate denominator).
+    pub kv_demand_tokens: u64,
+    /// `kv_shared_tokens / kv_demand_tokens` (0 when sharing is off).
+    pub kv_sharing_hit_rate: f64,
+    /// Times the shared prefix was (re-)materialized into cache blocks.
+    pub kv_prefix_materializations: usize,
+    /// Duration-weighted mean co-resident admitted requests — the
+    /// effective concurrency the KV capacity sustained.
+    pub effective_concurrency: f64,
     /// Per-iteration occupancy trace (for the ASCII plot); downsampled
     /// to the configured cap on long runs — use `n_iterations` for the
     /// exact count, never `iters.len()`.
@@ -291,6 +346,10 @@ pub struct RunTotals {
     pub n_preemptions: usize,
     pub distinct_shapes: usize,
     pub kv_transfer_tokens: u64,
+    pub kv_capacity_tokens: u64,
+    pub kv_shared_tokens: u64,
+    pub kv_demand_tokens: u64,
+    pub kv_prefix_materializations: usize,
     pub truncated: bool,
 }
 
@@ -338,6 +397,17 @@ pub fn finalize(outcomes: &[RequestOutcome], trace: TraceBuffer, t: &RunTotals) 
         energy_pj: t.energy_pj,
         edp_under_load: (t.energy_pj * 1e-12) * t.makespan_s,
         kv_transfer_tokens: t.kv_transfer_tokens,
+        kv_capacity_tokens: t.kv_capacity_tokens,
+        kv_fragmentation: trace.kv_fragmentation(),
+        kv_shared_tokens: t.kv_shared_tokens,
+        kv_demand_tokens: t.kv_demand_tokens,
+        kv_sharing_hit_rate: if t.kv_demand_tokens > 0 {
+            t.kv_shared_tokens as f64 / t.kv_demand_tokens as f64
+        } else {
+            0.0
+        },
+        kv_prefix_materializations: t.kv_prefix_materializations,
+        effective_concurrency: trace.effective_concurrency(),
         iters: trace.records,
     }
 }
@@ -411,6 +481,10 @@ mod tests {
             n_preemptions: 0,
             distinct_shapes: 3,
             kv_transfer_tokens: 0,
+            kv_capacity_tokens: 1024,
+            kv_shared_tokens: 0,
+            kv_demand_tokens: 0,
+            kv_prefix_materializations: 0,
             truncated: false,
         }
     }
@@ -514,6 +588,8 @@ mod tests {
             prefill_tokens: 8,
             queue_depth,
             kv_frac,
+            kv_frag: 0.25,
+            n_running: 3,
         }
     }
 
@@ -527,6 +603,9 @@ mod tests {
         assert!(t.records().len() < 16, "trace grew to {}", t.records().len());
         assert!((t.busy_s() - 1000.0).abs() < 1e-6);
         assert_eq!(t.max_queue_depth, 4);
+        // duration-weighted means stay exact across downsampling
+        assert!((t.kv_fragmentation() - 0.25).abs() < 1e-9);
+        assert!((t.effective_concurrency() - 3.0).abs() < 1e-9);
         // records stay time-ordered with monotone spans
         for w in t.records().windows(2) {
             assert!(w[1].start_s >= w[0].start_s);

@@ -17,12 +17,14 @@
 
 pub mod coster;
 pub mod fleet;
+pub mod kv;
 pub mod metrics;
 pub mod sched;
 pub mod stream;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
 pub use fleet::{simulate_fleet, FleetConfig, FleetMetrics, RouterPolicy};
+pub use kv::{EvictionPolicy, KvCache, KvDtype, KvSpec};
 pub use metrics::{IterRecord, LatencyStats, ServingMetrics, SloSpec};
 pub use sched::{simulate_serving, ReplicaResult, Scheduler};
 pub use stream::{RequestStream, TimedRequest};
@@ -61,6 +63,10 @@ pub struct SimConfig {
     /// merging, bounding memory at ~`2 * trace_cap` records per replica
     /// while the aggregate metrics stay exact.
     pub trace_cap: usize,
+    /// KV-cache layout: block size, dtype, shared-prefix length and
+    /// eviction policy. The default ([`KvSpec::token_granular`]) is
+    /// bitwise-equal to the pre-paging scalar token counters.
+    pub kv: KvSpec,
 }
 
 impl SimConfig {
@@ -78,6 +84,7 @@ impl SimConfig {
             slo: SloSpec::new(1.0, 0.1),
             max_iterations: 1_000_000,
             trace_cap: 4096,
+            kv: KvSpec::token_granular(),
         }
     }
 
@@ -91,12 +98,20 @@ impl SimConfig {
         self
     }
 
-    /// KV-cache budget in tokens for `model`.
+    pub fn with_kv(mut self, kv: KvSpec) -> Self {
+        self.kv = kv;
+        self
+    }
+
+    /// KV-cache budget in tokens for `model`. The `kv_budget_tokens`
+    /// override is dtype-agnostic (an explicit token count); the
+    /// DRAM-derived path scales with the cache dtype, so fp8/int4
+    /// quantization raises the effective token capacity 2x/4x.
     pub fn kv_budget(&self, model: &ModelSpec) -> u64 {
         if self.kv_budget_tokens > 0 {
             return self.kv_budget_tokens;
         }
-        let per_token = model.kv_bytes_per_token().max(1);
+        let per_token = self.kv.dtype.bytes_per_token(model).max(1);
         ((self.dram_gb * 1e9) as u64 / per_token).max(2)
     }
 }
@@ -145,8 +160,11 @@ pub fn probe(model: &ModelSpec, hw: &HwConfig, cfg: &SimConfig, spec: &TraceSpec
         MappingPolicy::Pipeline,
         cfg.eval_blocks,
         cfg.ctx_bucket,
+        cfg.kv.dtype,
     );
-    let mean_in = (spec.mean_in.round() as u64).max(1);
+    // the shared system-prompt prefix is added to every sampled prompt
+    // (TraceSpec::sample), so the calibration prompt must carry it too
+    let mean_in = (spec.mean_in.round() as u64).max(1) + spec.shared_prefix_tokens;
     let mean_out = (spec.mean_out.round() as u64).max(1);
     let budget = cfg.kv_budget(model);
     let per_req = (mean_in + mean_out).max(1);
@@ -178,6 +196,12 @@ mod tests {
         assert_eq!(model.kv_bytes_per_token(), 819_200);
         let budget = cfg.kv_budget(&model);
         assert_eq!(budget, 64_000_000_000 / 819_200);
+        // cache quantization scales the DRAM-derived token capacity
+        cfg.kv = cfg.kv.with_dtype(KvDtype::Fp8);
+        assert_eq!(cfg.kv_budget(&model), 2 * budget);
+        cfg.kv = cfg.kv.with_dtype(KvDtype::Int4);
+        assert_eq!(cfg.kv_budget(&model), 4 * budget);
+        // the explicit token override is dtype-agnostic
         cfg.kv_budget_tokens = 1234;
         assert_eq!(cfg.kv_budget(&model), 1234);
     }
@@ -200,6 +224,7 @@ mod tests {
             sigma_in: 0.4,
             sigma_out: 0.3,
             max_len: 8192,
+            shared_prefix_tokens: 0,
         };
         let p = probe(&model, &hw, &cfg, &spec);
         assert!(p.t_prefill_s > 0.0 && p.t_decode_iter_s > 0.0);
@@ -210,5 +235,11 @@ mod tests {
         assert!(rates[0] < rates[1] && rates[1] < rates[2]);
         let slo = p.slo(3.0, 4.0);
         assert!(slo.ttft_s > 0.0 && slo.tpot_s > 0.0);
+        // the calibration prompt carries the shared prefix the sampler
+        // adds to every request, so capacity can only go down
+        let pp = probe(&model, &hw, &cfg, &spec.with_prefix(512));
+        assert_eq!(pp.mean_in, p.mean_in + 512);
+        assert!(pp.t_prefill_s >= p.t_prefill_s);
+        assert!(pp.capacity_rps() <= p.capacity_rps());
     }
 }

@@ -11,18 +11,22 @@
 //! * **Sarathi-style chunked prefill** — each decode iteration carries
 //!   at most `chunk_tokens` prompt tokens from the admission queue.
 //!
-//! All three share an admission queue, a KV-cache token budget derived
-//! from the hardware's DRAM capacity (admission stalls when full;
-//! youngest-first preemption with prefill recomputation under decode
-//! pressure), and per-request lifecycle tracking (arrival → first token
-//! → completion). Admission reserves a request's full context
-//! (`kv_reserved`) until its prefill has written every token, so later
-//! admissions can never steal the headroom an in-flight chunked prefill
-//! still needs. The clock advances by each iteration's simulated
+//! All three share an admission queue and a paged KV cache
+//! ([`super::kv::KvCache`]) sized from the hardware's DRAM capacity at
+//! the configured cache dtype. The scheduler speaks only the `KvCache`
+//! API: admission headroom (`can_admit`), chunked-prefill reservation
+//! leases (`lease`/`write_chunk`), decode growth (`write_decode`), and
+//! policy-driven preemption with prefill recomputation ([`super::kv::
+//! EvictionPolicy`]). Prefix-sharing admissions skip the shared
+//! system-prompt tokens: their chunks carry `past >= skip` so the
+//! attention cost still covers the full context while the prefill
+//! compute shrinks. The clock advances by each iteration's simulated
 //! latency, costed through [`BatchCoster`]; when nothing is runnable it
 //! jumps to the next arrival. Everything is pure `f64`/integer
 //! arithmetic on a fixed event order, so a fixed stream produces
-//! bit-identical metrics on every run.
+//! bit-identical metrics on every run — and under the default
+//! token-granular fp16 spec the paged accounting is bitwise-equal to
+//! the pre-paging scalar counters (see `rust/tests/kv_properties.rs`).
 //!
 //! The scheduler is a resumable state machine ([`Scheduler`]): the
 //! single-package entry point [`simulate_serving`] drives one instance
@@ -40,6 +44,7 @@ use crate::workload::serving::ServingStrategy;
 use crate::workload::{ModelSpec, Request};
 
 use super::coster::BatchCoster;
+use super::kv::{EvictionPolicy, KvCache};
 use super::metrics::{finalize, IterRecord, RequestOutcome, RunTotals, ServingMetrics, TraceBuffer};
 use super::stream::RequestStream;
 use super::SimConfig;
@@ -51,12 +56,15 @@ struct Live {
     input_len: u64,
     output_len: u64,
     /// Context tokens the current admission must prefill (prompt plus
-    /// any tokens generated before a preemption).
+    /// any tokens generated before a preemption, minus any shared-prefix
+    /// skip granted at admission).
     prefill_target: u64,
     prefill_done: u64,
+    /// Context tokens already resident before this admission's first
+    /// chunk (the shared-prefix skip): chunk costs carry
+    /// `past = past_base + prefill_done`.
+    past_base: u64,
     generated: u64,
-    /// KV-cache tokens currently held.
-    kv_held: u64,
     first_token_s: Option<f64>,
     finish_s: Option<f64>,
     rejected: bool,
@@ -103,7 +111,9 @@ pub struct ReplicaResult {
 /// deterministically.
 pub struct Scheduler<'a> {
     cfg: SimConfig,
-    kv_budget: u64,
+    /// All KV accounting lives here: block allocator, reservation
+    /// leases, prefix sharing, fragmentation/sharing stats.
+    kv: KvCache,
     /// Composition-keyed cost memo; shareable across the replicas of a
     /// fleet (costs are order-independent, so sharing is bit-exact).
     coster: Rc<RefCell<BatchCoster<'a>>>,
@@ -112,11 +122,6 @@ pub struct Scheduler<'a> {
     ext_ids: Vec<usize>,
     queue: VecDeque<usize>,
     running: Vec<usize>, // admission order: oldest first
-    kv_used: u64,
-    /// Reserved-but-unwritten KV of in-flight prefills: admission books
-    /// the full context here and chunk writes move tokens from reserved
-    /// to used, so the guarantee survives across iterations.
-    kv_reserved: u64,
     clock: f64,
     trace: TraceBuffer,
     n_arrived: usize,
@@ -138,6 +143,7 @@ impl<'a> Scheduler<'a> {
             cfg.policy,
             cfg.eval_blocks,
             cfg.ctx_bucket,
+            cfg.kv.dtype,
         )));
         Self::with_coster(model, hw, cfg, coster)
     }
@@ -155,15 +161,13 @@ impl<'a> Scheduler<'a> {
     ) -> Self {
         Scheduler {
             cfg: *cfg,
-            kv_budget: cfg.kv_budget(model).max(2),
+            kv: KvCache::new(cfg.kv, cfg.kv_budget(model).max(2)),
             coster,
             peak_macs_per_cycle: (hw.num_chiplets() as f64) * (hw.class.macs() as f64),
             reqs: Vec::new(),
             ext_ids: Vec::new(),
             queue: VecDeque::new(),
             running: Vec::new(),
-            kv_used: 0,
-            kv_reserved: 0,
             clock: 0.0,
             trace: TraceBuffer::new(cfg.trace_cap),
             n_arrived: 0,
@@ -212,7 +216,7 @@ impl<'a> Scheduler<'a> {
 
     /// Offer a request at `arrival_s` (must be called in nondecreasing
     /// arrival order once the clock has caught up; see `advance_to`).
-    /// Requests that can never fit the KV budget are rejected here.
+    /// Requests that can never fit the KV capacity are rejected here.
     pub fn inject(&mut self, ext_id: usize, arrival_s: f64, input_len: u64, output_len: u64) {
         self.push_request(ext_id, arrival_s, input_len, output_len, false);
     }
@@ -249,14 +253,14 @@ impl<'a> Scheduler<'a> {
             output_len,
             prefill_target: input_len,
             prefill_done: 0,
+            past_base: 0,
             generated: 0,
-            kv_held: 0,
             first_token_s: None,
             finish_s: None,
             rejected: false,
             prefilled,
         };
-        if input_len + output_len + 1 > self.kv_budget {
+        if !self.kv.can_ever_fit(input_len, output_len) {
             // can never fit, even alone: explicit rejection
             live.rejected = true;
             self.rejected += 1;
@@ -291,32 +295,78 @@ impl<'a> Scheduler<'a> {
         while !self.truncated && self.step() {}
     }
 
-    fn evict_youngest(&mut self) {
-        let victim = self.running.pop().expect("eviction needs a running request");
+    /// KV blocks this iteration's decode writes would newly allocate.
+    fn decode_growth(&self) -> u64 {
+        self.running
+            .iter()
+            .filter(|&&i| self.reqs[i].decoding())
+            .map(|&i| self.kv.decode_growth_one(i))
+            .sum()
+    }
+
+    /// Pick the preemption victim's position in `running` (never 0: the
+    /// oldest request keeps its cache so the system always progresses).
+    fn pick_victim(&self) -> usize {
+        match self.cfg.kv.eviction {
+            EvictionPolicy::YoungestFirst => self.running.len() - 1,
+            EvictionPolicy::CostBased => {
+                // lowest recompute loss: the non-oldest request whose
+                // eviction discards the least already-invested work —
+                // prefill tokens written this admission plus generated
+                // tokens whose KV must be re-prefilled. (Not the full
+                // re-admission context: a barely-started large prefill
+                // owes its remaining tokens either way, so only the
+                // written part counts. Ties go to the youngest,
+                // matching the default policy.)
+                let mut best_pos = self.running.len() - 1;
+                let mut best_loss = u64::MAX;
+                for pos in (1..self.running.len()).rev() {
+                    let r = &self.reqs[self.running[pos]];
+                    // migrated requests re-fetch over the handoff link
+                    // instead of recomputing: zero compute loss
+                    let loss = if r.prefilled {
+                        0
+                    } else {
+                        r.prefill_done + r.generated
+                    };
+                    if loss < best_loss {
+                        best_loss = loss;
+                        best_pos = pos;
+                    }
+                }
+                best_pos
+            }
+        }
+    }
+
+    fn evict_victim(&mut self) {
+        debug_assert!(!self.running.is_empty(), "eviction needs a running request");
+        let pos = self.pick_victim();
+        let victim = self.running.remove(pos);
+        self.kv.release(victim);
         let r = &mut self.reqs[victim];
-        self.kv_used -= r.kv_held;
-        self.kv_reserved -= r.prefill_target - r.prefill_done;
-        r.kv_held = 0;
         r.prefill_done = 0;
+        r.past_base = 0;
         self.queue.push_front(victim);
         self.preemptions += 1;
     }
 
     fn admit(&mut self, idx: usize) {
-        let r = &mut self.reqs[idx];
-        r.prefill_target = r.context_needed();
-        r.prefill_done = 0;
-        if r.prefilled {
+        let ctx = self.reqs[idx].context_needed();
+        if self.reqs[idx].prefilled {
             // KV materializes via the handoff transfer: no compute, the
-            // context is resident. Re-admission after a preemption
+            // context is resident. Whole blocks migrate, so the traffic
+            // is block-rounded. Re-admission after a preemption
             // re-fetches instantaneously — a documented modeling
             // simplification (EXPERIMENTS.md "Fleet serving"): the
             // traffic is counted again in `kv_transfer_tokens`, but no
             // extra link latency is charged.
-            r.prefill_done = r.prefill_target;
-            r.kv_held = r.prefill_target;
-            self.kv_used += r.prefill_target;
-            self.kv_transfer_tokens += r.prefill_target;
+            let transferred = self.kv.admit_written(idx, ctx);
+            self.kv_transfer_tokens += transferred;
+            let r = &mut self.reqs[idx];
+            r.prefill_target = ctx;
+            r.prefill_done = ctx;
+            r.past_base = 0;
             // the request's real first token was emitted on the prefill
             // replica; stamping admission time makes this replica's TTFT
             // the decode-pool queueing delay (arrival -> admission)
@@ -324,7 +374,11 @@ impl<'a> Scheduler<'a> {
                 r.first_token_s = Some(self.clock);
             }
         } else {
-            self.kv_reserved += r.prefill_target;
+            let grant = self.kv.lease(idx, ctx, self.reqs[idx].input_len);
+            let r = &mut self.reqs[idx];
+            r.past_base = grant.skip;
+            r.prefill_target = ctx - grant.skip;
+            r.prefill_done = 0;
         }
         self.running.push(idx);
     }
@@ -341,30 +395,24 @@ impl<'a> Scheduler<'a> {
             return false;
         }
         loop {
-            // --- KV pressure: evict youngest (never the oldest) so the
-            // in-flight decodes can write this iteration's tokens
+            // --- KV pressure: preempt per policy (never the oldest) so
+            // the in-flight decodes can write this iteration's tokens
             // without consuming reserved prefill headroom ---
             loop {
-                let writes = self
-                    .running
-                    .iter()
-                    .filter(|&&i| self.reqs[i].decoding())
-                    .count() as u64;
-                if self.kv_used + self.kv_reserved + writes <= self.kv_budget
-                    || self.running.len() <= 1
-                {
+                let growth = self.decode_growth();
+                if self.kv.fits_growth(growth) || self.running.len() <= 1 {
                     break;
                 }
-                self.evict_youngest();
+                self.evict_victim();
             }
 
             let batch = self.form_batch();
             if batch.is_empty() {
-                // KV-blocked prefills with no runnable decode: free the
-                // youngest and retry (the oldest always keeps its cache,
+                // KV-blocked prefills with no runnable decode: free a
+                // victim and retry (the oldest always keeps its cache,
                 // so the system is guaranteed to make progress)
                 if self.running.len() > 1 {
-                    self.evict_youngest();
+                    self.evict_victim();
                     continue;
                 }
                 return false; // idle: the driver injects or stops
@@ -375,36 +423,32 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Compose this iteration's batch per the serving strategy.
-    /// Headroom excludes both written (`kv_used`) and reserved
-    /// (`kv_reserved`) tokens, so admission can never invade the
-    /// reservation of an in-flight chunked prefill.
+    /// Admission headroom is the cache's free blocks: written and
+    /// reserved (leased) blocks are both excluded, so admission can
+    /// never invade the reservation of an in-flight chunked prefill.
     fn form_batch(&mut self) -> Vec<(usize, Role)> {
         let mut batch: Vec<(usize, Role)> = Vec::new();
-        let mut head = self.kv_budget.saturating_sub(self.kv_used + self.kv_reserved);
 
         // migrated requests (disaggregated decode pool) join the decode
         // set directly: admit before the strategy composes its batch.
         // Unlike prompt admission, the context is written immediately
         // *and* the admittee decodes this iteration, so the headroom
         // check must also cover every co-scheduled decode write.
-        let mut writes = self
-            .running
-            .iter()
-            .filter(|&&i| self.reqs[i].decoding())
-            .count() as u64;
+        let mut growth = self.decode_growth();
         while self.running.len() < self.cfg.max_batch {
             let Some(&q) = self.queue.front() else { break };
             if !self.reqs[q].prefilled {
                 break;
             }
             let need = self.reqs[q].context_needed();
-            if need + 1 + writes > head {
+            if !self.kv.can_admit_written(need, growth) {
                 break;
             }
             self.queue.pop_front();
             self.admit(q);
-            head -= need;
-            writes += 1;
+            // the admittee decodes this very iteration: its write joins
+            // the co-scheduled growth (the pre-paging `writes += 1`)
+            growth += self.kv.decode_growth_one(q);
         }
 
         let decoding: Vec<usize> = self
@@ -421,13 +465,12 @@ impl<'a> Scheduler<'a> {
                         break; // migrated: next iteration's pre-pass
                     }
                     let need = self.reqs[q].context_needed();
-                    if need + 1 > head {
+                    if !self.kv.can_admit(need, self.reqs[q].input_len, 0) {
                         break;
                     }
                     self.queue.pop_front();
                     self.admit(q);
-                    head -= need;
-                    batch.push((q, Role::Chunk(need)));
+                    batch.push((q, Role::Chunk(self.reqs[q].prefill_target)));
                 }
                 if batch.is_empty() {
                     batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
@@ -435,28 +478,29 @@ impl<'a> Scheduler<'a> {
             }
             ServingStrategy::Orca => {
                 batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
-                head = head.saturating_sub(decoding.len() as u64);
+                // this iteration's decode writes shrink the admission
+                // headroom (the pre-paging `head -= |decoding|`)
+                let growth: u64 = decoding.iter().map(|&i| self.kv.decode_growth_one(i)).sum();
                 while self.running.len() < self.cfg.max_batch {
                     let Some(&q) = self.queue.front() else { break };
                     if self.reqs[q].prefilled {
                         break; // migrated: next iteration's pre-pass
                     }
                     let need = self.reqs[q].context_needed();
-                    if need + 1 > head {
+                    if !self.kv.can_admit(need, self.reqs[q].input_len, growth) {
                         break;
                     }
                     self.queue.pop_front();
                     self.admit(q);
-                    head -= need;
-                    batch.push((q, Role::Chunk(need)));
+                    batch.push((q, Role::Chunk(self.reqs[q].prefill_target)));
                 }
             }
             ServingStrategy::ChunkedPrefill => {
                 batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
-                head = head.saturating_sub(decoding.len() as u64);
+                let growth: u64 = decoding.iter().map(|&i| self.kv.decode_growth_one(i)).sum();
                 let mut budget = self.cfg.chunk_tokens.max(1);
                 // continue in-flight prefills first, admission order;
-                // their tokens draw on the reservation booked at
+                // their tokens draw on the reservation leased at
                 // admission, so headroom is guaranteed
                 let prefilling: Vec<usize> = self
                     .running
@@ -475,8 +519,8 @@ impl<'a> Scheduler<'a> {
                         batch.push((i, Role::Chunk(t)));
                     }
                 }
-                // then admit new prompts; the admission books their full
-                // context into `kv_reserved`, so later chunks are
+                // then admit new prompts; the admission leases their
+                // full remaining context, so later chunks are
                 // guaranteed to fit even across iterations
                 while budget > 0 && self.running.len() < self.cfg.max_batch {
                     let Some(&q) = self.queue.front() else { break };
@@ -484,13 +528,12 @@ impl<'a> Scheduler<'a> {
                         break; // migrated: next iteration's pre-pass
                     }
                     let need = self.reqs[q].context_needed();
-                    if need + 1 > head {
+                    if !self.kv.can_admit(need, self.reqs[q].input_len, growth) {
                         break;
                     }
                     self.queue.pop_front();
                     self.admit(q);
-                    head -= need;
-                    let t = need.min(budget);
+                    let t = self.reqs[q].prefill_target.min(budget);
                     budget -= t;
                     batch.push((q, Role::Chunk(t)));
                 }
@@ -501,6 +544,7 @@ impl<'a> Scheduler<'a> {
 
     /// Cost the composed batch and apply its effects at completion time.
     fn run_batch(&mut self, batch: &[(usize, Role)]) {
+        let n_running = self.running.len();
         let mut cost_batch: Vec<Request> = Vec::with_capacity(batch.len());
         let mut n_prefill = 0usize;
         let mut prefill_tokens = 0u64;
@@ -514,7 +558,9 @@ impl<'a> Scheduler<'a> {
                     prefill_tokens += t;
                     cost_batch.push(Request::Prefill {
                         len: t,
-                        past: self.reqs[i].prefill_done,
+                        // shared-prefix skip plus already-written chunks:
+                        // attention still spans the full context
+                        past: self.reqs[i].past_base + self.reqs[i].prefill_done,
                     });
                 }
             }
@@ -528,26 +574,23 @@ impl<'a> Scheduler<'a> {
 
         let mut freed: Vec<usize> = Vec::new();
         for &(i, role) in batch {
-            let r = &mut self.reqs[i];
             match role {
                 Role::Decode => {
+                    self.kv.write_decode(i);
+                    let r = &mut self.reqs[i];
                     r.generated += 1;
-                    r.kv_held += 1;
-                    self.kv_used += 1;
                     self.gen_tokens += 1;
                     if r.generated >= r.output_len {
                         r.finish_s = Some(end);
                         self.done += 1;
-                        self.kv_used -= r.kv_held;
-                        r.kv_held = 0;
+                        self.kv.release(i);
                         freed.push(i);
                     }
                 }
                 Role::Chunk(t) => {
+                    self.kv.write_chunk(i, t);
+                    let r = &mut self.reqs[i];
                     r.prefill_done += t;
-                    r.kv_held += t;
-                    self.kv_used += t;
-                    self.kv_reserved -= t; // written: reservation realized
                     if r.prefill_done >= r.prefill_target && r.first_token_s.is_none() {
                         // prefill completion emits the first output token
                         r.first_token_s = Some(end);
@@ -556,8 +599,7 @@ impl<'a> Scheduler<'a> {
                         if r.generated >= r.output_len {
                             r.finish_s = Some(end);
                             self.done += 1;
-                            self.kv_used -= r.kv_held;
-                            r.kv_held = 0;
+                            self.kv.release(i);
                             freed.push(i);
                         }
                     }
@@ -574,7 +616,9 @@ impl<'a> Scheduler<'a> {
             n_prefill,
             prefill_tokens,
             queue_depth: self.queue.len(),
-            kv_frac: self.kv_used as f64 / self.kv_budget as f64,
+            kv_frac: self.kv.frac(),
+            kv_frag: self.kv.fragmentation(),
+            n_running,
         });
         self.clock = end;
     }
@@ -613,6 +657,10 @@ impl<'a> Scheduler<'a> {
                 n_preemptions: self.preemptions,
                 distinct_shapes: self.coster.borrow().distinct_shapes(),
                 kv_transfer_tokens: self.kv_transfer_tokens,
+                kv_capacity_tokens: self.kv.capacity_tokens(),
+                kv_shared_tokens: self.kv.shared_tokens(),
+                kv_demand_tokens: self.kv.demand_tokens(),
+                kv_prefix_materializations: self.kv.prefix_materializations(),
                 truncated: self.truncated || self.done + self.rejected < self.n_arrived,
             },
         );
@@ -644,6 +692,7 @@ mod tests {
     use super::*;
     use crate::arch::{ChipletClass, Dataflow};
     use crate::sim::coster::MappingPolicy;
+    use crate::sim::kv::{EvictionPolicy, KvDtype, KvSpec};
     use crate::sim::metrics::SloSpec;
     use crate::sim::stream::TimedRequest;
     use crate::workload::trace::TraceSpec;
@@ -655,6 +704,7 @@ mod tests {
             sigma_in: 0.4,
             sigma_out: 0.3,
             max_len: 4096,
+            shared_prefix_tokens: 0,
         }
     }
 
@@ -682,6 +732,7 @@ mod tests {
             slo: SloSpec::new(1.0, 0.5),
             max_iterations: 200_000,
             trace_cap: 0,
+            kv: KvSpec::token_granular(),
         }
     }
 
@@ -728,6 +779,10 @@ mod tests {
             assert_eq!(m.n_in_flight, 0, "{strategy:?}");
             assert!(m.throughput_tps > 0.0);
             assert!(m.ttft.n == m.n_completed);
+            // token-granular cache: no block waste, no sharing
+            assert_eq!(m.kv_fragmentation, 0.0, "{strategy:?}");
+            assert_eq!(m.kv_shared_tokens, 0, "{strategy:?}");
+            assert!(m.effective_concurrency > 0.0, "{strategy:?}");
         }
     }
 
@@ -792,9 +847,9 @@ mod tests {
     /// after the admitting iteration: with a 100-token budget, A
     /// (60-token prompt) was admitted, then B (60-token prompt) was
     /// admitted one chunk later into headroom A still needed — forcing
-    /// spurious preemption/recompute cycles. Post-fix, `kv_reserved`
-    /// holds A's full context until written, B waits, and the run
-    /// completes with zero preemptions.
+    /// spurious preemption/recompute cycles. Post-fix (now via the
+    /// cache's reservation leases), B waits and the run completes with
+    /// zero preemptions.
     #[test]
     fn chunked_reservation_survives_across_iterations() {
         let model = ModelSpec::tiny();
@@ -815,11 +870,43 @@ mod tests {
         }
     }
 
+    /// Regression (this PR): an eviction landing mid-chunked-prefill
+    /// releases both the written blocks and the outstanding lease. The
+    /// pre-refactor scalar path computed that release with raw `-=` on
+    /// `u64` (`kv_used -= kv_held; kv_reserved -= target - done`), which
+    /// wraps silently in release builds if the two counters ever drift;
+    /// the KvCache does it with checked ops, so this sequence either
+    /// conserves exactly or panics loudly.
+    #[test]
+    fn eviction_during_chunked_prefill_keeps_checked_accounting() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::ChunkedPrefill);
+        // A (40-token prompt) prefills, then B (75 tokens) is admitted
+        // into the remaining headroom; A's decode writes force KV
+        // pressure while B's chunked prefill is still in flight, so the
+        // eviction releases a partially-realized lease
+        cfg.kv_budget_tokens = 120;
+        cfg.chunk_tokens = 8; // long in-flight prefills
+        cfg.max_batch = 4;
+        let stream = fixed_stream(&[(0.0, 40, 30), (1e-6, 75, 20), (2e-6, 40, 30)]);
+        let m = simulate_serving(&stream, &model, &hw, &cfg);
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+        assert!(!m.truncated);
+        assert!(
+            m.n_preemptions > 0,
+            "sequence must exercise eviction during chunked prefill"
+        );
+        for it in &m.iters {
+            assert!(it.kv_frac <= 1.0 + 1e-9);
+        }
+    }
+
     /// Mixed queues (normal + migrated requests on one scheduler) keep
     /// KV accounting sane: the strategy admission loops defer migrated
     /// requests to the dedicated pre-pass instead of treating them as
     /// prompts (which would double-count their context and underflow
-    /// `kv_reserved`).
+    /// the reservation accounting).
     #[test]
     fn mixed_normal_and_migrated_queue_conserves() {
         let model = ModelSpec::tiny();
@@ -840,6 +927,138 @@ mod tests {
                 assert!(it.kv_frac <= 1.0 + 1e-9, "{strategy:?} kv {}", it.kv_frac);
             }
         }
+    }
+
+    /// Paged blocks conserve and report fragmentation; every strategy
+    /// completes under a coarse block size.
+    #[test]
+    fn paged_blocks_conserve_across_strategies() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        for strategy in ServingStrategy::ALL {
+            let mut cfg = tiny_cfg(strategy);
+            cfg.kv_budget_tokens = 1024;
+            cfg.kv = KvSpec::paged(16);
+            let stream = fixed_stream(&[(0.0, 50, 6), (1e-6, 33, 9), (2e-6, 70, 4)]);
+            let m = simulate_serving(&stream, &model, &hw, &cfg);
+            assert_eq!(m.n_completed, 3, "{strategy:?}");
+            assert!(!m.truncated, "{strategy:?}");
+            assert!(
+                m.kv_fragmentation > 0.0,
+                "{strategy:?}: 16-token blocks on odd lengths must waste slots"
+            );
+            for it in &m.iters {
+                assert!(it.kv_frac <= 1.0 + 1e-9, "{strategy:?}");
+                assert!(it.kv_frag >= 0.0 && it.kv_frag <= 1.0, "{strategy:?}");
+            }
+        }
+    }
+
+    /// Prefix sharing: with a shared system prompt in the trace, later
+    /// admissions skip the prefix (sharing hits), total prefill compute
+    /// drops, and the run still conserves.
+    #[test]
+    fn prefix_sharing_skips_prefill_and_conserves() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::ChunkedPrefill);
+        cfg.kv_budget_tokens = 2048;
+        let stream = fixed_stream(&[(0.0, 80, 4), (1e-6, 90, 4), (2e-6, 85, 4)]);
+
+        cfg.kv = KvSpec::paged(8).with_prefix(64);
+        let shared = simulate_serving(&stream, &model, &hw, &cfg);
+        assert_eq!(shared.n_completed, 3);
+        assert!(!shared.truncated);
+        // first request materializes (no skip), the other two hit
+        assert_eq!(shared.kv_prefix_materializations, 1);
+        assert_eq!(shared.kv_shared_tokens, 2 * 64);
+        assert!(shared.kv_sharing_hit_rate > 0.0);
+
+        // sharing off on the same stream: same completions, zero hits,
+        // and at least as many prefill tokens scheduled
+        cfg.kv = KvSpec::paged(8);
+        let private = simulate_serving(&stream, &model, &hw, &cfg);
+        assert_eq!(private.n_completed, 3);
+        assert_eq!(private.kv_shared_tokens, 0);
+        let toks = |m: &ServingMetrics| m.iters.iter().map(|i| i.prefill_tokens).sum::<u64>();
+        assert!(
+            toks(&shared) + 2 * 64 <= toks(&private),
+            "sharing must cut prefill work by the skipped prefix tokens"
+        );
+    }
+
+    /// `prefix_tokens = 0` must run the exact sharing-off code path.
+    #[test]
+    fn zero_prefix_is_identical_to_sharing_off() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::Orca);
+        cfg.kv = KvSpec::paged(4);
+        let stream = fixed_stream(&[(0.0, 50, 6), (1e-6, 33, 9)]);
+        let a = simulate_serving(&stream, &model, &hw, &cfg);
+        cfg.kv = KvSpec::paged(4).with_prefix(0);
+        let b = simulate_serving(&stream, &model, &hw, &cfg);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.n_iterations, b.n_iterations);
+    }
+
+    /// Cost-based eviction preempts the cheapest-to-recompute victim:
+    /// the run completes, conserves, and (on a stream engineered with
+    /// one short and one long co-resident request) recomputes no more
+    /// prefill tokens than youngest-first.
+    #[test]
+    fn cost_based_eviction_conserves_and_recomputes_less() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mk = |eviction: EvictionPolicy| {
+            let mut cfg = tiny_cfg(ServingStrategy::Orca);
+            cfg.kv_budget_tokens = 200;
+            cfg.kv = KvSpec::token_granular().with_eviction(eviction);
+            // A (90) + B (30) + C (60) co-resident; decode growth forces
+            // exactly one preemption: youngest-first evicts C (67-token
+            // recompute), cost-based evicts B (37 tokens)
+            let stream = fixed_stream(&[(0.0, 90, 12), (1e-6, 30, 12), (2e-6, 60, 12)]);
+            simulate_serving(&stream, &model, &hw, &cfg)
+        };
+        let yf = mk(EvictionPolicy::YoungestFirst);
+        let cb = mk(EvictionPolicy::CostBased);
+        for m in [&yf, &cb] {
+            assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+            assert!(!m.truncated);
+        }
+        let prefill_toks =
+            |m: &ServingMetrics| m.iters.iter().map(|i| i.prefill_tokens).sum::<u64>();
+        assert!(
+            prefill_toks(&cb) <= prefill_toks(&yf),
+            "cost-based eviction recomputed more prefill than youngest-first ({} > {})",
+            prefill_toks(&cb),
+            prefill_toks(&yf)
+        );
+    }
+
+    /// Quantized cache dtypes raise the DRAM-derived token capacity, so
+    /// an int4 cache sustains a tight workload with fewer preemptions
+    /// and rejections than fp16 on the same DRAM.
+    #[test]
+    fn quantized_dtype_raises_capacity_under_fixed_dram() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::Orca);
+        cfg.kv_budget_tokens = 0; // derive from DRAM bytes
+        cfg.dram_gb = 160.0 * model.kv_bytes_per_token() as f64 / 1e9; // ~160 fp16 tokens
+        let stream = fixed_stream(&[(0.0, 60, 20), (1e-6, 60, 20), (2e-6, 60, 20)]);
+        let fp16 = simulate_serving(&stream, &model, &hw, &cfg);
+        cfg.kv = KvSpec::token_granular().with_dtype(KvDtype::Int4);
+        let int4 = simulate_serving(&stream, &model, &hw, &cfg);
+        // floor(bytes/per_tok) at 4x-smaller per_tok is >= 4x the tokens
+        assert!(int4.kv_capacity_tokens >= 4 * fp16.kv_capacity_tokens);
+        assert!(fp16.kv_capacity_tokens >= 150, "budget sizing drifted");
+        assert_eq!(int4.n_completed + int4.n_rejected, int4.n_arrived);
+        assert!(
+            int4.n_rejected + int4.n_preemptions <= fp16.n_rejected + fp16.n_preemptions,
+            "4x capacity must not increase KV pressure"
+        );
     }
 
     /// The occupancy trace stays bounded on long runs while the exact

@@ -29,10 +29,18 @@ impl ModelSpec {
     }
 
     /// KV-cache bytes appended per generated/prefilled token across the
-    /// whole model (K + V, GQA-aware): used by the serving simulator's
-    /// KV budget accounting.
+    /// whole model (K + V, GQA-aware) at the fp16 baseline: used by the
+    /// serving simulator's KV budget accounting.
     pub fn kv_bytes_per_token(&self) -> u64 {
-        2 * self.n_kv_heads * self.head_dim * crate::arch::constants::BYTES_PER_ELEM * self.n_blocks
+        self.kv_bytes_per_token_bits(8 * crate::arch::constants::BYTES_PER_ELEM)
+    }
+
+    /// KV-cache bytes per token at an arbitrary element width (cache
+    /// quantization: fp16 = 16, fp8 = 8, int4 = 4 bits; see
+    /// `sim::KvDtype`). The per-token element count (K + V across all
+    /// heads and blocks) is even, so the int4 division is exact.
+    pub fn kv_bytes_per_token_bits(&self, bits: u64) -> u64 {
+        2 * self.n_kv_heads * self.head_dim * self.n_blocks * bits / 8
     }
 
     /// Approximate parameter count (embeddings excluded).

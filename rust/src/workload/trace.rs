@@ -26,6 +26,10 @@ pub struct TraceSpec {
     pub sigma_in: f64,
     pub sigma_out: f64,
     pub max_len: u64,
+    /// Shared system-prompt prefix prepended to every sampled prompt
+    /// (0 = none). The serving simulator's KV cache can deduplicate it
+    /// across requests (`sim::KvSpec::prefix_tokens`).
+    pub shared_prefix_tokens: u64,
 }
 
 impl TraceSpec {
@@ -37,6 +41,7 @@ impl TraceSpec {
             sigma_in: 1.2,
             sigma_out: 0.9,
             max_len: MAX_SEQ_LEN,
+            shared_prefix_tokens: 0,
         }
     }
 
@@ -48,7 +53,17 @@ impl TraceSpec {
             sigma_in: 0.6,
             sigma_out: 0.5,
             max_len: MAX_SEQ_LEN,
+            shared_prefix_tokens: 0,
         }
+    }
+
+    /// Prepend a shared system-prompt prefix to every sampled prompt:
+    /// each request's input becomes `prefix + user content`, so every
+    /// prompt is strictly longer than the prefix and eligible for
+    /// KV-cache prefix sharing.
+    pub fn with_prefix(mut self, shared_prefix_tokens: u64) -> Self {
+        self.shared_prefix_tokens = shared_prefix_tokens;
+        self
     }
 
     pub fn by_name(name: &str) -> Option<Self> {
@@ -71,13 +86,17 @@ impl TraceSpec {
         (x.round() as u64).clamp(1, self.max_len)
     }
 
-    /// Sample `n` request-length pairs.
+    /// Sample `n` request-length pairs. A nonzero shared prefix is
+    /// prepended to every input length (clamped to `max_len`); with
+    /// `shared_prefix_tokens == 0` sampling is bit-identical to the
+    /// prefix-free path.
     pub fn sample(&self, n: usize, seed: u64) -> Vec<LenPair> {
         let mut rng = Rng::seed_from_u64(seed);
         (0..n)
             .map(|_| {
+                let raw_in = self.sample_len(&mut rng, self.mean_in, self.sigma_in);
                 (
-                    self.sample_len(&mut rng, self.mean_in, self.sigma_in),
+                    (raw_in + self.shared_prefix_tokens).min(self.max_len),
                     self.sample_len(&mut rng, self.mean_out, self.sigma_out),
                 )
             })
@@ -206,6 +225,20 @@ mod tests {
         assert_eq!(fit.len(), 50);
         assert_eq!(test.len(), 50);
         assert_ne!(fit, test);
+    }
+
+    #[test]
+    fn shared_prefix_inflates_every_prompt() {
+        let spec = TraceSpec::sharegpt();
+        let with = spec.with_prefix(256).sample(200, 9);
+        let without = spec.sample(200, 9);
+        for ((wi, wo), (pi, po)) in without.iter().zip(&with) {
+            assert_eq!(*pi, (*wi + 256).min(MAX_SEQ_LEN));
+            assert!(*pi > 256, "prompt not longer than the prefix");
+            assert_eq!(wo, po, "outputs must be unaffected");
+        }
+        // prefix 0 is bit-identical to the prefix-free path
+        assert_eq!(spec.with_prefix(0).sample(50, 3), spec.sample(50, 3));
     }
 
     #[test]

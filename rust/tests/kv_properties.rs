@@ -1,0 +1,321 @@
+//! Property tests for the paged KV-cache subsystem (`sim::kv`).
+//!
+//! The correctness anchor: under `block_tokens = 1`, fp16, sharing off,
+//! the paged `KvCache` must be *bitwise-equal* to the pre-refactor
+//! scalar token counters (`kv_used`/`kv_reserved` with raw `u64`
+//! arithmetic). `ScalarKv` below reimplements those counters exactly as
+//! `sched.rs` used them before the refactor; randomized
+//! scheduler-shaped op sequences (admit / chunk / decode / evict /
+//! finish, with the same admission and pressure checks the scheduler
+//! issues) must produce identical decisions and identical counter
+//! values at every step — so a full simulation, which only touches KV
+//! state through this API, is bitwise-equal too (the behavioral
+//! regression tests in `sched.rs` pin the end-to-end metrics).
+//!
+//! Plus the allocator laws: used + reserved + free == capacity after
+//! every operation, no block is double-freed, and prefix-shared blocks
+//! are freed only at refcount zero.
+
+use compass::sim::kv::{KvCache, KvSpec};
+use compass::sim::{EvictionPolicy, KvDtype};
+use compass::util::Rng;
+
+/// The pre-refactor scalar accounting, verbatim semantics: raw token
+/// counters, headroom = budget - used - reserved, `need + 1` admission
+/// slack, reservations realized token-by-token.
+struct ScalarKv {
+    budget: u64,
+    used: u64,
+    reserved: u64,
+}
+
+impl ScalarKv {
+    fn new(budget: u64) -> Self {
+        ScalarKv {
+            budget,
+            used: 0,
+            reserved: 0,
+        }
+    }
+
+    fn can_ever_fit(&self, input: u64, output: u64) -> bool {
+        input + output + 1 <= self.budget
+    }
+
+    fn can_admit(&self, need: u64, extra_writes: u64) -> bool {
+        let head = self.budget.saturating_sub(self.used + self.reserved);
+        need + 1 + extra_writes <= head
+    }
+
+    fn lease(&mut self, need: u64) {
+        self.reserved += need;
+    }
+
+    fn write_chunk(&mut self, t: u64) {
+        self.used += t;
+        self.reserved -= t;
+    }
+
+    fn write_decode(&mut self) {
+        self.used += 1;
+    }
+
+    fn release(&mut self, held: u64, unwritten: u64) {
+        self.used -= held;
+        self.reserved -= unwritten;
+    }
+
+    fn fits_growth(&self, writes: u64) -> bool {
+        self.used + self.reserved + writes <= self.budget
+    }
+
+    fn frac(&self) -> f64 {
+        self.used as f64 / self.budget as f64
+    }
+}
+
+/// Shadow state of one in-flight request on the scalar side.
+#[derive(Clone, Copy)]
+struct ShadowReq {
+    written: u64,
+    lease_left: u64,
+    decoding: bool,
+}
+
+/// Drive `KvCache` (token-granular, fp16, sharing off) and `ScalarKv`
+/// through the same randomized scheduler-shaped op sequence; every
+/// decision and every counter must match bitwise at every step.
+#[test]
+fn token_granular_cache_is_bitwise_equal_to_scalar_counters() {
+    let mut rng = Rng::seed_from_u64(0x6b76); // "kv"
+    for trial in 0..20u64 {
+        let budget = 64 + 16 * (trial % 7);
+        let mut cache = KvCache::new(KvSpec::token_granular(), budget);
+        let mut scalar = ScalarKv::new(budget);
+        let mut live: Vec<Option<ShadowReq>> = Vec::new();
+        let mut next_idx = 0usize;
+
+        for _step in 0..400 {
+            // the invariant web: every counter matches bitwise
+            assert_eq!(cache.capacity_blocks(), scalar.budget);
+            assert_eq!(cache.used_blocks(), scalar.used);
+            assert_eq!(cache.reserved_blocks(), scalar.reserved);
+            assert_eq!(
+                cache.free_blocks(),
+                scalar.budget - scalar.used - scalar.reserved
+            );
+            assert_eq!(cache.frac().to_bits(), scalar.frac().to_bits());
+
+            let active: Vec<usize> = live
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r.map(|_| i))
+                .collect();
+            match rng.gen_index(5) {
+                // --- admission attempt ---
+                0 => {
+                    let input = 1 + rng.gen_index(24) as u64;
+                    let output = 1 + rng.gen_index(12) as u64;
+                    assert_eq!(
+                        cache.can_ever_fit(input, output),
+                        scalar.can_ever_fit(input, output)
+                    );
+                    let extra = rng.gen_index(3) as u64; // co-scheduled decodes
+                    let verdict = cache.can_admit(input, input, extra);
+                    assert_eq!(verdict, scalar.can_admit(input, extra), "admission verdict");
+                    if verdict {
+                        let grant = cache.lease(next_idx, input, input);
+                        assert_eq!(grant.skip, 0, "sharing off grants no skip");
+                        scalar.lease(input);
+                        if next_idx >= live.len() {
+                            live.resize(next_idx + 1, None);
+                        }
+                        live[next_idx] = Some(ShadowReq {
+                            written: 0,
+                            lease_left: input,
+                            decoding: false,
+                        });
+                        next_idx += 1;
+                    }
+                }
+                // --- chunk write on a prefilling request ---
+                1 => {
+                    if let Some(&i) = active
+                        .iter()
+                        .find(|&&i| live[i].is_some_and(|r| r.lease_left > 0))
+                    {
+                        let mut r = live[i].unwrap();
+                        let t = 1 + rng.gen_index(r.lease_left as usize) as u64;
+                        cache.write_chunk(i, t);
+                        scalar.write_chunk(t);
+                        r.written += t;
+                        r.lease_left -= t;
+                        r.decoding = r.lease_left == 0;
+                        live[i] = Some(r);
+                    }
+                }
+                // --- decode write (the scheduler's pressure loop runs
+                // first: only write when growth fits) ---
+                2 => {
+                    if let Some(&i) = active
+                        .iter()
+                        .find(|&&i| live[i].is_some_and(|r| r.decoding))
+                    {
+                        let growth = cache.decode_growth_one(i);
+                        assert_eq!(growth, 1, "token-granular decode always grows by 1");
+                        assert_eq!(cache.fits_growth(growth), scalar.fits_growth(1));
+                        if cache.fits_growth(growth) {
+                            cache.write_decode(i);
+                            scalar.write_decode();
+                            let mut r = live[i].unwrap();
+                            r.written += 1;
+                            live[i] = Some(r);
+                        }
+                    }
+                }
+                // --- eviction (release with an unrealized lease) or
+                // completion (release fully written) ---
+                _ => {
+                    if !active.is_empty() {
+                        let i = active[rng.gen_index(active.len())];
+                        let r = live[i].take().unwrap();
+                        cache.release(i);
+                        scalar.release(r.written, r.lease_left);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Allocator conservation under randomized paged operation: used +
+/// reserved + free always equals capacity, fragmentation stays in
+/// [0, 1], and every release returns exactly what was allocated.
+#[test]
+fn paged_allocator_conserves_capacity() {
+    let mut rng = Rng::seed_from_u64(99);
+    for &bt in &[1u64, 4, 16, 64] {
+        let spec = KvSpec::paged(bt);
+        let mut kv = KvCache::new(spec, 4096);
+        let cap = kv.capacity_blocks();
+        let mut live: Vec<(usize, u64)> = Vec::new(); // (idx, lease_left)
+        let mut next = 0usize;
+        for _ in 0..600 {
+            assert_eq!(
+                kv.used_blocks() + kv.reserved_blocks() + kv.free_blocks(),
+                cap,
+                "bt={bt}: used + reserved + free != capacity"
+            );
+            let frag = kv.fragmentation();
+            assert!((0.0..=1.0).contains(&frag), "bt={bt}: frag {frag}");
+            match rng.gen_index(4) {
+                0 => {
+                    let ctx = 1 + rng.gen_index(200) as u64;
+                    if kv.can_admit(ctx, ctx, 0) {
+                        kv.lease(next, ctx, ctx);
+                        live.push((next, ctx));
+                        next += 1;
+                    }
+                }
+                1 => {
+                    if let Some(e) = live.iter_mut().find(|e| e.1 > 0) {
+                        let t = 1 + rng.gen_index(e.1 as usize) as u64;
+                        kv.write_chunk(e.0, t);
+                        e.1 -= t;
+                    }
+                }
+                2 => {
+                    if let Some(e) = live.iter().find(|e| e.1 == 0) {
+                        if kv.fits_growth(kv.decode_growth_one(e.0)) {
+                            kv.write_decode(e.0);
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let k = rng.gen_index(live.len());
+                        let (idx, _) = live.swap_remove(k);
+                        kv.release(idx);
+                        assert!(!kv.is_active(idx), "released sequence still active");
+                    }
+                }
+            }
+        }
+        // draining everything returns the cache to pristine
+        for (idx, _) in live.drain(..) {
+            kv.release(idx);
+        }
+        assert_eq!(kv.used_blocks(), 0, "bt={bt}");
+        assert_eq!(kv.reserved_blocks(), 0, "bt={bt}");
+        assert_eq!(kv.free_blocks(), cap, "bt={bt}");
+    }
+}
+
+/// Prefix lifecycle under randomized churn: shared blocks exist iff
+/// some active sequence references them, and they are freed exactly
+/// when the refcount reaches zero (observable as used_blocks returning
+/// to the sum of private allocations).
+#[test]
+fn prefix_blocks_freed_only_at_refcount_zero() {
+    let spec = KvSpec::paged(8).with_prefix(32);
+    let mut kv = KvCache::new(spec, 2048);
+    let prefix_blocks = 4u64; // 32 tokens / 8 per block
+
+    // materialize via request 0 (input > prefix)
+    kv.lease(0, 40, 40);
+    kv.write_chunk(0, 40);
+    let used_with_prefix = kv.used_blocks();
+    assert_eq!(used_with_prefix, prefix_blocks + 1); // 8 private tokens
+
+    // three sharers take references
+    for i in 1..=3usize {
+        let g = kv.lease(i, 40, 40);
+        assert_eq!(g.skip, 32, "ready prefix must be skipped");
+        kv.write_chunk(i, 8);
+    }
+    assert_eq!(kv.shared_tokens(), 3 * 32);
+    assert_eq!(kv.used_blocks(), prefix_blocks + 4);
+
+    // releasing any strict subset keeps the shared blocks alive
+    kv.release(0);
+    kv.release(2);
+    assert_eq!(kv.used_blocks(), prefix_blocks + 2);
+    kv.release(1);
+    assert_eq!(kv.used_blocks(), prefix_blocks + 1);
+    // the last reference frees the prefix in the same release
+    kv.release(3);
+    assert_eq!(kv.used_blocks(), 0);
+    assert_eq!(kv.free_blocks(), kv.capacity_blocks());
+    assert_eq!(kv.prefix_materializations(), 1);
+}
+
+/// Capacity scaling across dtypes is exact block math: the same DRAM
+/// budget yields >= 2x / >= 4x tokens at fp8 / int4, and the paged
+/// capacity never exceeds the token budget.
+#[test]
+fn dtype_and_block_capacity_math() {
+    for &budget in &[100u64, 1000, 4097] {
+        for &bt in &[1u64, 3, 16] {
+            let kv = KvCache::new(KvSpec::paged(bt), budget);
+            assert!(kv.capacity_tokens() <= budget);
+            assert!(kv.capacity_tokens() + bt > budget, "more than one block wasted");
+        }
+    }
+    // a block size exceeding the whole budget clamps down to it: the
+    // cache never promises more tokens than the DRAM holds
+    let tiny = KvCache::new(KvSpec::paged(16), 8);
+    assert_eq!(tiny.capacity_tokens(), 8);
+    assert!(!tiny.can_ever_fit(10, 4), "15-token footprint on 8-token DRAM");
+    // dtype plumbing end to end: spec names and bit widths
+    assert_eq!(KvDtype::Fp16.bits(), 16);
+    assert_eq!(KvDtype::Fp8.bits(), 8);
+    assert_eq!(KvDtype::Int4.bits(), 4);
+    let s = KvSpec::paged(16)
+        .with_dtype(KvDtype::Int4)
+        .with_prefix(64)
+        .with_eviction(EvictionPolicy::CostBased);
+    assert_eq!(s.describe(), "int4/bt16/pfx64/cb");
+    assert_eq!(s.block_round(1), 16);
+    assert_eq!(s.block_round(16), 16);
+    assert_eq!(s.block_round(17), 32);
+}

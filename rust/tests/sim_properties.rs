@@ -29,6 +29,7 @@ fn tiny_spec() -> TraceSpec {
         sigma_in: 0.5,
         sigma_out: 0.4,
         max_len: 4096,
+        shared_prefix_tokens: 0,
     }
 }
 
