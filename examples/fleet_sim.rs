@@ -186,6 +186,25 @@ fn main() {
         assert_eq!(rerun.ttft.p99.to_bits(), first.ttft.p99.to_bits());
         assert_eq!(rerun.energy_pj.to_bits(), first.energy_pj.to_bits());
         println!("\ndeterminism: overload JSQ cell rerun is bit-identical: PASS");
+
+        // the trait-based front end with the baseline control plane is
+        // the legacy router, bit for bit (the PR 5 refactor anchor)
+        let hws = vec![s.hw.clone(); fleets[jsq_idx].total_replicas()];
+        let fe = sim::simulate_fleet_frontend(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleets[jsq_idx],
+            &sim::Frontend::baseline(),
+        );
+        assert_eq!(
+            fe.makespan_s.to_bits(),
+            first.makespan_s.to_bits(),
+            "trait front end drifted from the legacy router"
+        );
+        assert_eq!(fe.energy_pj.to_bits(), first.energy_pj.to_bits());
+        println!("refactor anchor: baseline front end == legacy router: PASS");
     }
 
     // --- disaggregation must actually migrate KV ---

@@ -1,0 +1,220 @@
+//! Front-end control-plane sweep: SLO-aware load shedding x
+//! decode-pool rebalancing x even/heterogeneous fleet sizing on one
+//! request stream (the control-plane counterpart of `fleet_sim`).
+//!
+//! The default configuration replays GovReport-style traffic across a
+//! 4-replica fleet carved from a 512-TOPS budget and compares the
+//! PR 3 baseline (JSQ + arrival-time rejection) against SLO-aware
+//! shedding, busy-time rebalancing, and a heterogeneous
+//! prefill/decode split, at near- and over-capacity rates. It then
+//! checks:
+//!
+//! * the refactor anchor: the legacy `simulate_fleet` entry point and
+//!   the trait-based front end with `Frontend::baseline()` are
+//!   bit-identical;
+//! * every cell conserves requests (completed + rejected == arrived)
+//!   and sheds only within its rejections;
+//! * at overload, SLO-aware shedding achieves at least the
+//!   arrival-time-rejection baseline's SLO goodput (full run only —
+//!   the tiny CI smoke just proves the subsystem end-to-end);
+//! * the bundled Azure-style trace fixture replays deterministically
+//!   through the same cells.
+//!
+//! Run:   cargo run --release --example frontend_control
+//! CI:    cargo run --example frontend_control -- --tiny
+//!
+//! Output is deterministic for the fixed seed baked in below.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::experiments as exp;
+use compass::sim::{self, Frontend, RouterPolicy, SimConfig};
+use compass::workload::serving::ServingStrategy;
+use compass::workload::ModelSpec;
+
+const SEED: u64 = 23;
+
+struct Setup {
+    label: &'static str,
+    scene: exp::FleetScene,
+    model: ModelSpec,
+    hw: HwConfig,
+    cfg: SimConfig,
+}
+
+fn setup(tiny: bool) -> Setup {
+    if tiny {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.chunk_tokens = 32;
+        cfg.kv_budget_tokens = 2048;
+        cfg.ctx_bucket = 64;
+        cfg.eval_blocks = 1;
+        let mut scene = exp::FleetScene::new("sharegpt", 64.0, 2, 12);
+        scene.rates_rps = Vec::new(); // auto {0.8, 1.3} x capacity
+        Setup {
+            label: "tiny-frontend",
+            scene,
+            model: ModelSpec::tiny(),
+            hw: HwConfig::homogeneous(
+                2,
+                2,
+                ChipletClass::S,
+                Dataflow::WeightStationary,
+                32.0,
+                16.0,
+            ),
+            cfg,
+        }
+    } else {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.ctx_bucket = 1024; // GovReport contexts are ~10k tokens
+        let scene = exp::FleetScene::new("govreport", 512.0, 4, 36);
+        Setup {
+            label: "govreport-512T-frontend4",
+            model: scene.model(),
+            hw: exp::sim_default_hw(scene.tops_per_replica()),
+            scene,
+            cfg,
+        }
+    }
+}
+
+fn main() {
+    let tiny = std::env::args().skip(1).any(|a| a == "--tiny");
+    let s = setup(tiny);
+    let t0 = std::time::Instant::now();
+    let knobs = exp::FrontendKnobs::default();
+
+    println!(
+        "frontend_control [{}] model={} | {} replicas of: {}",
+        s.label,
+        s.model.name,
+        s.scene.n_replicas,
+        s.hw.describe()
+    );
+
+    // --- refactor anchor: legacy entry point == baseline front end ---
+    {
+        let spec = s.scene.spec();
+        let probe = sim::probe(&s.model, &s.hw, &s.cfg, &spec);
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            1.2 * s.scene.n_replicas as f64 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let mut cfg = s.cfg;
+        cfg.slo = probe.slo(3.0, 4.0);
+        let fleet =
+            sim::FleetConfig::homogeneous(s.scene.n_replicas, RouterPolicy::JoinShortestQueue);
+        let legacy = sim::simulate_fleet(&stream, &s.model, &s.hw, &cfg, &fleet);
+        let hws = vec![s.hw.clone(); fleet.total_replicas()];
+        let traity = sim::simulate_fleet_frontend(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+        );
+        assert_eq!(
+            legacy.makespan_s.to_bits(),
+            traity.makespan_s.to_bits(),
+            "trait front end drifted from the legacy router"
+        );
+        assert_eq!(legacy.energy_pj.to_bits(), traity.energy_pj.to_bits());
+        assert_eq!(legacy.ttft.p99.to_bits(), traity.ttft.p99.to_bits());
+        println!("refactor anchor: baseline front end is bit-identical to legacy: PASS");
+    }
+
+    // --- the control-plane sweep ---
+    let rows = exp::frontend_study_with_model(&s.scene, &s.model, &s.hw, &s.cfg, &knobs, SEED);
+    exp::frontend_study_table(&s.scene, &rows).print();
+    for r in &rows {
+        let m = &r.metrics;
+        assert_eq!(
+            m.n_completed + m.n_rejected,
+            m.n_arrived,
+            "{} @ {} does not conserve requests",
+            r.key,
+            r.rate_rps
+        );
+        assert!(m.n_shed <= m.n_rejected, "{}: shed beyond rejections", r.key);
+    }
+    println!("\nconservation: every cell completes or rejects every arrival: PASS");
+
+    // --- determinism: rerun of one shedding cell is bit-identical ---
+    {
+        let a = exp::frontend_study_with_model(&s.scene, &s.model, &s.hw, &s.cfg, &knobs, SEED);
+        let pick = |rows: &[exp::FrontendStudyRow]| {
+            rows.iter()
+                .map(|r| (r.metrics.makespan_s.to_bits(), r.metrics.n_shed))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(pick(&rows), pick(&a), "front-end study rerun differs");
+        println!("determinism: full study rerun is bit-identical: PASS");
+    }
+
+    // --- headline orderings at overload ---
+    print!("\n{}", exp::frontend_study_headline(&rows));
+    let hi = rows
+        .iter()
+        .map(|r| r.rate_rps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at = |key: &str| {
+        rows.iter()
+            .find(|r| r.rate_rps == hi && r.key == key)
+            .map(|r| &r.metrics)
+            .expect("cell present")
+    };
+    let (base, shed) = (at("jsq"), at("jsq+shed"));
+    let shed_ok = shed.slo_goodput_tps >= base.slo_goodput_tps;
+    println!(
+        "slo-shed >= arrival-reject on SLO goodput at overload: {}",
+        if shed_ok { "PASS" } else { "FAIL" }
+    );
+    let (even, het) = (at("even-disagg"), at("hetero-disagg"));
+    println!(
+        "hetero-disagg vs even-disagg SLO goodput at overload: {:.1} vs {:.1} tok/s",
+        het.slo_goodput_tps, even.slo_goodput_tps
+    );
+
+    // --- bundled Azure-style trace fixture replays through the cells ---
+    {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/traces/azure_tiny.csv");
+        let stream = sim::RequestStream::from_trace_file(path).expect("bundled fixture");
+        let probe = sim::probe_stream(&s.model, &s.hw, &s.cfg, &stream);
+        let mut cfg = s.cfg;
+        cfg.slo = probe.slo(3.0, 4.0);
+        let trace_rows = exp::frontend_study_stream(
+            &s.scene, &s.model, &s.hw, &cfg, &knobs, &probe, &stream,
+        );
+        for r in &trace_rows {
+            assert_eq!(r.metrics.n_completed + r.metrics.n_rejected, r.metrics.n_arrived);
+            assert_eq!(r.metrics.n_arrived, stream.len());
+        }
+        let rerun = exp::frontend_study_stream(
+            &s.scene, &s.model, &s.hw, &cfg, &knobs, &probe, &stream,
+        );
+        assert_eq!(
+            trace_rows[0].metrics.makespan_s.to_bits(),
+            rerun[0].metrics.makespan_s.to_bits(),
+            "trace replay not bit-identical"
+        );
+        println!(
+            "trace replay: {} ({} requests) through all {} cells, deterministic: PASS",
+            stream.name,
+            stream.len(),
+            trace_rows.len()
+        );
+    }
+
+    // the full GovReport run is the acceptance gate for the shedding
+    // ordering; the tiny smoke only proves the subsystem end-to-end
+    // (toy scale need not sit in the regime where admission dominates)
+    if !tiny && !shed_ok {
+        eprintln!("[frontend_control] FAIL: SLO shedding below arrival-reject goodput at overload");
+        std::process::exit(1);
+    }
+    eprintln!("[frontend_control] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -286,6 +286,23 @@ impl HwSpace {
             .filter(|c| c.chiplets_for(self.target_tops) <= self.max_chiplets)
             .collect()
     }
+
+    /// A representative fixed configuration for a compute target: the
+    /// largest feasible chiplet class (fewest chiplets), a near-square
+    /// grid, median Table-IV bandwidths. Used when a study (or the
+    /// fleet DSE's non-searched pool) needs *a* sensible package at a
+    /// TOPS share rather than a searched one.
+    pub fn representative(target_tops: f64) -> HwConfig {
+        let space = HwSpace::paper(target_tops);
+        let class = space
+            .feasible_classes()
+            .last()
+            .copied()
+            .unwrap_or(ChipletClass::L);
+        let n = class.chiplets_for(target_tops);
+        let (h, w) = HwSpace::grid_dims(n);
+        HwConfig::homogeneous(h, w, class, Dataflow::WeightStationary, 128.0, 64.0)
+    }
 }
 
 #[cfg(test)]

@@ -13,8 +13,8 @@ use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
 use crate::sim::{
-    self, FleetConfig, FleetMetrics, KvSpec, MappingPolicy, RequestStream, RouterPolicy,
-    ServingMetrics, SimConfig,
+    self, FleetConfig, FleetMetrics, Frontend, KvSpec, MappingPolicy, RequestStream,
+    RouterPolicy, ServingMetrics, SimConfig,
 };
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
@@ -211,19 +211,58 @@ pub fn search_kv(
 // ---------------------------------------------------------------------
 
 /// Fleet design space under a total compute budget: candidate replica
-/// counts (served by the JSQ router) and disaggregated prefill/decode
-/// splits, each replica sized to `total_tops / total_replicas` so every
-/// shape spends the same silicon.
+/// counts x router policies, even disaggregated prefill/decode splits
+/// (each replica sized to `total_tops / total_replicas`), heterogeneous
+/// splits (prefill pool sized to an explicit share of the budget), and
+/// SLO-shed admission margins — the co-search axes of the front-end
+/// control plane.
 #[derive(Debug, Clone)]
 pub struct FleetSpace {
     /// Total compute budget across the fleet (TOPS).
     pub total_tops: f64,
-    /// Homogeneous fleet sizes to consider (JSQ-routed).
+    /// Homogeneous fleet sizes to consider.
     pub replica_counts: Vec<usize>,
-    /// Disaggregated (prefill, decode) splits to consider.
+    /// Router policies applied to each homogeneous replica count.
+    pub routers: Vec<RouterPolicy>,
+    /// Even disaggregated (prefill, decode) splits to consider.
     pub splits: Vec<(usize, usize)>,
+    /// Heterogeneous disaggregated splits: `(n_prefill, n_decode,
+    /// prefill share of total_tops)`. Pool-proportional would be
+    /// `p / (p + d)`; shares below that favor the decode pool, which
+    /// carries the token volume of decode-heavy serving traffic.
+    pub hetero_splits: Vec<(usize, usize, f64)>,
+    /// SLO-shed admission margins (TTFT multiples) to co-search; every
+    /// shape is also scored under plain arrival-time rejection.
+    pub shed_margins: Vec<f64>,
     /// KV handoff cost per migrated token for the splits (s/token).
     pub handoff_s_per_token: f64,
+}
+
+/// One scored point of the fleet co-search: a shape plus a front-end
+/// admission setting.
+#[derive(Debug, Clone)]
+pub struct FleetCandidate {
+    pub fleet: FleetConfig,
+    /// SLO-shed margin (None = arrival-time rejection only).
+    pub shed_margin: Option<f64>,
+}
+
+impl FleetCandidate {
+    pub fn describe(&self) -> String {
+        match self.shed_margin {
+            Some(m) => format!("{} + shed x{m:.2}", self.fleet.describe()),
+            None => self.fleet.describe(),
+        }
+    }
+
+    /// The front end this candidate runs; `probe` calibrates the
+    /// shedding estimator for the hardware under evaluation.
+    pub fn frontend(&self, probe: sim::SimProbe) -> Frontend {
+        match self.shed_margin {
+            Some(m) => Frontend::with_shedding(probe, m),
+            None => Frontend::baseline(),
+        }
+    }
 }
 
 impl FleetSpace {
@@ -231,30 +270,86 @@ impl FleetSpace {
         FleetSpace {
             total_tops,
             replica_counts: vec![1, 2, 4],
+            routers: vec![RouterPolicy::JoinShortestQueue],
             splits: vec![(1, 1), (1, 3)],
+            hetero_splits: vec![(1, 3, 0.15)],
+            shed_margins: Vec::new(),
             handoff_s_per_token: 1e-8,
         }
     }
 
     /// All fleet shapes the search scores.
     pub fn shapes(&self) -> Vec<FleetConfig> {
-        let mut out: Vec<FleetConfig> = self
-            .replica_counts
-            .iter()
-            .map(|&n| FleetConfig::homogeneous(n, RouterPolicy::JoinShortestQueue))
-            .collect();
+        let mut out: Vec<FleetConfig> = Vec::new();
+        for &router in &self.routers {
+            out.extend(
+                self.replica_counts
+                    .iter()
+                    .map(|&n| FleetConfig::homogeneous(n, router)),
+            );
+        }
         out.extend(
             self.splits
                 .iter()
                 .map(|&(p, d)| FleetConfig::disaggregated(p, d, self.handoff_s_per_token)),
         );
+        out.extend(self.hetero_splits.iter().map(|&(p, d, share)| {
+            FleetConfig::disaggregated_hetero(p, d, self.handoff_s_per_token, share)
+        }));
         out
     }
 
+    /// The shape x admission-margin grid the co-search scores.
+    pub fn candidates(&self) -> Vec<FleetCandidate> {
+        let mut out = Vec::new();
+        for fleet in self.shapes() {
+            out.push(FleetCandidate {
+                fleet: fleet.clone(),
+                shed_margin: None,
+            });
+            for &m in &self.shed_margins {
+                out.push(FleetCandidate {
+                    fleet: fleet.clone(),
+                    shed_margin: Some(m),
+                });
+            }
+        }
+        out
+    }
+
+    /// Per-replica TOPS share the BO search samples for one shape: the
+    /// even per-replica split, except for heterogeneous splits where
+    /// the search budget goes to the decode pool (it dominates serving
+    /// goodput on decode-heavy traffic).
+    fn searched_tops(&self, fleet: &FleetConfig) -> f64 {
+        if fleet.router == RouterPolicy::PrefillDecode && fleet.prefill_tops_share > 0.0 {
+            ((1.0 - fleet.prefill_tops_share) * self.total_tops / fleet.n_decode.max(1) as f64)
+                .max(1.0)
+        } else {
+            (self.total_tops / fleet.total_replicas() as f64).max(1.0)
+        }
+    }
+
     /// Per-replica hardware space for one fleet shape: the paper's
-    /// Table-IV space at the budget's per-replica share.
+    /// Table-IV space at the shape's searched per-replica share.
     pub fn space_for(&self, fleet: &FleetConfig) -> HwSpace {
-        HwSpace::paper((self.total_tops / fleet.total_replicas() as f64).max(1.0))
+        HwSpace::paper(self.searched_tops(fleet))
+    }
+
+    /// The per-replica hardware vector for one shape given the
+    /// BO-searched configuration: every replica runs it, except a
+    /// heterogeneous prefill pool, whose replicas get a representative
+    /// package at their own TOPS share ([`HwSpace::representative`]).
+    pub fn replica_hws(&self, fleet: &FleetConfig, searched: &HwConfig) -> Vec<HwConfig> {
+        if fleet.router == RouterPolicy::PrefillDecode && fleet.prefill_tops_share > 0.0 {
+            let p = fleet.n_prefill.max(1);
+            let pre_tops = (fleet.prefill_tops_share * self.total_tops / p as f64).max(1.0);
+            let mut hws = vec![HwSpace::representative(pre_tops); p];
+            hws.extend(std::iter::repeat(searched.clone()).take(fleet.n_decode.max(1)));
+            hws
+        } else {
+            vec![searched.clone(); fleet.total_replicas()]
+        }
     }
 }
 
@@ -263,13 +358,18 @@ impl FleetSpace {
 pub struct FleetDseOutcome {
     /// Winning fleet shape.
     pub fleet: FleetConfig,
-    /// Winning per-replica hardware configuration.
+    /// Winning front-end admission margin (None = arrival rejection).
+    pub shed_margin: Option<f64>,
+    /// Winning BO-searched per-replica hardware configuration.
     pub hw: HwConfig,
+    /// The full per-replica hardware vector actually simulated
+    /// (differs from `vec![hw; n]` for heterogeneous shapes).
+    pub hws: Vec<HwConfig>,
     pub metrics: FleetMetrics,
-    /// Best-objective trajectory of the winning shape's BO run.
+    /// Best-objective trajectory of the winning candidate's BO run.
     pub bo_history: Vec<f64>,
-    /// Best objective reached per candidate fleet shape.
-    pub per_shape: Vec<(FleetConfig, f64)>,
+    /// Best objective reached per fleet-shape x admission candidate.
+    pub per_shape: Vec<(FleetCandidate, f64)>,
     pub backend: &'static str,
 }
 
@@ -289,11 +389,29 @@ pub fn search_fleet(
     sim::simulate_fleet(stream, model, hw, &cfg, fleet)
 }
 
-/// Compass scaled out: BO over per-replica hardware *per fleet shape*
-/// (replica count or prefill/decode split under the shared total-TOPS
-/// budget), the fleet simulator inside, maximizing fleet SLO-constrained
-/// goodput via [`FleetMetrics::objective`]. The same `gp` is reused
-/// across shapes (each `fit` retrains from scratch on its own
+/// [`search_fleet`] with per-replica hardware and an explicit front
+/// end (heterogeneous pools, SLO-shed admission, rebalancing).
+pub fn search_fleet_frontend(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    ga_cfg: &GaConfig,
+    sim_cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+) -> FleetMetrics {
+    let cfg = sim_cfg.with_policy(MappingPolicy::Searched(*ga_cfg));
+    sim::simulate_fleet_frontend(stream, model, hws, &cfg, fleet, fe)
+}
+
+/// Compass scaled out: BO over per-replica hardware *per fleet
+/// candidate* (replica count x router, even or heterogeneous
+/// prefill/decode split, and SLO-shed admission margin, all under the
+/// shared total-TOPS budget), the fleet simulator inside, maximizing
+/// fleet SLO-constrained goodput via [`FleetMetrics::objective`]. The
+/// shedding estimator is re-calibrated per hardware sample from the
+/// stream itself ([`sim::probe_stream`]). The same `gp` is reused
+/// across candidates (each `fit` retrains from scratch on its own
 /// observations).
 pub fn compass_dse_fleet(
     stream: &RequestStream,
@@ -303,26 +421,44 @@ pub fn compass_dse_fleet(
     sim_cfg: &SimConfig,
     gp: &mut dyn Gp,
 ) -> FleetDseOutcome {
-    let mut per_shape: Vec<(FleetConfig, f64)> = Vec::new();
-    let mut best: Option<(FleetConfig, bo::BoResult)> = None;
-    for fleet in fspace.shapes() {
-        let space = fspace.space_for(&fleet);
+    let mut per_shape: Vec<(FleetCandidate, f64)> = Vec::new();
+    let mut best: Option<(FleetCandidate, bo::BoResult)> = None;
+    for cand in fspace.candidates() {
+        let space = fspace.space_for(&cand.fleet);
         let result = bo::optimize(&space, &cfg.bo, gp, |hw| {
-            search_fleet(stream, model, hw, &cfg.ga, sim_cfg, &fleet).objective()
+            let hws = fspace.replica_hws(&cand.fleet, hw);
+            // probe calibration is only paid by shedding candidates,
+            // and runs against the pool that produces the TTFT — the
+            // prefill pool for disaggregated shapes (hws[0]), which
+            // under hetero sizing is *not* the BO-searched package
+            let fe = match cand.shed_margin {
+                Some(_) => cand.frontend(sim::probe_stream(model, &hws[0], sim_cfg, stream)),
+                None => Frontend::baseline(),
+            };
+            search_fleet_frontend(stream, model, &hws, &cfg.ga, sim_cfg, &cand.fleet, &fe)
+                .objective()
         });
-        per_shape.push((fleet.clone(), result.best.objective));
+        per_shape.push((cand.clone(), result.best.objective));
         if best
             .as_ref()
             .map_or(true, |(_, b)| result.best.objective < b.best.objective)
         {
-            best = Some((fleet, result));
+            best = Some((cand, result));
         }
     }
-    let (fleet, result) = best.expect("fleet space yields at least one shape");
-    let metrics = search_fleet(stream, model, &result.best.hw, &cfg.ga, sim_cfg, &fleet);
+    let (cand, result) = best.expect("fleet space yields at least one candidate");
+    let hws = fspace.replica_hws(&cand.fleet, &result.best.hw);
+    let fe = match cand.shed_margin {
+        Some(_) => cand.frontend(sim::probe_stream(model, &hws[0], sim_cfg, stream)),
+        None => Frontend::baseline(),
+    };
+    let metrics =
+        search_fleet_frontend(stream, model, &hws, &cfg.ga, sim_cfg, &cand.fleet, &fe);
     FleetDseOutcome {
-        fleet,
+        fleet: cand.fleet.clone(),
+        shed_margin: cand.shed_margin,
         hw: result.best.hw.clone(),
+        hws,
         metrics,
         bo_history: result.history,
         per_shape,
@@ -442,37 +578,77 @@ mod tests {
     }
 
     #[test]
-    fn fleet_dse_runs_end_to_end_over_shapes() {
+    fn fleet_dse_runs_end_to_end_over_candidates() {
         let (stream, model, cfg) = tiny_sim_setup();
         let mut fspace = FleetSpace::new(64.0);
-        fspace.replica_counts = vec![1, 2];
-        fspace.splits = vec![(1, 1)];
+        fspace.replica_counts = vec![2];
+        fspace.routers = vec![RouterPolicy::JoinShortestQueue];
+        fspace.splits = vec![];
+        fspace.hetero_splits = vec![(1, 1, 0.3)];
+        fspace.shed_margins = vec![1.5];
+        // shapes: 1 homogeneous + 1 hetero split; x {no-shed, shed}
+        assert_eq!(fspace.shapes().len(), 2);
+        assert_eq!(fspace.candidates().len(), 4);
         let dse_cfg = DseConfig::tiny();
         let mut gp = NativeGp::new();
         let out = compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &mut gp);
         assert_eq!(out.backend, "native");
-        assert_eq!(out.per_shape.len(), 3);
+        assert_eq!(out.per_shape.len(), 4);
         assert_eq!(out.bo_history.len(), dse_cfg.bo.rounds);
+        assert_eq!(out.hws.len(), out.fleet.total_replicas());
         assert_eq!(
             out.metrics.n_completed + out.metrics.n_rejected,
             out.metrics.n_arrived
         );
-        // the winner's objective is the minimum over shapes
+        // the winner's objective is the minimum over candidates
         let min = out
             .per_shape
             .iter()
             .map(|(_, o)| *o)
             .fold(f64::INFINITY, f64::min);
+        let winner_label = FleetCandidate {
+            fleet: out.fleet.clone(),
+            shed_margin: out.shed_margin,
+        }
+        .describe();
         assert_eq!(
             out.per_shape
                 .iter()
-                .find(|(f, _)| f.describe() == out.fleet.describe())
+                .find(|(c, _)| c.describe() == winner_label)
                 .map(|(_, o)| *o),
             Some(min)
         );
         for w in out.bo_history.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
         }
+    }
+
+    /// Heterogeneous sizing really produces differently-sized pools:
+    /// the prefill replica's package is smaller than the searched
+    /// decode replica's budget when the prefill share is small.
+    #[test]
+    fn hetero_replica_hws_split_the_budget() {
+        let fspace = FleetSpace::new(512.0);
+        let hetero = FleetConfig::disaggregated_hetero(1, 3, 1e-8, 0.25);
+        // searched (decode) share: 0.75 * 512 / 3 = 128 TOPS
+        assert!((fspace.searched_tops(&hetero) - 128.0).abs() < 1e-9);
+        let searched = crate::arch::HwSpace::representative(128.0);
+        let hws = fspace.replica_hws(&hetero, &searched);
+        assert_eq!(hws.len(), 4);
+        // a small prefill share yields a smaller prefill package than
+        // the searched decode replicas
+        let skewed = FleetConfig::disaggregated_hetero(1, 3, 1e-8, 0.05);
+        let hws2 = fspace.replica_hws(&skewed, &searched);
+        assert!(
+            hws2[0].total_tops() < hws2[1].total_tops(),
+            "prefill {} vs decode {}",
+            hws2[0].total_tops(),
+            hws2[1].total_tops()
+        );
+        // even shapes replicate the searched config on every replica
+        let even = FleetConfig::disaggregated(1, 3, 1e-8);
+        let hws3 = fspace.replica_hws(&even, &searched);
+        assert!(hws3.iter().all(|h| h == &searched));
     }
 
     #[test]

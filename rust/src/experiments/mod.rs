@@ -628,17 +628,11 @@ pub struct SimStudyRow {
 /// A representative fixed hardware configuration for a compute target:
 /// the largest feasible chiplet class (fewest chiplets), a near-square
 /// grid, median Table-IV bandwidths. Used when the study sweeps serving
-/// dynamics rather than searching hardware.
+/// dynamics rather than searching hardware. (Now a thin alias of
+/// [`HwSpace::representative`], which the fleet DSE also uses to size
+/// heterogeneous non-searched pools.)
 pub fn sim_default_hw(tops: f64) -> HwConfig {
-    let space = HwSpace::paper(tops);
-    let class = space
-        .feasible_classes()
-        .last()
-        .copied()
-        .unwrap_or(ChipletClass::L);
-    let n = class.chiplets_for(tops);
-    let (h, w) = HwSpace::grid_dims(n);
-    HwConfig::homogeneous(h, w, class, Dataflow::WeightStationary, 128.0, 64.0)
+    HwSpace::representative(tops)
 }
 
 /// Sweep arrival rate x serving strategy on one [`SimScene`] with fixed
@@ -1025,6 +1019,296 @@ pub fn fleet_study_table(scene: &FleetScene, rows: &[FleetStudyRow]) -> Table {
 }
 
 // ---------------------------------------------------------------------
+// Front-end control-plane study — admission x rebalancing x fleet
+// sizing (EXPERIMENTS.md "Front-end control plane")
+// ---------------------------------------------------------------------
+
+/// One cell of the front-end study.
+#[derive(Debug, Clone)]
+pub struct FrontendStudyRow {
+    /// Stable cell key: one of `jsq`, `jsq+shed`, `jsq+rebal`,
+    /// `jsq+shed+rebal`, `even-disagg`, `hetero-disagg`.
+    pub key: &'static str,
+    pub fleet: sim::FleetConfig,
+    pub frontend_label: String,
+    pub rate_rps: f64,
+    pub metrics: sim::FleetMetrics,
+}
+
+/// Knobs of the front-end study sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontendKnobs {
+    /// SLO-shed margin (TTFT multiples; shed when the estimate exceeds
+    /// `margin * slo.ttft_s`).
+    pub shed_margin: f64,
+    /// Rebalancer trigger threshold on busy-time imbalance.
+    pub rebalance_threshold: f64,
+    /// KV handoff cost per migrated token (s) — disaggregation and
+    /// rebalancing pay the same link.
+    pub handoff_s_per_token: f64,
+    /// Prefill-pool share of the total TOPS for the hetero fleet.
+    pub prefill_share: f64,
+}
+
+impl Default for FrontendKnobs {
+    fn default() -> Self {
+        FrontendKnobs {
+            shed_margin: 1.0,
+            rebalance_threshold: 0.5,
+            handoff_s_per_token: 1e-8,
+            prefill_share: 0.15,
+        }
+    }
+}
+
+/// Rescale a package to a TOPS target keeping its chiplet class,
+/// dataflow and bandwidths: only the chiplet count (and grid) change,
+/// so heterogeneous pools built from it stay silicon-comparable to the
+/// original instead of inheriting `sim_default_hw`'s fixed bandwidths.
+fn scaled_package(hw: &HwConfig, target_tops: f64) -> HwConfig {
+    let n = hw.class.chiplets_for(target_tops).max(1);
+    let (h, w) = HwSpace::grid_dims(n);
+    HwConfig::homogeneous(
+        h,
+        w,
+        hw.class,
+        hw.chiplet(0).dataflow,
+        hw.nop_bw_gbs,
+        hw.dram_bw_gbs,
+    )
+}
+
+/// The study's cell set for one [`FleetScene`]: the PR 3 baseline
+/// (JSQ over N even replicas, arrival-time rejection), SLO-aware
+/// shedding, decode-pool rebalancing, their combination, and even vs
+/// heterogeneous disaggregated sizing. Every cell spends the same
+/// total silicon: the fleet budget is `n * hw.total_tops()` of the
+/// *caller's* per-replica package (not the scene's nominal TOPS, which
+/// an hw override may not match), and the hetero cell re-partitions
+/// exactly that budget between its pools.
+#[allow(clippy::type_complexity)]
+fn frontend_cells(
+    scene: &FleetScene,
+    hw: &HwConfig,
+    probe: &sim::SimProbe,
+    knobs: &FrontendKnobs,
+) -> Vec<(&'static str, sim::FleetConfig, Vec<HwConfig>, sim::Frontend)> {
+    let n = scene.n_replicas.max(2);
+    let p = n.div_ceil(4);
+    let jsq = sim::FleetConfig::homogeneous(n, sim::RouterPolicy::JoinShortestQueue);
+    let even = sim::FleetConfig::disaggregated(p, n - p, knobs.handoff_s_per_token);
+    let hetero = sim::FleetConfig::disaggregated_hetero(
+        p,
+        n - p,
+        knobs.handoff_s_per_token,
+        knobs.prefill_share,
+    );
+    let hws_even = vec![hw.clone(); n];
+    // budget-matched hetero pools: repartition the even fleet's actual
+    // silicon (n x the supplied package, same chiplet class, dataflow
+    // and bandwidths — only the chiplet count changes), not the
+    // scene's nominal TOPS or the representative package's bandwidths
+    let fleet_tops = n as f64 * hw.total_tops();
+    let pre = scaled_package(hw, (knobs.prefill_share * fleet_tops / p as f64).max(1.0));
+    let dec = scaled_package(
+        hw,
+        ((1.0 - knobs.prefill_share) * fleet_tops / (n - p) as f64).max(1.0),
+    );
+    let mut hws_hetero = vec![pre; p];
+    hws_hetero.extend(vec![dec; n - p]);
+    let rebal = sim::RebalanceSpec::new(knobs.rebalance_threshold, knobs.handoff_s_per_token);
+    let base = sim::Frontend::baseline();
+    let shed = sim::Frontend::with_shedding(*probe, knobs.shed_margin);
+    vec![
+        ("jsq", jsq.clone(), hws_even.clone(), base.clone()),
+        ("jsq+shed", jsq.clone(), hws_even.clone(), shed.clone()),
+        (
+            "jsq+rebal",
+            jsq.clone(),
+            hws_even.clone(),
+            base.clone().with_rebalance(rebal),
+        ),
+        (
+            "jsq+shed+rebal",
+            jsq,
+            hws_even.clone(),
+            shed.with_rebalance(rebal),
+        ),
+        ("even-disagg", even, hws_even, base.clone()),
+        ("hetero-disagg", hetero, hws_hetero, base),
+    ]
+}
+
+/// Run the front-end cell set on one explicit stream (used directly
+/// for timestamped trace replays; [`frontend_study`] drives it over
+/// synthetic rate sweeps).
+pub fn frontend_study_stream(
+    scene: &FleetScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &sim::SimConfig,
+    knobs: &FrontendKnobs,
+    probe: &sim::SimProbe,
+    stream: &sim::RequestStream,
+) -> Vec<FrontendStudyRow> {
+    frontend_cells(scene, hw, probe, knobs)
+        .into_iter()
+        .map(|(key, fleet, hws, fe)| {
+            let metrics = sim::simulate_fleet_frontend(stream, model, &hws, cfg, &fleet, &fe);
+            FrontendStudyRow {
+                key,
+                fleet,
+                frontend_label: fe.describe(),
+                rate_rps: stream.rate_rps,
+                metrics,
+            }
+        })
+        .collect()
+}
+
+/// Sweep the front-end control plane on one [`FleetScene`] with fixed
+/// per-replica hardware. SLO targets are calibrated once from the
+/// unloaded single-replica probe and shared by every cell; rates
+/// default to {0.8, 1.3} x fleet capacity — the overload point is
+/// where admission and rebalancing act. Deterministic for a fixed
+/// `seed`.
+pub fn frontend_study(
+    scene: &FleetScene,
+    base: &sim::SimConfig,
+    knobs: &FrontendKnobs,
+    seed: u64,
+) -> Vec<FrontendStudyRow> {
+    frontend_study_with_model(
+        scene,
+        &scene.model(),
+        &sim_default_hw(scene.tops_per_replica()),
+        base,
+        knobs,
+        seed,
+    )
+}
+
+/// [`frontend_study`] with explicit model/hardware overrides (the CI
+/// tiny smoke swaps in `ModelSpec::tiny`; the protocol — calibration,
+/// rates, streams, cells — is shared so the smoke and the acceptance
+/// run can never drift apart).
+pub fn frontend_study_with_model(
+    scene: &FleetScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    knobs: &FrontendKnobs,
+    seed: u64,
+) -> Vec<FrontendStudyRow> {
+    let spec = scene.spec();
+    let probe = sim::probe(model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let mu = scene.n_replicas.max(2) as f64 * probe.capacity_rps();
+        vec![0.8 * mu, 1.3 * mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        let stream =
+            sim::RequestStream::poisson(&spec, rate, scene.n_requests, seed);
+        rows.extend(frontend_study_stream(
+            scene, model, hw, &cfg, knobs, &probe, &stream,
+        ));
+    }
+    rows
+}
+
+/// Format the front-end sweep as the study table.
+pub fn frontend_study_table(scene: &FleetScene, rows: &[FrontendStudyRow]) -> Table {
+    let title = format!(
+        "Front-end control plane [{}] - admission x rebalancing x sizing ({} TOPS total)",
+        scene.label(),
+        scene.total_tops as u64,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "Rate (r/s)",
+            "Fleet",
+            "Frontend",
+            "Tok/s",
+            "Goodput (tok/s)",
+            "TTFT p99 (s)",
+            "TPOT p99 (s)",
+            "SLO %",
+            "Shed %",
+            "Rebal",
+            "Imbalance",
+            "Rej",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            format!("{:.3}", r.rate_rps),
+            r.fleet.describe(),
+            r.frontend_label.clone(),
+            format!("{:.1}", m.throughput_tps),
+            format!("{:.1}", m.slo_goodput_tps),
+            format!("{:.4}", m.ttft.p99),
+            format!("{:.5}", m.tpot.p99),
+            format!("{:.1}", 100.0 * m.slo_attainment),
+            format!("{:.1}", 100.0 * m.shed_rate),
+            m.n_rebalanced.to_string(),
+            format!("{:.3}", m.load_imbalance),
+            m.n_rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Headline comparison at the highest swept rate (overload): SLO-aware
+/// shedding vs the arrival-time-rejection baseline, and heterogeneous
+/// vs even disaggregated sizing, on SLO goodput.
+pub fn frontend_study_headline(rows: &[FrontendStudyRow]) -> String {
+    let hi = rows
+        .iter()
+        .map(|r| r.rate_rps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at = |key: &str| {
+        rows.iter()
+            .find(|r| r.rate_rps == hi && r.key == key)
+            .map(|r| &r.metrics)
+    };
+    let mut s = format!("front-end headline @ {hi:.3} req/s (overload):\n");
+    if let (Some(base), Some(shed)) = (at("jsq"), at("jsq+shed")) {
+        s.push_str(&format!(
+            "  slo-shed goodput {:.1} tok/s vs arrival-reject {:.1} tok/s ({:+.1}%), \
+             shed rate {:.1}%\n",
+            shed.slo_goodput_tps,
+            base.slo_goodput_tps,
+            100.0 * (shed.slo_goodput_tps - base.slo_goodput_tps)
+                / base.slo_goodput_tps.max(1e-9),
+            100.0 * shed.shed_rate,
+        ));
+    }
+    if let (Some(rb), Some(base)) = (at("jsq+rebal"), at("jsq")) {
+        s.push_str(&format!(
+            "  rebalance: {} migrations, imbalance {:.3} vs {:.3}\n",
+            rb.n_rebalanced, rb.load_imbalance, base.load_imbalance,
+        ));
+    }
+    if let (Some(het), Some(even)) = (at("hetero-disagg"), at("even-disagg")) {
+        s.push_str(&format!(
+            "  hetero-disagg goodput {:.1} tok/s vs even-disagg {:.1} tok/s ({:+.1}%)\n",
+            het.slo_goodput_tps,
+            even.slo_goodput_tps,
+            100.0 * (het.slo_goodput_tps - even.slo_goodput_tps)
+                / even.slo_goodput_tps.max(1e-9),
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
 // Fig. 11 — ablations
 // ---------------------------------------------------------------------
 
@@ -1210,6 +1494,44 @@ mod tests {
             .any(|r| r.metrics.kv_transfer_tokens > 0));
         let t = fleet_study_table(&scene, &rows);
         assert_eq!(t.rows.len(), rows.len());
+    }
+
+    #[test]
+    fn frontend_study_covers_cell_rate_grid() {
+        let mut scene = FleetScene::new("sharegpt", 64.0, 2, 8);
+        scene.rates_rps = vec![4.0, 20.0];
+        let hw = sim_default_hw(scene.tops_per_replica());
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let knobs = FrontendKnobs::default();
+        let rows =
+            frontend_study_with_model(&scene, &ModelSpec::gpt3_7b(), &hw, &cfg, &knobs, 3);
+        assert_eq!(rows.len(), 2 * 6, "2 rates x 6 cells");
+        for r in &rows {
+            assert_eq!(
+                r.metrics.n_completed + r.metrics.n_rejected,
+                r.metrics.n_arrived,
+                "{}@{}",
+                r.key,
+                r.rate_rps
+            );
+        }
+        // the baseline cell never sheds or rebalances
+        for r in rows.iter().filter(|r| r.key == "jsq") {
+            assert_eq!(r.metrics.n_shed, 0);
+            assert_eq!(r.metrics.n_rebalanced, 0);
+        }
+        // shed counts stay within rejections on every shedding cell
+        for r in rows.iter().filter(|r| r.key.contains("shed")) {
+            assert!(r.metrics.n_shed <= r.metrics.n_rejected);
+        }
+        let t = frontend_study_table(&scene, &rows);
+        assert_eq!(t.rows.len(), rows.len());
+        let headline = frontend_study_headline(&rows);
+        assert!(headline.contains("slo-shed"), "{headline}");
+        assert!(headline.contains("hetero-disagg"), "{headline}");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! repro sim-study [--rates A,B,C] [--requests N]# serving simulator sweep
 //! repro fleet-study [--replicas N] ...          # multi-replica fleet sweep
 //! repro kv-study  [--block-tokens N] [--prefix N] # KV paging/quantization
+//! repro frontend-study [--shed-margin M] ...    # front-end control plane
 //! repro ablation                                # Fig 11   ablations
 //! repro all                                     # everything above
 //! ```
@@ -36,6 +37,7 @@ commands:
   sim-study       serving simulator: arrival rate x strategy sweep
   fleet-study     fleet serving: rate x router policy x fleet shape
   kv-study        KV cache: paged-vs-token x dtype x sharing sweep
+  frontend-study  front end: SLO shedding x rebalancing x hetero sizing
   ablation        Fig 11    GA->random, BO->random, SCAR mapping
   all             everything above
 
@@ -63,6 +65,15 @@ flags:
   --kv-gb G           kv-study DRAM reserved for KV; default auto-sizes
                       so the fp16 baseline holds ~8x the mean request
                       footprint (KV-bound on purpose)
+  --shed-margin M     frontend-study SLO-shed margin in TTFT multiples
+                      (default 1.0)
+  --rebalance-threshold T   frontend-study busy-time imbalance trigger
+                      (default 0.5)
+  --prefill-share F   frontend-study hetero fleet: prefill pool's share
+                      of the total TOPS budget (default 0.15)
+  --trace-file P      frontend-study: replay a timestamped CSV trace
+                      (arrival_s,prompt_len,gen_len per line) at its
+                      native rate instead of the synthetic rate sweep
 ";
 
 struct Args {
@@ -84,6 +95,10 @@ struct Args {
     block_tokens: u64,
     prefix: u64,
     kv_gb: f64,
+    shed_margin: f64,
+    rebalance_threshold: f64,
+    prefill_share: f64,
+    trace_file: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -106,6 +121,10 @@ fn parse_args() -> Args {
         block_tokens: 16,
         prefix: 64,
         kv_gb: 0.0,
+        shed_margin: 1.0,
+        rebalance_threshold: 0.5,
+        prefill_share: 0.15,
+        trace_file: None,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -138,6 +157,10 @@ fn parse_args() -> Args {
             "--block-tokens" => args.block_tokens = next_val(&mut it, a),
             "--prefix" => args.prefix = next_val(&mut it, a),
             "--kv-gb" => args.kv_gb = next_val(&mut it, a),
+            "--shed-margin" => args.shed_margin = next_val(&mut it, a),
+            "--rebalance-threshold" => args.rebalance_threshold = next_val(&mut it, a),
+            "--prefill-share" => args.prefill_share = next_val(&mut it, a),
+            "--trace-file" => args.trace_file = Some(next_str(&mut it, a)),
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -242,6 +265,65 @@ fn run_fleet_study(args: &Args) {
         &args.out_dir,
         "fleet_study",
     );
+}
+
+fn run_frontend_study(args: &Args) {
+    let replicas = args.replicas.max(2);
+    if replicas != args.replicas {
+        eprintln!("[compass] frontend-study needs >= 2 replicas; using {replicas}");
+    }
+    let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
+    scene.rates_rps = args.rates.clone();
+    let hw = exp::sim_default_hw(scene.tops_per_replica());
+    let cfg = compass::sim::SimConfig::new(
+        compass::workload::serving::ServingStrategy::ChunkedPrefill,
+    );
+    let knobs = exp::FrontendKnobs {
+        shed_margin: args.shed_margin,
+        rebalance_threshold: args.rebalance_threshold,
+        handoff_s_per_token: args.handoff,
+        prefill_share: args.prefill_share,
+    };
+    println!(
+        "frontend-study [{}]: {} replicas, per-replica hw: {} | shed x{} | rebal>{} | \
+         prefill share {:.0}%",
+        scene.label(),
+        scene.n_replicas,
+        hw.describe(),
+        knobs.shed_margin,
+        knobs.rebalance_threshold,
+        100.0 * knobs.prefill_share,
+    );
+    let rows = if let Some(path) = &args.trace_file {
+        // timestamped trace replay at its native rate: SLOs are still
+        // calibrated from the unloaded probe on the trace's own means
+        let stream = match compass::sim::RequestStream::from_trace_file(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[compass] trace load failed: {e}");
+                std::process::exit(2);
+            }
+        };
+        let model = scene.model();
+        let probe = compass::sim::probe_stream(&model, &hw, &cfg, &stream);
+        let mut c = cfg;
+        c.slo = probe.slo(3.0, 4.0);
+        println!(
+            "replaying {} ({} requests @ {:.3} req/s native rate)",
+            stream.name,
+            stream.len(),
+            stream.rate_rps
+        );
+        exp::frontend_study_stream(&scene, &model, &hw, &c, &knobs, &probe, &stream)
+    } else {
+        exp::frontend_study(&scene, &cfg, &knobs, args.seed)
+    };
+    save(
+        &exp::frontend_study_table(&scene, &rows),
+        &args.out_dir,
+        "frontend_study",
+    );
+    println!("\n{}", exp::frontend_study_headline(&rows));
 }
 
 fn run_kv_study(args: &Args) {
@@ -377,6 +459,9 @@ fn main() {
         "kv-study" => {
             run_kv_study(&args);
         }
+        "frontend-study" => {
+            run_frontend_study(&args);
+        }
         "ablation" => {
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
@@ -410,6 +495,7 @@ fn main() {
             run_sim_study(&args);
             run_fleet_study(&args);
             run_kv_study(&args);
+            run_frontend_study(&args);
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
         other => {

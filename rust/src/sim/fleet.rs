@@ -1,15 +1,15 @@
-//! Multi-replica fleet serving: a front-end router replays one
+//! Multi-replica fleet serving: shapes ([`FleetConfig`]) and aggregate
+//! quality ([`FleetMetrics`]) for a front end replaying one
 //! [`RequestStream`] across N per-replica continuous-batching
-//! schedulers ([`Scheduler`]), the first layer where the framework
-//! answers "how many packages, and split how?" rather than "which
-//! mapping?".
+//! schedulers — the first layer where the framework answers "how many
+//! packages, and split how?" rather than "which mapping?".
 //!
-//! Three router policies:
+//! Three legacy router policies:
 //!
 //! * **round-robin** — requests cycle replica 0, 1, ..., N-1 regardless
 //!   of load;
 //! * **join-shortest-queue** — each request goes to the replica with the
-//!   fewest outstanding tokens ([`Scheduler::backlog_tokens`]; ties to
+//!   fewest outstanding tokens (`Scheduler::backlog_tokens`; ties to
 //!   the lowest index);
 //! * **disaggregated prefill/decode** — P prefill replicas run prompts
 //!   to the first token, then the request's KV cache migrates to one of
@@ -17,21 +17,23 @@
 //!   per migrated token. Decode-side preemptions re-materialize the KV
 //!   (counted again as transfer traffic) instead of recomputing.
 //!
-//! Replicas advance their clocks independently; the router interleaves
-//! them at arrival (and migration) events in global time order, so a
-//! fixed stream gives bit-identical fleet metrics on every run — and a
-//! one-replica fleet is bitwise-equal to `simulate_serving`.
-
-use std::cell::RefCell;
-use std::rc::Rc;
+//! The decision-making itself lives in [`super::frontend`]: the legacy
+//! enum variants are [`super::frontend::Router`] trait impls, and
+//! [`simulate_fleet`] here is a thin wrapper over
+//! [`super::frontend::simulate_fleet_frontend`] with the baseline front
+//! end (legacy admission, no rebalancing) and identical hardware on
+//! every replica — bitwise-equal to the pre-refactor inline router.
+//!
+//! Replicas advance their clocks independently; the front end
+//! interleaves them at arrival (and migration) events in global time
+//! order, so a fixed stream gives bit-identical fleet metrics on every
+//! run — and a one-replica fleet is bitwise-equal to `simulate_serving`.
 
 use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
-use super::coster::BatchCoster;
-use super::kv::KvCache;
+use super::frontend::{simulate_fleet_frontend, Frontend};
 use super::metrics::{outcome_stats, LatencyStats, RequestOutcome, ServingMetrics};
-use super::sched::Scheduler;
 use super::stream::RequestStream;
 use super::SimConfig;
 
@@ -40,6 +42,11 @@ use super::SimConfig;
 pub enum RouterPolicy {
     RoundRobin,
     JoinShortestQueue,
+    /// JSQ restricted to replicas with KV headroom for the request's
+    /// full footprint (falls back to plain JSQ when none has room) —
+    /// the first policy added through the `Router` trait rather than
+    /// the fleet loop ([`super::frontend::KvAwareRouter`]).
+    KvAware,
     /// Disaggregated prefill/decode pools with KV handoff.
     PrefillDecode,
 }
@@ -49,6 +56,7 @@ impl RouterPolicy {
         match self {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::KvAware => "kv-aware",
             RouterPolicy::PrefillDecode => "prefill/decode",
         }
     }
@@ -67,17 +75,34 @@ pub struct FleetConfig {
     /// KV handoff cost per migrated token (s/token): the per-request
     /// migration delay is `context * handoff_s_per_token`.
     pub handoff_s_per_token: f64,
+    /// Share of the fleet's *total* TOPS budget given to the prefill
+    /// pool for heterogeneous sizing (0 = pool-proportional even
+    /// split). Only meaningful for `PrefillDecode` shapes; the DSE's
+    /// `FleetSpace` sizes per-replica hardware from it.
+    pub prefill_tops_share: f64,
 }
 
 impl FleetConfig {
+    /// N identical replicas under a per-request router.
+    ///
+    /// Panics (release builds too) on `RouterPolicy::PrefillDecode`:
+    /// the disaggregated router is a two-pool structure, not a
+    /// homogeneous per-request pick — use [`FleetConfig::disaggregated`].
+    /// (This was a `debug_assert` before, so release builds silently
+    /// accepted a nonsensical config with `n_prefill == n_decode == 0`.)
     pub fn homogeneous(n_replicas: usize, router: RouterPolicy) -> Self {
-        debug_assert!(router != RouterPolicy::PrefillDecode);
+        assert!(
+            router != RouterPolicy::PrefillDecode,
+            "FleetConfig::homogeneous cannot use the PrefillDecode router; \
+             use FleetConfig::disaggregated(n_prefill, n_decode, handoff)"
+        );
         FleetConfig {
             router,
             n_replicas: n_replicas.max(1),
             n_prefill: 0,
             n_decode: 0,
             handoff_s_per_token: 0.0,
+            prefill_tops_share: 0.0,
         }
     }
 
@@ -88,7 +113,23 @@ impl FleetConfig {
             n_prefill: n_prefill.max(1),
             n_decode: n_decode.max(1),
             handoff_s_per_token,
+            prefill_tops_share: 0.0,
         }
+    }
+
+    /// A disaggregated split with heterogeneous pool sizing: the
+    /// prefill pool gets `prefill_tops_share` of the fleet's total
+    /// compute budget (clamped to (0, 1)), the decode pool the rest —
+    /// instead of the even per-replica split.
+    pub fn disaggregated_hetero(
+        n_prefill: usize,
+        n_decode: usize,
+        handoff_s_per_token: f64,
+        prefill_tops_share: f64,
+    ) -> Self {
+        let mut cfg = Self::disaggregated(n_prefill, n_decode, handoff_s_per_token);
+        cfg.prefill_tops_share = prefill_tops_share.clamp(1e-3, 1.0 - 1e-3);
+        cfg
     }
 
     /// Total packages in the fleet (the TOPS-budget denominator).
@@ -101,12 +142,21 @@ impl FleetConfig {
 
     pub fn describe(&self) -> String {
         match self.router {
-            RouterPolicy::PrefillDecode => format!(
-                "{}P+{}D disagg ({:.1e} s/tok handoff)",
-                self.n_prefill.max(1),
-                self.n_decode.max(1),
-                self.handoff_s_per_token
-            ),
+            RouterPolicy::PrefillDecode => {
+                let mut s = format!(
+                    "{}P+{}D disagg ({:.1e} s/tok handoff)",
+                    self.n_prefill.max(1),
+                    self.n_decode.max(1),
+                    self.handoff_s_per_token
+                );
+                if self.prefill_tops_share > 0.0 {
+                    s.push_str(&format!(
+                        " pre={:.0}%tops",
+                        100.0 * self.prefill_tops_share
+                    ));
+                }
+                s
+            }
             r => format!("{}x {}", self.n_replicas.max(1), r.name()),
         }
     }
@@ -151,7 +201,20 @@ pub struct FleetMetrics {
     /// Busy-time imbalance across replicas: `(max - min) / mean` of
     /// per-replica busy seconds (0 = perfectly balanced).
     pub load_imbalance: f64,
+    /// Requests shed by SLO-aware front-end admission (a subset of
+    /// `n_rejected`; 0 under the arrival-time-rejection baseline).
+    pub n_shed: usize,
+    /// `n_shed / n_arrived` — the shed-rate headline vs the
+    /// arrival-time-rejection baseline.
+    pub shed_rate: f64,
+    /// Mid-decode migrations performed by the front-end rebalancer
+    /// (0 with rebalancing off).
+    pub n_rebalanced: usize,
     pub truncated: bool,
+    /// Stitched per-request outcomes at fleet level (arrival / first
+    /// token / finish across replica boundaries) — the router-trait
+    /// equivalence anchors compare these bitwise.
+    pub outcomes: Vec<RequestOutcome>,
 }
 
 impl FleetMetrics {
@@ -166,11 +229,13 @@ impl FleetMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "done {}/{} (rej {}) | {:.1} tok/s | goodput {:.1} tok/s | \
-             ttft p99 {:.3}s | tpot p99 {:.4}s | SLO {:.0}% | imbalance {:.2} | kv-handoff {} tok",
+            "done {}/{} (rej {}, shed {}) | {:.1} tok/s | goodput {:.1} tok/s | \
+             ttft p99 {:.3}s | tpot p99 {:.4}s | SLO {:.0}% | imbalance {:.2} | \
+             kv-handoff {} tok | rebal {}",
             self.n_completed,
             self.n_arrived,
             self.n_rejected,
+            self.n_shed,
             self.throughput_tps,
             self.slo_goodput_tps,
             self.ttft.p99,
@@ -178,46 +243,18 @@ impl FleetMetrics {
             100.0 * self.slo_attainment,
             self.load_imbalance,
             self.kv_transfer_tokens,
+            self.n_rebalanced,
         )
     }
 }
 
-/// One cost memo for the whole fleet: every replica shares the same
-/// (model, hw, policy), so a batch shape costed — or GA-searched —
-/// anywhere is never re-simulated elsewhere. Sharing is bit-exact: the
-/// memo is composition-keyed and each entry is order-independent.
-fn shared_coster<'a>(
-    model: &'a ModelSpec,
-    hw: &'a HwConfig,
-    cfg: &SimConfig,
-) -> Rc<RefCell<BatchCoster<'a>>> {
-    Rc::new(RefCell::new(BatchCoster::new(
-        model,
-        hw,
-        cfg.policy,
-        cfg.eval_blocks,
-        cfg.ctx_bucket,
-        cfg.kv.dtype,
-    )))
-}
-
-/// Pick the least-loaded replica by outstanding tokens (ties -> lowest
-/// index, keeping routing deterministic).
-fn jsq_pick(reps: &[Scheduler]) -> usize {
-    let mut best = 0usize;
-    let mut best_backlog = u64::MAX;
-    for (i, s) in reps.iter().enumerate() {
-        let b = s.backlog_tokens();
-        if b < best_backlog {
-            best_backlog = b;
-            best = i;
-        }
-    }
-    best
-}
-
-/// Replay `stream` across the fleet and aggregate. Deterministic:
-/// identical inputs give bit-identical output.
+/// Replay `stream` across a fleet of identical replicas under the
+/// baseline front end (legacy admission, no rebalancing, no shedding).
+/// Deterministic: identical inputs give bit-identical output. This is
+/// the pre-refactor entry point, now a thin wrapper over
+/// [`simulate_fleet_frontend`] — the equivalence is property-tested in
+/// `rust/tests/frontend_properties.rs` against a verbatim
+/// reimplementation of the old inline routers.
 pub fn simulate_fleet(
     stream: &RequestStream,
     model: &ModelSpec,
@@ -225,189 +262,18 @@ pub fn simulate_fleet(
     cfg: &SimConfig,
     fleet: &FleetConfig,
 ) -> FleetMetrics {
-    match fleet.router {
-        RouterPolicy::PrefillDecode => simulate_disaggregated(stream, model, hw, cfg, fleet),
-        _ => simulate_homogeneous(stream, model, hw, cfg, fleet),
-    }
+    let hws = vec![hw.clone(); fleet.total_replicas()];
+    simulate_fleet_frontend(stream, model, &hws, cfg, fleet, &Frontend::baseline())
 }
 
-fn simulate_homogeneous(
-    stream: &RequestStream,
-    model: &ModelSpec,
-    hw: &HwConfig,
-    cfg: &SimConfig,
-    fleet: &FleetConfig,
-) -> FleetMetrics {
-    let n_rep = fleet.n_replicas.max(1);
-    let coster = shared_coster(model, hw, cfg);
-    let mut reps: Vec<Scheduler> = (0..n_rep)
-        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
-        .collect();
-    let mut rr_next = 0usize;
-    for r in &stream.requests {
-        for s in reps.iter_mut() {
-            s.advance_to(r.arrival_s);
-        }
-        let k = match fleet.router {
-            RouterPolicy::RoundRobin => {
-                let k = rr_next % n_rep;
-                rr_next += 1;
-                k
-            }
-            _ => jsq_pick(&reps),
-        };
-        reps[k].inject(r.id, r.arrival_s, r.input_len, r.output_len);
-    }
-    for s in reps.iter_mut() {
-        s.run_to_end();
-    }
-    let mut per_replica = Vec::with_capacity(n_rep);
-    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(stream.requests.len());
-    for s in reps {
-        let r = s.finish();
-        outcomes.extend(r.outcomes.iter().map(|&(_, o)| o));
-        per_replica.push(r.metrics);
-    }
-    aggregate(per_replica, outcomes, cfg)
-}
-
-/// A prefill-complete request waiting on its KV transfer.
-struct Migration {
-    t: f64,
-    id: usize,
-    /// Context tokens to materialize at the decode replica (prompt plus
-    /// the first generated token).
-    ctx: u64,
-    /// Output tokens still to decode.
-    rest: u64,
-}
-
-fn simulate_disaggregated(
-    stream: &RequestStream,
-    model: &ModelSpec,
-    hw: &HwConfig,
-    cfg: &SimConfig,
-    fleet: &FleetConfig,
-) -> FleetMetrics {
-    let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
-    let coster = shared_coster(model, hw, cfg);
-    // spec-aware footprint probe (paging + sharing + dtype), the same
-    // test every scheduler applies at arrival
-    let fit_probe = KvCache::new(cfg.kv, cfg.kv_budget(model).max(2));
-    // --- stage 1: prompts JSQ-routed over the prefill pool, truncated
-    // to a single output token (emitted at prefill completion). A
-    // request whose *full* footprint can never fit is injected with its
-    // real output length so the scheduler rejects it at arrival with
-    // zero compute — the same arrival-time rejection the homogeneous
-    // routers apply, keeping the policies comparable on one stream ---
-    let mut pre: Vec<Scheduler> = (0..n_pre)
-        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
-        .collect();
-    for r in &stream.requests {
-        for s in pre.iter_mut() {
-            s.advance_to(r.arrival_s);
-        }
-        let k = jsq_pick(&pre);
-        let out = r.output_len.max(1);
-        if !fit_probe.can_ever_fit(r.input_len.max(1), out) {
-            pre[k].inject(r.id, r.arrival_s, r.input_len, out);
-        } else {
-            pre[k].inject(r.id, r.arrival_s, r.input_len, 1);
-        }
-    }
-    for s in pre.iter_mut() {
-        s.run_to_end();
-    }
-    let mut per_replica = Vec::with_capacity(n_pre + n_dec);
-    let mut pre_outcomes: Vec<(usize, RequestOutcome)> = Vec::with_capacity(stream.requests.len());
-    for s in pre {
-        let r = s.finish();
-        pre_outcomes.extend(r.outcomes);
-        per_replica.push(r.metrics);
-    }
-
-    // --- KV handoff: completed prefills migrate to the decode pool
-    // after `ctx * handoff_s_per_token` seconds, in global time order ---
-    let out_len_of: std::collections::HashMap<usize, u64> = stream
-        .requests
-        .iter()
-        .map(|r| (r.id, r.output_len.max(1)))
-        .collect();
-    let mut migs: Vec<Migration> = Vec::new();
-    for &(id, o) in &pre_outcomes {
-        let (Some(finish), false) = (o.finish_s, o.rejected) else {
-            continue;
-        };
-        let rest = out_len_of.get(&id).copied().unwrap_or(1).saturating_sub(1);
-        if rest == 0 {
-            continue; // single-token request: done at prefill
-        }
-        let ctx = o.input_len + 1;
-        // whole blocks migrate: the link moves the context rounded up to
-        // the KV block size (exact at block_tokens = 1)
-        let link_tokens = cfg.kv.block_round(ctx);
-        migs.push(Migration {
-            t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
-            id,
-            ctx,
-            rest,
-        });
-    }
-    migs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.id.cmp(&b.id)));
-
-    // --- stage 2: migrations JSQ-routed over the decode pool (sharing
-    // the prefill pool's cost memo: same model/hw/policy) ---
-    let mut dec: Vec<Scheduler> = (0..n_dec)
-        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
-        .collect();
-    for m in &migs {
-        for s in dec.iter_mut() {
-            s.advance_to(m.t);
-        }
-        let k = jsq_pick(&dec);
-        dec[k].inject_migrated(m.id, m.t, m.ctx, m.rest);
-    }
-    for s in dec.iter_mut() {
-        s.run_to_end();
-    }
-    let mut dec_outcomes: Vec<(usize, RequestOutcome)> = Vec::with_capacity(migs.len());
-    for s in dec {
-        let r = s.finish();
-        dec_outcomes.extend(r.outcomes);
-        per_replica.push(r.metrics);
-    }
-
-    // --- stitch per-request outcomes across the two stages ---
-    let dec_by_id: std::collections::HashMap<usize, RequestOutcome> =
-        dec_outcomes.into_iter().collect();
-    let outcomes: Vec<RequestOutcome> = pre_outcomes
-        .iter()
-        .map(|&(id, p)| {
-            let out_len = out_len_of.get(&id).copied().unwrap_or(1);
-            let mut o = RequestOutcome {
-                arrival_s: p.arrival_s,
-                input_len: p.input_len,
-                output_len: out_len,
-                first_token_s: p.first_token_s,
-                finish_s: if out_len == 1 { p.finish_s } else { None },
-                rejected: p.rejected,
-            };
-            if let Some(d) = dec_by_id.get(&id) {
-                // decode-stage rejection (context can never fit there)
-                // makes the whole request rejected at fleet level
-                o.rejected = p.rejected || d.rejected;
-                o.finish_s = d.finish_s;
-            }
-            o
-        })
-        .collect();
-    aggregate(per_replica, outcomes, cfg)
-}
-
-fn aggregate(
+/// Collapse per-replica metrics plus stitched per-request outcomes into
+/// [`FleetMetrics`] (shared by every front-end path).
+pub(crate) fn aggregate(
     per_replica: Vec<ServingMetrics>,
     outcomes: Vec<RequestOutcome>,
     cfg: &SimConfig,
+    n_shed: usize,
+    n_rebalanced: usize,
 ) -> FleetMetrics {
     let s = outcome_stats(&outcomes, &cfg.slo);
     let makespan_s = per_replica.iter().map(|m| m.makespan_s).fold(0.0, f64::max);
@@ -466,8 +332,16 @@ fn aggregate(
             0.0
         },
         load_imbalance,
+        n_shed,
+        shed_rate: if outcomes.is_empty() {
+            0.0
+        } else {
+            n_shed as f64 / outcomes.len() as f64
+        },
+        n_rebalanced,
         truncated,
         per_replica,
+        outcomes,
     }
 }
 
@@ -676,6 +550,28 @@ mod tests {
             let b = simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
             assert_eq!(m.makespan_s.to_bits(), b.makespan_s.to_bits());
         }
+    }
+
+    /// Regression: `homogeneous` used to `debug_assert` only, so
+    /// release builds silently accepted a PrefillDecode "homogeneous"
+    /// fleet with empty pools. It must now panic unconditionally.
+    #[test]
+    #[should_panic(expected = "PrefillDecode")]
+    fn homogeneous_rejects_prefill_decode_router() {
+        let _ = FleetConfig::homogeneous(2, RouterPolicy::PrefillDecode);
+    }
+
+    #[test]
+    fn hetero_split_clamps_share_and_describes_it() {
+        let f = FleetConfig::disaggregated_hetero(1, 3, 1e-8, 0.25);
+        assert_eq!(f.router, RouterPolicy::PrefillDecode);
+        assert!((f.prefill_tops_share - 0.25).abs() < 1e-12);
+        assert!(f.describe().contains("pre=25%tops"), "{}", f.describe());
+        // shares are clamped into (0, 1) so sizing never divides by zero
+        assert!(FleetConfig::disaggregated_hetero(1, 1, 0.0, 0.0).prefill_tops_share > 0.0);
+        assert!(FleetConfig::disaggregated_hetero(1, 1, 0.0, 7.0).prefill_tops_share < 1.0);
+        // the even constructor keeps the share at zero (even split)
+        assert_eq!(FleetConfig::disaggregated(1, 1, 0.0).prefill_tops_share, 0.0);
     }
 
     #[test]

@@ -1,0 +1,1010 @@
+//! Pluggable fleet front-end control plane.
+//!
+//! PR 3 hard-wired the fleet's three routing policies as inline match
+//! arms and rejected only never-fitting requests; this module turns the
+//! front end into policy objects the DSE can co-search:
+//!
+//! * [`Router`] — per-request replica selection from read-only
+//!   per-replica observations ([`ReplicaObs`]: queue depth, backlog
+//!   tokens, KV headroom, busy time, phase mix). The legacy
+//!   `RouterPolicy` variants are impls ([`RoundRobinRouter`],
+//!   [`JsqRouter`]) that are bitwise-equal to the old match arms
+//!   (property-tested in `rust/tests/frontend_properties.rs` against a
+//!   verbatim reimplementation of the pre-refactor routers).
+//! * [`AdmissionPolicy`] — front-door load shedding. The baseline keeps
+//!   today's arrival-time rejection (requests that can never fit the KV
+//!   budget, rejected by the scheduler); SLO-aware shedding
+//!   additionally drops requests whose estimated TTFT under the routed
+//!   replica's current backlog — calibrated by a [`SimProbe`] — already
+//!   exceeds the SLO. Shed counts and the shed rate are reported in
+//!   `FleetMetrics` next to the baseline's rejections.
+//! * [`RebalanceSpec`] — decode-pool rebalancing: under busy-time
+//!   imbalance the front end extracts the youngest mid-decode request
+//!   from the busiest replica and migrates it to the least busy one,
+//!   reusing the block-granular KV handoff path of the disaggregated
+//!   router (`Scheduler::inject_migrated`), with the link delay charged
+//!   on the block-rounded context.
+//!
+//! With the baseline front end ([`Frontend::baseline`]) and identical
+//! per-replica hardware, every path here is bitwise-identical to the
+//! pre-refactor `simulate_fleet`. Heterogeneous fleets pass one
+//! `HwConfig` per replica (prefill pool first for disaggregated
+//! shapes); replicas with equal hardware share one cost memo, exactly
+//! as before.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+use crate::arch::HwConfig;
+use crate::workload::ModelSpec;
+
+use super::coster::BatchCoster;
+use super::fleet::{aggregate, FleetConfig, FleetMetrics, RouterPolicy};
+use super::kv::KvCache;
+use super::metrics::RequestOutcome;
+use super::sched::Scheduler;
+use super::stream::{RequestStream, TimedRequest};
+use super::{SimConfig, SimProbe};
+
+/// What a router or admission policy may observe about one replica at
+/// a decision point: a read-only snapshot, so policies can never
+/// perturb the simulation and determinism is trivial.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaObs {
+    /// The replica's local clock (s).
+    pub clock_s: f64,
+    /// Cumulative time inside iterations (s) — the rebalance signal.
+    pub busy_s: f64,
+    /// Offered requests not yet admitted.
+    pub queue_depth: usize,
+    /// Outstanding context + output tokens (the legacy JSQ signal).
+    pub backlog_tokens: u64,
+    /// Prompt tokens still to prefill before every known request has
+    /// its first token (queued prompts + in-flight remainders).
+    pub pending_prefill_tokens: u64,
+    /// Unallocated KV capacity (whole free blocks, in tokens).
+    pub kv_free_tokens: u64,
+    /// Admitted requests still prefilling.
+    pub n_prefilling: usize,
+    /// Admitted requests in their decode phase.
+    pub n_decoding: usize,
+}
+
+/// Snapshot one replica for a front-end decision (the queue/running
+/// counters come from one traversal — `Scheduler::frontend_counters`).
+pub fn observe(s: &Scheduler) -> ReplicaObs {
+    let c = s.frontend_counters();
+    ReplicaObs {
+        clock_s: s.clock(),
+        busy_s: s.busy_s(),
+        queue_depth: s.queue_depth(),
+        backlog_tokens: c.backlog_tokens,
+        pending_prefill_tokens: c.pending_prefill_tokens,
+        kv_free_tokens: s.kv_free_tokens(),
+        n_prefilling: c.n_prefilling,
+        n_decoding: c.n_decoding,
+    }
+}
+
+/// Per-request replica selection. Implementations must be
+/// deterministic functions of their own state and the observations.
+pub trait Router {
+    fn name(&self) -> &'static str;
+    /// Pick the replica index for `req`; `reps` is never empty.
+    fn route(&mut self, req: &TimedRequest, reps: &[ReplicaObs]) -> usize;
+}
+
+/// Blind rotation (the legacy `RouterPolicy::RoundRobin` match arm).
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &TimedRequest, reps: &[ReplicaObs]) -> usize {
+        let k = self.next % reps.len();
+        self.next += 1;
+        k
+    }
+}
+
+/// Fewest outstanding tokens, ties to the lowest index (the legacy
+/// `RouterPolicy::JoinShortestQueue` match arm; also the intra-pool
+/// policy of the disaggregated router).
+#[derive(Debug, Default)]
+pub struct JsqRouter;
+
+impl Router for JsqRouter {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&mut self, _req: &TimedRequest, reps: &[ReplicaObs]) -> usize {
+        let mut best = 0usize;
+        let mut best_backlog = u64::MAX;
+        for (i, o) in reps.iter().enumerate() {
+            if o.backlog_tokens < best_backlog {
+                best_backlog = o.backlog_tokens;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Backlog-aware routing that additionally skips replicas without KV
+/// headroom for the request's approximate footprint — prompt plus
+/// outputs plus one decode slot; block rounding and shared-prefix
+/// skips are not modeled, so this is a routing heuristic, not the
+/// scheduler's exact `can_ever_fit` test — while any replica has room
+/// (falling back to plain JSQ when none does). The first policy added
+/// through the trait rather than the fleet loop; reachable as
+/// `RouterPolicy::KvAware`. With ample KV it is exactly JSQ.
+#[derive(Debug, Default)]
+pub struct KvAwareRouter;
+
+impl Router for KvAwareRouter {
+    fn name(&self) -> &'static str {
+        "kv-aware"
+    }
+
+    fn route(&mut self, req: &TimedRequest, reps: &[ReplicaObs]) -> usize {
+        let need = req.input_len.max(1) + req.output_len.max(1) + 1;
+        let mut best: Option<(u64, usize)> = None;
+        for (i, o) in reps.iter().enumerate() {
+            if o.kv_free_tokens >= need && best.map_or(true, |(b, _)| o.backlog_tokens < b) {
+                best = Some((o.backlog_tokens, i));
+            }
+        }
+        match best {
+            Some((_, i)) => i,
+            None => JsqRouter.route(req, reps),
+        }
+    }
+}
+
+/// The trait impl behind a policy enum value. `PrefillDecode` is a
+/// two-pool *structure*, not a per-request pick: its intra-pool
+/// routing is [`JsqRouter`], which is what this returns for it.
+pub fn router_for(policy: RouterPolicy) -> Box<dyn Router> {
+    match policy {
+        RouterPolicy::RoundRobin => Box::<RoundRobinRouter>::default(),
+        RouterPolicy::KvAware => Box::<KvAwareRouter>::default(),
+        RouterPolicy::JoinShortestQueue | RouterPolicy::PrefillDecode => {
+            Box::<JsqRouter>::default()
+        }
+    }
+}
+
+/// Front-door admission policy.
+#[derive(Debug, Clone, Copy)]
+pub enum AdmissionPolicy {
+    /// The pre-refactor behavior: only requests that can never fit the
+    /// KV budget are rejected (by the scheduler, at arrival).
+    ArrivalReject,
+    /// SLO-aware load shedding: additionally shed any request whose
+    /// estimated TTFT on its routed replica ([`estimate_ttft`], using
+    /// the probe-calibrated prefill rate) exceeds
+    /// `margin * slo.ttft_s`. `margin = f64::INFINITY` never sheds and
+    /// is bitwise-identical to `ArrivalReject`.
+    SloShed { probe: SimProbe, margin: f64 },
+}
+
+impl AdmissionPolicy {
+    pub fn name(&self) -> String {
+        match self {
+            AdmissionPolicy::ArrivalReject => "arrival-reject".into(),
+            AdmissionPolicy::SloShed { margin, .. } => format!("slo-shed x{margin:.2}"),
+        }
+    }
+
+    /// Should the front end shed this request, given the observation
+    /// of the replica the router chose?
+    fn sheds(&self, req: &TimedRequest, obs: &ReplicaObs, cfg: &SimConfig) -> bool {
+        match self {
+            AdmissionPolicy::ArrivalReject => false,
+            AdmissionPolicy::SloShed { probe, margin } => {
+                estimate_ttft(obs, req.input_len, probe) > margin * cfg.slo.ttft_s
+            }
+        }
+    }
+}
+
+/// First-order TTFT estimate for a request joining a replica in state
+/// `obs`: the backlog's prefill tokens (plus this prompt) drain at the
+/// probe-calibrated prefill rate, while co-resident decodes add their
+/// share of one decode iteration. Deliberately cheap, monotone in the
+/// backlog and deterministic — it is a shedding signal, not a nested
+/// simulation.
+pub fn estimate_ttft(obs: &ReplicaObs, input_len: u64, probe: &SimProbe) -> f64 {
+    let prefill_rate = probe.mean_in.max(1) as f64 / probe.t_prefill_s.max(1e-12);
+    let backlog = (obs.pending_prefill_tokens + input_len.max(1)) as f64;
+    let decode_tax =
+        probe.t_decode_iter_s * obs.n_decoding as f64 / probe.concurrency.max(1) as f64;
+    backlog / prefill_rate + decode_tax
+}
+
+/// Decode-pool rebalancing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RebalanceSpec {
+    /// Trigger threshold on busy-time imbalance `(max - min) / mean`
+    /// across the pool. `f64::INFINITY` never triggers and is
+    /// bitwise-identical to rebalancing off.
+    pub imbalance_threshold: f64,
+    /// KV handoff cost per migrated token (block-rounded), s/token.
+    pub handoff_s_per_token: f64,
+}
+
+impl RebalanceSpec {
+    pub fn new(imbalance_threshold: f64, handoff_s_per_token: f64) -> Self {
+        RebalanceSpec {
+            imbalance_threshold: imbalance_threshold.max(0.0),
+            handoff_s_per_token: handoff_s_per_token.max(0.0),
+        }
+    }
+}
+
+/// The fleet front end: admission policy plus optional decode-pool
+/// rebalancing. (The router comes from the fleet shape; see
+/// [`router_for`].)
+#[derive(Debug, Clone)]
+pub struct Frontend {
+    pub admission: AdmissionPolicy,
+    pub rebalance: Option<RebalanceSpec>,
+}
+
+impl Frontend {
+    /// Today's front end: legacy arrival-time rejection, no
+    /// rebalancing. With this, [`simulate_fleet_frontend`] is
+    /// bitwise-equal to the pre-refactor `simulate_fleet`.
+    pub fn baseline() -> Self {
+        Frontend {
+            admission: AdmissionPolicy::ArrivalReject,
+            rebalance: None,
+        }
+    }
+
+    /// SLO-aware shedding at `margin` TTFT multiples, no rebalancing.
+    pub fn with_shedding(probe: SimProbe, margin: f64) -> Self {
+        Frontend {
+            admission: AdmissionPolicy::SloShed { probe, margin },
+            rebalance: None,
+        }
+    }
+
+    pub fn with_rebalance(mut self, spec: RebalanceSpec) -> Self {
+        self.rebalance = Some(spec);
+        self
+    }
+
+    pub fn describe(&self) -> String {
+        match self.rebalance {
+            Some(rb) => format!(
+                "{} + rebal>{:.2}",
+                self.admission.name(),
+                rb.imbalance_threshold
+            ),
+            None => self.admission.name(),
+        }
+    }
+}
+
+/// One in-flight front-end migration: the request's KV context lands
+/// on replica `dst` at time `t`.
+struct PendingMigration {
+    t: f64,
+    id: usize,
+    dst: usize,
+    ctx: u64,
+    rest: u64,
+}
+
+/// Origin timings of a rebalanced request, recorded at its *first*
+/// extraction: aggregation stitches them over the final holder's
+/// completion so fleet-level TTFT/TPOT span the whole journey.
+struct Origin {
+    arrival_s: f64,
+    input_len: u64,
+    output_len: u64,
+    first_token_s: f64,
+}
+
+/// A routed pool of replicas with optional decode-pool rebalancing:
+/// the deterministic event driver shared by the homogeneous fleet and
+/// each stage of the disaggregated one.
+struct Pool<'a> {
+    reps: Vec<Scheduler<'a>>,
+    router: Box<dyn Router>,
+    rebalance: Option<RebalanceSpec>,
+    cfg: SimConfig,
+    /// Undelivered rebalance migrations, ascending by (t, id);
+    /// pop-front is O(1), ordered insert O(n) in the (small) backlog.
+    pending: VecDeque<PendingMigration>,
+    origins: HashMap<usize, Origin>,
+    n_rebalanced: usize,
+    /// Safety valve on total migrations (rebalancing moves work toward
+    /// idler replicas, so it terminates; the cap bounds pathological
+    /// configurations anyway).
+    migration_cap: usize,
+}
+
+/// A drained pool: per-replica metrics plus per-request outcomes
+/// (final holder only for rebalanced requests) and the origin records
+/// needed to stitch them.
+struct PoolResult {
+    per_replica: Vec<super::metrics::ServingMetrics>,
+    outcomes: Vec<(usize, RequestOutcome)>,
+    origins: HashMap<usize, Origin>,
+    n_rebalanced: usize,
+}
+
+impl<'a> Pool<'a> {
+    fn new(
+        reps: Vec<Scheduler<'a>>,
+        router: Box<dyn Router>,
+        rebalance: Option<RebalanceSpec>,
+        cfg: SimConfig,
+        migration_cap: usize,
+    ) -> Self {
+        Pool {
+            reps,
+            router,
+            rebalance,
+            cfg,
+            pending: VecDeque::new(),
+            origins: HashMap::new(),
+            n_rebalanced: 0,
+            migration_cap,
+        }
+    }
+
+    fn observations(&self) -> Vec<ReplicaObs> {
+        self.reps.iter().map(observe).collect()
+    }
+
+    fn advance_all(&mut self, t: f64) {
+        for s in self.reps.iter_mut() {
+            s.advance_to(t);
+        }
+    }
+
+    /// Route `req` and return the chosen replica plus its observation
+    /// (for the admission estimate).
+    fn route(&mut self, req: &TimedRequest) -> (usize, ReplicaObs) {
+        let obs = self.observations();
+        let k = self.router.route(req, &obs).min(obs.len() - 1);
+        (k, obs[k])
+    }
+
+    fn push_migration(&mut self, m: PendingMigration) {
+        let pos = self
+            .pending
+            .partition_point(|x| x.t < m.t || (x.t == m.t && x.id <= m.id));
+        self.pending.insert(pos, m);
+    }
+
+    /// Deliver every pending migration due by `t`, in (time, id)
+    /// order, interleaving all replica clocks exactly like arrivals.
+    fn deliver_due(&mut self, t: f64) {
+        while self.pending.front().map_or(false, |m| m.t <= t) {
+            let m = self.pending.pop_front().unwrap();
+            self.advance_all(m.t);
+            self.reps[m.dst].inject_migrated(m.id, m.t, m.ctx, m.rest);
+        }
+    }
+
+    /// Under busy-time imbalance, extract the youngest mid-decode
+    /// request from the busiest replica and schedule its block-rounded
+    /// KV handoff to the least busy one. At most one migration per
+    /// front-end event keeps churn bounded and deterministic.
+    fn maybe_rebalance(&mut self, t: f64) {
+        let Some(rb) = self.rebalance else { return };
+        if self.reps.len() < 2 || self.n_rebalanced >= self.migration_cap {
+            return;
+        }
+        let busy: Vec<f64> = self.reps.iter().map(|s| s.busy_s()).collect();
+        let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+        if mean <= 1e-12 {
+            return;
+        }
+        let (mut src, mut dst) = (0usize, 0usize);
+        for i in 1..busy.len() {
+            if busy[i] > busy[src] {
+                src = i;
+            }
+            if busy[i] < busy[dst] {
+                dst = i;
+            }
+        }
+        if src == dst || (busy[src] - busy[dst]) / mean <= rb.imbalance_threshold {
+            return;
+        }
+        // only migrate toward strictly less outstanding work, or the
+        // handoff would just shuffle the bottleneck around
+        if self.reps[src].backlog_tokens() <= self.reps[dst].backlog_tokens() {
+            return;
+        }
+        // never extract a request the destination could not hold
+        // (heterogeneous replicas can have smaller KV capacities) — a
+        // migration must not turn into a rejection that discards
+        // already-generated work
+        let Some((ctx, rest)) = self.reps[src].peek_youngest_decoding() else {
+            return;
+        };
+        if !self.reps[dst].kv_can_ever_fit(ctx, rest) {
+            return;
+        }
+        let Some(ex) = self.reps[src].extract_youngest_decoding() else {
+            return;
+        };
+        let depart = self.reps[src].clock().max(t);
+        let link_tokens = self.cfg.kv.block_round(ex.context_len);
+        let arrive = depart + link_tokens as f64 * rb.handoff_s_per_token.max(0.0);
+        // first extraction records the true origin; later hops keep it
+        self.origins.entry(ex.ext_id).or_insert(Origin {
+            arrival_s: ex.arrival_s,
+            input_len: ex.input_len,
+            output_len: ex.output_len,
+            first_token_s: ex.first_token_s,
+        });
+        self.n_rebalanced += 1;
+        self.push_migration(PendingMigration {
+            t: arrive,
+            id: ex.ext_id,
+            dst,
+            ctx: ex.context_len,
+            rest: ex.rest,
+        });
+    }
+
+    /// Deliver the remaining migrations (each delivery may re-trigger
+    /// the rebalancer; work only ever moves toward idler replicas, so
+    /// this terminates), drain every replica, and collapse the pool.
+    fn finish(mut self) -> PoolResult {
+        while let Some(m) = self.pending.pop_front() {
+            self.advance_all(m.t);
+            self.reps[m.dst].inject_migrated(m.id, m.t, m.ctx, m.rest);
+            self.maybe_rebalance(m.t);
+        }
+        for s in self.reps.iter_mut() {
+            s.run_to_end();
+        }
+        let mut per_replica = Vec::with_capacity(self.reps.len());
+        let mut outcomes: Vec<(usize, RequestOutcome)> = Vec::new();
+        for s in self.reps {
+            let r = s.finish();
+            outcomes.extend(r.outcomes);
+            per_replica.push(r.metrics);
+        }
+        PoolResult {
+            per_replica,
+            outcomes,
+            origins: self.origins,
+            n_rebalanced: self.n_rebalanced,
+        }
+    }
+}
+
+/// Stitch a pool's per-request outcomes over the rebalancer's origin
+/// records: a migrated request keeps its original arrival, prompt
+/// length and first-token time, and takes the finish (or rejection)
+/// from its final holder. The identity map when nothing migrated.
+fn stitch(
+    outcomes: &[(usize, RequestOutcome)],
+    origins: &HashMap<usize, Origin>,
+) -> Vec<RequestOutcome> {
+    outcomes
+        .iter()
+        .map(|&(id, o)| match origins.get(&id) {
+            Some(g) => RequestOutcome {
+                arrival_s: g.arrival_s,
+                input_len: g.input_len,
+                output_len: g.output_len,
+                first_token_s: Some(g.first_token_s),
+                finish_s: o.finish_s,
+                rejected: o.rejected,
+            },
+            None => o,
+        })
+        .collect()
+}
+
+/// One cost memo per distinct hardware configuration: replicas with
+/// equal `(model, hw, policy)` share it, so a batch shape costed — or
+/// GA-searched — anywhere is never re-simulated on an identical
+/// replica. Sharing is bit-exact (the memo is composition-keyed and
+/// each entry order-independent), so a homogeneous fleet behaves
+/// exactly as with PR 3's single shared coster.
+fn pool_costers<'a>(
+    model: &'a ModelSpec,
+    hws: &'a [HwConfig],
+    cfg: &SimConfig,
+) -> Vec<Rc<RefCell<BatchCoster<'a>>>> {
+    let mut out: Vec<Rc<RefCell<BatchCoster<'a>>>> = Vec::with_capacity(hws.len());
+    for (i, hw) in hws.iter().enumerate() {
+        if let Some(j) = hws[..i].iter().position(|h| h == hw) {
+            out.push(out[j].clone());
+        } else {
+            out.push(Rc::new(RefCell::new(BatchCoster::new(
+                model,
+                hw,
+                cfg.policy,
+                cfg.eval_blocks,
+                cfg.ctx_bucket,
+                cfg.kv.dtype,
+            ))));
+        }
+    }
+    out
+}
+
+fn shed_outcome(r: &TimedRequest) -> RequestOutcome {
+    RequestOutcome {
+        arrival_s: r.arrival_s,
+        input_len: r.input_len.max(1),
+        output_len: r.output_len.max(1),
+        first_token_s: None,
+        finish_s: None,
+        rejected: true,
+    }
+}
+
+/// Replay `stream` across a fleet with per-replica hardware and an
+/// explicit front end. `hws` must hold one entry per replica (prefill
+/// pool first for disaggregated shapes); with [`Frontend::baseline`]
+/// and identical hardware this is bitwise-equal to
+/// [`super::fleet::simulate_fleet`]. Deterministic: identical inputs
+/// give bit-identical output.
+pub fn simulate_fleet_frontend(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+) -> FleetMetrics {
+    assert_eq!(
+        hws.len(),
+        fleet.total_replicas(),
+        "one HwConfig per replica (prefill pool first for disaggregated shapes)"
+    );
+    match fleet.router {
+        RouterPolicy::PrefillDecode => run_disaggregated(stream, model, hws, cfg, fleet, fe),
+        _ => run_homogeneous(stream, model, hws, cfg, fleet, fe),
+    }
+}
+
+fn run_homogeneous(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+) -> FleetMetrics {
+    let n_rep = fleet.n_replicas.max(1);
+    let costers = pool_costers(model, &hws[..n_rep], cfg);
+    let reps: Vec<Scheduler> = hws[..n_rep]
+        .iter()
+        .zip(&costers)
+        .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
+        .collect();
+    let mut pool = Pool::new(
+        reps,
+        router_for(fleet.router),
+        fe.rebalance,
+        *cfg,
+        4 * stream.requests.len() + 16,
+    );
+    let mut shed: Vec<RequestOutcome> = Vec::new();
+    for r in &stream.requests {
+        pool.deliver_due(r.arrival_s);
+        pool.advance_all(r.arrival_s);
+        let (k, obs) = pool.route(r);
+        if fe.admission.sheds(r, &obs, cfg) {
+            shed.push(shed_outcome(r));
+        } else {
+            pool.reps[k].inject(r.id, r.arrival_s, r.input_len, r.output_len);
+        }
+        pool.maybe_rebalance(r.arrival_s);
+    }
+    let res = pool.finish();
+    let mut outcomes = stitch(&res.outcomes, &res.origins);
+    let n_shed = shed.len();
+    outcomes.extend(shed);
+    aggregate(res.per_replica, outcomes, cfg, n_shed, res.n_rebalanced)
+}
+
+/// A prefill-complete request waiting on its KV transfer.
+struct Migration {
+    t: f64,
+    id: usize,
+    /// Context tokens to materialize at the decode replica (prompt plus
+    /// the first generated token).
+    ctx: u64,
+    /// Output tokens still to decode.
+    rest: u64,
+}
+
+fn run_disaggregated(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+) -> FleetMetrics {
+    let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
+    let costers = pool_costers(model, hws, cfg);
+    // spec-aware footprint probe (paging + sharing + dtype), the same
+    // test every scheduler applies at arrival
+    let fit_probe = KvCache::new(cfg.kv, cfg.kv_budget(model).max(2));
+    // --- stage 1: prompts JSQ-routed over the prefill pool, truncated
+    // to a single output token (emitted at prefill completion). A
+    // request whose *full* footprint can never fit is injected with its
+    // real output length so the scheduler rejects it at arrival with
+    // zero compute — the same arrival-time rejection the homogeneous
+    // routers apply, keeping the policies comparable on one stream.
+    // SLO-aware shedding acts here too: the TTFT is produced by the
+    // prefill pool, so its backlog drives the estimate ---
+    let pre_reps: Vec<Scheduler> = hws[..n_pre]
+        .iter()
+        .zip(&costers[..n_pre])
+        .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
+        .collect();
+    let mut pre = Pool::new(pre_reps, Box::<JsqRouter>::default(), None, *cfg, 0);
+    let mut shed: Vec<RequestOutcome> = Vec::new();
+    for r in &stream.requests {
+        pre.advance_all(r.arrival_s);
+        let (k, obs) = pre.route(r);
+        if fe.admission.sheds(r, &obs, cfg) {
+            shed.push(shed_outcome(r));
+            continue;
+        }
+        let out = r.output_len.max(1);
+        if !fit_probe.can_ever_fit(r.input_len.max(1), out) {
+            pre.reps[k].inject(r.id, r.arrival_s, r.input_len, out);
+        } else {
+            pre.reps[k].inject(r.id, r.arrival_s, r.input_len, 1);
+        }
+    }
+    let pre_res = pre.finish();
+    let mut per_replica = pre_res.per_replica;
+    let pre_outcomes = pre_res.outcomes;
+
+    // --- KV handoff: completed prefills migrate to the decode pool
+    // after `ctx * handoff_s_per_token` seconds, in global time order ---
+    let out_len_of: HashMap<usize, u64> = stream
+        .requests
+        .iter()
+        .map(|r| (r.id, r.output_len.max(1)))
+        .collect();
+    let mut migs: Vec<Migration> = Vec::new();
+    for &(id, o) in &pre_outcomes {
+        let (Some(finish), false) = (o.finish_s, o.rejected) else {
+            continue;
+        };
+        let rest = out_len_of.get(&id).copied().unwrap_or(1).saturating_sub(1);
+        if rest == 0 {
+            continue; // single-token request: done at prefill
+        }
+        let ctx = o.input_len + 1;
+        // whole blocks migrate: the link moves the context rounded up to
+        // the KV block size (exact at block_tokens = 1)
+        let link_tokens = cfg.kv.block_round(ctx);
+        migs.push(Migration {
+            t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
+            id,
+            ctx,
+            rest,
+        });
+    }
+    migs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.id.cmp(&b.id)));
+
+    // --- stage 2: migrations JSQ-routed over the decode pool, with
+    // optional decode-pool rebalancing between its replicas ---
+    let dec_reps: Vec<Scheduler> = hws[n_pre..]
+        .iter()
+        .zip(&costers[n_pre..])
+        .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
+        .collect();
+    let mut dec = Pool::new(
+        dec_reps,
+        Box::<JsqRouter>::default(),
+        fe.rebalance,
+        *cfg,
+        4 * migs.len() + 16,
+    );
+    for m in &migs {
+        dec.deliver_due(m.t);
+        dec.advance_all(m.t);
+        let req = TimedRequest {
+            id: m.id,
+            arrival_s: m.t,
+            input_len: m.ctx,
+            output_len: m.rest,
+        };
+        let (k, _) = dec.route(&req);
+        dec.reps[k].inject_migrated(m.id, m.t, m.ctx, m.rest);
+        dec.maybe_rebalance(m.t);
+    }
+    let dec_res = dec.finish();
+    per_replica.extend(dec_res.per_replica);
+
+    // --- stitch per-request outcomes across the two stages (the final
+    // decode holder carries the finish even after rebalancing) ---
+    let dec_by_id: HashMap<usize, RequestOutcome> = dec_res.outcomes.into_iter().collect();
+    let mut outcomes: Vec<RequestOutcome> = pre_outcomes
+        .iter()
+        .map(|&(id, p)| {
+            let out_len = out_len_of.get(&id).copied().unwrap_or(1);
+            let mut o = RequestOutcome {
+                arrival_s: p.arrival_s,
+                input_len: p.input_len,
+                output_len: out_len,
+                first_token_s: p.first_token_s,
+                finish_s: if out_len == 1 { p.finish_s } else { None },
+                rejected: p.rejected,
+            };
+            if let Some(d) = dec_by_id.get(&id) {
+                // decode-stage rejection (context can never fit there)
+                // makes the whole request rejected at fleet level
+                o.rejected = p.rejected || d.rejected;
+                o.finish_s = d.finish_s;
+            }
+            o
+        })
+        .collect();
+    let n_shed = shed.len();
+    outcomes.extend(shed);
+    aggregate(per_replica, outcomes, cfg, n_shed, dec_res.n_rebalanced)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipletClass, Dataflow};
+    use crate::sim::coster::MappingPolicy;
+    use crate::sim::metrics::SloSpec;
+    use crate::sim::simulate_fleet;
+    use crate::workload::serving::ServingStrategy;
+    use crate::workload::trace::TraceSpec;
+
+    fn tiny_hw() -> HwConfig {
+        HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        )
+    }
+
+    fn tiny_spec() -> TraceSpec {
+        TraceSpec {
+            mean_in: 48.0,
+            mean_out: 8.0,
+            sigma_in: 0.5,
+            sigma_out: 0.4,
+            max_len: 4096,
+            shared_prefix_tokens: 0,
+        }
+    }
+
+    fn tiny_cfg() -> SimConfig {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.policy = MappingPolicy::Pipeline;
+        cfg.max_batch = 6;
+        cfg.chunk_tokens = 24;
+        cfg.kv_budget_tokens = 1024;
+        cfg.ctx_bucket = 32;
+        cfg.eval_blocks = 1;
+        cfg.slo = SloSpec::new(0.5, 0.1);
+        cfg
+    }
+
+    fn tiny_setup(rate_scale: f64, n: usize, seed: u64) -> (RequestStream, SimProbe) {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let cfg = tiny_cfg();
+        let probe = crate::sim::probe(&model, &hw, &cfg, &tiny_spec());
+        (
+            RequestStream::poisson(&tiny_spec(), rate_scale * probe.capacity_rps(), n, seed),
+            probe,
+        )
+    }
+
+    #[test]
+    fn legacy_routers_route_like_the_old_match_arms() {
+        let obs = |backlog: u64| ReplicaObs {
+            clock_s: 0.0,
+            busy_s: 0.0,
+            queue_depth: 0,
+            backlog_tokens: backlog,
+            pending_prefill_tokens: 0,
+            kv_free_tokens: 100,
+            n_prefilling: 0,
+            n_decoding: 0,
+        };
+        let reps = [obs(5), obs(2), obs(2), obs(9)];
+        let req = TimedRequest {
+            id: 0,
+            arrival_s: 0.0,
+            input_len: 8,
+            output_len: 4,
+        };
+        let mut rr = RoundRobinRouter::default();
+        assert_eq!(
+            (0..6).map(|_| rr.route(&req, &reps)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 0, 1]
+        );
+        // JSQ: fewest backlog tokens, ties to the lowest index
+        assert_eq!(JsqRouter.route(&req, &reps), 1);
+        // KV-aware: skips replicas without footprint headroom
+        let mut tight = reps;
+        tight[1].kv_free_tokens = 4;
+        assert_eq!(KvAwareRouter.route(&req, &tight), 2);
+        // ... and falls back to JSQ when nothing has headroom
+        let dry = [obs(5), obs(2)].map(|mut o| {
+            o.kv_free_tokens = 0;
+            o
+        });
+        assert_eq!(KvAwareRouter.route(&req, &dry), 1);
+    }
+
+    #[test]
+    fn infinite_margin_and_threshold_are_bitwise_baseline() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let cfg = tiny_cfg();
+        let (stream, probe) = tiny_setup(2.0, 14, 11);
+        for fleet in [
+            FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue),
+            FleetConfig::disaggregated(1, 2, 1e-7),
+        ] {
+            let base = simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
+            let hws = vec![hw.clone(); fleet.total_replicas()];
+            let never_shed = Frontend::with_shedding(probe, f64::INFINITY)
+                .with_rebalance(RebalanceSpec::new(f64::INFINITY, 0.0));
+            let m = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &never_shed);
+            assert_eq!(m.n_shed, 0);
+            assert_eq!(m.n_rebalanced, 0);
+            assert_eq!(m.makespan_s.to_bits(), base.makespan_s.to_bits());
+            assert_eq!(m.energy_pj.to_bits(), base.energy_pj.to_bits());
+            assert_eq!(m.ttft.p99.to_bits(), base.ttft.p99.to_bits());
+            assert_eq!(m.tpot.p99.to_bits(), base.tpot.p99.to_bits());
+            assert_eq!(m.outcomes.len(), base.outcomes.len());
+            for (a, b) in m.outcomes.iter().zip(&base.outcomes) {
+                assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+                assert_eq!(a.first_token_s.map(f64::to_bits), b.first_token_s.map(f64::to_bits));
+                assert_eq!(a.finish_s.map(f64::to_bits), b.finish_s.map(f64::to_bits));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_margin_sheds_everything_and_conserves() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let cfg = tiny_cfg();
+        let (stream, probe) = tiny_setup(1.5, 10, 3);
+        let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+        let hws = vec![hw.clone(); 2];
+        let fe = Frontend::with_shedding(probe, 0.0);
+        let m = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+        assert_eq!(m.n_arrived, stream.requests.len());
+        assert_eq!(m.n_shed, m.n_arrived);
+        assert_eq!(m.n_rejected, m.n_arrived);
+        assert_eq!(m.n_completed, 0);
+        assert!((m.shed_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moderate_shedding_keeps_conservation_and_reports_rate() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg();
+        let (stream, probe) = tiny_setup(3.0, 18, 5);
+        cfg.slo = probe.slo(3.0, 4.0);
+        for fleet in [
+            FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue),
+            FleetConfig::disaggregated(1, 1, 1e-7),
+        ] {
+            let hws = vec![hw.clone(); fleet.total_replicas()];
+            let fe = Frontend::with_shedding(probe, 1.0);
+            let m = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+            assert_eq!(
+                m.n_completed + m.n_rejected,
+                m.n_arrived,
+                "{}",
+                fleet.describe()
+            );
+            assert!(m.n_shed <= m.n_rejected);
+            assert!((m.shed_rate - m.n_shed as f64 / m.n_arrived as f64).abs() < 1e-12);
+            // shedding is deterministic too
+            let b = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+            assert_eq!(m.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(m.n_shed, b.n_shed);
+        }
+    }
+
+    /// `RouterPolicy::KvAware` runs end-to-end: with ample KV headroom
+    /// it is bitwise JSQ (every replica always has room, so the filter
+    /// never bites), and under a tight budget it still conserves.
+    #[test]
+    fn kv_aware_policy_runs_and_matches_jsq_when_kv_ample() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg();
+        let (stream, _) = tiny_setup(2.0, 14, 19);
+        cfg.kv_budget_tokens = 1 << 20; // never binding
+        let jsq = simulate_fleet(
+            &stream,
+            &model,
+            &hw,
+            &cfg,
+            &FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue),
+        );
+        let kva = simulate_fleet(
+            &stream,
+            &model,
+            &hw,
+            &cfg,
+            &FleetConfig::homogeneous(3, RouterPolicy::KvAware),
+        );
+        assert_eq!(kva.makespan_s.to_bits(), jsq.makespan_s.to_bits());
+        assert_eq!(kva.energy_pj.to_bits(), jsq.energy_pj.to_bits());
+        // tight budget: the headroom filter may reroute, but the run
+        // still conserves and stays deterministic
+        cfg.kv_budget_tokens = 160;
+        let tight = simulate_fleet(
+            &stream,
+            &model,
+            &hw,
+            &cfg,
+            &FleetConfig::homogeneous(3, RouterPolicy::KvAware),
+        );
+        assert_eq!(tight.n_completed + tight.n_rejected, tight.n_arrived);
+        let again = simulate_fleet(
+            &stream,
+            &model,
+            &hw,
+            &cfg,
+            &FleetConfig::homogeneous(3, RouterPolicy::KvAware),
+        );
+        assert_eq!(tight.makespan_s.to_bits(), again.makespan_s.to_bits());
+    }
+
+    /// Heterogeneous per-replica hardware: a fleet whose second replica
+    /// is larger must not be slower than the same fleet with two small
+    /// replicas, and per-hw cost memos keep runs deterministic.
+    #[test]
+    fn heterogeneous_replicas_run_and_conserve() {
+        let model = ModelSpec::tiny();
+        let small = tiny_hw();
+        let big = HwConfig::homogeneous(
+            2,
+            4,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let cfg = tiny_cfg();
+        let (stream, _) = tiny_setup(2.5, 12, 7);
+        let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+        let hws = vec![small.clone(), big];
+        let m = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline());
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+        assert_eq!(m.per_replica.len(), 2);
+        let b = simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline());
+        assert_eq!(m.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(m.energy_pj.to_bits(), b.energy_pj.to_bits());
+    }
+}

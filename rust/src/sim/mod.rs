@@ -17,6 +17,7 @@
 
 pub mod coster;
 pub mod fleet;
+pub mod frontend;
 pub mod kv;
 pub mod metrics;
 pub mod sched;
@@ -24,9 +25,13 @@ pub mod stream;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
 pub use fleet::{simulate_fleet, FleetConfig, FleetMetrics, RouterPolicy};
+pub use frontend::{
+    estimate_ttft, router_for, simulate_fleet_frontend, AdmissionPolicy, Frontend, JsqRouter,
+    KvAwareRouter, RebalanceSpec, ReplicaObs, RoundRobinRouter, Router,
+};
 pub use kv::{EvictionPolicy, KvCache, KvDtype, KvSpec};
-pub use metrics::{IterRecord, LatencyStats, ServingMetrics, SloSpec};
-pub use sched::{simulate_serving, ReplicaResult, Scheduler};
+pub use metrics::{IterRecord, LatencyStats, RequestOutcome, ServingMetrics, SloSpec};
+pub use sched::{simulate_serving, ExtractedRequest, FrontendCounters, ReplicaResult, Scheduler};
 pub use stream::{RequestStream, TimedRequest};
 
 use crate::arch::constants::CLOCK_HZ;
@@ -182,10 +187,63 @@ pub fn probe(model: &ModelSpec, hw: &HwConfig, cfg: &SimConfig, spec: &TraceSpec
     }
 }
 
+/// [`probe`] calibrated from an actual request stream: the mean input
+/// and output lengths are measured from the stream's requests instead
+/// of a `TraceSpec`. Used where only the stream is in scope — the
+/// fleet DSE's SLO-shed admission, and trace-file replays
+/// (`RequestStream::from_trace`).
+pub fn probe_stream(
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    stream: &RequestStream,
+) -> SimProbe {
+    let n = stream.requests.len().max(1) as u64;
+    let mean_in = (stream.requests.iter().map(|r| r.input_len).sum::<u64>() / n).max(1);
+    let mean_out = (stream.requests.iter().map(|r| r.output_len).sum::<u64>() / n).max(1);
+    let spec = TraceSpec {
+        mean_in: mean_in as f64,
+        mean_out: mean_out as f64,
+        sigma_in: 0.0,
+        sigma_out: 0.0,
+        max_len: u64::MAX,
+        shared_prefix_tokens: 0,
+    };
+    probe(model, hw, cfg, &spec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::{ChipletClass, Dataflow};
+
+    #[test]
+    fn probe_stream_matches_probe_at_the_stream_means() {
+        let model = ModelSpec::tiny();
+        let hw = HwConfig::homogeneous(
+            2,
+            2,
+            ChipletClass::S,
+            Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let cfg = SimConfig::new(ServingStrategy::Orca);
+        let stream = RequestStream {
+            name: "fixed".into(),
+            requests: vec![
+                TimedRequest { id: 0, arrival_s: 0.0, input_len: 100, output_len: 10 },
+                TimedRequest { id: 1, arrival_s: 1.0, input_len: 60, output_len: 30 },
+            ],
+            rate_rps: 1.0,
+            seed: 0,
+        };
+        let p = probe_stream(&model, &hw, &cfg, &stream);
+        assert_eq!(p.mean_in, 80);
+        assert_eq!(p.mean_out, 20);
+        assert!(p.t_prefill_s > 0.0 && p.t_decode_iter_s > 0.0);
+        assert!(p.capacity_rps() > 0.0);
+    }
 
     #[test]
     fn kv_budget_derivation() {

@@ -71,6 +71,9 @@ struct Live {
     /// Fleet KV migration: the context materializes on admission via
     /// the handoff transfer instead of prefill compute.
     prefilled: bool,
+    /// Extracted by the front end mid-decode (rebalancing): the request
+    /// finishes on another replica, so this replica's outcomes skip it.
+    migrated_out: bool,
 }
 
 impl Live {
@@ -100,6 +103,36 @@ enum Role {
 pub struct ReplicaResult {
     pub metrics: ServingMetrics,
     pub outcomes: Vec<(usize, RequestOutcome)>,
+}
+
+/// One-pass front-end observation counters (see
+/// [`Scheduler::frontend_counters`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontendCounters {
+    pub backlog_tokens: u64,
+    pub pending_prefill_tokens: u64,
+    pub n_prefilling: usize,
+    pub n_decoding: usize,
+}
+
+/// A mid-decode request removed from a replica by the front-end
+/// rebalancer ([`Scheduler::extract_youngest_decoding`]): the caller
+/// owns re-injection (via [`Scheduler::inject_migrated`] on another
+/// replica) and outcome stitching.
+#[derive(Debug, Clone, Copy)]
+pub struct ExtractedRequest {
+    pub ext_id: usize,
+    /// Arrival time at *this* replica (the fleet keeps the true origin
+    /// for requests that migrate more than once).
+    pub arrival_s: f64,
+    pub input_len: u64,
+    pub output_len: u64,
+    /// When this replica emitted (or inherited) the first token.
+    pub first_token_s: f64,
+    /// Context tokens to re-materialize at the destination.
+    pub context_len: u64,
+    /// Output tokens still to decode.
+    pub rest: u64,
 }
 
 /// Resumable continuous-batching scheduler for one package.
@@ -132,6 +165,10 @@ pub struct Scheduler<'a> {
     ideal_cycles: f64,
     gen_tokens: u64,
     kv_transfer_tokens: u64,
+    /// Requests extracted by the front-end rebalancer: they arrived
+    /// here but finish elsewhere, so they count as resolved in the
+    /// truncation accounting and are skipped by `finish`.
+    migrated_out: usize,
     truncated: bool,
 }
 
@@ -178,6 +215,7 @@ impl<'a> Scheduler<'a> {
             ideal_cycles: 0.0,
             gen_tokens: 0,
             kv_transfer_tokens: 0,
+            migrated_out: 0,
             truncated: false,
         }
     }
@@ -196,22 +234,133 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Outstanding token work (queued context+output plus in-flight
-    /// remainders): the join-shortest-queue routing signal.
+    /// remainders): the join-shortest-queue routing signal. One of the
+    /// [`Scheduler::frontend_counters`] counters — that single-pass
+    /// snapshot is the one source of truth for all of them.
     pub fn backlog_tokens(&self) -> u64 {
-        let queued: u64 = self
-            .queue
-            .iter()
-            .map(|&i| self.reqs[i].input_len + self.reqs[i].output_len)
-            .sum();
-        let inflight: u64 = self
-            .running
-            .iter()
-            .map(|&i| {
-                let r = &self.reqs[i];
-                (r.prefill_target - r.prefill_done) + r.output_len.saturating_sub(r.generated)
-            })
-            .sum();
-        queued + inflight
+        self.frontend_counters().backlog_tokens
+    }
+
+    /// Admission-queue depth (offered requests not yet admitted).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Co-resident admitted requests.
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Admitted requests currently in their decode phase
+    /// (see [`Scheduler::frontend_counters`]).
+    pub fn n_decoding(&self) -> usize {
+        self.frontend_counters().n_decoding
+    }
+
+    /// Admitted requests still prefilling
+    /// (see [`Scheduler::frontend_counters`]).
+    pub fn n_prefilling(&self) -> usize {
+        self.frontend_counters().n_prefilling
+    }
+
+    /// Prompt tokens that must still be prefilled before every
+    /// currently known request has emitted its first token: queued
+    /// prompts plus in-flight prefill remainders. The front-end TTFT
+    /// estimator's backlog signal (migrated requests materialize by
+    /// transfer, so they contribute no prefill work). See
+    /// [`Scheduler::frontend_counters`].
+    pub fn pending_prefill_tokens(&self) -> u64 {
+        self.frontend_counters().pending_prefill_tokens
+    }
+
+    /// Unallocated KV capacity in tokens (whole free blocks; the
+    /// cache's own block size — it clamps oversized configs).
+    pub fn kv_free_tokens(&self) -> u64 {
+        self.kv.free_blocks() * self.kv.spec().block_tokens.max(1)
+    }
+
+    /// Time this replica has spent inside iterations so far (s) — the
+    /// front-end rebalancer's load signal.
+    pub fn busy_s(&self) -> f64 {
+        self.trace.busy_s()
+    }
+
+    /// One-pass snapshot of the queue/running sets for front-end
+    /// routing observations: equivalent to calling `backlog_tokens`,
+    /// `pending_prefill_tokens`, `n_decoding` and `n_prefilling`
+    /// separately, in a single traversal (the per-arrival x
+    /// per-replica routing hot path).
+    pub fn frontend_counters(&self) -> FrontendCounters {
+        let mut c = FrontendCounters::default();
+        for &i in &self.queue {
+            let r = &self.reqs[i];
+            c.backlog_tokens += r.input_len + r.output_len;
+            if !r.prefilled {
+                c.pending_prefill_tokens += r.input_len;
+            }
+        }
+        for &i in &self.running {
+            let r = &self.reqs[i];
+            c.backlog_tokens +=
+                (r.prefill_target - r.prefill_done) + r.output_len.saturating_sub(r.generated);
+            c.pending_prefill_tokens += r.prefill_target.saturating_sub(r.prefill_done);
+            if r.decoding() {
+                c.n_decoding += 1;
+            } else {
+                c.n_prefilling += 1;
+            }
+        }
+        c
+    }
+
+    /// Whether a migrated request with `context_len` resident tokens
+    /// and `rest` outputs to decode could ever fit this replica's KV
+    /// capacity — the same test `inject_migrated` applies. The
+    /// rebalancer checks it on the destination *before* extracting,
+    /// so a migration never converts into a rejection on a smaller
+    /// heterogeneous replica.
+    pub fn kv_can_ever_fit(&self, context_len: u64, rest: u64) -> bool {
+        self.kv.can_ever_fit(context_len.max(1), rest.max(1))
+    }
+
+    /// The `(context_len, rest)` footprint that
+    /// [`Scheduler::extract_youngest_decoding`] would migrate next,
+    /// without extracting it.
+    pub fn peek_youngest_decoding(&self) -> Option<(u64, u64)> {
+        let idx = self.running.iter().rev().copied().find(|&i| {
+            let r = &self.reqs[i];
+            r.decoding() && r.generated >= 1 && r.generated < r.output_len
+        })?;
+        let r = &self.reqs[idx];
+        Some((r.input_len + r.generated, r.output_len - r.generated))
+    }
+
+    /// Remove the youngest mid-decode request (first token emitted,
+    /// output remaining) from the running set, releasing its KV blocks.
+    /// The request vanishes from this replica's outcomes (`finish`
+    /// skips it); the caller owns re-injection — typically
+    /// [`Scheduler::inject_migrated`] on another replica, paying the
+    /// block-granular KV handoff — and fleet-level outcome stitching.
+    pub fn extract_youngest_decoding(&mut self) -> Option<ExtractedRequest> {
+        let pos = self.running.iter().rposition(|&i| {
+            let r = &self.reqs[i];
+            r.decoding() && r.generated >= 1 && r.generated < r.output_len
+        })?;
+        let idx = self.running.remove(pos);
+        self.kv.release(idx);
+        let first_token_s = self.reqs[idx].first_token_s.unwrap_or(self.clock);
+        let r = &mut self.reqs[idx];
+        r.migrated_out = true;
+        self.migrated_out += 1;
+        Some(ExtractedRequest {
+            ext_id: self.ext_ids[idx],
+            arrival_s: r.arrival_s,
+            input_len: r.input_len,
+            output_len: r.output_len,
+            first_token_s,
+            context_len: r.input_len + r.generated,
+            rest: r.output_len - r.generated,
+        })
     }
 
     /// Offer a request at `arrival_s` (must be called in nondecreasing
@@ -259,6 +408,7 @@ impl<'a> Scheduler<'a> {
             finish_s: None,
             rejected: false,
             prefilled,
+            migrated_out: false,
         };
         if !self.kv.can_ever_fit(input_len, output_len) {
             // can never fit, even alone: explicit rejection
@@ -624,11 +774,15 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Close the run and aggregate metrics + per-request outcomes.
+    /// Requests extracted by the front-end rebalancer finish on another
+    /// replica, so they are skipped here (the fleet stitches their
+    /// timings from the extraction record plus the final holder).
     pub fn finish(self) -> ReplicaResult {
         let outcomes: Vec<(usize, RequestOutcome)> = self
             .ext_ids
             .iter()
             .zip(&self.reqs)
+            .filter(|(_, r)| !r.migrated_out)
             .map(|(&ext, r)| {
                 (
                     ext,
@@ -661,7 +815,8 @@ impl<'a> Scheduler<'a> {
                 kv_shared_tokens: self.kv.shared_tokens(),
                 kv_demand_tokens: self.kv.demand_tokens(),
                 kv_prefix_materializations: self.kv.prefix_materializations(),
-                truncated: self.truncated || self.done + self.rejected < self.n_arrived,
+                truncated: self.truncated
+                    || self.done + self.rejected + self.migrated_out < self.n_arrived,
             },
         );
         ReplicaResult { metrics, outcomes }

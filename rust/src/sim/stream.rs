@@ -38,6 +38,91 @@ impl RequestStream {
         Self::generate(spec, rate_rps, n, seed, false)
     }
 
+    /// Parse a timestamped production arrival trace in the
+    /// Azure-LLM-inference CSV style: one `arrival_s,prompt_len,gen_len`
+    /// triple per line (extra trailing fields are ignored). Lines that
+    /// are empty or start with `#` are skipped anywhere; a non-numeric
+    /// first field is tolerated only *before* the first data row (a
+    /// header) — after that it is a parse error, so a corrupted line
+    /// mid-file can never silently drop a request. Requests are sorted
+    /// by arrival time
+    /// (stable, so ties keep file order) and re-numbered `0..n` in that
+    /// order; `rate_rps` is derived from the arrival span. Parsing is
+    /// pure: the same text always yields the same stream, so replays
+    /// are bit-reproducible like the synthetic generators.
+    pub fn from_trace(name: &str, csv: &str) -> Result<Self, String> {
+        let mut rows: Vec<(f64, u64, u64)> = Vec::new();
+        for (ln, raw) in csv.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split(',').map(str::trim);
+            let (Some(a), Some(b), Some(c)) = (fields.next(), fields.next(), fields.next())
+            else {
+                return Err(format!(
+                    "{name}: line {}: expected `arrival_s,prompt_len,gen_len`, got {line:?}",
+                    ln + 1
+                ));
+            };
+            let Ok(arrival_s) = a.parse::<f64>() else {
+                if rows.is_empty() {
+                    continue; // header row (e.g. "arrival_s,prompt_len,gen_len")
+                }
+                return Err(format!("{name}: line {}: bad arrival time {a:?}", ln + 1));
+            };
+            if !arrival_s.is_finite() || arrival_s < 0.0 {
+                return Err(format!("{name}: line {}: bad arrival time {a:?}", ln + 1));
+            }
+            let input_len: u64 = b
+                .parse()
+                .map_err(|_| format!("{name}: line {}: bad prompt length {b:?}", ln + 1))?;
+            let output_len: u64 = c
+                .parse()
+                .map_err(|_| format!("{name}: line {}: bad gen length {c:?}", ln + 1))?;
+            rows.push((arrival_s, input_len, output_len));
+        }
+        if rows.is_empty() {
+            return Err(format!("{name}: trace contains no requests"));
+        }
+        rows.sort_by(|x, y| x.0.total_cmp(&y.0));
+        let span = rows.last().unwrap().0 - rows[0].0;
+        let rate_rps = if span > 1e-9 {
+            (rows.len() - 1) as f64 / span
+        } else {
+            1.0
+        };
+        let requests = rows
+            .into_iter()
+            .enumerate()
+            .map(|(id, (arrival_s, input_len, output_len))| TimedRequest {
+                id,
+                arrival_s,
+                input_len: input_len.max(1),
+                output_len: output_len.max(1),
+            })
+            .collect();
+        Ok(RequestStream {
+            name: name.to_string(),
+            requests,
+            rate_rps,
+            seed: 0,
+        })
+    }
+
+    /// [`RequestStream::from_trace`] loaded from a CSV file.
+    pub fn from_trace_file<P: AsRef<std::path::Path>>(path: P) -> Result<Self, String> {
+        let p = path.as_ref();
+        let csv =
+            std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let name = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace")
+            .to_string();
+        Self::from_trace(&name, &csv)
+    }
+
     fn generate(spec: &TraceSpec, rate_rps: f64, n: usize, seed: u64, poisson: bool) -> Self {
         assert!(rate_rps > 0.0, "arrival rate must be positive");
         let lens = spec.sample(n, seed);
@@ -115,6 +200,67 @@ mod tests {
         let s = RequestStream::poisson(&spec(), 4.0, 2000, 3);
         let rate = s.len() as f64 / s.horizon_s();
         assert!((rate - 4.0).abs() / 4.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn trace_loader_parses_sorts_and_is_deterministic() {
+        let csv = "\
+# comment line
+arrival_s,prompt_len,gen_len
+0.50,128,12
+0.10,64,8,extra-field-ignored
+
+0.10,32,4
+0.90,0,0
+";
+        let a = RequestStream::from_trace("t", csv).unwrap();
+        let b = RequestStream::from_trace("t", csv).unwrap();
+        assert_eq!(a.requests, b.requests, "parsing must be deterministic");
+        assert_eq!(a.len(), 4);
+        // sorted by arrival; the 0.10 tie keeps file order (64 first)
+        assert_eq!(a.requests[0].arrival_s, 0.10);
+        assert_eq!(a.requests[0].input_len, 64);
+        assert_eq!(a.requests[1].input_len, 32);
+        assert_eq!(a.requests[3].arrival_s, 0.90);
+        // ids are re-numbered in arrival order
+        assert_eq!(
+            a.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        // zero lengths are clamped to 1 like the synthetic generators
+        assert_eq!(a.requests[3].input_len, 1);
+        assert_eq!(a.requests[3].output_len, 1);
+        // rate over the span: 3 gaps / 0.8 s
+        assert!((a.rate_rps - 3.0 / 0.8).abs() < 1e-9, "rate {}", a.rate_rps);
+    }
+
+    #[test]
+    fn trace_loader_rejects_garbage() {
+        assert!(RequestStream::from_trace("t", "").is_err());
+        assert!(RequestStream::from_trace("t", "# only comments\n").is_err());
+        assert!(RequestStream::from_trace("t", "0.1,not-a-number,4\n").is_err());
+        assert!(RequestStream::from_trace("t", "0.1,8\n").is_err());
+        assert!(RequestStream::from_trace("t", "-1.0,8,4\n").is_err());
+        assert!(RequestStream::from_trace("t", "nan,8,4\n").is_err());
+        // a corrupted line after real data must error, not vanish
+        assert!(RequestStream::from_trace("t", "0.1,8,4\n0,4x,300,64\n").is_err());
+        assert!(RequestStream::from_trace("t", "0.1,8,4\ntruncated-line,3,3\n").is_err());
+    }
+
+    #[test]
+    fn bundled_azure_fixture_loads() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/traces/azure_tiny.csv");
+        let s = RequestStream::from_trace_file(path).expect("bundled fixture parses");
+        assert_eq!(s.name, "azure_tiny");
+        assert_eq!(s.len(), 10);
+        for w in s.requests.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(s.rate_rps > 0.0);
+        assert!(s.total_output_tokens() > 0);
+        // deterministic reload
+        let t = RequestStream::from_trace_file(path).unwrap();
+        assert_eq!(s.requests, t.requests);
     }
 
     #[test]

@@ -143,6 +143,28 @@ fn fleet_metrics_bit_identical_for_same_seed() {
     }
 }
 
+/// The fleet-level outcome export (new in the front-end refactor):
+/// one stitched outcome per arrival, consistent with the counters,
+/// and the baseline front end neither sheds nor rebalances.
+#[test]
+fn fleet_outcomes_cover_every_arrival() {
+    for fleet in shapes() {
+        let m = run(&fleet, ServingStrategy::Orca, 768, 1.5, 12, 17);
+        assert_eq!(m.outcomes.len(), m.n_arrived, "{}", fleet.describe());
+        let rejected = m.outcomes.iter().filter(|o| o.rejected).count();
+        assert_eq!(rejected, m.n_rejected, "{}", fleet.describe());
+        let completed = m
+            .outcomes
+            .iter()
+            .filter(|o| !o.rejected && o.finish_s.is_some())
+            .count();
+        assert_eq!(completed, m.n_completed, "{}", fleet.describe());
+        assert_eq!(m.n_shed, 0, "{}", fleet.describe());
+        assert_eq!(m.shed_rate, 0.0, "{}", fleet.describe());
+        assert_eq!(m.n_rebalanced, 0, "{}", fleet.describe());
+    }
+}
+
 /// A one-replica fleet is the single-package simulator, bit for bit:
 /// both run the same `Scheduler` under the same driver.
 #[test]

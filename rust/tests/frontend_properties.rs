@@ -1,0 +1,505 @@
+//! Router-trait equivalence anchors and front-end control-plane
+//! properties.
+//!
+//! The heart of this file is a *verbatim reimplementation* of the
+//! pre-refactor fleet routers (PR 3's inline match arms in
+//! `sim/fleet.rs`), driven through the public `Scheduler` API. Over
+//! randomized streams, rates, strategies and KV budgets, each legacy
+//! `RouterPolicy` variant must be bitwise-identical — per-replica
+//! metrics *and* per-request timings — to the trait-based front end
+//! (`simulate_fleet`, now a thin wrapper over
+//! `simulate_fleet_frontend` + `Frontend::baseline`). On top of that:
+//! shedding with an infinite margin and rebalancing with an infinite
+//! threshold are the baseline bit for bit, and an engineered
+//! imbalance scenario proves the rebalancer migrates mid-decode
+//! requests over the block-granular KV handoff path.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{
+    self, AdmissionPolicy, BatchCoster, FleetConfig, Frontend, KvCache, MappingPolicy,
+    RebalanceSpec, RequestOutcome, RequestStream, RouterPolicy, Scheduler, ServingMetrics,
+    SimConfig, SloSpec, TimedRequest,
+};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+        shared_prefix_tokens: 0,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Verbatim pre-refactor routers (PR 3's fleet.rs), public-API edition
+// ---------------------------------------------------------------------
+
+fn jsq_pick(reps: &[Scheduler]) -> usize {
+    let mut best = 0usize;
+    let mut best_backlog = u64::MAX;
+    for (i, s) in reps.iter().enumerate() {
+        let b = s.backlog_tokens();
+        if b < best_backlog {
+            best_backlog = b;
+            best = i;
+        }
+    }
+    best
+}
+
+type SharedCoster<'a> = Rc<RefCell<BatchCoster<'a>>>;
+
+fn shared_coster<'a>(model: &'a ModelSpec, hw: &'a HwConfig, cfg: &SimConfig) -> SharedCoster<'a> {
+    Rc::new(RefCell::new(BatchCoster::new(
+        model,
+        hw,
+        cfg.policy,
+        cfg.eval_blocks,
+        cfg.ctx_bucket,
+        cfg.kv.dtype,
+    )))
+}
+
+/// The old `simulate_homogeneous`, line for line.
+fn legacy_homogeneous(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+) -> (Vec<ServingMetrics>, Vec<RequestOutcome>) {
+    let n_rep = fleet.n_replicas.max(1);
+    let coster = shared_coster(model, hw, cfg);
+    let mut reps: Vec<Scheduler> = (0..n_rep)
+        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
+        .collect();
+    let mut rr_next = 0usize;
+    for r in &stream.requests {
+        for s in reps.iter_mut() {
+            s.advance_to(r.arrival_s);
+        }
+        let k = match fleet.router {
+            RouterPolicy::RoundRobin => {
+                let k = rr_next % n_rep;
+                rr_next += 1;
+                k
+            }
+            _ => jsq_pick(&reps),
+        };
+        reps[k].inject(r.id, r.arrival_s, r.input_len, r.output_len);
+    }
+    for s in reps.iter_mut() {
+        s.run_to_end();
+    }
+    let mut per_replica = Vec::with_capacity(n_rep);
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(stream.requests.len());
+    for s in reps {
+        let r = s.finish();
+        outcomes.extend(r.outcomes.iter().map(|&(_, o)| o));
+        per_replica.push(r.metrics);
+    }
+    (per_replica, outcomes)
+}
+
+struct LegacyMigration {
+    t: f64,
+    id: usize,
+    ctx: u64,
+    rest: u64,
+}
+
+/// The old `simulate_disaggregated`, line for line.
+fn legacy_disaggregated(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+) -> (Vec<ServingMetrics>, Vec<RequestOutcome>) {
+    let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
+    let coster = shared_coster(model, hw, cfg);
+    let fit_probe = KvCache::new(cfg.kv, cfg.kv_budget(model).max(2));
+    let mut pre: Vec<Scheduler> = (0..n_pre)
+        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
+        .collect();
+    for r in &stream.requests {
+        for s in pre.iter_mut() {
+            s.advance_to(r.arrival_s);
+        }
+        let k = jsq_pick(&pre);
+        let out = r.output_len.max(1);
+        if !fit_probe.can_ever_fit(r.input_len.max(1), out) {
+            pre[k].inject(r.id, r.arrival_s, r.input_len, out);
+        } else {
+            pre[k].inject(r.id, r.arrival_s, r.input_len, 1);
+        }
+    }
+    for s in pre.iter_mut() {
+        s.run_to_end();
+    }
+    let mut per_replica = Vec::with_capacity(n_pre + n_dec);
+    let mut pre_outcomes: Vec<(usize, RequestOutcome)> = Vec::with_capacity(stream.requests.len());
+    for s in pre {
+        let r = s.finish();
+        pre_outcomes.extend(r.outcomes);
+        per_replica.push(r.metrics);
+    }
+
+    let out_len_of: std::collections::HashMap<usize, u64> = stream
+        .requests
+        .iter()
+        .map(|r| (r.id, r.output_len.max(1)))
+        .collect();
+    let mut migs: Vec<LegacyMigration> = Vec::new();
+    for &(id, o) in &pre_outcomes {
+        let (Some(finish), false) = (o.finish_s, o.rejected) else {
+            continue;
+        };
+        let rest = out_len_of.get(&id).copied().unwrap_or(1).saturating_sub(1);
+        if rest == 0 {
+            continue;
+        }
+        let ctx = o.input_len + 1;
+        let link_tokens = cfg.kv.block_round(ctx);
+        migs.push(LegacyMigration {
+            t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
+            id,
+            ctx,
+            rest,
+        });
+    }
+    migs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.id.cmp(&b.id)));
+
+    let mut dec: Vec<Scheduler> = (0..n_dec)
+        .map(|_| Scheduler::with_coster(model, hw, cfg, coster.clone()))
+        .collect();
+    for m in &migs {
+        for s in dec.iter_mut() {
+            s.advance_to(m.t);
+        }
+        let k = jsq_pick(&dec);
+        dec[k].inject_migrated(m.id, m.t, m.ctx, m.rest);
+    }
+    for s in dec.iter_mut() {
+        s.run_to_end();
+    }
+    let mut dec_outcomes: Vec<(usize, RequestOutcome)> = Vec::with_capacity(migs.len());
+    for s in dec {
+        let r = s.finish();
+        dec_outcomes.extend(r.outcomes);
+        per_replica.push(r.metrics);
+    }
+
+    let dec_by_id: std::collections::HashMap<usize, RequestOutcome> =
+        dec_outcomes.into_iter().collect();
+    let outcomes: Vec<RequestOutcome> = pre_outcomes
+        .iter()
+        .map(|&(id, p)| {
+            let out_len = out_len_of.get(&id).copied().unwrap_or(1);
+            let mut o = RequestOutcome {
+                arrival_s: p.arrival_s,
+                input_len: p.input_len,
+                output_len: out_len,
+                first_token_s: p.first_token_s,
+                finish_s: if out_len == 1 { p.finish_s } else { None },
+                rejected: p.rejected,
+            };
+            if let Some(d) = dec_by_id.get(&id) {
+                o.rejected = p.rejected || d.rejected;
+                o.finish_s = d.finish_s;
+            }
+            o
+        })
+        .collect();
+    (per_replica, outcomes)
+}
+
+fn legacy(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+) -> (Vec<ServingMetrics>, Vec<RequestOutcome>) {
+    match fleet.router {
+        RouterPolicy::PrefillDecode => legacy_disaggregated(stream, model, hw, cfg, fleet),
+        _ => legacy_homogeneous(stream, model, hw, cfg, fleet),
+    }
+}
+
+fn assert_bitwise_equal(
+    m: &sim::FleetMetrics,
+    per_replica: &[ServingMetrics],
+    outcomes: &[RequestOutcome],
+    ctx: &str,
+) {
+    assert_eq!(m.per_replica.len(), per_replica.len(), "{ctx}: replica count");
+    for (i, (a, b)) in m.per_replica.iter().zip(per_replica).enumerate() {
+        assert_eq!(
+            a.makespan_s.to_bits(),
+            b.makespan_s.to_bits(),
+            "{ctx}: replica {i} makespan"
+        );
+        assert_eq!(
+            a.energy_pj.to_bits(),
+            b.energy_pj.to_bits(),
+            "{ctx}: replica {i} energy"
+        );
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{ctx}: replica {i} busy");
+        assert_eq!(a.n_iterations, b.n_iterations, "{ctx}: replica {i} iterations");
+        assert_eq!(a.n_preemptions, b.n_preemptions, "{ctx}: replica {i} preemptions");
+        assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: replica {i} arrivals");
+    }
+    assert_eq!(m.outcomes.len(), outcomes.len(), "{ctx}: outcome count");
+    for (i, (a, b)) in m.outcomes.iter().zip(outcomes).enumerate() {
+        assert_eq!(
+            a.arrival_s.to_bits(),
+            b.arrival_s.to_bits(),
+            "{ctx}: outcome {i} arrival"
+        );
+        assert_eq!(a.input_len, b.input_len, "{ctx}: outcome {i} input");
+        assert_eq!(a.output_len, b.output_len, "{ctx}: outcome {i} output");
+        assert_eq!(
+            a.first_token_s.map(f64::to_bits),
+            b.first_token_s.map(f64::to_bits),
+            "{ctx}: outcome {i} first token"
+        );
+        assert_eq!(
+            a.finish_s.map(f64::to_bits),
+            b.finish_s.map(f64::to_bits),
+            "{ctx}: outcome {i} finish"
+        );
+        assert_eq!(a.rejected, b.rejected, "{ctx}: outcome {i} rejected");
+    }
+}
+
+fn shapes() -> Vec<FleetConfig> {
+    vec![
+        FleetConfig::homogeneous(2, RouterPolicy::RoundRobin),
+        FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue),
+        FleetConfig::disaggregated(1, 2, 1e-7),
+    ]
+}
+
+/// Each legacy `RouterPolicy` variant is bitwise-identical —
+/// `FleetMetrics` per-replica state and per-request timings — to its
+/// trait impl, over randomized fleet scenarios.
+#[test]
+fn router_trait_matches_legacy_routers_bitwise() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xF0E);
+    let shapes = shapes();
+    for trial in 0..9 {
+        let fleet = &shapes[trial % shapes.len()];
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let kv_tokens = *rng.choose(&[4096u64, 768, 200]);
+        let rate_scale = 0.4 + rng.gen_f64() * 2.0;
+        let n = 8 + rng.gen_index(8);
+        let seed = rng.next_u64();
+        let cfg = cfg_for(strategy, kv_tokens);
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let rate = rate_scale * fleet.total_replicas() as f64 * probe.capacity_rps();
+        let stream = RequestStream::poisson(&tiny_spec(), rate, n, seed);
+        let ctx = format!(
+            "{} {strategy:?} kv={kv_tokens} scale={rate_scale:.2} n={n} seed={seed}",
+            fleet.describe()
+        );
+        let m = sim::simulate_fleet(&stream, &model, &hw, &cfg, fleet);
+        let (per, outs) = legacy(&stream, &model, &hw, &cfg, fleet);
+        assert_bitwise_equal(&m, &per, &outs, &ctx);
+    }
+}
+
+/// Shedding disabled (infinite margin) and rebalancing disabled
+/// (infinite threshold) are today's admission, bit for bit — the
+/// "off" switches genuinely run the baseline path.
+#[test]
+fn disabled_frontend_features_are_todays_admission_bitwise() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 768);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    for fleet in shapes() {
+        let rate = 1.3 * fleet.total_replicas() as f64 * probe.capacity_rps();
+        let stream = RequestStream::poisson(&tiny_spec(), rate, 13, 77);
+        let (per, outs) = legacy(&stream, &model, &hw, &cfg, &fleet);
+        let hws = vec![hw.clone(); fleet.total_replicas()];
+        let fe = Frontend {
+            admission: AdmissionPolicy::SloShed {
+                probe,
+                margin: f64::INFINITY,
+            },
+            rebalance: Some(RebalanceSpec::new(f64::INFINITY, 1e-7)),
+        };
+        let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+        assert_eq!(m.n_shed, 0, "{}", fleet.describe());
+        assert_eq!(m.n_rebalanced, 0, "{}", fleet.describe());
+        assert_bitwise_equal(&m, &per, &outs, &fleet.describe());
+    }
+}
+
+/// An engineered busy-time imbalance (round-robin pins a long request
+/// plus a newcomer on replica 0 while replica 1 drains) makes the
+/// rebalancer migrate a mid-decode request over the KV handoff path;
+/// the run conserves, stitches origin timings, and stays
+/// deterministic.
+#[test]
+fn rebalancer_migrates_mid_decode_and_conserves() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut cfg = cfg_for(ServingStrategy::Orca, 4096);
+    cfg.max_batch = 4;
+    let spec = TraceSpec {
+        mean_in: 60.0,
+        mean_out: 40.0,
+        sigma_in: 0.1,
+        sigma_out: 0.1,
+        max_len: 4096,
+        shared_prefix_tokens: 0,
+    };
+    let probe = sim::probe(&model, &hw, &cfg, &spec);
+    let t2 = probe.t_prefill_s + 5.0 * probe.t_decode_iter_s;
+    let mk = |id: usize, arrival_s: f64, input_len: u64, output_len: u64| TimedRequest {
+        id,
+        arrival_s,
+        input_len,
+        output_len,
+    };
+    let stream = RequestStream {
+        name: "engineered-imbalance".into(),
+        requests: vec![mk(0, 0.0, 60, 40), mk(1, 1e-6, 20, 2), mk(2, t2, 20, 2)],
+        rate_rps: 1.0,
+        seed: 0,
+    };
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::RoundRobin);
+    let hws = vec![hw.clone(); 2];
+    let fe = Frontend {
+        admission: AdmissionPolicy::ArrivalReject,
+        rebalance: Some(RebalanceSpec::new(0.05, 1e-7)),
+    };
+    let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+    assert!(
+        m.n_rebalanced >= 1,
+        "engineered imbalance must trigger at least one migration"
+    );
+    assert_eq!(m.n_completed, 3);
+    assert_eq!(m.n_rejected, 0);
+    assert!(
+        m.kv_transfer_tokens > 0,
+        "rebalancing must account its KV handoff traffic"
+    );
+    // the migrated request's stitched outcome keeps origin timings
+    let o = m
+        .outcomes
+        .iter()
+        .find(|o| o.output_len == 40)
+        .expect("long request present");
+    assert_eq!(o.arrival_s, 0.0, "origin arrival must survive migration");
+    let (first, finish) = (o.first_token_s.unwrap(), o.finish_s.unwrap());
+    assert!(finish > first, "finish {finish} <= first token {first}");
+    // deterministic
+    let b = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+    assert_eq!(m.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert_eq!(m.n_rebalanced, b.n_rebalanced);
+    assert_eq!(m.kv_transfer_tokens, b.kv_transfer_tokens);
+}
+
+/// Rebalancing under randomized overload keeps fleet conservation and
+/// never loses a request, whatever it decides to migrate.
+#[test]
+fn rebalanced_fleets_conserve_over_randomized_runs() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xBA1);
+    for trial in 0..6 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let cfg = cfg_for(strategy, *rng.choose(&[4096u64, 512]));
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let n_rep = 2 + trial % 2;
+        let router = if trial % 2 == 0 {
+            RouterPolicy::RoundRobin
+        } else {
+            RouterPolicy::JoinShortestQueue
+        };
+        let fleet = FleetConfig::homogeneous(n_rep, router);
+        let rate = (0.5 + rng.gen_f64() * 2.0) * n_rep as f64 * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 10 + rng.gen_index(8), rng.next_u64());
+        let hws = vec![hw.clone(); n_rep];
+        let fe = Frontend {
+            admission: AdmissionPolicy::ArrivalReject,
+            rebalance: Some(RebalanceSpec::new(0.2, 1e-7)),
+        };
+        let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+        assert_eq!(
+            m.n_completed + m.n_rejected,
+            m.n_arrived,
+            "{} {strategy:?} rebalanced run lost a request",
+            fleet.describe()
+        );
+        assert!(!m.truncated, "{} {strategy:?}", fleet.describe());
+        assert_eq!(m.outcomes.len(), m.n_arrived);
+    }
+}
+
+/// SLO-aware shedding under overload: conservation holds, the shed
+/// rate is reported, and every shed request is also a rejection —
+/// the shed-rate-vs-baseline comparison the metrics promise.
+#[test]
+fn shedding_reports_rate_and_stays_within_rejections() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut cfg = cfg_for(ServingStrategy::ChunkedPrefill, 2048);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    cfg.slo = probe.slo(3.0, 4.0);
+    for fleet in shapes() {
+        let rate = 2.5 * fleet.total_replicas() as f64 * probe.capacity_rps();
+        let stream = RequestStream::poisson(&tiny_spec(), rate, 16, 5);
+        let hws = vec![hw.clone(); fleet.total_replicas()];
+        let base = sim::simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
+        let fe = Frontend::with_shedding(probe, 1.0);
+        let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "{}", fleet.describe());
+        assert!(m.n_shed <= m.n_rejected, "{}", fleet.describe());
+        assert_eq!(base.n_shed, 0, "baseline must not shed");
+        assert!(
+            (m.shed_rate - m.n_shed as f64 / m.n_arrived as f64).abs() < 1e-12,
+            "{}",
+            fleet.describe()
+        );
+    }
+}
