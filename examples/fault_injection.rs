@@ -1,0 +1,272 @@
+//! Fault injection and failure-aware serving: replica crashes,
+//! straggler windows and degraded links replayed against the fleet
+//! front end, with health-aware failover, capped-exponential retry
+//! and proactive pre-crash draining (the robustness counterpart of
+//! `frontend_control`).
+//!
+//! The default configuration replays GovReport-style traffic across a
+//! 4-replica fleet carved from a 512-TOPS budget, injects a seeded
+//! crash + straggler schedule, and walks the resilience ladder:
+//! failover off (JSQ keeps routing into the crashed replica's empty
+//! queue), failover, +retry, +drain, +one spare replica. It then
+//! checks:
+//!
+//! * the zero-fault anchor: with an empty schedule and retry disabled,
+//!   the fault layer is bit-identical to `simulate_fleet_frontend` —
+//!   the subsystem is free when unused;
+//! * every cell conserves requests (completed + rejected == arrived),
+//!   losses stay within rejections, and the schedule's crashes are
+//!   replayed exactly;
+//! * the study rerun is bit-identical for the fixed seeds;
+//! * `dse::search_resilience` sweeps spare x retry x drain and returns
+//!   a deterministic per-replica-goodput winner;
+//! * at the overload rate, failover+retry+drain beats the
+//!   failover-disabled baseline on SLO goodput AND loses strictly
+//!   fewer requests on the same seeded schedule (full run only — the
+//!   tiny CI smoke just proves the subsystem end-to-end).
+//!
+//! Run:   cargo run --release --example fault_injection
+//! CI:    cargo run --example fault_injection -- --tiny
+//!
+//! Output is deterministic for the fixed seeds baked in below.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::experiments as exp;
+use compass::sim::{self, Frontend, ResilienceSpec, RouterPolicy, SimConfig};
+use compass::workload::serving::ServingStrategy;
+use compass::workload::ModelSpec;
+
+const SEED: u64 = 29;
+
+struct Setup {
+    label: &'static str,
+    scene: exp::FleetScene,
+    model: ModelSpec,
+    hw: HwConfig,
+    cfg: SimConfig,
+}
+
+fn setup(tiny: bool) -> Setup {
+    if tiny {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.chunk_tokens = 32;
+        cfg.kv_budget_tokens = 2048;
+        cfg.ctx_bucket = 64;
+        cfg.eval_blocks = 1;
+        let mut scene = exp::FleetScene::new("sharegpt", 64.0, 2, 12);
+        scene.rates_rps = Vec::new(); // auto {0.8, 1.3} x capacity
+        Setup {
+            label: "tiny-faults",
+            scene,
+            model: ModelSpec::tiny(),
+            hw: HwConfig::homogeneous(
+                2,
+                2,
+                ChipletClass::S,
+                Dataflow::WeightStationary,
+                32.0,
+                16.0,
+            ),
+            cfg,
+        }
+    } else {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.ctx_bucket = 1024; // GovReport contexts are ~10k tokens
+        let scene = exp::FleetScene::new("govreport", 512.0, 4, 36);
+        Setup {
+            label: "govreport-512T-faults4",
+            model: scene.model(),
+            hw: exp::sim_default_hw(scene.tops_per_replica()),
+            scene,
+            cfg,
+        }
+    }
+}
+
+fn main() {
+    let tiny = std::env::args().skip(1).any(|a| a == "--tiny");
+    let s = setup(tiny);
+    let t0 = std::time::Instant::now();
+    let knobs = exp::FaultKnobs::default();
+
+    println!(
+        "fault_injection [{}] model={} | {} replicas of: {}",
+        s.label,
+        s.model.name,
+        s.scene.n_replicas,
+        s.hw.describe()
+    );
+
+    // --- zero-fault anchor: empty schedule == plain front end ---
+    {
+        let spec = s.scene.spec();
+        let probe = sim::probe(&s.model, &s.hw, &s.cfg, &spec);
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            1.2 * s.scene.n_replicas as f64 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let mut cfg = s.cfg;
+        cfg.slo = probe.slo(3.0, 4.0);
+        let fleet =
+            sim::FleetConfig::homogeneous(s.scene.n_replicas, RouterPolicy::JoinShortestQueue);
+        let hws = vec![s.hw.clone(); fleet.total_replicas()];
+        let plain = sim::simulate_fleet_frontend(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+        );
+        let faultless = sim::simulate_fleet_faults(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &ResilienceSpec::none(),
+        );
+        assert_eq!(
+            plain.makespan_s.to_bits(),
+            faultless.makespan_s.to_bits(),
+            "fault layer drifted from the plain front end with no faults"
+        );
+        assert_eq!(plain.energy_pj.to_bits(), faultless.energy_pj.to_bits());
+        assert_eq!(plain.ttft.p99.to_bits(), faultless.ttft.p99.to_bits());
+        assert_eq!(plain.n_completed, faultless.n_completed);
+        assert_eq!(faultless.faults.n_failed, 0);
+        assert_eq!(faultless.faults.availability.to_bits(), 1.0f64.to_bits());
+        println!("zero-fault anchor: fault layer is bit-identical when disabled: PASS");
+    }
+
+    // --- the resilience ladder ---
+    let rows = exp::fault_study_with_model(&s.scene, &s.model, &s.hw, &s.cfg, &knobs, SEED);
+    exp::fault_study_table(&s.scene, &rows).print();
+    for r in &rows {
+        let m = &r.metrics;
+        assert_eq!(
+            m.n_completed + m.n_rejected,
+            m.n_arrived,
+            "{} @ {} does not conserve requests",
+            r.key,
+            r.rate_rps
+        );
+        assert!(!m.truncated, "{} @ {} truncated", r.key, r.rate_rps);
+        assert!(
+            m.faults.n_lost <= m.n_rejected,
+            "{}: losses beyond rejections",
+            r.key
+        );
+        if r.key == "no-fault" {
+            assert_eq!(m.faults.n_failed, 0, "faults fired in the fault-free cell");
+        } else {
+            assert_eq!(
+                m.faults.n_crashes, knobs.n_crashes,
+                "{}: schedule not replayed exactly",
+                r.key
+            );
+        }
+    }
+    println!("\nconservation: every cell completes or rejects every arrival: PASS");
+
+    // --- determinism: study rerun is bit-identical ---
+    {
+        let a = exp::fault_study_with_model(&s.scene, &s.model, &s.hw, &s.cfg, &knobs, SEED);
+        let pick = |rows: &[exp::FaultStudyRow]| {
+            rows.iter()
+                .map(|r| {
+                    (
+                        r.metrics.makespan_s.to_bits(),
+                        r.metrics.faults.n_failed,
+                        r.metrics.faults.n_lost,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(pick(&rows), pick(&a), "fault study rerun differs");
+        println!("determinism: full study rerun is bit-identical: PASS");
+    }
+
+    // --- headline orderings at overload ---
+    print!("\n{}", exp::fault_study_headline(&rows));
+    let hi = rows
+        .iter()
+        .map(|r| r.rate_rps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at = |key: &str| {
+        rows.iter()
+            .find(|r| r.rate_rps == hi && r.key == key)
+            .map(|r| &r.metrics)
+            .expect("cell present")
+    };
+    let (blind, full) = (at("fault"), at("fault+failover+retry+drain"));
+    let resilient_ok = full.slo_goodput_tps > blind.slo_goodput_tps
+        && full.faults.n_lost < blind.faults.n_lost;
+    println!(
+        "failover+retry+drain > failover-off on goodput and losses at overload: {}",
+        if resilient_ok { "PASS" } else { "FAIL" }
+    );
+
+    // --- resilience provisioning search (spare x retry x drain) ---
+    {
+        let spec = s.scene.spec();
+        let probe = sim::probe(&s.model, &s.hw, &s.cfg, &spec);
+        let mut cfg = s.cfg;
+        cfg.slo = probe.slo(3.0, 4.0);
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            0.9 * s.scene.n_replicas as f64 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let schedule = sim::FaultSchedule::seeded(
+            s.scene.n_replicas,
+            stream.horizon_s(),
+            knobs.n_crashes,
+            knobs.n_stragglers,
+            knobs.fault_seed,
+        );
+        let space = compass::dse::ResilienceSpace::new(s.scene.n_replicas);
+        let (best, scored) = compass::dse::search_resilience(
+            &stream,
+            &s.model,
+            &s.hw,
+            &cfg,
+            &Frontend::baseline(),
+            &space,
+            &schedule,
+        );
+        let (best2, _) = compass::dse::search_resilience(
+            &stream,
+            &s.model,
+            &s.hw,
+            &cfg,
+            &Frontend::baseline(),
+            &space,
+            &schedule,
+        );
+        assert_eq!(best, best2, "resilience search not deterministic");
+        println!(
+            "\nresilience search over {} candidates under '{}': best = {}",
+            scored.len(),
+            schedule.describe(),
+            best.describe()
+        );
+    }
+
+    // the full GovReport run is the acceptance gate for the resilience
+    // ordering; the tiny smoke only proves the subsystem end-to-end
+    // (at toy scale a single crash can be invisible at the low rate)
+    if !tiny && !resilient_ok {
+        eprintln!(
+            "[fault_injection] FAIL: failover+retry+drain did not beat the \
+             failover-disabled baseline at overload"
+        );
+        std::process::exit(1);
+    }
+    eprintln!("[fault_injection] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

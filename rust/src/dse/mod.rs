@@ -13,8 +13,8 @@ use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
 use crate::sim::{
-    self, FleetConfig, FleetMetrics, Frontend, KvSpec, MappingPolicy, RequestStream,
-    RouterPolicy, ServingMetrics, SimConfig,
+    self, DrainSpec, FaultSchedule, FleetConfig, FleetMetrics, Frontend, KvSpec, MappingPolicy,
+    RequestStream, ResilienceSpec, RetryPolicy, RouterPolicy, ServingMetrics, SimConfig,
 };
 use crate::workload::serving::Scenario;
 use crate::workload::{build_workload, ModelSpec};
@@ -466,6 +466,121 @@ pub fn compass_dse_fleet(
     }
 }
 
+// ---------------------------------------------------------------------
+// Resilience co-search (redundancy headroom x retry x drain)
+// ---------------------------------------------------------------------
+
+/// Resilience design space under a fixed fault schedule: how much
+/// redundancy headroom (N+k replicas), which retry policy, and whether
+/// to proactively drain ahead of scheduled crashes. Every candidate is
+/// priced per replica, so spare capacity must buy enough goodput under
+/// faults to justify its cost.
+#[derive(Debug, Clone)]
+pub struct ResilienceSpace {
+    /// Fleet size the workload was provisioned for.
+    pub base_replicas: usize,
+    /// Spare-replica counts to consider (0 = no headroom).
+    pub extra_replicas: Vec<usize>,
+    /// Retry policies to consider.
+    pub retries: Vec<RetryPolicy>,
+    /// Whether to score the proactive pre-crash drain path.
+    pub drain_options: Vec<bool>,
+    /// Drain lead time ahead of each scheduled crash (s).
+    pub drain_lead_s: f64,
+    /// KV handoff cost per drained token (s/token).
+    pub drain_handoff_s_per_token: f64,
+}
+
+impl ResilienceSpace {
+    pub fn new(base_replicas: usize) -> Self {
+        ResilienceSpace {
+            base_replicas: base_replicas.max(1),
+            extra_replicas: vec![0, 1],
+            retries: vec![RetryPolicy::disabled(), RetryPolicy::capped(3, 0.25, 2.0)],
+            drain_options: vec![false, true],
+            drain_lead_s: 1.0,
+            drain_handoff_s_per_token: 1e-8,
+        }
+    }
+}
+
+/// One scored point of the resilience search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceCandidate {
+    pub extra_replicas: usize,
+    pub retry: RetryPolicy,
+    pub drain: bool,
+}
+
+impl ResilienceCandidate {
+    pub fn describe(&self) -> String {
+        format!(
+            "N+{} | {}{}",
+            self.extra_replicas,
+            self.retry.describe(),
+            if self.drain { " + drain" } else { "" }
+        )
+    }
+}
+
+/// Sweep redundancy headroom x retry policy x drain policy against one
+/// seeded fault schedule on identical per-replica hardware, scoring each
+/// candidate by cost-normalized SLO goodput under faults
+/// (`slo_goodput_tps / n_replicas`, so a spare replica must earn its
+/// keep). Returns the winner plus every candidate's metrics; ties keep
+/// the earliest (cheapest-listed) candidate. Deterministic: the same
+/// schedule gives the same sweep bit for bit.
+pub fn search_resilience(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    sim_cfg: &SimConfig,
+    fe: &Frontend,
+    space: &ResilienceSpace,
+    schedule: &FaultSchedule,
+) -> (ResilienceCandidate, Vec<(ResilienceCandidate, FleetMetrics)>) {
+    let mut rows: Vec<(ResilienceCandidate, FleetMetrics)> = Vec::new();
+    for &extra in &space.extra_replicas {
+        for &retry in &space.retries {
+            for &drain in &space.drain_options {
+                let cand = ResilienceCandidate {
+                    extra_replicas: extra,
+                    retry,
+                    drain,
+                };
+                let n = space.base_replicas + extra;
+                let fleet = FleetConfig::homogeneous(n, RouterPolicy::JoinShortestQueue);
+                let hws = vec![hw.clone(); n];
+                let res = ResilienceSpec {
+                    schedule: schedule.clone(),
+                    retry,
+                    drain: drain.then(|| {
+                        DrainSpec::new(
+                            space.drain_lead_s,
+                            space.drain_handoff_s_per_token,
+                            sim_cfg.max_batch,
+                        )
+                    }),
+                    failover: true,
+                };
+                let m =
+                    sim::simulate_fleet_faults(stream, model, &hws, sim_cfg, &fleet, fe, &res);
+                rows.push((cand, m));
+            }
+        }
+    }
+    let score = |c: &ResilienceCandidate, m: &FleetMetrics| {
+        m.slo_goodput_tps / (space.base_replicas + c.extra_replicas) as f64
+    };
+    let mut best = 0usize;
+    for i in 1..rows.len() {
+        if score(&rows[i].0, &rows[i].1) > score(&rows[best].0, &rows[best].1) {
+            best = i;
+        }
+    }
+    (rows[best].0, rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -555,6 +670,39 @@ mod tests {
         assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
         assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits());
         assert!(a.distinct_shapes > 0);
+    }
+
+    #[test]
+    fn search_resilience_sweeps_the_grid_and_is_deterministic() {
+        let (stream, model, cfg) = tiny_sim_setup();
+        let hw = crate::arch::HwConfig::homogeneous(
+            2,
+            2,
+            crate::arch::ChipletClass::S,
+            crate::arch::Dataflow::WeightStationary,
+            32.0,
+            16.0,
+        );
+        let space = ResilienceSpace::new(2);
+        let schedule = FaultSchedule::none().crash(0, 0.05, 0.2);
+        let fe = Frontend::baseline();
+        let (best, rows) =
+            search_resilience(&stream, &model, &hw, &cfg, &fe, &space, &schedule);
+        assert_eq!(
+            rows.len(),
+            space.extra_replicas.len() * space.retries.len() * space.drain_options.len()
+        );
+        for (c, m) in &rows {
+            assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "{}", c.describe());
+            assert_eq!(m.faults.n_crashes, 1, "{}", c.describe());
+        }
+        assert!(best.extra_replicas <= 1);
+        let (best2, rows2) =
+            search_resilience(&stream, &model, &hw, &cfg, &fe, &space, &schedule);
+        assert_eq!(best.describe(), best2.describe());
+        for (a, b) in rows.iter().zip(&rows2) {
+            assert_eq!(a.1.slo_goodput_tps.to_bits(), b.1.slo_goodput_tps.to_bits());
+        }
     }
 
     #[test]

@@ -1309,6 +1309,316 @@ pub fn frontend_study_headline(rows: &[FrontendStudyRow]) -> String {
 }
 
 // ---------------------------------------------------------------------
+// Fault injection & resilience study — crashes x failover x retry x
+// drain (EXPERIMENTS.md "Fault injection & resilience")
+// ---------------------------------------------------------------------
+
+/// One cell of the fault study.
+#[derive(Debug, Clone)]
+pub struct FaultStudyRow {
+    /// Stable cell key: `no-fault`, `fault`, `fault+failover`,
+    /// `fault+failover+retry`, `fault+failover+retry+drain`,
+    /// `fault+failover+retry+drain+spare`.
+    pub key: &'static str,
+    pub rate_rps: f64,
+    pub resilience_label: String,
+    pub n_replicas: usize,
+    pub metrics: sim::FleetMetrics,
+}
+
+/// Knobs of the fault study sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultKnobs {
+    /// Crashes per seeded schedule.
+    pub n_crashes: usize,
+    /// Straggler windows per seeded schedule.
+    pub n_stragglers: usize,
+    /// Seed of the fault schedule (separate from the stream seed: the
+    /// same faults strike every cell of a rate).
+    pub fault_seed: u64,
+    /// Total offers per request under the retry cells.
+    pub retry_attempts: usize,
+    /// Retry backoff base as a multiple of the probe's unloaded prefill
+    /// time (the cap is 10x the base).
+    pub retry_base_prefills: f64,
+    /// Drain lead ahead of each scheduled crash, as a fraction of the
+    /// stream horizon (scene-relative so tiny smokes still drain).
+    pub drain_lead_frac: f64,
+    /// KV handoff cost per drained token (s/token).
+    pub handoff_s_per_token: f64,
+}
+
+impl Default for FaultKnobs {
+    fn default() -> Self {
+        FaultKnobs {
+            n_crashes: 1,
+            n_stragglers: 1,
+            fault_seed: 17,
+            retry_attempts: 3,
+            retry_base_prefills: 4.0,
+            drain_lead_frac: 0.05,
+            handoff_s_per_token: 1e-8,
+        }
+    }
+}
+
+/// The study's cell ladder for one schedule: the fault-free reference,
+/// then the same faults with resilience knobs turned on one at a time —
+/// failover off (JSQ black-holes into the crashed replica's empty
+/// queue), health-aware failover, +retry, +proactive drain, +one spare
+/// replica. Every faulted cell replays the *same* schedule, so deltas
+/// are attributable to the posture, not to fault luck.
+fn fault_cells(
+    n: usize,
+    retry: sim::RetryPolicy,
+    drain: sim::DrainSpec,
+    schedule: &sim::FaultSchedule,
+) -> Vec<(&'static str, usize, sim::ResilienceSpec)> {
+    let s = schedule.clone();
+    vec![
+        ("no-fault", n, sim::ResilienceSpec::none()),
+        (
+            "fault",
+            n,
+            sim::ResilienceSpec::none()
+                .with_schedule(s.clone())
+                .with_failover(false),
+        ),
+        (
+            "fault+failover",
+            n,
+            sim::ResilienceSpec::none().with_schedule(s.clone()),
+        ),
+        (
+            "fault+failover+retry",
+            n,
+            sim::ResilienceSpec::none()
+                .with_schedule(s.clone())
+                .with_retry(retry),
+        ),
+        (
+            "fault+failover+retry+drain",
+            n,
+            sim::ResilienceSpec::none()
+                .with_schedule(s.clone())
+                .with_retry(retry)
+                .with_drain(drain),
+        ),
+        (
+            "fault+failover+retry+drain+spare",
+            n + 1,
+            sim::ResilienceSpec::none()
+                .with_schedule(s)
+                .with_retry(retry)
+                .with_drain(drain),
+        ),
+    ]
+}
+
+/// Run the fault cell ladder on one explicit stream and schedule:
+/// `n` base replicas of `hw` behind a baseline JSQ front end. `cfg`
+/// must already carry calibrated SLO targets.
+#[allow(clippy::too_many_arguments)]
+pub fn fault_study_stream(
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &sim::SimConfig,
+    n: usize,
+    retry: sim::RetryPolicy,
+    drain: sim::DrainSpec,
+    schedule: &sim::FaultSchedule,
+    stream: &sim::RequestStream,
+) -> Vec<FaultStudyRow> {
+    let mut rows = Vec::new();
+    for (key, n_cell, res) in fault_cells(n, retry, drain, schedule) {
+        let fleet = sim::FleetConfig::homogeneous(n_cell, sim::RouterPolicy::JoinShortestQueue);
+        let hws = vec![hw.clone(); n_cell];
+        let metrics = sim::simulate_fleet_faults(
+            stream,
+            model,
+            &hws,
+            cfg,
+            &fleet,
+            &sim::Frontend::baseline(),
+            &res,
+        );
+        rows.push(FaultStudyRow {
+            key,
+            rate_rps: stream.rate_rps,
+            resilience_label: res.describe(),
+            n_replicas: n_cell,
+            metrics,
+        });
+    }
+    rows
+}
+
+/// Sweep the fault cell ladder on one [`FleetScene`] with fixed
+/// per-replica hardware: per rate, one seeded schedule shared by every
+/// cell. SLO targets are probe-calibrated like the front-end study;
+/// rates default to {0.8, 1.3} x fleet capacity. Deterministic for
+/// fixed `(seed, knobs.fault_seed)`.
+pub fn fault_study(
+    scene: &FleetScene,
+    base: &sim::SimConfig,
+    knobs: &FaultKnobs,
+    seed: u64,
+) -> Vec<FaultStudyRow> {
+    fault_study_with_model(
+        scene,
+        &scene.model(),
+        &sim_default_hw(scene.tops_per_replica()),
+        base,
+        knobs,
+        seed,
+    )
+}
+
+/// [`fault_study`] with explicit model/hardware overrides (the CI tiny
+/// smoke swaps in `ModelSpec::tiny`; protocol shared with the full run).
+pub fn fault_study_with_model(
+    scene: &FleetScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    knobs: &FaultKnobs,
+    seed: u64,
+) -> Vec<FaultStudyRow> {
+    let spec = scene.spec();
+    let probe = sim::probe(model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let mu = scene.n_replicas.max(2) as f64 * probe.capacity_rps();
+        vec![0.8 * mu, 1.3 * mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let backoff = knobs.retry_base_prefills * probe.t_prefill_s;
+    let retry = sim::RetryPolicy::capped(knobs.retry_attempts.max(1), backoff, 10.0 * backoff);
+    let n = scene.n_replicas.max(2);
+    let mut rows = Vec::new();
+    for &rate in &rates {
+        let stream = sim::RequestStream::poisson(&spec, rate, scene.n_requests, seed);
+        let schedule = sim::FaultSchedule::seeded(
+            n,
+            stream.horizon_s(),
+            knobs.n_crashes,
+            knobs.n_stragglers,
+            knobs.fault_seed,
+        );
+        let drain = sim::DrainSpec::new(
+            knobs.drain_lead_frac.max(0.0) * stream.horizon_s(),
+            knobs.handoff_s_per_token,
+            cfg.max_batch,
+        );
+        rows.extend(fault_study_stream(
+            model, hw, &cfg, n, retry, drain, &schedule, &stream,
+        ));
+    }
+    rows
+}
+
+/// Format the fault sweep as the study table.
+pub fn fault_study_table(scene: &FleetScene, rows: &[FaultStudyRow]) -> Table {
+    let title = format!(
+        "Fault injection & resilience [{}] - crashes x failover x retry x drain \
+         ({} TOPS total)",
+        scene.label(),
+        scene.total_tops as u64,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "Rate (r/s)",
+            "Cell",
+            "Reps",
+            "Goodput (tok/s)",
+            "TTFT p99 (s)",
+            "SLO %",
+            "Avail %",
+            "Failed",
+            "Retried",
+            "Lost",
+            "Drained",
+            "Rej",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            format!("{:.3}", r.rate_rps),
+            r.key.to_string(),
+            r.n_replicas.to_string(),
+            format!("{:.1}", m.slo_goodput_tps),
+            format!("{:.4}", m.ttft.p99),
+            format!("{:.1}", 100.0 * m.slo_attainment),
+            format!("{:.2}", 100.0 * m.faults.availability),
+            m.faults.n_failed.to_string(),
+            m.faults.n_retried.to_string(),
+            m.faults.n_lost.to_string(),
+            m.faults.n_drained.to_string(),
+            m.n_rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Headline at the highest swept rate: graceful degradation
+/// (failover+retry+drain vs failover-disabled on the same schedule),
+/// the cost of the faults vs the fault-free reference, and what one
+/// spare replica buys back.
+pub fn fault_study_headline(rows: &[FaultStudyRow]) -> String {
+    let hi = rows
+        .iter()
+        .map(|r| r.rate_rps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at = |key: &str| {
+        rows.iter()
+            .find(|r| r.rate_rps == hi && r.key == key)
+            .map(|r| &r.metrics)
+    };
+    let mut s = format!("fault headline @ {hi:.3} req/s:\n");
+    if let (Some(none), Some(blind)) = (at("no-fault"), at("fault")) {
+        s.push_str(&format!(
+            "  faults cost {:.1} -> {:.1} tok/s goodput with failover off \
+             ({} lost, availability {:.1}%)\n",
+            none.slo_goodput_tps,
+            blind.slo_goodput_tps,
+            blind.faults.n_lost,
+            100.0 * blind.faults.availability,
+        ));
+    }
+    if let (Some(blind), Some(full)) = (at("fault"), at("fault+failover+retry+drain")) {
+        s.push_str(&format!(
+            "  failover+retry+drain: goodput {:.1} vs {:.1} tok/s ({:+.1}%), \
+             lost {} vs {}, {} drained\n",
+            full.slo_goodput_tps,
+            blind.slo_goodput_tps,
+            100.0 * (full.slo_goodput_tps - blind.slo_goodput_tps)
+                / blind.slo_goodput_tps.max(1e-9),
+            full.faults.n_lost,
+            blind.faults.n_lost,
+            full.faults.n_drained,
+        ));
+    }
+    if let (Some(full), Some(spare)) = (
+        at("fault+failover+retry+drain"),
+        at("fault+failover+retry+drain+spare"),
+    ) {
+        s.push_str(&format!(
+            "  one spare replica: goodput {:.1} -> {:.1} tok/s, \
+             SLO {:.1}% -> {:.1}%\n",
+            full.slo_goodput_tps,
+            spare.slo_goodput_tps,
+            100.0 * full.slo_attainment,
+            100.0 * spare.slo_attainment,
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
 // Fig. 11 — ablations
 // ---------------------------------------------------------------------
 
@@ -1532,6 +1842,63 @@ mod tests {
         let headline = frontend_study_headline(&rows);
         assert!(headline.contains("slo-shed"), "{headline}");
         assert!(headline.contains("hetero-disagg"), "{headline}");
+    }
+
+    #[test]
+    fn fault_study_covers_cell_rate_grid_and_conserves_requests() {
+        let mut scene = FleetScene::new("sharegpt", 64.0, 2, 8);
+        scene.rates_rps = vec![4.0, 20.0];
+        let hw = sim_default_hw(scene.tops_per_replica());
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let knobs = FaultKnobs::default();
+        let rows = fault_study_with_model(&scene, &ModelSpec::gpt3_7b(), &hw, &cfg, &knobs, 3);
+        assert_eq!(rows.len(), 2 * 6, "2 rates x 6 cells");
+        for r in &rows {
+            // conservation holds even with crashes, retries and losses
+            assert_eq!(
+                r.metrics.n_completed + r.metrics.n_rejected,
+                r.metrics.n_arrived,
+                "{}@{}",
+                r.key,
+                r.rate_rps
+            );
+            assert!(!r.metrics.truncated, "{}@{}", r.key, r.rate_rps);
+        }
+        // the fault-free reference never loses a request
+        for r in rows.iter().filter(|r| r.key == "no-fault") {
+            assert_eq!(r.metrics.faults.n_lost, 0);
+            assert_eq!(r.metrics.faults.n_failed, 0);
+            assert_eq!(r.metrics.faults.availability.to_bits(), 1.0f64.to_bits());
+        }
+        // every faulted cell replays the scheduled crash count
+        for r in rows.iter().filter(|r| r.key != "no-fault") {
+            assert_eq!(r.metrics.faults.n_crashes, knobs.n_crashes);
+            assert!(r.metrics.faults.availability < 1.0);
+            assert!(r.metrics.faults.downtime_s > 0.0);
+        }
+        // the spare cell really adds a replica
+        for r in rows.iter().filter(|r| r.key.contains("spare")) {
+            assert_eq!(r.n_replicas, scene.n_replicas + 1);
+        }
+        // determinism: a rerun is bit-identical
+        let again = fault_study_with_model(&scene, &ModelSpec::gpt3_7b(), &hw, &cfg, &knobs, 3);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(
+                a.metrics.slo_goodput_tps.to_bits(),
+                b.metrics.slo_goodput_tps.to_bits(),
+                "{}@{}",
+                a.key,
+                a.rate_rps
+            );
+        }
+        let t = fault_study_table(&scene, &rows);
+        assert_eq!(t.rows.len(), rows.len());
+        let headline = fault_study_headline(&rows);
+        assert!(headline.contains("failover+retry+drain"), "{headline}");
+        assert!(headline.contains("spare"), "{headline}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! repro fleet-study [--replicas N] ...          # multi-replica fleet sweep
 //! repro kv-study  [--block-tokens N] [--prefix N] # KV paging/quantization
 //! repro frontend-study [--shed-margin M] ...    # front-end control plane
+//! repro fault-study [--crashes N] ...           # fault injection & resilience
 //! repro ablation                                # Fig 11   ablations
 //! repro all                                     # everything above
 //! ```
@@ -38,6 +39,7 @@ commands:
   fleet-study     fleet serving: rate x router policy x fleet shape
   kv-study        KV cache: paged-vs-token x dtype x sharing sweep
   frontend-study  front end: SLO shedding x rebalancing x hetero sizing
+  fault-study     fault injection: crashes x failover x retry x drain
   ablation        Fig 11    GA->random, BO->random, SCAR mapping
   all             everything above
 
@@ -74,6 +76,13 @@ flags:
   --trace-file P      frontend-study: replay a timestamped CSV trace
                       (arrival_s,prompt_len,gen_len per line) at its
                       native rate instead of the synthetic rate sweep
+  --crashes N         fault-study crashes per schedule (default 1)
+  --stragglers N      fault-study straggler windows per schedule
+                      (default 1)
+  --fault-seed S      fault-study schedule seed, separate from --seed so
+                      the same faults strike every cell (default 17)
+  --retry-attempts N  fault-study total offers per request in the retry
+                      cells (default 3)
 ";
 
 struct Args {
@@ -99,6 +108,10 @@ struct Args {
     rebalance_threshold: f64,
     prefill_share: f64,
     trace_file: Option<String>,
+    crashes: usize,
+    stragglers: usize,
+    fault_seed: u64,
+    retry_attempts: usize,
 }
 
 fn parse_args() -> Args {
@@ -125,6 +138,10 @@ fn parse_args() -> Args {
         rebalance_threshold: 0.5,
         prefill_share: 0.15,
         trace_file: None,
+        crashes: 1,
+        stragglers: 1,
+        fault_seed: 17,
+        retry_attempts: 3,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -161,6 +178,10 @@ fn parse_args() -> Args {
             "--rebalance-threshold" => args.rebalance_threshold = next_val(&mut it, a),
             "--prefill-share" => args.prefill_share = next_val(&mut it, a),
             "--trace-file" => args.trace_file = Some(next_str(&mut it, a)),
+            "--crashes" => args.crashes = next_val(&mut it, a),
+            "--stragglers" => args.stragglers = next_val(&mut it, a),
+            "--fault-seed" => args.fault_seed = next_val(&mut it, a),
+            "--retry-attempts" => args.retry_attempts = next_val(&mut it, a),
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -326,6 +347,45 @@ fn run_frontend_study(args: &Args) {
     println!("\n{}", exp::frontend_study_headline(&rows));
 }
 
+fn run_fault_study(args: &Args) {
+    let replicas = args.replicas.max(2);
+    if replicas != args.replicas {
+        eprintln!("[compass] fault-study needs >= 2 replicas; using {replicas}");
+    }
+    let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
+    scene.rates_rps = args.rates.clone();
+    let hw = exp::sim_default_hw(scene.tops_per_replica());
+    let cfg = compass::sim::SimConfig::new(
+        compass::workload::serving::ServingStrategy::ChunkedPrefill,
+    );
+    let knobs = exp::FaultKnobs {
+        n_crashes: args.crashes,
+        n_stragglers: args.stragglers,
+        fault_seed: args.fault_seed,
+        retry_attempts: args.retry_attempts,
+        handoff_s_per_token: args.handoff,
+        ..exp::FaultKnobs::default()
+    };
+    println!(
+        "fault-study [{}]: {} replicas, per-replica hw: {} | {} crash + {} straggler \
+         (fault seed {}) | retry x{}",
+        scene.label(),
+        scene.n_replicas,
+        hw.describe(),
+        knobs.n_crashes,
+        knobs.n_stragglers,
+        knobs.fault_seed,
+        knobs.retry_attempts.saturating_sub(1),
+    );
+    let rows = exp::fault_study(&scene, &cfg, &knobs, args.seed);
+    save(
+        &exp::fault_study_table(&scene, &rows),
+        &args.out_dir,
+        "fault_study",
+    );
+    println!("\n{}", exp::fault_study_headline(&rows));
+}
+
 fn run_kv_study(args: &Args) {
     let mut scene = exp::SimScene::new(&args.trace, args.tops, args.requests);
     scene.rates_rps = args.rates.clone();
@@ -462,6 +522,9 @@ fn main() {
         "frontend-study" => {
             run_frontend_study(&args);
         }
+        "fault-study" => {
+            run_fault_study(&args);
+        }
         "ablation" => {
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
@@ -496,6 +559,7 @@ fn main() {
             run_fleet_study(&args);
             run_kv_study(&args);
             run_frontend_study(&args);
+            run_fault_study(&args);
             save(&exp::fig11_ablation(&cfg, rt_ref, args.seed), &args.out_dir, "fig11");
         }
         other => {

@@ -1,0 +1,458 @@
+//! Deterministic fault injection for the fleet simulator: seeded,
+//! reproducible schedules of replica crashes, transient stragglers and
+//! interconnect degradation, plus the front-end resilience knobs
+//! (failover, capped-exponential retry, proactive drain) that decide
+//! how the fleet degrades when they fire.
+//!
+//! Semantics (all pure `f64`/integer arithmetic on a fixed event
+//! order, so a fixed schedule gives bit-identical metrics per run):
+//!
+//! * **Crash** — at `t_s` the replica's queued and running requests
+//!   all fail, its `KvCache` is wiped wholesale (shared prefix
+//!   included), and the replica is down for `recovery_s` seconds. A
+//!   recovered replica rejoins cold: its first admissions re-lease KV
+//!   and re-materialize the shared prefix, which *is* the warm-up
+//!   cost. Failed requests are re-offered by the front end under the
+//!   [`RetryPolicy`] (or counted permanently lost).
+//! * **Straggler** — during `[t_s, t_s + duration_s)` every iteration
+//!   *starting* on the replica has its costed latency multiplied by
+//!   `slowdown` (>= 1). The multiplier is applied to the iteration
+//!   latency after costing, not inside the shared `BatchCoster` memo:
+//!   the memo is composition-keyed and shared across replicas, so
+//!   scaling inside it would leak one replica's thermal throttle into
+//!   its healthy peers. Energy is unchanged (a throttled clock does
+//!   the same work, slower).
+//! * **LinkDegrade** — during the window every KV handoff (front-end
+//!   rebalancing and proactive drains) pays `factor` (>= 1) times the
+//!   configured `handoff_s_per_token`. The link is fleet-wide.
+//!
+//! The whole layer is bitwise-free when disabled: an empty schedule
+//! with retries off reproduces `simulate_fleet_frontend` bit for bit
+//! (anchored in `rust/tests/fault_properties.rs`).
+
+use crate::util::Rng;
+
+/// What goes wrong.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies at `t_s`, losing queue, running set and KV
+    /// cache; it accepts work again `recovery_s` seconds later.
+    Crash { recovery_s: f64 },
+    /// Iterations starting in `[t_s, t_s + duration_s)` run `slowdown`
+    /// times slower (thermal throttling, noisy neighbors).
+    Straggler { duration_s: f64, slowdown: f64 },
+    /// KV handoffs during the window cost `factor` times the normal
+    /// per-token link delay (fleet-wide; the `replica` field is
+    /// ignored).
+    LinkDegrade { duration_s: f64, factor: f64 },
+}
+
+/// One scheduled fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Target replica index (ignored for `LinkDegrade`).
+    pub replica: usize,
+    /// Injection time (s).
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A reproducible fault schedule: an explicit list of [`FaultSpec`]s,
+/// hand-built through the builder methods or generated from a seed.
+/// The driver sorts events by `(t_s, insertion order)`, so the same
+/// schedule value always replays identically.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultSchedule {
+    /// No faults: the fault layer is bitwise-free with this schedule
+    /// (and retries disabled).
+    pub fn none() -> Self {
+        FaultSchedule { faults: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Add a crash of `replica` at `t_s`, recovering `recovery_s`
+    /// seconds later.
+    pub fn crash(mut self, replica: usize, t_s: f64, recovery_s: f64) -> Self {
+        self.faults.push(FaultSpec {
+            replica,
+            t_s: t_s.max(0.0),
+            kind: FaultKind::Crash {
+                recovery_s: recovery_s.max(0.0),
+            },
+        });
+        self
+    }
+
+    /// Add a straggler window on `replica`: iterations starting in
+    /// `[t_s, t_s + duration_s)` run `slowdown` (clamped >= 1) times
+    /// slower.
+    pub fn straggler(mut self, replica: usize, t_s: f64, duration_s: f64, slowdown: f64) -> Self {
+        self.faults.push(FaultSpec {
+            replica,
+            t_s: t_s.max(0.0),
+            kind: FaultKind::Straggler {
+                duration_s: duration_s.max(0.0),
+                slowdown: slowdown.max(1.0),
+            },
+        });
+        self
+    }
+
+    /// Add a fleet-wide link-degradation window: KV handoffs in
+    /// `[t_s, t_s + duration_s)` cost `factor` (clamped >= 1) times
+    /// the configured per-token delay.
+    pub fn link_degrade(mut self, t_s: f64, duration_s: f64, factor: f64) -> Self {
+        self.faults.push(FaultSpec {
+            replica: 0,
+            t_s: t_s.max(0.0),
+            kind: FaultKind::LinkDegrade {
+                duration_s: duration_s.max(0.0),
+                factor: factor.max(1.0),
+            },
+        });
+        self
+    }
+
+    /// Seeded generator: `n_crashes` crashes (uniform in 20-70% of the
+    /// horizon, recovering after 10-30% of it) and `n_stragglers`
+    /// 2-4x slowdown windows (10-30% of the horizon long), targets
+    /// drawn uniformly over `n_replicas`. Deterministic per seed — the
+    /// reproducibility contract of every fault study.
+    pub fn seeded(
+        n_replicas: usize,
+        horizon_s: f64,
+        n_crashes: usize,
+        n_stragglers: usize,
+        seed: u64,
+    ) -> Self {
+        let n = n_replicas.max(1);
+        let h = horizon_s.max(1e-9);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6661_756c_7473); // "faults"
+        let mut s = FaultSchedule::none();
+        for _ in 0..n_crashes {
+            let rep = rng.gen_index(n);
+            let t = (0.2 + 0.5 * rng.gen_f64()) * h;
+            let rec = (0.1 + 0.2 * rng.gen_f64()) * h;
+            s = s.crash(rep, t, rec);
+        }
+        for _ in 0..n_stragglers {
+            let rep = rng.gen_index(n);
+            let t = (0.1 + 0.6 * rng.gen_f64()) * h;
+            let dur = (0.1 + 0.2 * rng.gen_f64()) * h;
+            let slow = 2.0 + 2.0 * rng.gen_f64();
+            s = s.straggler(rep, t, dur, slow);
+        }
+        s
+    }
+
+    pub fn describe(&self) -> String {
+        if self.is_empty() {
+            return "no faults".into();
+        }
+        let mut crashes = 0usize;
+        let mut stragglers = 0usize;
+        let mut links = 0usize;
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::Crash { .. } => crashes += 1,
+                FaultKind::Straggler { .. } => stragglers += 1,
+                FaultKind::LinkDegrade { .. } => links += 1,
+            }
+        }
+        format!("{crashes} crash + {stragglers} straggler + {links} link")
+    }
+}
+
+/// Capped exponential backoff for failed/shed requests: attempt `k`'s
+/// re-offer waits `base * mult^(k-1)` seconds, capped. A request gets
+/// `max_attempts` offers in total (the original included); when they
+/// are exhausted it is permanently lost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total offers per request, the first included. `<= 1` disables
+    /// retry: every failure is immediately lost (or finally shed).
+    pub max_attempts: usize,
+    /// Delay before the first retry (s).
+    pub backoff_base_s: f64,
+    /// Multiplier per further retry (clamped >= 1).
+    pub backoff_mult: f64,
+    /// Upper bound on any single backoff delay (s).
+    pub backoff_cap_s: f64,
+}
+
+impl RetryPolicy {
+    /// No retries: failures are immediately lost. With this (and an
+    /// empty schedule) the fault layer is bitwise-free.
+    pub fn disabled() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff_base_s: 0.0,
+            backoff_mult: 2.0,
+            backoff_cap_s: 0.0,
+        }
+    }
+
+    /// Capped exponential backoff, doubling per attempt.
+    pub fn capped(max_attempts: usize, backoff_base_s: f64, backoff_cap_s: f64) -> Self {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            backoff_base_s: backoff_base_s.max(0.0),
+            backoff_mult: 2.0,
+            backoff_cap_s: backoff_cap_s.max(0.0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 1
+    }
+
+    /// Backoff before retry number `retry_no` (1-based: the delay
+    /// between the first failure and the second offer is
+    /// `delay_s(1) = base`). Computed by repeated multiplication, not
+    /// `powf`, so the schedule is exactly reproducible.
+    pub fn delay_s(&self, retry_no: usize) -> f64 {
+        let base = self.backoff_base_s.max(0.0);
+        let cap = self.backoff_cap_s.max(base);
+        let mut d = base;
+        for _ in 1..retry_no.max(1) {
+            d = (d * self.backoff_mult.max(1.0)).min(cap);
+        }
+        d.min(cap)
+    }
+
+    pub fn describe(&self) -> String {
+        if self.enabled() {
+            format!(
+                "retry x{} ({:.3}s base, {:.3}s cap)",
+                self.max_attempts - 1,
+                self.backoff_base_s,
+                self.backoff_cap_s
+            )
+        } else {
+            "no retry".into()
+        }
+    }
+}
+
+/// Proactive evacuation ahead of a *scheduled* crash (planned
+/// maintenance, predicted failure): `lead_s` before each crash the
+/// front end migrates up to `max_requests` mid-decode requests off the
+/// doomed replica over the drain link, reusing the rebalancer's
+/// block-rounded KV handoff. Requests still prefilling (or queued)
+/// cannot be drained — they die with the replica and take the retry
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DrainSpec {
+    /// How long before the scheduled crash the drain starts (s).
+    pub lead_s: f64,
+    /// Drain-link KV handoff cost per block-rounded token (s/token),
+    /// scaled by any active `LinkDegrade` window.
+    pub handoff_s_per_token: f64,
+    /// At most this many requests evacuated per drain event.
+    pub max_requests: usize,
+}
+
+impl DrainSpec {
+    pub fn new(lead_s: f64, handoff_s_per_token: f64, max_requests: usize) -> Self {
+        DrainSpec {
+            lead_s: lead_s.max(0.0),
+            handoff_s_per_token: handoff_s_per_token.max(0.0),
+            max_requests: max_requests.max(1),
+        }
+    }
+}
+
+/// The front end's whole failure posture: what goes wrong
+/// ([`FaultSchedule`]) and the three degradation knobs — health-aware
+/// failover routing, retry/backoff, proactive drain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceSpec {
+    pub schedule: FaultSchedule,
+    pub retry: RetryPolicy,
+    /// Proactive pre-crash evacuation; `None` = reactive only.
+    pub drain: Option<DrainSpec>,
+    /// Health-aware routing: routers only see up replicas, and no
+    /// request is ever offered to a down one. With failover *off* the
+    /// router stays blind — a request routed onto a down replica fails
+    /// on the spot (and JSQ happily black-holes traffic into a crashed
+    /// replica's empty queue, which is exactly the pathology failover
+    /// exists to prevent).
+    pub failover: bool,
+}
+
+impl ResilienceSpec {
+    /// Faults, failover and retries all off — the bitwise-free anchor.
+    pub fn none() -> Self {
+        ResilienceSpec {
+            schedule: FaultSchedule::none(),
+            retry: RetryPolicy::disabled(),
+            drain: None,
+            failover: true,
+        }
+    }
+
+    pub fn with_schedule(mut self, schedule: FaultSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    pub fn with_drain(mut self, drain: DrainSpec) -> Self {
+        self.drain = Some(drain);
+        self
+    }
+
+    pub fn with_failover(mut self, failover: bool) -> Self {
+        self.failover = failover;
+        self
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} | failover {} | {}{}",
+            self.schedule.describe(),
+            if self.failover { "on" } else { "off" },
+            self.retry.describe(),
+            if self.drain.is_some() { " + drain" } else { "" }
+        )
+    }
+}
+
+/// Degraded-mode truth surfaced in `FleetMetrics`: how many requests
+/// the faults touched and what the fleet's availability was.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultStats {
+    /// Scheduled fault events (all kinds).
+    pub n_faults: usize,
+    /// Crash events among them.
+    pub n_crashes: usize,
+    /// Request-failure events: in-flight work killed by a crash,
+    /// in-flight handoffs to a crashed replica, offers with no healthy
+    /// replica, offers routed onto a down replica with failover off.
+    /// One request can fail several times (each retry may fail again).
+    pub n_failed: usize,
+    /// Re-offers scheduled by the retry policy (failures and sheds).
+    pub n_retried: usize,
+    /// Requests permanently lost: failed with the retry budget
+    /// exhausted (a subset of `n_rejected`, like sheds).
+    pub n_lost: usize,
+    /// Mid-decode requests proactively evacuated ahead of crashes.
+    pub n_drained: usize,
+    /// Summed per-crash downtime, clamped to the makespan (s).
+    pub downtime_s: f64,
+    /// Mean effective recovery time per crash (s).
+    pub mean_recovery_s: f64,
+    /// `1 - downtime / (n_replicas * makespan)`: the fraction of
+    /// replica-seconds the fleet was serving. 1.0 with no faults.
+    pub availability: f64,
+}
+
+impl Default for FaultStats {
+    fn default() -> Self {
+        FaultStats {
+            n_faults: 0,
+            n_crashes: 0,
+            n_failed: 0,
+            n_retried: 0,
+            n_lost: 0,
+            n_drained: 0,
+            downtime_s: 0.0,
+            mean_recovery_s: 0.0,
+            availability: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let r = RetryPolicy::capped(5, 0.1, 0.5);
+        assert!(r.enabled());
+        assert!((r.delay_s(1) - 0.1).abs() < 1e-12);
+        assert!((r.delay_s(2) - 0.2).abs() < 1e-12);
+        assert!((r.delay_s(3) - 0.4).abs() < 1e-12);
+        assert!((r.delay_s(4) - 0.5).abs() < 1e-12, "cap must bind");
+        assert!((r.delay_s(40) - 0.5).abs() < 1e-12);
+        assert!(!RetryPolicy::disabled().enabled());
+        assert_eq!(RetryPolicy::disabled().delay_s(1), 0.0);
+    }
+
+    #[test]
+    fn seeded_schedules_are_deterministic_and_bounded() {
+        let a = FaultSchedule::seeded(4, 100.0, 2, 3, 7);
+        let b = FaultSchedule::seeded(4, 100.0, 2, 3, 7);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = FaultSchedule::seeded(4, 100.0, 2, 3, 8);
+        assert_ne!(a, c, "different seeds must differ");
+        assert_eq!(a.faults.len(), 5);
+        for f in &a.faults {
+            assert!(f.replica < 4);
+            assert!(f.t_s >= 0.0 && f.t_s <= 100.0);
+            match f.kind {
+                FaultKind::Crash { recovery_s } => {
+                    assert!(recovery_s >= 10.0 - 1e-9 && recovery_s <= 30.0 + 1e-9)
+                }
+                FaultKind::Straggler { duration_s, slowdown } => {
+                    assert!(duration_s > 0.0);
+                    assert!((2.0..=4.0).contains(&slowdown));
+                }
+                FaultKind::LinkDegrade { .. } => panic!("generator emits no link faults"),
+            }
+        }
+        assert!(a.describe().contains("2 crash"));
+        assert!(FaultSchedule::none().is_empty());
+    }
+
+    #[test]
+    fn builders_clamp_pathological_knobs() {
+        let s = FaultSchedule::none()
+            .crash(0, -5.0, -1.0)
+            .straggler(1, 2.0, 3.0, 0.25)
+            .link_degrade(4.0, 1.0, 0.1);
+        assert_eq!(s.faults[0].t_s, 0.0);
+        assert_eq!(s.faults[0].kind, FaultKind::Crash { recovery_s: 0.0 });
+        assert_eq!(
+            s.faults[1].kind,
+            FaultKind::Straggler { duration_s: 3.0, slowdown: 1.0 }
+        );
+        assert_eq!(
+            s.faults[2].kind,
+            FaultKind::LinkDegrade { duration_s: 1.0, factor: 1.0 }
+        );
+        let d = DrainSpec::new(-1.0, -2.0, 0);
+        assert_eq!((d.lead_s, d.handoff_s_per_token, d.max_requests), (0.0, 0.0, 1));
+    }
+
+    #[test]
+    fn resilience_spec_describes_its_posture() {
+        let none = ResilienceSpec::none();
+        assert!(none.schedule.is_empty());
+        assert!(!none.retry.enabled());
+        assert!(none.failover);
+        let full = ResilienceSpec::none()
+            .with_schedule(FaultSchedule::none().crash(0, 1.0, 2.0))
+            .with_retry(RetryPolicy::capped(3, 0.05, 0.4))
+            .with_drain(DrainSpec::new(0.5, 1e-7, 8));
+        let d = full.describe();
+        assert!(d.contains("1 crash"), "{d}");
+        assert!(d.contains("retry x2"), "{d}");
+        assert!(d.contains("drain"), "{d}");
+        let stats = FaultStats::default();
+        assert_eq!(stats.availability, 1.0);
+        assert_eq!(stats.n_lost, 0);
+    }
+}

@@ -32,6 +32,7 @@
 use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
+use super::faults::FaultStats;
 use super::frontend::{simulate_fleet_frontend, Frontend};
 use super::metrics::{outcome_stats, LatencyStats, RequestOutcome, ServingMetrics};
 use super::stream::RequestStream;
@@ -210,6 +211,10 @@ pub struct FleetMetrics {
     /// Mid-decode migrations performed by the front-end rebalancer
     /// (0 with rebalancing off).
     pub n_rebalanced: usize,
+    /// Fault-injection truth (availability, failed/retried/lost counts,
+    /// recovery times). The all-default value — availability 1, zero
+    /// counts — outside `simulate_fleet_faults`.
+    pub faults: FaultStats,
     pub truncated: bool,
     /// Stitched per-request outcomes at fleet level (arrival / first
     /// token / finish across replica boundaries) — the router-trait
@@ -274,6 +279,7 @@ pub(crate) fn aggregate(
     cfg: &SimConfig,
     n_shed: usize,
     n_rebalanced: usize,
+    faults: FaultStats,
 ) -> FleetMetrics {
     let s = outcome_stats(&outcomes, &cfg.slo);
     let makespan_s = per_replica.iter().map(|m| m.makespan_s).fold(0.0, f64::max);
@@ -339,6 +345,7 @@ pub(crate) fn aggregate(
             n_shed as f64 / outcomes.len() as f64
         },
         n_rebalanced,
+        faults,
         truncated,
         per_replica,
         outcomes,

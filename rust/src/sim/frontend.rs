@@ -40,6 +40,7 @@ use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
 use super::coster::BatchCoster;
+use super::faults::{DrainSpec, FaultKind, FaultStats, ResilienceSpec, RetryPolicy};
 use super::fleet::{aggregate, FleetConfig, FleetMetrics, RouterPolicy};
 use super::kv::KvCache;
 use super::metrics::RequestOutcome;
@@ -69,6 +70,10 @@ pub struct ReplicaObs {
     pub n_prefilling: usize,
     /// Admitted requests in their decode phase.
     pub n_decoding: usize,
+    /// Health flag maintained by the fault driver: `true` while the
+    /// replica is crashed and has not yet recovered. Always `false`
+    /// outside fault injection, so existing routers are unaffected.
+    pub down: bool,
 }
 
 /// Snapshot one replica for a front-end decision (the queue/running
@@ -84,6 +89,7 @@ pub fn observe(s: &Scheduler) -> ReplicaObs {
         kv_free_tokens: s.kv_free_tokens(),
         n_prefilling: c.n_prefilling,
         n_decoding: c.n_decoding,
+        down: false,
     }
 }
 
@@ -331,6 +337,10 @@ struct Pool<'a> {
     /// idler replicas, so it terminates; the cap bounds pathological
     /// configurations anyway).
     migration_cap: usize,
+    /// Per-replica crash flags, set/cleared by the fault driver. All
+    /// `false` outside fault injection, where every health check
+    /// degenerates to the pre-fault behavior.
+    down: Vec<bool>,
 }
 
 /// A drained pool: per-replica metrics plus per-request outcomes
@@ -351,6 +361,7 @@ impl<'a> Pool<'a> {
         cfg: SimConfig,
         migration_cap: usize,
     ) -> Self {
+        let n = reps.len();
         Pool {
             reps,
             router,
@@ -360,6 +371,7 @@ impl<'a> Pool<'a> {
             origins: HashMap::new(),
             n_rebalanced: 0,
             migration_cap,
+            down: vec![false; n],
         }
     }
 
@@ -412,15 +424,26 @@ impl<'a> Pool<'a> {
         if mean <= 1e-12 {
             return;
         }
-        let (mut src, mut dst) = (0usize, 0usize);
-        for i in 1..busy.len() {
-            if busy[i] > busy[src] {
-                src = i;
+        // first-max / first-min over the *healthy* replicas only: a
+        // crashed replica is neither a source (its requests already
+        // failed) nor a destination (a migration there would die). With
+        // every replica up this picks exactly what the unconditional
+        // scan did, keeping the zero-fault path bitwise-identical.
+        let (mut src, mut dst) = (None::<usize>, None::<usize>);
+        for i in 0..busy.len() {
+            if self.down[i] {
+                continue;
             }
-            if busy[i] < busy[dst] {
-                dst = i;
+            if src.map_or(true, |s| busy[i] > busy[s]) {
+                src = Some(i);
+            }
+            if dst.map_or(true, |d| busy[i] < busy[d]) {
+                dst = Some(i);
             }
         }
+        let (Some(src), Some(dst)) = (src, dst) else {
+            return;
+        };
         if src == dst || (busy[src] - busy[dst]) / mean <= rb.imbalance_threshold {
             return;
         }
@@ -498,18 +521,33 @@ fn stitch(
     outcomes: &[(usize, RequestOutcome)],
     origins: &HashMap<usize, Origin>,
 ) -> Vec<RequestOutcome> {
+    stitch_keyed(outcomes, origins)
+        .into_iter()
+        .map(|(_, o)| o)
+        .collect()
+}
+
+/// [`stitch`] keeping the request ids: the fault driver needs them to
+/// match a final outcome back to its retry record.
+fn stitch_keyed(
+    outcomes: &[(usize, RequestOutcome)],
+    origins: &HashMap<usize, Origin>,
+) -> Vec<(usize, RequestOutcome)> {
     outcomes
         .iter()
-        .map(|&(id, o)| match origins.get(&id) {
-            Some(g) => RequestOutcome {
-                arrival_s: g.arrival_s,
-                input_len: g.input_len,
-                output_len: g.output_len,
-                first_token_s: Some(g.first_token_s),
-                finish_s: o.finish_s,
-                rejected: o.rejected,
-            },
-            None => o,
+        .map(|&(id, o)| {
+            let o = match origins.get(&id) {
+                Some(g) => RequestOutcome {
+                    arrival_s: g.arrival_s,
+                    input_len: g.input_len,
+                    output_len: g.output_len,
+                    first_token_s: Some(g.first_token_s),
+                    finish_s: o.finish_s,
+                    rejected: o.rejected,
+                },
+                None => o,
+            };
+            (id, o)
         })
         .collect()
 }
@@ -617,7 +655,14 @@ fn run_homogeneous(
     let mut outcomes = stitch(&res.outcomes, &res.origins);
     let n_shed = shed.len();
     outcomes.extend(shed);
-    aggregate(res.per_replica, outcomes, cfg, n_shed, res.n_rebalanced)
+    aggregate(
+        res.per_replica,
+        outcomes,
+        cfg,
+        n_shed,
+        res.n_rebalanced,
+        FaultStats::default(),
+    )
 }
 
 /// A prefill-complete request waiting on its KV transfer.
@@ -762,7 +807,476 @@ fn run_disaggregated(
         .collect();
     let n_shed = shed.len();
     outcomes.extend(shed);
-    aggregate(per_replica, outcomes, cfg, n_shed, dec_res.n_rebalanced)
+    aggregate(
+        per_replica,
+        outcomes,
+        cfg,
+        n_shed,
+        dec_res.n_rebalanced,
+        FaultStats::default(),
+    )
+}
+
+/// One scheduled fault-driver event, expanded from a [`FaultSchedule`]:
+/// a crash (optionally preceded by a proactive drain), the start of a
+/// straggler window, or a fleet-wide link-factor change.
+#[derive(Debug, Clone, Copy)]
+enum FaultEv {
+    Crash { rep: usize, recovery_s: f64 },
+    Drain { rep: usize },
+    Straggle { rep: usize, until_s: f64, slowdown: f64 },
+    LinkSet { factor: f64 },
+}
+
+/// Lifecycle record of one stream request under fault injection: its
+/// original arrival (final outcomes always report it), how many times it
+/// has been offered to the fleet, and whether it ever re-entered.
+struct Track {
+    req: TimedRequest,
+    attempts: usize,
+    retried: bool,
+}
+
+/// The failure-aware front end: wraps a [`Pool`] with health tracking,
+/// capped-backoff retry, proactive drain, and the fault event loop.
+/// With an empty schedule and retry disabled, every code path here
+/// reduces to [`run_homogeneous`]'s exact call sequence — the zero-fault
+/// bitwise anchor in `rust/tests/fault_properties.rs` holds the
+/// subsystem to that.
+struct FaultDriver<'a> {
+    pool: Pool<'a>,
+    admission: AdmissionPolicy,
+    cfg: SimConfig,
+    retry: RetryPolicy,
+    drain: Option<DrainSpec>,
+    failover: bool,
+    tracks: HashMap<usize, Track>,
+    /// Requests waiting out their backoff, ascending by (due, id).
+    retryq: VecDeque<(f64, usize)>,
+    shed_final: Vec<RequestOutcome>,
+    lost_final: Vec<RequestOutcome>,
+    /// Recovery deadline per replica (meaningful while `pool.down`).
+    up_at: Vec<f64>,
+    stats: FaultStats,
+    n_shed: usize,
+    /// Current fleet-wide KV-link degradation factor (1 = nominal).
+    link_factor: f64,
+    /// The rebalancer's nominal `handoff_s_per_token`, so link windows
+    /// scale from the configured value rather than compounding.
+    base_handoff: f64,
+}
+
+impl<'a> FaultDriver<'a> {
+    /// Clear crash flags whose recovery deadline has passed. Recovery is
+    /// lazy — checked at every event — so a replica rejoins (cold: its
+    /// cache was rebuilt empty at the crash) at the first decision point
+    /// after its deadline.
+    fn refresh_health(&mut self, t: f64) {
+        for k in 0..self.pool.down.len() {
+            if self.pool.down[k] && t >= self.up_at[k] {
+                self.pool.down[k] = false;
+            }
+        }
+    }
+
+    /// The per-event preamble, in exactly [`run_homogeneous`]'s order:
+    /// deliver due migrations, then advance every replica clock.
+    fn step_to(&mut self, t: f64) {
+        self.refresh_health(t);
+        self.pool.deliver_due(t);
+        self.pool.advance_all(t);
+    }
+
+    fn push_retry(&mut self, due: f64, id: usize) {
+        let pos = self
+            .retryq
+            .partition_point(|x| x.0 < due || (x.0 == due && x.1 <= id));
+        self.retryq.insert(pos, (due, id));
+    }
+
+    /// A request's current attempt just died (crash-killed, migration
+    /// into a crash, or routed into a dead replica with failover off):
+    /// schedule a backoff retry if attempts remain, else count it
+    /// permanently lost.
+    fn fail(&mut self, id: usize, t: f64) {
+        self.stats.n_failed += 1;
+        // any in-flight migration origin died with the attempt; the
+        // retry must not inherit its first-token time
+        self.pool.origins.remove(&id);
+        let tr = &self.tracks[&id];
+        let (attempts, req) = (tr.attempts, tr.req);
+        if attempts < self.retry.max_attempts {
+            self.stats.n_retried += 1;
+            self.push_retry(t + self.retry.delay_s(attempts), id);
+        } else {
+            self.stats.n_lost += 1;
+            self.lost_final.push(RequestOutcome {
+                arrival_s: req.arrival_s,
+                input_len: req.input_len.max(1),
+                output_len: req.output_len.max(1),
+                first_token_s: None,
+                finish_s: None,
+                rejected: true,
+            });
+        }
+    }
+
+    /// The admission gate shed this offer: back off and retry if
+    /// attempts remain, else it is a terminal shed (exactly the
+    /// non-fault path when retry is disabled).
+    fn shed_or_retry(&mut self, id: usize, t: f64) {
+        let tr = &self.tracks[&id];
+        let (attempts, req) = (tr.attempts, tr.req);
+        if attempts < self.retry.max_attempts {
+            self.stats.n_retried += 1;
+            self.push_retry(t + self.retry.delay_s(attempts), id);
+        } else {
+            self.n_shed += 1;
+            self.shed_final.push(shed_outcome(&req));
+        }
+    }
+
+    /// Offer request `id` to the fleet at time `t` (its arrival, or a
+    /// retry due-time). Routing, admission and injection follow
+    /// [`run_homogeneous`] bit for bit when every replica is up.
+    fn offer(&mut self, id: usize, t: f64) {
+        let (input_len, output_len) = {
+            let tr = self.tracks.get_mut(&id).unwrap();
+            tr.attempts += 1;
+            if tr.attempts > 1 {
+                tr.retried = true;
+            }
+            (tr.req.input_len, tr.req.output_len)
+        };
+        let r = TimedRequest {
+            id,
+            arrival_s: t,
+            input_len,
+            output_len,
+        };
+        let mut obs = self.pool.observations();
+        for (k, o) in obs.iter_mut().enumerate() {
+            o.down = self.pool.down[k];
+        }
+        let k = if self.failover {
+            // route over the healthy subset only; with every replica up
+            // this is the identity remap of the plain route
+            let healthy: Vec<usize> = (0..obs.len()).filter(|&k| !self.pool.down[k]).collect();
+            if healthy.is_empty() {
+                self.fail(id, t);
+                return;
+            }
+            let hobs: Vec<ReplicaObs> = healthy.iter().map(|&k| obs[k]).collect();
+            healthy[self.pool.router.route(&r, &hobs).min(hobs.len() - 1)]
+        } else {
+            // failover disabled: the router is blind to health, and an
+            // offer landing on a dead replica fails outright (JSQ is
+            // pathological here — a crashed replica's empty backlog
+            // attracts every request until it recovers)
+            let k = self.pool.router.route(&r, &obs).min(obs.len() - 1);
+            if self.pool.down[k] {
+                self.fail(id, t);
+                return;
+            }
+            k
+        };
+        if self.admission.sheds(&r, &obs[k], &self.cfg) {
+            self.shed_or_retry(id, t);
+        } else {
+            self.pool.reps[k].inject(id, t, r.input_len, r.output_len);
+        }
+    }
+
+    /// Crash replica `rep` at `t`: kill migrations in flight toward it,
+    /// fail its queued + running requests (wiping its KV, shared prefix
+    /// included), and mark it down until `t + recovery_s`.
+    fn on_crash(&mut self, rep: usize, t: f64, recovery_s: f64) {
+        self.step_to(t);
+        let pending = std::mem::take(&mut self.pool.pending);
+        let mut dead: Vec<usize> = Vec::new();
+        for m in pending {
+            if m.dst == rep {
+                dead.push(m.id);
+            } else {
+                self.pool.pending.push_back(m);
+            }
+        }
+        for id in dead {
+            self.fail(id, t);
+        }
+        let failed = self.pool.reps[rep].crash(t);
+        self.pool.down[rep] = true;
+        self.up_at[rep] = t + recovery_s.max(0.0);
+        self.stats.n_crashes += 1;
+        for f in failed {
+            self.fail(f.ext_id, t);
+        }
+    }
+
+    /// Proactively evacuate up to `max_requests` mid-decode requests
+    /// from `rep` ahead of its scheduled crash, via the block-rounded KV
+    /// handoff path. Queued and still-prefilling requests stay (they
+    /// have little KV to save and will retry after the crash).
+    fn on_drain(&mut self, rep: usize, t: f64) {
+        let Some(d) = self.drain else { return };
+        if self.pool.down[rep] {
+            return;
+        }
+        self.step_to(t);
+        for _ in 0..d.max_requests {
+            let Some((ctx, rest)) = self.pool.reps[rep].peek_youngest_decoding() else {
+                break;
+            };
+            // least-busy healthy destination with KV headroom
+            let mut dst: Option<usize> = None;
+            for k in 0..self.pool.reps.len() {
+                if k == rep || self.pool.down[k] || !self.pool.reps[k].kv_can_ever_fit(ctx, rest)
+                {
+                    continue;
+                }
+                if dst.map_or(true, |b| self.pool.reps[k].busy_s() < self.pool.reps[b].busy_s())
+                {
+                    dst = Some(k);
+                }
+            }
+            let Some(dst) = dst else { break };
+            let Some(ex) = self.pool.reps[rep].extract_youngest_decoding() else {
+                break;
+            };
+            let depart = self.pool.reps[rep].clock().max(t);
+            let link_tokens = self.pool.cfg.kv.block_round(ex.context_len);
+            let arrive =
+                depart + link_tokens as f64 * (d.handoff_s_per_token * self.link_factor).max(0.0);
+            self.pool.origins.entry(ex.ext_id).or_insert(Origin {
+                arrival_s: ex.arrival_s,
+                input_len: ex.input_len,
+                output_len: ex.output_len,
+                first_token_s: ex.first_token_s,
+            });
+            self.stats.n_drained += 1;
+            self.pool.push_migration(PendingMigration {
+                t: arrive,
+                id: ex.ext_id,
+                dst,
+                ctx: ex.context_len,
+                rest: ex.rest,
+            });
+        }
+    }
+}
+
+/// [`simulate_fleet_frontend`] under a deterministic fault schedule and
+/// resilience posture: replica crashes (KV wiped, in-flight requests
+/// failed, recovery after a delay, cold rejoin), straggler slowdown
+/// windows, fleet-wide KV-link degradation, health-aware routing with
+/// optional failover, capped-exponential-backoff retry, and proactive
+/// pre-crash drain. Deterministic: identical inputs (including the
+/// schedule) give bit-identical output, and `ResilienceSpec::none()` is
+/// bitwise-equal to [`simulate_fleet_frontend`].
+///
+/// Currently models homogeneous fleets only (any single-pool router);
+/// fault injection for disaggregated prefill/decode shapes is future
+/// work.
+pub fn simulate_fleet_faults(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+    res: &ResilienceSpec,
+) -> FleetMetrics {
+    assert_eq!(
+        hws.len(),
+        fleet.total_replicas(),
+        "one HwConfig per replica"
+    );
+    assert!(
+        fleet.router != RouterPolicy::PrefillDecode,
+        "fault injection currently models homogeneous fleets; disaggregated shapes are future work"
+    );
+    let n_rep = fleet.n_replicas.max(1);
+    let costers = pool_costers(model, &hws[..n_rep], cfg);
+    let reps: Vec<Scheduler> = hws[..n_rep]
+        .iter()
+        .zip(&costers)
+        .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
+        .collect();
+    let pool = Pool::new(
+        reps,
+        router_for(fleet.router),
+        fe.rebalance,
+        *cfg,
+        4 * stream.requests.len() + 16,
+    );
+    let mut drv = FaultDriver {
+        pool,
+        admission: fe.admission,
+        cfg: *cfg,
+        retry: res.retry,
+        drain: res.drain,
+        failover: res.failover,
+        tracks: stream
+            .requests
+            .iter()
+            .map(|r| {
+                (
+                    r.id,
+                    Track {
+                        req: *r,
+                        attempts: 0,
+                        retried: false,
+                    },
+                )
+            })
+            .collect(),
+        retryq: VecDeque::new(),
+        shed_final: Vec::new(),
+        lost_final: Vec::new(),
+        up_at: vec![0.0; n_rep],
+        stats: FaultStats::default(),
+        n_shed: 0,
+        link_factor: 1.0,
+        base_handoff: fe.rebalance.map_or(0.0, |rb| rb.handoff_s_per_token),
+    };
+    // expand the schedule into a time-ordered event list; the stable
+    // sort keeps a drain ahead of its crash at equal times and equal-t
+    // faults in schedule order
+    let mut events: Vec<(f64, FaultEv)> = Vec::new();
+    for f in &res.schedule.faults {
+        let rep = f.replica.min(n_rep - 1);
+        match f.kind {
+            FaultKind::Crash { recovery_s } => {
+                if let Some(d) = res.drain {
+                    events.push(((f.t_s - d.lead_s).max(0.0), FaultEv::Drain { rep }));
+                }
+                events.push((f.t_s, FaultEv::Crash { rep, recovery_s }));
+            }
+            FaultKind::Straggler {
+                duration_s,
+                slowdown,
+            } => {
+                events.push((
+                    f.t_s,
+                    FaultEv::Straggle {
+                        rep,
+                        until_s: f.t_s + duration_s,
+                        slowdown,
+                    },
+                ));
+            }
+            FaultKind::LinkDegrade { duration_s, factor } => {
+                events.push((f.t_s, FaultEv::LinkSet { factor }));
+                events.push((f.t_s + duration_s, FaultEv::LinkSet { factor: 1.0 }));
+            }
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    // three-way deterministic merge of fault events, stream arrivals and
+    // retry due-times; ties resolve events < arrivals < retries so a
+    // crash at an arrival instant kills before the arrival routes
+    let (mut ev_i, mut arr_i) = (0usize, 0usize);
+    loop {
+        let te = events.get(ev_i).map_or(f64::INFINITY, |e| e.0);
+        let ta = stream
+            .requests
+            .get(arr_i)
+            .map_or(f64::INFINITY, |r| r.arrival_s);
+        let tr = drv.retryq.front().map_or(f64::INFINITY, |x| x.0);
+        if te.is_infinite() && ta.is_infinite() && tr.is_infinite() {
+            break;
+        }
+        if te <= ta && te <= tr {
+            let (t, ev) = events[ev_i];
+            ev_i += 1;
+            match ev {
+                FaultEv::Crash { rep, recovery_s } => drv.on_crash(rep, t, recovery_s),
+                FaultEv::Drain { rep } => drv.on_drain(rep, t),
+                FaultEv::Straggle {
+                    rep,
+                    until_s,
+                    slowdown,
+                } => {
+                    drv.step_to(t);
+                    drv.pool.reps[rep].set_slowdown(until_s, slowdown);
+                }
+                FaultEv::LinkSet { factor } => {
+                    drv.link_factor = factor;
+                    if let Some(rb) = drv.pool.rebalance.as_mut() {
+                        rb.handoff_s_per_token = drv.base_handoff * factor;
+                    }
+                }
+            }
+        } else if ta <= tr {
+            let r = stream.requests[arr_i];
+            arr_i += 1;
+            drv.step_to(r.arrival_s);
+            drv.offer(r.id, r.arrival_s);
+            drv.pool.maybe_rebalance(r.arrival_s);
+        } else {
+            let (t, id) = drv.retryq.pop_front().unwrap();
+            drv.step_to(t);
+            drv.offer(id, t);
+            drv.pool.maybe_rebalance(t);
+        }
+    }
+    let FaultDriver {
+        pool,
+        tracks,
+        shed_final,
+        lost_final,
+        stats,
+        n_shed,
+        ..
+    } = drv;
+    let pres = pool.finish();
+    // a retried request's final outcome keeps its ORIGINAL arrival time
+    // (TTFT spans downtime and backoff) while taking first-token and
+    // finish truth from the attempt that actually completed; failed
+    // attempts never produce outcomes, so nothing double-counts
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(stream.requests.len());
+    for (id, mut o) in stitch_keyed(&pres.outcomes, &pres.origins) {
+        if let Some(tr) = tracks.get(&id) {
+            if tr.retried {
+                o.arrival_s = tr.req.arrival_s;
+                o.input_len = tr.req.input_len.max(1);
+                o.output_len = tr.req.output_len.max(1);
+            }
+        }
+        outcomes.push(o);
+    }
+    outcomes.extend(shed_final);
+    outcomes.extend(lost_final);
+    let mut m = aggregate(
+        pres.per_replica,
+        outcomes,
+        cfg,
+        n_shed,
+        pres.n_rebalanced,
+        stats,
+    );
+    // availability over the run: crash downtime clipped to the makespan,
+    // summed across replicas, against n_rep replica-seconds
+    let span = m.makespan_s;
+    let mut downtime = 0.0;
+    for f in &res.schedule.faults {
+        if let FaultKind::Crash { recovery_s } = f.kind {
+            downtime += ((f.t_s + recovery_s.max(0.0)).min(span) - f.t_s.min(span)).max(0.0);
+        }
+    }
+    m.faults.n_faults = res.schedule.faults.len();
+    m.faults.downtime_s = downtime;
+    m.faults.mean_recovery_s = if m.faults.n_crashes > 0 {
+        downtime / m.faults.n_crashes as f64
+    } else {
+        0.0
+    };
+    m.faults.availability = if span > 1e-12 {
+        (1.0 - downtime / (n_rep as f64 * span)).max(0.0)
+    } else {
+        1.0
+    };
+    m
 }
 
 #[cfg(test)]
@@ -831,6 +1345,7 @@ mod tests {
             kv_free_tokens: 100,
             n_prefilling: 0,
             n_decoding: 0,
+            down: false,
         };
         let reps = [obs(5), obs(2), obs(2), obs(9)];
         let req = TimedRequest {

@@ -16,6 +16,7 @@
 //! `dse::compass_dse_serving`.
 
 pub mod coster;
+pub mod faults;
 pub mod fleet;
 pub mod frontend;
 pub mod kv;
@@ -24,14 +25,19 @@ pub mod sched;
 pub mod stream;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
+pub use faults::{
+    DrainSpec, FaultKind, FaultSchedule, FaultSpec, FaultStats, ResilienceSpec, RetryPolicy,
+};
 pub use fleet::{simulate_fleet, FleetConfig, FleetMetrics, RouterPolicy};
 pub use frontend::{
-    estimate_ttft, router_for, simulate_fleet_frontend, AdmissionPolicy, Frontend, JsqRouter,
-    KvAwareRouter, RebalanceSpec, ReplicaObs, RoundRobinRouter, Router,
+    estimate_ttft, router_for, simulate_fleet_faults, simulate_fleet_frontend, AdmissionPolicy,
+    Frontend, JsqRouter, KvAwareRouter, RebalanceSpec, ReplicaObs, RoundRobinRouter, Router,
 };
 pub use kv::{EvictionPolicy, KvCache, KvDtype, KvSpec};
 pub use metrics::{IterRecord, LatencyStats, RequestOutcome, ServingMetrics, SloSpec};
-pub use sched::{simulate_serving, ExtractedRequest, FrontendCounters, ReplicaResult, Scheduler};
+pub use sched::{
+    simulate_serving, ExtractedRequest, FailedRequest, FrontendCounters, ReplicaResult, Scheduler,
+};
 pub use stream::{RequestStream, TimedRequest};
 
 use crate::arch::constants::CLOCK_HZ;

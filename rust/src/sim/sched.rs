@@ -74,6 +74,10 @@ struct Live {
     /// Extracted by the front end mid-decode (rebalancing): the request
     /// finishes on another replica, so this replica's outcomes skip it.
     migrated_out: bool,
+    /// Killed by a replica crash ([`Scheduler::crash`]): the front end
+    /// owns the final outcome (retry elsewhere or permanent loss), so
+    /// this replica's outcomes skip it — exactly like `migrated_out`.
+    failed: bool,
 }
 
 impl Live {
@@ -113,6 +117,18 @@ pub struct FrontendCounters {
     pub pending_prefill_tokens: u64,
     pub n_prefilling: usize,
     pub n_decoding: usize,
+}
+
+/// A request killed by a replica crash ([`Scheduler::crash`]): the
+/// fleet layer decides its fate (retry on a healthy replica under the
+/// retry policy, or permanent loss). The lengths are this replica's
+/// view — a migrated-in request reports its context, not the original
+/// prompt; the front end keeps the true origin record.
+#[derive(Debug, Clone, Copy)]
+pub struct FailedRequest {
+    pub ext_id: usize,
+    pub input_len: u64,
+    pub output_len: u64,
 }
 
 /// A mid-decode request removed from a replica by the front-end
@@ -169,6 +185,17 @@ pub struct Scheduler<'a> {
     /// here but finish elsewhere, so they count as resolved in the
     /// truncation accounting and are skipped by `finish`.
     migrated_out: usize,
+    /// Requests killed by a crash ([`Scheduler::crash`]): resolved by
+    /// the front end (retry or loss), so they too count as resolved
+    /// here and are skipped by `finish`.
+    failed: usize,
+    /// Straggler window ([`Scheduler::set_slowdown`]): iterations
+    /// starting before `slow_until_s` have their latency multiplied by
+    /// `slow_mult`. The defaults (0.0, 1.0) never fire, and the
+    /// multiplication is skipped entirely outside the window, so the
+    /// no-fault arithmetic is bitwise-untouched.
+    slow_until_s: f64,
+    slow_mult: f64,
     truncated: bool,
 }
 
@@ -216,6 +243,9 @@ impl<'a> Scheduler<'a> {
             gen_tokens: 0,
             kv_transfer_tokens: 0,
             migrated_out: 0,
+            failed: 0,
+            slow_until_s: 0.0,
+            slow_mult: 1.0,
             truncated: false,
         }
     }
@@ -363,6 +393,47 @@ impl<'a> Scheduler<'a> {
         })
     }
 
+    /// Crash this replica at time `t`: every queued or running request
+    /// fails (returned for the front end to retry or count lost) and
+    /// the KV cache is wiped wholesale — written blocks, reservation
+    /// leases and the materialized shared prefix all vanish, so a
+    /// recovered replica rejoins cold and its first admissions pay the
+    /// prefix re-materialization again (the warm-up cost). Requests
+    /// already resolved (completed, rejected, migrated out) are
+    /// untouched. The clock only moves forward: an iteration that had
+    /// already run past `t` stands — the crash takes effect at the
+    /// next event boundary, keeping iteration atomicity.
+    pub fn crash(&mut self, t: f64) -> Vec<FailedRequest> {
+        self.clock = self.clock.max(t);
+        let queued: Vec<usize> = self.queue.drain(..).collect();
+        let running: Vec<usize> = std::mem::take(&mut self.running);
+        let mut failed = Vec::with_capacity(queued.len() + running.len());
+        for idx in queued.into_iter().chain(running) {
+            let r = &mut self.reqs[idx];
+            r.failed = true;
+            self.failed += 1;
+            failed.push(FailedRequest {
+                ext_id: self.ext_ids[idx],
+                input_len: r.input_len,
+                output_len: r.output_len,
+            });
+        }
+        // rebuild rather than release request-by-request: a crash also
+        // loses the shared prefix blocks, which per-request release
+        // would keep resident
+        self.kv = KvCache::new(self.cfg.kv, self.kv.capacity_tokens().max(2));
+        failed
+    }
+
+    /// Apply a straggler window: iterations *starting* before
+    /// `until_s` have their costed latency multiplied by `factor`
+    /// (clamped >= 1). Later calls override earlier ones; the default
+    /// `(0.0, 1.0)` never fires.
+    pub fn set_slowdown(&mut self, until_s: f64, factor: f64) {
+        self.slow_until_s = until_s;
+        self.slow_mult = factor.max(1.0);
+    }
+
     /// Offer a request at `arrival_s` (must be called in nondecreasing
     /// arrival order once the clock has caught up; see `advance_to`).
     /// Requests that can never fit the KV capacity are rejected here.
@@ -409,6 +480,7 @@ impl<'a> Scheduler<'a> {
             rejected: false,
             prefilled,
             migrated_out: false,
+            failed: false,
         };
         if !self.kv.can_ever_fit(input_len, output_len) {
             // can never fit, even alone: explicit rejection
@@ -717,7 +789,15 @@ impl<'a> Scheduler<'a> {
         }
         let n_decode = batch.len() - n_prefill;
         let c = self.coster.borrow_mut().cost(&cost_batch);
-        let dt = c.latency_cycles / CLOCK_HZ;
+        let mut dt = c.latency_cycles / CLOCK_HZ;
+        // straggler fault: stretch the iteration latency (energy is
+        // unchanged — a throttled clock does the same work, slower).
+        // Applied here, after costing, so the shared BatchCoster memo
+        // never sees one replica's slowdown. Outside a window the
+        // branch never fires, keeping the arithmetic bitwise-intact.
+        if self.clock < self.slow_until_s {
+            dt *= self.slow_mult;
+        }
         let end = self.clock + dt;
         self.energy += c.energy_pj;
         self.ideal_cycles += c.macs as f64 / self.peak_macs_per_cycle;
@@ -776,13 +856,15 @@ impl<'a> Scheduler<'a> {
     /// Close the run and aggregate metrics + per-request outcomes.
     /// Requests extracted by the front-end rebalancer finish on another
     /// replica, so they are skipped here (the fleet stitches their
-    /// timings from the extraction record plus the final holder).
+    /// timings from the extraction record plus the final holder);
+    /// crash-failed requests are skipped the same way (the fleet's
+    /// retry path owns their final outcome).
     pub fn finish(self) -> ReplicaResult {
         let outcomes: Vec<(usize, RequestOutcome)> = self
             .ext_ids
             .iter()
             .zip(&self.reqs)
-            .filter(|(_, r)| !r.migrated_out)
+            .filter(|(_, r)| !r.migrated_out && !r.failed)
             .map(|(&ext, r)| {
                 (
                     ext,
@@ -816,7 +898,8 @@ impl<'a> Scheduler<'a> {
                 kv_demand_tokens: self.kv.demand_tokens(),
                 kv_prefix_materializations: self.kv.prefix_materializations(),
                 truncated: self.truncated
-                    || self.done + self.rejected + self.migrated_out < self.n_arrived,
+                    || self.done + self.rejected + self.migrated_out + self.failed
+                        < self.n_arrived,
             },
         );
         ReplicaResult { metrics, outcomes }
@@ -1247,5 +1330,92 @@ mod tests {
         assert_eq!(full.makespan_s.to_bits(), m.makespan_s.to_bits());
         assert_eq!(full.mean_queue_depth.to_bits(), m.mean_queue_depth.to_bits());
         assert_eq!(full.busy_s.to_bits(), m.busy_s.to_bits());
+    }
+
+    /// Crashing a replica fails its queued + running requests, wipes
+    /// the cache (shared prefix included), and keeps the truncation
+    /// accounting consistent: failed requests count as resolved and
+    /// vanish from the outcomes, and the replica serves fresh work
+    /// afterwards from a cold cache.
+    #[test]
+    fn crash_fails_inflight_wipes_kv_and_serves_again() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::ChunkedPrefill);
+        cfg.kv = KvSpec::paged(8).with_prefix(32);
+        cfg.kv_budget_tokens = 1024;
+        let mut s = Scheduler::new(&model, &hw, &cfg);
+        s.inject(0, 0.0, 60, 8);
+        s.inject(1, 1e-6, 50, 8);
+        s.inject(2, 2e-6, 40, 8);
+        // run partway: some prefill/decode work happens, prefix resident
+        for _ in 0..4 {
+            s.step();
+        }
+        let t = s.clock();
+        let failed = s.crash(t);
+        assert!(!failed.is_empty(), "in-flight work must fail at the crash");
+        assert!(!s.has_work(), "crash must empty queue and running set");
+        assert_eq!(
+            s.kv_free_tokens(),
+            1024,
+            "crash must wipe the whole cache, prefix blocks included"
+        );
+        // cold rejoin: new work admits, re-materializes the prefix, runs
+        s.inject(3, t + 1.0, 60, 4);
+        s.run_to_end();
+        let r = s.finish();
+        assert!(!r.metrics.truncated, "failed requests must count as resolved");
+        assert_eq!(r.outcomes.len(), 1, "failed requests vanish from outcomes");
+        assert_eq!(r.outcomes[0].0, 3);
+        assert!(r.outcomes[0].1.finish_s.is_some());
+        // the rebuilt cache counts from zero, so a count of 1 proves the
+        // prefix was re-materialized from scratch after the crash
+        assert_eq!(
+            r.metrics.kv_prefix_materializations, 1,
+            "recovered replica must re-materialize the shared prefix"
+        );
+    }
+
+    /// A straggler window stretches exactly the iterations that start
+    /// inside it, and a `(0, 1)` (default) window is bitwise-free.
+    #[test]
+    fn slowdown_window_stretches_latency_not_energy() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let cfg = tiny_cfg(ServingStrategy::Orca);
+        // both arrivals at t = 0 so the batch compositions are identical
+        // regardless of how far the slowdown stretches each iteration
+        let stream = fixed_stream(&[(0.0, 60, 12), (0.0, 50, 12)]);
+        let run = |slow: Option<(f64, f64)>| {
+            let mut s = Scheduler::new(&model, &hw, &cfg);
+            if let Some((until, mult)) = slow {
+                s.set_slowdown(until, mult);
+            }
+            for r in &stream.requests {
+                s.advance_to(r.arrival_s);
+                s.inject(r.id, r.arrival_s, r.input_len, r.output_len);
+            }
+            s.run_to_end();
+            s.finish().metrics
+        };
+        let base = run(None);
+        let noop = run(Some((0.0, 1.0)));
+        assert_eq!(base.makespan_s.to_bits(), noop.makespan_s.to_bits());
+        assert_eq!(base.energy_pj.to_bits(), noop.energy_pj.to_bits());
+        let slowed = run(Some((f64::INFINITY, 3.0)));
+        assert!(
+            slowed.makespan_s > 2.5 * base.makespan_s,
+            "3x window over the whole run must stretch the makespan ~3x \
+             ({} vs {})",
+            slowed.makespan_s,
+            base.makespan_s
+        );
+        assert_eq!(
+            slowed.energy_pj.to_bits(),
+            base.energy_pj.to_bits(),
+            "throttling stretches time, not work"
+        );
+        assert_eq!(slowed.n_completed, base.n_completed);
     }
 }

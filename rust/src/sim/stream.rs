@@ -47,7 +47,9 @@ impl RequestStream {
     /// mid-file can never silently drop a request. Requests are sorted
     /// by arrival time
     /// (stable, so ties keep file order) and re-numbered `0..n` in that
-    /// order; `rate_rps` is derived from the arrival span. Parsing is
+    /// order; `rate_rps` is derived from the arrival span (degenerate
+    /// traces — one row, or all rows at one timestamp — report
+    /// `n / max(span, 1 s)` rather than a silent `1.0`). Parsing is
     /// pure: the same text always yields the same stream, so replays
     /// are bit-reproducible like the synthetic generators.
     pub fn from_trace(name: &str, csv: &str) -> Result<Self, String> {
@@ -90,7 +92,11 @@ impl RequestStream {
         let rate_rps = if span > 1e-9 {
             (rows.len() - 1) as f64 / span
         } else {
-            1.0
+            // degenerate traces (a single row, or identical timestamps)
+            // have no measurable span: report `n / max(span, 1 s)` — n
+            // requests over a nominal 1-second window — instead of a
+            // silent 1.0 that hid the trace size
+            rows.len() as f64 / span.max(1.0)
         };
         let requests = rows
             .into_iter()
@@ -232,6 +238,24 @@ arrival_s,prompt_len,gen_len
         assert_eq!(a.requests[3].output_len, 1);
         // rate over the span: 3 gaps / 0.8 s
         assert!((a.rate_rps - 3.0 / 0.8).abs() < 1e-9, "rate {}", a.rate_rps);
+    }
+
+    /// Degenerate traces report a documented `n / max(span, 1 s)` rate
+    /// rather than the old silent `rate_rps = 1.0` fallback.
+    #[test]
+    fn trace_loader_degenerate_rates_are_documented_not_silent() {
+        // a single row has no span: 1 request / 1 s nominal window
+        let one = RequestStream::from_trace("t", "2.5,64,8\n").unwrap();
+        assert_eq!(one.len(), 1);
+        assert!((one.rate_rps - 1.0).abs() < 1e-12, "rate {}", one.rate_rps);
+        // identical timestamps: 3 requests / 1 s nominal window — the
+        // trace size is no longer hidden behind a constant
+        let same = RequestStream::from_trace("t", "0.1,8,4\n0.1,16,4\n0.1,32,4\n").unwrap();
+        assert_eq!(same.len(), 3);
+        assert!((same.rate_rps - 3.0).abs() < 1e-12, "rate {}", same.rate_rps);
+        // a sub-nanosecond span still counts as degenerate
+        let tiny = RequestStream::from_trace("t", "0.1,8,4\n0.1000000001,8,4\n").unwrap();
+        assert!((tiny.rate_rps - 2.0).abs() < 1e-9, "rate {}", tiny.rate_rps);
     }
 
     #[test]

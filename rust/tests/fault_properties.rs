@@ -1,0 +1,380 @@
+//! Fault-injection properties: the zero-fault bitwise anchor,
+//! request conservation under crashes/stragglers/retries, replay
+//! determinism, and the recovery semantics of the retry path.
+//!
+//! The anchor is the contract that makes the fault layer safe to keep
+//! in the serving stack: with an empty [`FaultSchedule`] and retries
+//! disabled, `simulate_fleet_faults` must be bitwise-identical —
+//! per-replica metrics *and* per-request timings — to
+//! `simulate_fleet_frontend` under every front end (baseline, SLO
+//! shedding, rebalancing). On top of that, seeded fault storms must
+//! never lose track of a request: every arrival ends as exactly one of
+//! completed / rejected (with sheds and permanent losses inside the
+//! rejections), reruns are bit-identical, and enabling retries can
+//! only reduce permanent losses.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{
+    self, AdmissionPolicy, FaultSchedule, FleetConfig, Frontend, MappingPolicy, RebalanceSpec,
+    RequestStream, ResilienceSpec, RetryPolicy, RouterPolicy, SimConfig, SloSpec,
+};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+        shared_prefix_tokens: 0,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+/// Full bitwise comparison of two fleet results: per-replica metrics
+/// and per-request outcome timings.
+fn assert_fleet_bitwise(a: &sim::FleetMetrics, b: &sim::FleetMetrics, ctx: &str) {
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{ctx}: replica count");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        assert_eq!(
+            x.makespan_s.to_bits(),
+            y.makespan_s.to_bits(),
+            "{ctx}: replica {i} makespan"
+        );
+        assert_eq!(
+            x.energy_pj.to_bits(),
+            y.energy_pj.to_bits(),
+            "{ctx}: replica {i} energy"
+        );
+        assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(), "{ctx}: replica {i} busy");
+        assert_eq!(x.n_iterations, y.n_iterations, "{ctx}: replica {i} iterations");
+        assert_eq!(x.n_arrived, y.n_arrived, "{ctx}: replica {i} arrivals");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome count");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            x.arrival_s.to_bits(),
+            y.arrival_s.to_bits(),
+            "{ctx}: outcome {i} arrival"
+        );
+        assert_eq!(x.input_len, y.input_len, "{ctx}: outcome {i} input");
+        assert_eq!(x.output_len, y.output_len, "{ctx}: outcome {i} output");
+        assert_eq!(
+            x.first_token_s.map(f64::to_bits),
+            y.first_token_s.map(f64::to_bits),
+            "{ctx}: outcome {i} first token"
+        );
+        assert_eq!(
+            x.finish_s.map(f64::to_bits),
+            y.finish_s.map(f64::to_bits),
+            "{ctx}: outcome {i} finish"
+        );
+        assert_eq!(x.rejected, y.rejected, "{ctx}: outcome {i} rejected");
+    }
+    assert_eq!(a.n_shed, b.n_shed, "{ctx}: shed count");
+    assert_eq!(a.n_rebalanced, b.n_rebalanced, "{ctx}: rebalance count");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{ctx}: energy");
+}
+
+/// With no faults scheduled and retries disabled, the fault layer is
+/// bitwise-free under every front end — baseline admission, SLO
+/// shedding, and busy-time rebalancing — over randomized homogeneous
+/// fleets. The anchor for keeping the layer permanently in the stack.
+#[test]
+fn zero_fault_layer_is_bitwise_frontend_under_all_frontends() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xFA17);
+    for trial in 0..6 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let kv_tokens = *rng.choose(&[4096u64, 768]);
+        let cfg = cfg_for(strategy, kv_tokens);
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let n_rep = 2 + trial % 2;
+        let router = if trial % 2 == 0 {
+            RouterPolicy::JoinShortestQueue
+        } else {
+            RouterPolicy::RoundRobin
+        };
+        let fleet = FleetConfig::homogeneous(n_rep, router);
+        let rate = (0.6 + rng.gen_f64() * 1.5) * n_rep as f64 * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 10 + rng.gen_index(6), rng.next_u64());
+        let hws = vec![hw.clone(); n_rep];
+        let frontends = [
+            ("baseline", Frontend::baseline()),
+            ("shed", Frontend::with_shedding(probe, 1.0)),
+            (
+                "rebalance",
+                Frontend {
+                    admission: AdmissionPolicy::ArrivalReject,
+                    rebalance: Some(RebalanceSpec::new(0.2, 1e-7)),
+                },
+            ),
+        ];
+        for (name, fe) in &frontends {
+            let ctx = format!("trial {trial} {strategy:?} {name} kv={kv_tokens}");
+            let plain = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, fe);
+            let faultless = sim::simulate_fleet_faults(
+                &stream,
+                &model,
+                &hws,
+                &cfg,
+                &fleet,
+                fe,
+                &ResilienceSpec::none(),
+            );
+            assert_fleet_bitwise(&plain, &faultless, &ctx);
+            assert_eq!(faultless.faults.n_failed, 0, "{ctx}");
+            assert_eq!(faultless.faults.n_lost, 0, "{ctx}");
+            assert_eq!(
+                faultless.faults.availability.to_bits(),
+                1.0f64.to_bits(),
+                "{ctx}"
+            );
+        }
+    }
+}
+
+/// Seeded fault storms with retries never lose track of a request:
+/// every arrival is exactly one of completed / rejected, the outcome
+/// list has exactly one entry per request (retried attempts collapse
+/// into one stitched outcome), and sheds + permanent losses stay
+/// inside the rejections.
+#[test]
+fn faulted_fleets_conserve_requests_over_randomized_storms() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xC0A5);
+    for trial in 0..8 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let cfg = cfg_for(strategy, *rng.choose(&[4096u64, 768]));
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let n_rep = 2 + trial % 2;
+        let fleet = FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue);
+        let rate = (0.6 + rng.gen_f64() * 1.8) * n_rep as f64 * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 10 + rng.gen_index(8), rng.next_u64());
+        let schedule = FaultSchedule::seeded(
+            n_rep,
+            stream.horizon_s(),
+            1 + trial % 2,
+            trial % 3,
+            rng.next_u64(),
+        );
+        let retry = if trial % 2 == 0 {
+            RetryPolicy::capped(3, 0.2 * probe.t_prefill_s, 2.0)
+        } else {
+            RetryPolicy::disabled()
+        };
+        let res = ResilienceSpec::none()
+            .with_schedule(schedule.clone())
+            .with_retry(retry)
+            .with_failover(trial % 3 != 2);
+        let hws = vec![hw.clone(); n_rep];
+        let m = sim::simulate_fleet_faults(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+        );
+        let ctx = format!(
+            "trial {trial} {strategy:?} {} under {}",
+            res.describe(),
+            schedule.describe()
+        );
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "{ctx}");
+        assert_eq!(m.n_arrived, stream.len(), "{ctx}: arrivals != stream");
+        assert_eq!(m.outcomes.len(), stream.len(), "{ctx}: double-counted outcome");
+        assert!(!m.truncated, "{ctx}");
+        assert!(m.n_shed + m.faults.n_lost <= m.n_rejected, "{ctx}");
+        assert!(m.faults.n_lost <= m.faults.n_failed, "{ctx}");
+        assert!(m.faults.availability <= 1.0 && m.faults.availability >= 0.0, "{ctx}");
+        // one stitched story per request: the outcome arrivals are the
+        // stream arrivals, bit for bit — retried attempts keep the
+        // original arrival and never spawn a second outcome
+        let mut got: Vec<u64> = m.outcomes.iter().map(|o| o.arrival_s.to_bits()).collect();
+        let mut want: Vec<u64> = stream.requests.iter().map(|r| r.arrival_s.to_bits()).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "{ctx}: outcome arrivals drifted from the stream");
+    }
+}
+
+/// The same seeds replay bit-identically: fault injection keeps the
+/// simulator's determinism contract.
+#[test]
+fn faulted_runs_are_bit_identical_across_reruns() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 2048);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let n_rep = 2;
+    let fleet = FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue);
+    let rate = 1.4 * n_rep as f64 * probe.capacity_rps();
+    let stream = RequestStream::poisson(&tiny_spec(), rate, 14, 41);
+    let schedule = FaultSchedule::seeded(n_rep, stream.horizon_s(), 1, 1, 99);
+    let res = ResilienceSpec::none()
+        .with_schedule(schedule)
+        .with_retry(RetryPolicy::capped(3, 0.2 * probe.t_prefill_s, 2.0));
+    let hws = vec![hw.clone(); n_rep];
+    let run = || {
+        sim::simulate_fleet_faults(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_fleet_bitwise(&a, &b, "fault replay");
+    assert_eq!(a.faults, b.faults, "fault stats drifted between reruns");
+}
+
+/// A mid-run crash fails in-flight requests; retries win them back.
+/// With retries disabled every failure is a permanent loss; with a
+/// capped backoff the lost count can only shrink, and the crash's
+/// downtime is visible in availability.
+#[test]
+fn crash_failures_are_lost_without_retry_and_recovered_with_it() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 2048);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let n_rep = 2;
+    let fleet = FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue);
+    // overload so both replicas hold work when the crash lands mid-run
+    let rate = 2.0 * n_rep as f64 * probe.capacity_rps();
+    let stream = RequestStream::poisson(&tiny_spec(), rate, 16, 7);
+    let h = stream.horizon_s();
+    let schedule = FaultSchedule::none().crash(0, 0.5 * h, 0.3 * h);
+    let hws = vec![hw.clone(); n_rep];
+    let run = |retry: RetryPolicy| {
+        let res = ResilienceSpec::none()
+            .with_schedule(schedule.clone())
+            .with_retry(retry);
+        sim::simulate_fleet_faults(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+        )
+    };
+    let off = run(RetryPolicy::disabled());
+    assert!(off.faults.n_failed > 0, "crash at 50% of an overloaded run must fail work");
+    assert_eq!(
+        off.faults.n_lost, off.faults.n_failed,
+        "without retry every failure is permanent"
+    );
+    assert_eq!(off.faults.n_retried, 0);
+    assert!(off.faults.downtime_s > 0.0);
+    assert!(off.faults.availability < 1.0);
+
+    let on = run(RetryPolicy::capped(4, 0.2 * probe.t_prefill_s, 2.0));
+    assert!(on.faults.n_retried > 0, "retries must fire for the same crash");
+    assert!(
+        on.faults.n_lost <= off.faults.n_lost,
+        "retries must not increase permanent losses ({} > {})",
+        on.faults.n_lost,
+        off.faults.n_lost
+    );
+    assert!(
+        on.n_completed >= off.n_completed,
+        "retries must not reduce completions"
+    );
+    // both runs still conserve
+    for (m, tag) in [(&off, "off"), (&on, "on")] {
+        assert_eq!(m.n_completed + m.n_rejected, m.n_arrived, "retry-{tag}");
+        assert_eq!(m.outcomes.len(), stream.len(), "retry-{tag}");
+    }
+}
+
+/// A straggler window only throttles the clock: the run finishes no
+/// earlier than the fault-free one, completes the same requests, and
+/// spends the same energy shape (slow clock, same work).
+#[test]
+fn straggler_window_never_speeds_up_the_fleet() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 4096);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let n_rep = 2;
+    let fleet = FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue);
+    let rate = 0.9 * n_rep as f64 * probe.capacity_rps();
+    let stream = RequestStream::poisson(&tiny_spec(), rate, 12, 11);
+    let hws = vec![hw.clone(); n_rep];
+    let base = sim::simulate_fleet_faults(
+        &stream,
+        &model,
+        &hws,
+        &cfg,
+        &fleet,
+        &Frontend::baseline(),
+        &ResilienceSpec::none(),
+    );
+    let slowed = sim::simulate_fleet_faults(
+        &stream,
+        &model,
+        &hws,
+        &cfg,
+        &fleet,
+        &Frontend::baseline(),
+        &ResilienceSpec::none().with_schedule(FaultSchedule::none().straggler(
+            0,
+            0.0,
+            f64::INFINITY,
+            3.0,
+        )),
+    );
+    assert!(
+        slowed.makespan_s >= base.makespan_s - 1e-9,
+        "straggler sped the fleet up: {} < {}",
+        slowed.makespan_s,
+        base.makespan_s
+    );
+    assert_eq!(slowed.n_completed, base.n_completed, "straggler dropped completions");
+    assert_eq!(
+        slowed.n_completed + slowed.n_rejected,
+        slowed.n_arrived,
+        "straggler broke conservation"
+    );
+    assert_eq!(slowed.faults.n_failed, 0, "a straggler is not a crash");
+}
