@@ -1,0 +1,410 @@
+//! Deterministic telemetry end-to-end: request lifecycle spans,
+//! per-iteration occupancy, the counter registry and the Chrome-trace
+//! exporter, driven through every traced entry point and checked for
+//! the two invariants the subsystem promises:
+//!
+//! * **Free when attached**: metrics with a recording `SpanCollector`
+//!   (and with the explicit `NullSink`) are bit-identical to the
+//!   untraced run — emission happens after each step's arithmetic, so
+//!   observation never perturbs the simulation;
+//! * **Spans conserve to outcomes**: each request's phase spans
+//!   (queue / prefill / decode / backoff / migrate) tile its lifetime
+//!   contiguously, the per-lane durations sum to the lane window, the
+//!   lane windows reproduce the stitched outcome latencies, and lane
+//!   counts reproduce the run totals (arrived / completed / rejected)
+//!   — including under a seeded crash + straggler storm with retries,
+//!   where crash-clock overshoot makes lane windows an upper bound on
+//!   outcome latency rather than an exact match.
+//!
+//! Also renders the per-request ASCII waterfall, proves the trace
+//! JSON is byte-identical across reruns, and smoke-tests the
+//! wall-clock profiler. With `--trace-out PATH` the Chrome trace of
+//! the fault scenario is written to PATH (Perfetto-loadable; this is
+//! what the CI smoke validates).
+//!
+//! Run:   cargo run --release --example telemetry
+//! CI:    cargo run --example telemetry -- --tiny --trace-out /tmp/trace.json
+//!
+//! Output is deterministic for the fixed seeds baked in below.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::experiments as exp;
+use compass::sim::{
+    self, Frontend, ResilienceSpec, RouterPolicy, SimConfig, SpanCollector,
+};
+use compass::workload::serving::ServingStrategy;
+use compass::workload::ModelSpec;
+
+const SEED: u64 = 31;
+
+/// Relative tolerance for float-association error in span sums. The
+/// span endpoints are the simulator's own f64 timestamps, so the only
+/// slack needed is summation order — never modelling error.
+const REL_TOL: f64 = 1e-6;
+
+struct Setup {
+    label: &'static str,
+    scene: exp::FleetScene,
+    model: ModelSpec,
+    hw: HwConfig,
+    cfg: SimConfig,
+}
+
+fn setup(tiny: bool) -> Setup {
+    if tiny {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.chunk_tokens = 32;
+        cfg.kv_budget_tokens = 2048;
+        cfg.ctx_bucket = 64;
+        cfg.eval_blocks = 1;
+        let mut scene = exp::FleetScene::new("sharegpt", 64.0, 2, 12);
+        scene.rates_rps = Vec::new();
+        Setup {
+            label: "tiny-telemetry",
+            scene,
+            model: ModelSpec::tiny(),
+            hw: HwConfig::homogeneous(
+                2,
+                2,
+                ChipletClass::S,
+                Dataflow::WeightStationary,
+                32.0,
+                16.0,
+            ),
+            cfg,
+        }
+    } else {
+        let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.ctx_bucket = 1024;
+        let scene = exp::FleetScene::new("govreport", 512.0, 4, 36);
+        Setup {
+            label: "govreport-512T-telemetry4",
+            model: scene.model(),
+            hw: exp::sim_default_hw(scene.tops_per_replica()),
+            scene,
+            cfg,
+        }
+    }
+}
+
+fn rel_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL * a.abs().max(b.abs()).max(1e-9)
+}
+
+/// The lane-level conservation gate shared by every scenario below:
+/// each lane tiles its `[first_open, last_close]` window, and the lane
+/// population reproduces the run totals.
+fn assert_lane_conservation(
+    c: &SpanCollector,
+    n_arrived: usize,
+    n_completed: usize,
+    n_rejected: usize,
+    what: &str,
+) {
+    let lanes = c.waterfall();
+    for lane in &lanes {
+        let window = lane.last_close_s - lane.first_open_s;
+        assert!(
+            rel_close(lane.total_s(), window),
+            "{what}: req {} spans sum to {:.9}s but the lane window is {:.9}s",
+            lane.ext_id,
+            lane.total_s(),
+            window
+        );
+        for sp in &lane.spans {
+            assert!(
+                sp.end_s >= sp.start_s,
+                "{what}: req {} has a negative span",
+                lane.ext_id
+            );
+        }
+    }
+    assert_eq!(
+        lanes.len(),
+        n_arrived,
+        "{what}: every arrival must leave a lane"
+    );
+    assert_eq!(
+        lanes.iter().filter(|l| l.finished).count(),
+        n_completed,
+        "{what}: finished lanes != n_completed"
+    );
+    assert_eq!(
+        lanes.iter().filter(|l| l.rejected).count(),
+        n_rejected,
+        "{what}: rejected lanes != n_rejected"
+    );
+    assert_eq!(c.n_finished(), n_completed, "{what}: n_finished drifted");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let trace_out = args
+        .iter()
+        .position(|a| a == "--trace-out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let s = setup(tiny);
+    let t0 = std::time::Instant::now();
+
+    println!(
+        "telemetry [{}] model={} | {} replicas of: {}",
+        s.label,
+        s.model.name,
+        s.scene.n_replicas,
+        s.hw.describe()
+    );
+
+    let spec = s.scene.spec();
+    let probe = sim::probe(&s.model, &s.hw, &s.cfg, &spec);
+    let mut cfg = s.cfg;
+    cfg.slo = probe.slo(3.0, 4.0);
+
+    // --- 1. single replica: plain == NullSink == SpanCollector, bitwise ---
+    {
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            1.2 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let plain = sim::simulate_serving(&stream, &s.model, &s.hw, &cfg);
+        let null: sim::SharedSink =
+            std::rc::Rc::new(std::cell::RefCell::new(sim::NullSink));
+        let nulled = sim::simulate_serving_traced(&stream, &s.model, &s.hw, &cfg, &null);
+        let c = SpanCollector::shared();
+        let sink: sim::SharedSink = c.clone();
+        let traced = sim::simulate_serving_traced(&stream, &s.model, &s.hw, &cfg, &sink);
+        for (a, b) in [(&plain, &nulled), (&plain, &traced)] {
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits());
+            assert_eq!(a.tpot.p99.to_bits(), b.tpot.p99.to_bits());
+            assert_eq!(a.slo_goodput_tps.to_bits(), b.slo_goodput_tps.to_bits());
+            assert_eq!(a.n_completed, b.n_completed);
+            assert_eq!(a.n_preemptions, b.n_preemptions);
+        }
+        let c = c.borrow();
+        assert_lane_conservation(
+            &c,
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            "serving",
+        );
+        assert!(!c.events().is_empty(), "recording sink saw no events");
+        assert!(
+            c.counters().contains_key("coster.lookups")
+                && c.counters().contains_key("r0.n_arrived"),
+            "counter registry incomplete: {:?}",
+            c.counters().keys().collect::<Vec<_>>()
+        );
+        println!("serving: traced run is bit-identical, lanes conserve: PASS");
+    }
+
+    // --- 2. fleet front end, no faults: spans reproduce stitched latencies ---
+    {
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            1.1 * s.scene.n_replicas as f64 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let fleet =
+            sim::FleetConfig::homogeneous(s.scene.n_replicas, RouterPolicy::JoinShortestQueue);
+        let hws = vec![s.hw.clone(); fleet.total_replicas()];
+        let plain = sim::simulate_fleet_frontend(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+        );
+        let c = SpanCollector::shared();
+        let sink: sim::SharedSink = c.clone();
+        let traced = sim::simulate_fleet_frontend_traced(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &sink,
+        );
+        assert_eq!(plain.makespan_s.to_bits(), traced.makespan_s.to_bits());
+        assert_eq!(plain.energy_pj.to_bits(), traced.energy_pj.to_bits());
+        assert_eq!(plain.ttft.p99.to_bits(), traced.ttft.p99.to_bits());
+        assert_eq!(plain.n_completed, traced.n_completed);
+        let c = c.borrow();
+        assert_lane_conservation(
+            &c,
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            "frontend",
+        );
+        // without faults every lane window equals its stitched outcome
+        // latency exactly (same clock, no crash overshoot); match the
+        // two as sorted multisets since outcomes carry no request id
+        let mut lane_lat: Vec<f64> = c
+            .waterfall()
+            .iter()
+            .filter(|l| l.finished)
+            .map(|l| l.last_close_s - l.first_open_s)
+            .collect();
+        let mut out_lat: Vec<f64> = traced
+            .outcomes
+            .iter()
+            .filter_map(|o| o.finish_s.map(|f| f - o.arrival_s))
+            .collect();
+        lane_lat.sort_by(f64::total_cmp);
+        out_lat.sort_by(f64::total_cmp);
+        assert_eq!(lane_lat.len(), out_lat.len());
+        for (l, o) in lane_lat.iter().zip(&out_lat) {
+            assert!(
+                rel_close(*l, *o),
+                "lane latency {l:.9}s != outcome latency {o:.9}s"
+            );
+        }
+        println!("frontend: span windows reproduce stitched outcome latencies: PASS");
+        print!("\n{}", c.ascii_waterfall(72, 16));
+    }
+
+    // --- 3. fault storm: conservation holds through crash/retry/backoff ---
+    let fault_trace = {
+        let knobs = exp::FaultKnobs::default();
+        let stream = sim::RequestStream::poisson(
+            &spec,
+            1.2 * s.scene.n_replicas as f64 * probe.capacity_rps(),
+            s.scene.n_requests,
+            SEED,
+        );
+        let backoff = knobs.retry_base_prefills * probe.t_prefill_s;
+        let res = ResilienceSpec::none()
+            .with_schedule(sim::FaultSchedule::seeded(
+                s.scene.n_replicas,
+                stream.horizon_s(),
+                knobs.n_crashes,
+                knobs.n_stragglers,
+                knobs.fault_seed,
+            ))
+            .with_retry(sim::RetryPolicy::capped(
+                knobs.retry_attempts,
+                backoff,
+                10.0 * backoff,
+            ))
+            .with_failover(true);
+        let fleet =
+            sim::FleetConfig::homogeneous(s.scene.n_replicas, RouterPolicy::JoinShortestQueue);
+        let hws = vec![s.hw.clone(); fleet.total_replicas()];
+        let plain = sim::simulate_fleet_faults(
+            &stream,
+            &s.model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+        );
+        let run_traced = || {
+            let c = SpanCollector::shared();
+            let sink: sim::SharedSink = c.clone();
+            let m = sim::simulate_fleet_faults_traced(
+                &stream,
+                &s.model,
+                &hws,
+                &cfg,
+                &fleet,
+                &Frontend::baseline(),
+                &res,
+                &sink,
+            );
+            (c, m)
+        };
+        let (c, traced) = run_traced();
+        assert_eq!(plain.makespan_s.to_bits(), traced.makespan_s.to_bits());
+        assert_eq!(plain.energy_pj.to_bits(), traced.energy_pj.to_bits());
+        assert_eq!(plain.faults.n_failed, traced.faults.n_failed);
+        assert_eq!(plain.faults.n_lost, traced.faults.n_lost);
+        let cb = c.borrow();
+        assert_lane_conservation(
+            &cb,
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            "faults",
+        );
+        // crash timestamps can trail a replica's overshooting iteration
+        // clock, so a failed lane's window bounds its outcome latency
+        // from above; k-th order statistics inherit the pointwise bound
+        let mut lane_lat: Vec<f64> = cb
+            .waterfall()
+            .iter()
+            .filter(|l| l.finished)
+            .map(|l| l.last_close_s - l.first_open_s)
+            .collect();
+        let mut out_lat: Vec<f64> = traced
+            .outcomes
+            .iter()
+            .filter_map(|o| o.finish_s.map(|f| f - o.arrival_s))
+            .collect();
+        lane_lat.sort_by(f64::total_cmp);
+        out_lat.sort_by(f64::total_cmp);
+        assert_eq!(lane_lat.len(), out_lat.len());
+        for (l, o) in lane_lat.iter().zip(&out_lat) {
+            assert!(
+                *l + REL_TOL * o.max(1.0) >= *o,
+                "fault lane window {l:.9}s below outcome latency {o:.9}s"
+            );
+        }
+        if traced.faults.n_failed > 0 {
+            assert!(
+                cb.waterfall().iter().any(|l| l.n_failures > 0),
+                "failures reported but no lane recorded one"
+            );
+        }
+        println!(
+            "faults: conservation holds through {} failures / {} lost: PASS",
+            traced.faults.n_failed, traced.faults.n_lost
+        );
+
+        // --- 4. trace export is byte-identical across reruns ---
+        let j1 = cb.chrome_trace_json();
+        drop(cb);
+        let (c2, _) = run_traced();
+        let j2 = c2.borrow().chrome_trace_json();
+        assert_eq!(j1, j2, "chrome trace JSON differs between identical reruns");
+        assert!(j1.starts_with("{\"traceEvents\":["));
+        assert!(j1.contains("\"run_summary\""));
+        println!("export: chrome trace JSON is byte-identical across reruns: PASS");
+        j1
+    };
+
+    if let Some(path) = &trace_out {
+        if let Err(e) = std::fs::write(path, &fault_trace) {
+            eprintln!("[telemetry] cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {path} ({} bytes)", fault_trace.len());
+    }
+
+    // --- 5. wall-clock profiler smoke (separate clock, nondeterministic) ---
+    {
+        sim::profile::set_enabled(true);
+        let stream =
+            sim::RequestStream::poisson(&spec, probe.capacity_rps(), s.scene.n_requests, SEED);
+        let _ = sim::simulate_serving(&stream, &s.model, &s.hw, &cfg);
+        let report = sim::profile::take_report();
+        sim::profile::set_enabled(false);
+        assert!(
+            report.contains("sched.run_batch"),
+            "profiler recorded no scheduler scopes:\n{report}"
+        );
+        println!("profile: wall-clock scopes recorded under the flag: PASS");
+    }
+
+    eprintln!("[telemetry] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -20,6 +20,9 @@ use crate::workload::serving::{Scenario, ServingStrategy};
 use crate::workload::trace::{Trace, TraceSpec};
 use crate::workload::{ModelSpec, Phase};
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 pub use scenes::{model_for_tops, FleetScene, Scene, SimScene};
 
 /// Select a GP backend: PJRT artifacts when available (and the `xla`
@@ -1619,6 +1622,283 @@ pub fn fault_study_headline(rows: &[FaultStudyRow]) -> String {
 }
 
 // ---------------------------------------------------------------------
+// Telemetry: CLI validation, structured run records and traced
+// representative cells (EXPERIMENTS.md "Telemetry & profiling")
+// ---------------------------------------------------------------------
+
+/// Validate a `--replicas` value for a fleet-shaped study. The studies
+/// compare at least two replicas (round-robin vs JSQ vs a P+D split has
+/// nothing to compare on one), so anything smaller is a hard CLI error
+/// rather than a silent clamp.
+pub fn require_replicas(n: usize, study: &str) -> Result<usize, String> {
+    if n >= 2 {
+        Ok(n)
+    } else {
+        Err(format!(
+            "{study} needs >= 2 replicas (got {n}); pass --replicas 2 or more"
+        ))
+    }
+}
+
+/// Validate a parsed `--rates` list: every arrival rate must be a
+/// finite, strictly positive req/s value (a zero or negative rate makes
+/// the Poisson stream degenerate; NaN/inf poison every downstream sort).
+pub fn validate_rates(rates: &[f64]) -> Result<(), String> {
+    for &r in rates {
+        if !r.is_finite() || r <= 0.0 {
+            return Err(format!(
+                "--rates values must be finite and > 0 req/s (got {r})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Collapse one single-replica study cell into a structured run record.
+pub fn serving_run_record(
+    study: &str,
+    cell: &str,
+    rate_rps: f64,
+    m: &sim::ServingMetrics,
+) -> sim::RunRecord {
+    sim::RunRecord {
+        study: study.to_string(),
+        cell: cell.to_string(),
+        rate_rps,
+        n_arrived: m.n_arrived,
+        n_completed: m.n_completed,
+        n_rejected: m.n_rejected,
+        slo_attainment: m.slo_attainment,
+        slo_goodput_tps: m.slo_goodput_tps,
+        throughput_tps: m.throughput_tps,
+        ttft_p99_s: m.ttft.p99,
+        tpot_p99_s: m.tpot.p99,
+        makespan_s: m.makespan_s,
+        energy_pj: m.energy_pj,
+        truncated: m.truncated,
+        degraded: false,
+    }
+}
+
+/// Collapse one fleet-level study cell into a structured run record.
+pub fn fleet_run_record(
+    study: &str,
+    cell: &str,
+    rate_rps: f64,
+    m: &sim::FleetMetrics,
+) -> sim::RunRecord {
+    sim::RunRecord {
+        study: study.to_string(),
+        cell: cell.to_string(),
+        rate_rps,
+        n_arrived: m.n_arrived,
+        n_completed: m.n_completed,
+        n_rejected: m.n_rejected,
+        slo_attainment: m.slo_attainment,
+        slo_goodput_tps: m.slo_goodput_tps,
+        throughput_tps: m.throughput_tps,
+        ttft_p99_s: m.ttft.p99,
+        tpot_p99_s: m.tpot.p99,
+        makespan_s: m.makespan_s,
+        energy_pj: m.energy_pj,
+        truncated: m.truncated,
+        degraded: false,
+    }
+}
+
+/// One run record per [`sim_serving_study`] cell.
+pub fn sim_study_records(rows: &[SimStudyRow]) -> Vec<sim::RunRecord> {
+    rows.iter()
+        .map(|r| serving_run_record("sim-study", r.strategy.name(), r.rate_rps, &r.metrics))
+        .collect()
+}
+
+/// One run record per [`kv_paging_study`] cell.
+pub fn kv_study_records(rows: &[KvStudyRow]) -> Vec<sim::RunRecord> {
+    rows.iter()
+        .map(|r| serving_run_record("kv-study", &r.kv.describe(), r.rate_rps, &r.metrics))
+        .collect()
+}
+
+/// One run record per [`fleet_study`] cell.
+pub fn fleet_study_records(rows: &[FleetStudyRow]) -> Vec<sim::RunRecord> {
+    rows.iter()
+        .map(|r| fleet_run_record("fleet-study", &r.fleet.describe(), r.rate_rps, &r.metrics))
+        .collect()
+}
+
+/// One run record per [`frontend_study`] cell.
+pub fn frontend_study_records(rows: &[FrontendStudyRow]) -> Vec<sim::RunRecord> {
+    rows.iter()
+        .map(|r| fleet_run_record("frontend-study", r.key, r.rate_rps, &r.metrics))
+        .collect()
+}
+
+/// One run record per [`fault_study`] cell.
+pub fn fault_study_records(rows: &[FaultStudyRow]) -> Vec<sim::RunRecord> {
+    rows.iter()
+        .map(|r| fleet_run_record("fault-study", r.key, r.rate_rps, &r.metrics))
+        .collect()
+}
+
+/// Re-run [`sim_serving_study`]'s representative cell (chunked prefill
+/// at the highest swept rate) with a recording telemetry sink, under
+/// exactly the study's protocol (same probe calibration, SLOs and
+/// stream), and return `(cell label, rate, collector)`. The traced
+/// replay is bitwise-identical to the study cell, so the trace describes
+/// precisely the run the study reported.
+pub fn sim_study_traced_cell(
+    scene: &SimScene,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    seed: u64,
+) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+    let model = scene.model();
+    let spec = scene.spec();
+    let probe = sim::probe(&model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        probe.sweep_rates()
+    } else {
+        scene.rates_rps.clone()
+    };
+    let rate = rates.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let strategy = ServingStrategy::ChunkedPrefill;
+    let stream = scene.stream(rate, seed);
+    let sink = sim::SpanCollector::shared();
+    let shared: sim::SharedSink = sink.clone();
+    sim::simulate_serving_traced(&stream, &model, hw, &cfg.with_strategy(strategy), &shared);
+    (strategy.name().to_string(), rate, sink)
+}
+
+/// Re-run [`fleet_study`]'s representative cell (the last fleet shape —
+/// the disaggregated split in [`default_fleet_shapes`] — at the highest
+/// swept rate) with a recording telemetry sink, under exactly the
+/// study's protocol. Returns `(cell label, rate, collector)`.
+pub fn fleet_study_traced_cell(
+    scene: &FleetScene,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    fleets: &[sim::FleetConfig],
+    seed: u64,
+) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+    let model = scene.model();
+    let spec = scene.spec();
+    let probe = sim::probe(&model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let fleet_mu = scene.n_replicas as f64 * probe.capacity_rps();
+        vec![0.4 * fleet_mu, 0.8 * fleet_mu, 1.3 * fleet_mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let rate = rates.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let fleet = fleets.last().expect("at least one fleet shape").clone();
+    let stream = scene.stream(rate, seed);
+    let sink = sim::SpanCollector::shared();
+    let shared: sim::SharedSink = sink.clone();
+    sim::simulate_fleet_traced(&stream, &model, hw, &cfg, &fleet, &shared);
+    (fleet.describe(), rate, sink)
+}
+
+/// Re-run [`frontend_study`]'s representative cell (`jsq+shed+rebal` —
+/// the cell exercising both shed and rebalance telemetry — at the
+/// highest swept rate) with a recording sink, under exactly the study's
+/// protocol. Returns `(cell label, rate, collector)`.
+pub fn frontend_study_traced_cell(
+    scene: &FleetScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    knobs: &FrontendKnobs,
+    seed: u64,
+) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+    let spec = scene.spec();
+    let probe = sim::probe(model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let mu = scene.n_replicas.max(2) as f64 * probe.capacity_rps();
+        vec![0.8 * mu, 1.3 * mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let rate = rates.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let stream = sim::RequestStream::poisson(&spec, rate, scene.n_requests, seed);
+    let (key, fleet, hws, fe) = frontend_cells(scene, hw, &probe, knobs)
+        .into_iter()
+        .find(|c| c.0 == "jsq+shed+rebal")
+        .expect("cell set contains jsq+shed+rebal");
+    let sink = sim::SpanCollector::shared();
+    let shared: sim::SharedSink = sink.clone();
+    sim::simulate_fleet_frontend_traced(&stream, model, &hws, &cfg, &fleet, &fe, &shared);
+    (key.to_string(), rate, sink)
+}
+
+/// Re-run [`fault_study`]'s representative cell
+/// (`fault+failover+retry+drain` — the cell exercising crash, drain,
+/// failure and retry telemetry — at the highest swept rate) with a
+/// recording sink, under exactly the study's protocol. Returns
+/// `(cell label, rate, collector)`.
+pub fn fault_study_traced_cell(
+    scene: &FleetScene,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    base: &sim::SimConfig,
+    knobs: &FaultKnobs,
+    seed: u64,
+) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+    let spec = scene.spec();
+    let probe = sim::probe(model, hw, base, &spec);
+    let mut cfg = *base;
+    cfg.slo = probe.slo(3.0, 4.0);
+    let rates = if scene.rates_rps.is_empty() {
+        let mu = scene.n_replicas.max(2) as f64 * probe.capacity_rps();
+        vec![0.8 * mu, 1.3 * mu]
+    } else {
+        scene.rates_rps.clone()
+    };
+    let rate = rates.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let backoff = knobs.retry_base_prefills * probe.t_prefill_s;
+    let retry = sim::RetryPolicy::capped(knobs.retry_attempts.max(1), backoff, 10.0 * backoff);
+    let n = scene.n_replicas.max(2);
+    let stream = sim::RequestStream::poisson(&spec, rate, scene.n_requests, seed);
+    let schedule = sim::FaultSchedule::seeded(
+        n,
+        stream.horizon_s(),
+        knobs.n_crashes,
+        knobs.n_stragglers,
+        knobs.fault_seed,
+    );
+    let drain = sim::DrainSpec::new(
+        knobs.drain_lead_frac.max(0.0) * stream.horizon_s(),
+        knobs.handoff_s_per_token,
+        cfg.max_batch,
+    );
+    let (key, n_cell, res) = fault_cells(n, retry, drain, &schedule)
+        .into_iter()
+        .find(|c| c.0 == "fault+failover+retry+drain")
+        .expect("cell ladder contains fault+failover+retry+drain");
+    let fleet = sim::FleetConfig::homogeneous(n_cell, sim::RouterPolicy::JoinShortestQueue);
+    let hws = vec![hw.clone(); n_cell];
+    let sink = sim::SpanCollector::shared();
+    let shared: sim::SharedSink = sink.clone();
+    sim::simulate_fleet_faults_traced(
+        &stream,
+        model,
+        &hws,
+        &cfg,
+        &fleet,
+        &sim::Frontend::baseline(),
+        &res,
+        &shared,
+    );
+    (key.to_string(), rate, sink)
+}
+
+// ---------------------------------------------------------------------
 // Fig. 11 — ablations
 // ---------------------------------------------------------------------
 
@@ -1899,6 +2179,71 @@ mod tests {
         let headline = fault_study_headline(&rows);
         assert!(headline.contains("failover+retry+drain"), "{headline}");
         assert!(headline.contains("spare"), "{headline}");
+    }
+
+    #[test]
+    fn require_replicas_and_validate_rates_gate_cli_inputs() {
+        assert_eq!(require_replicas(2, "fleet-study"), Ok(2));
+        assert_eq!(require_replicas(5, "fault-study"), Ok(5));
+        let err = require_replicas(1, "fleet-study").unwrap_err();
+        assert!(err.contains("fleet-study"), "{err}");
+        assert!(err.contains("--replicas"), "{err}");
+        assert!(require_replicas(0, "frontend-study").is_err());
+        assert!(validate_rates(&[]).is_ok());
+        assert!(validate_rates(&[0.5, 2.0]).is_ok());
+        assert!(validate_rates(&[0.0]).is_err());
+        assert!(validate_rates(&[-1.0]).is_err());
+        assert!(validate_rates(&[f64::NAN]).is_err());
+        assert!(validate_rates(&[f64::INFINITY]).is_err());
+        assert!(validate_rates(&[1.0, -2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn study_records_cover_every_cell() {
+        let mut scene = SimScene::new("sharegpt", 64.0, 4);
+        scene.rates_rps = vec![2.0, 8.0];
+        let hw = sim_default_hw(64.0);
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let rows = sim_serving_study(&scene, &hw, &cfg, 3);
+        let recs = sim_study_records(&rows);
+        assert_eq!(recs.len(), rows.len());
+        for (rec, row) in recs.iter().zip(&rows) {
+            assert_eq!(rec.study, "sim-study");
+            assert_eq!(rec.cell, row.strategy.name());
+            assert_eq!(rec.rate_rps.to_bits(), row.rate_rps.to_bits());
+            assert_eq!(rec.n_arrived, row.metrics.n_arrived);
+            assert!(!rec.degraded);
+            let line = rec.to_json();
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+            assert!(line.contains("\"study\":\"sim-study\""), "{line}");
+        }
+    }
+
+    #[test]
+    fn sim_study_traced_cell_replays_the_reported_cell() {
+        let mut scene = SimScene::new("sharegpt", 64.0, 4);
+        scene.rates_rps = vec![2.0, 8.0];
+        let hw = sim_default_hw(64.0);
+        let mut cfg = sim::SimConfig::new(ServingStrategy::ChunkedPrefill);
+        cfg.max_batch = 8;
+        cfg.eval_blocks = 1;
+        cfg.ctx_bucket = 512;
+        let (cell, rate, sink) = sim_study_traced_cell(&scene, &hw, &cfg, 3);
+        assert_eq!(cell, ServingStrategy::ChunkedPrefill.name());
+        assert_eq!(rate.to_bits(), 8.0f64.to_bits());
+        let c = sink.borrow();
+        assert!(c.n_finished() > 0, "traced replay finished no requests");
+        assert!(!c.events().is_empty());
+        // the trace must match what the study reported for that cell
+        let rows = sim_serving_study(&scene, &hw, &cfg, 3);
+        let row = rows
+            .iter()
+            .find(|r| r.strategy == ServingStrategy::ChunkedPrefill && r.rate_rps == rate)
+            .unwrap();
+        assert_eq!(c.n_finished(), row.metrics.n_completed);
     }
 
     #[test]

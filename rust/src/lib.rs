@@ -29,6 +29,7 @@ pub mod cost;
 pub mod dse;
 pub mod experiments;
 pub mod ga;
+pub mod log;
 pub mod mapping;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,58 @@
+//! Tiny leveled stderr logger for the CLI.
+//!
+//! Study tables and CSV stay on stdout (machine-parseable); all
+//! `[compass]` progress chatter goes through here to stderr, gated by
+//! a process-wide level: `--quiet` silences it, `-v` adds debug lines.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Quiet = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Progress chatter — on by default, silenced by `--quiet`.
+pub fn info(msg: &str) {
+    if level() >= Level::Info {
+        eprintln!("[compass] {msg}");
+    }
+}
+
+/// Extra detail — only under `-v`.
+pub fn debug(msg: &str) {
+    if level() >= Level::Debug {
+        eprintln!("[compass] {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let prev = level();
+        set_level(Level::Quiet);
+        assert_eq!(level(), Level::Quiet);
+        assert!(Level::Debug > Level::Info && Level::Info > Level::Quiet);
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(prev);
+    }
+}

@@ -83,6 +83,16 @@ flags:
                       the same faults strike every cell (default 17)
   --retry-attempts N  fault-study total offers per request in the retry
                       cells (default 3)
+  --trace-out P       sim/fleet/frontend/fault-study: re-run the
+                      representative cell (highest rate) with telemetry
+                      attached and write Chrome trace-event JSON to P
+                      (open in ui.perfetto.dev or chrome://tracing)
+  --record P          append one JSON line per study cell to P (JSONL
+                      run records; file truncated at startup)
+  --profile           time simulator hot paths (wall clock); self-time
+                      table printed to stderr at exit
+  --quiet             silence [compass] stderr chatter
+  -v                  verbose [compass] stderr chatter
 ";
 
 struct Args {
@@ -112,6 +122,11 @@ struct Args {
     stragglers: usize,
     fault_seed: u64,
     retry_attempts: usize,
+    trace_out: Option<String>,
+    record: Option<String>,
+    profile: bool,
+    quiet: bool,
+    verbose: bool,
 }
 
 fn parse_args() -> Args {
@@ -142,6 +157,11 @@ fn parse_args() -> Args {
         stragglers: 1,
         fault_seed: 17,
         retry_attempts: 3,
+        trace_out: None,
+        record: None,
+        profile: false,
+        quiet: false,
+        verbose: false,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut it = argv.iter().peekable();
@@ -182,6 +202,11 @@ fn parse_args() -> Args {
             "--stragglers" => args.stragglers = next_val(&mut it, a),
             "--fault-seed" => args.fault_seed = next_val(&mut it, a),
             "--retry-attempts" => args.retry_attempts = next_val(&mut it, a),
+            "--trace-out" => args.trace_out = Some(next_str(&mut it, a)),
+            "--record" => args.record = Some(next_str(&mut it, a)),
+            "--profile" => args.profile = true,
+            "--quiet" => args.quiet = true,
+            "-v" | "--verbose" => args.verbose = true,
             "-h" | "--help" => {
                 print!("{HELP}");
                 std::process::exit(0);
@@ -197,7 +222,48 @@ fn parse_args() -> Args {
         print!("{HELP}");
         std::process::exit(2);
     }
+    if let Err(e) = exp::validate_rates(&args.rates) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     args
+}
+
+/// Exit with a usage error when a fleet-shaped study gets fewer than
+/// two replicas (silent clamping hid sizing mistakes).
+fn replicas_or_exit(n: usize, study: &str) -> usize {
+    exp::require_replicas(n, study).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
+fn write_trace(path: &str, cell: &str, rate: f64, json: &str) {
+    compass::log::info(&format!("traced representative cell {cell} @ {rate:.3} req/s"));
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("[compass] trace write failed: {e}");
+        std::process::exit(1);
+    }
+    compass::log::info(&format!("wrote {path}"));
+}
+
+fn append_records(out: &Option<String>, recs: &[compass::sim::RunRecord]) {
+    use std::io::Write;
+    let Some(path) = out else { return };
+    let mut f = match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("[compass] record open failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    for r in recs {
+        if let Err(e) = writeln!(f, "{}", r.to_json()) {
+            eprintln!("[compass] record write failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    compass::log::info(&format!("appended {} run records to {path}", recs.len()));
 }
 
 fn next_str(it: &mut std::iter::Peekable<std::slice::Iter<String>>, flag: &str) -> String {
@@ -226,7 +292,7 @@ fn save(t: &Table, out_dir: &Option<String>, name: &str) {
         if let Err(e) = t.write_csv(&path) {
             eprintln!("[compass] csv write failed: {e}");
         } else {
-            println!("[compass] wrote {path}");
+            compass::log::info(&format!("wrote {path}"));
         }
     }
 }
@@ -249,6 +315,11 @@ fn run_sim_study(args: &Args) {
         &args.out_dir,
         "sim_study",
     );
+    append_records(&args.record, &exp::sim_study_records(&rows));
+    if let Some(path) = &args.trace_out {
+        let (cell, rate, sink) = exp::sim_study_traced_cell(&scene, &hw, &cfg, args.seed);
+        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+    }
     println!(
         "\n{}",
         exp::sim_study_occupancy(
@@ -260,13 +331,7 @@ fn run_sim_study(args: &Args) {
 }
 
 fn run_fleet_study(args: &Args) {
-    // the comparison set (round-robin vs JSQ vs a P+D split) needs at
-    // least two replicas; keep the scene in lockstep so per-replica
-    // sizing and the auto rate sweep match the simulated fleet
-    let replicas = args.replicas.max(2);
-    if replicas != args.replicas {
-        eprintln!("[compass] fleet-study needs >= 2 replicas; using {replicas}");
-    }
+    let replicas = replicas_or_exit(args.replicas, "fleet-study");
     let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
     scene.rates_rps = args.rates.clone();
     let hw = exp::sim_default_hw(scene.tops_per_replica());
@@ -286,13 +351,16 @@ fn run_fleet_study(args: &Args) {
         &args.out_dir,
         "fleet_study",
     );
+    append_records(&args.record, &exp::fleet_study_records(&rows));
+    if let Some(path) = &args.trace_out {
+        let (cell, rate, sink) =
+            exp::fleet_study_traced_cell(&scene, &hw, &cfg, &shapes, args.seed);
+        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+    }
 }
 
 fn run_frontend_study(args: &Args) {
-    let replicas = args.replicas.max(2);
-    if replicas != args.replicas {
-        eprintln!("[compass] frontend-study needs >= 2 replicas; using {replicas}");
-    }
+    let replicas = replicas_or_exit(args.replicas, "frontend-study");
     let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
     scene.rates_rps = args.rates.clone();
     let hw = exp::sim_default_hw(scene.tops_per_replica());
@@ -344,14 +412,27 @@ fn run_frontend_study(args: &Args) {
         &args.out_dir,
         "frontend_study",
     );
+    append_records(&args.record, &exp::frontend_study_records(&rows));
+    if let Some(path) = &args.trace_out {
+        if args.trace_file.is_some() {
+            eprintln!("--trace-out replays the synthetic sweep's representative cell and cannot be combined with --trace-file");
+            std::process::exit(2);
+        }
+        let (cell, rate, sink) = exp::frontend_study_traced_cell(
+            &scene,
+            &scene.model(),
+            &hw,
+            &cfg,
+            &knobs,
+            args.seed,
+        );
+        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+    }
     println!("\n{}", exp::frontend_study_headline(&rows));
 }
 
 fn run_fault_study(args: &Args) {
-    let replicas = args.replicas.max(2);
-    if replicas != args.replicas {
-        eprintln!("[compass] fault-study needs >= 2 replicas; using {replicas}");
-    }
+    let replicas = replicas_or_exit(args.replicas, "fault-study");
     let mut scene = exp::FleetScene::new(&args.trace, args.tops, replicas, args.requests);
     scene.rates_rps = args.rates.clone();
     let hw = exp::sim_default_hw(scene.tops_per_replica());
@@ -383,6 +464,18 @@ fn run_fault_study(args: &Args) {
         &args.out_dir,
         "fault_study",
     );
+    append_records(&args.record, &exp::fault_study_records(&rows));
+    if let Some(path) = &args.trace_out {
+        let (cell, rate, sink) = exp::fault_study_traced_cell(
+            &scene,
+            &scene.model(),
+            &hw,
+            &cfg,
+            &knobs,
+            args.seed,
+        );
+        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+    }
     println!("\n{}", exp::fault_study_headline(&rows));
 }
 
@@ -416,6 +509,7 @@ fn run_kv_study(args: &Args) {
     let specs = exp::default_kv_specs(args.block_tokens, args.prefix);
     let rows = exp::kv_paging_study(&scene, &hw, &cfg, &specs, args.prefix, args.seed);
     save(&exp::kv_study_table(&scene, &rows), &args.out_dir, "kv_study");
+    append_records(&args.record, &exp::kv_study_records(&rows));
     // headline: best non-baseline layout vs the fp16 token-granular
     // baseline at the overload (highest) rate
     let hi = rows
@@ -447,6 +541,47 @@ fn run_kv_study(args: &Args) {
 
 fn main() {
     let args = parse_args();
+    compass::log::set_level(if args.quiet {
+        compass::log::Level::Quiet
+    } else if args.verbose {
+        compass::log::Level::Debug
+    } else {
+        compass::log::Level::Info
+    });
+    if let Some(path) = &args.trace_out {
+        const TRACEABLE: [&str; 4] =
+            ["sim-study", "fleet-study", "frontend-study", "fault-study"];
+        if !TRACEABLE.contains(&args.cmd.as_str()) {
+            eprintln!(
+                "--trace-out ({path}) is supported by {} only",
+                TRACEABLE.join("/")
+            );
+            std::process::exit(2);
+        }
+    }
+    if let Some(path) = &args.record {
+        const RECORDABLE: [&str; 6] = [
+            "sim-study",
+            "fleet-study",
+            "kv-study",
+            "frontend-study",
+            "fault-study",
+            "all",
+        ];
+        if !RECORDABLE.contains(&args.cmd.as_str()) {
+            eprintln!(
+                "--record ({path}) is supported by {} only",
+                RECORDABLE.join("/")
+            );
+            std::process::exit(2);
+        }
+        // truncate once so a run's records never mix with a prior run's
+        if let Err(e) = std::fs::write(path, "") {
+            eprintln!("[compass] record open failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    compass::sim::profile::set_enabled(args.profile);
     let cfg = if args.full {
         DseConfig::paper()
     } else {
@@ -458,7 +593,7 @@ fn main() {
         match Runtime::from_env() {
             Ok(rt) => Some(rt),
             Err(e) => {
-                eprintln!("[compass] PJRT unavailable ({e}); using native GP");
+                compass::log::info(&format!("PJRT unavailable ({e}); using native GP"));
                 None
             }
         }
@@ -567,5 +702,13 @@ fn main() {
             std::process::exit(2);
         }
     }
-    eprintln!("[compass] done in {:.1}s", t0.elapsed().as_secs_f64());
+    if args.profile {
+        let report = compass::sim::profile::take_report();
+        if report.is_empty() {
+            eprintln!("[compass] profile: no scopes recorded");
+        } else {
+            eprint!("{report}");
+        }
+    }
+    compass::log::info(&format!("done in {:.1}s", t0.elapsed().as_secs_f64()));
 }

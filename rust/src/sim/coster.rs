@@ -119,14 +119,22 @@ impl<'a> BatchCoster<'a> {
         self.lookups
     }
 
+    /// Memo hits so far: every lookup that did not simulate a new
+    /// distinct shape.
+    pub fn hits(&self) -> usize {
+        self.lookups - self.memo.len()
+    }
+
     /// Cost one iteration batch; memo hits never re-simulate.
     pub fn cost(&mut self, batch: &[Request]) -> IterCost {
         debug_assert!(!batch.is_empty(), "cannot cost an empty batch");
         self.lookups += 1;
         let key = self.key_of(batch);
         if let Some(c) = self.memo.get(&key) {
+            let _p = super::telemetry::profile::scope("coster.memo_hit");
             return *c;
         }
+        let _p = super::telemetry::profile::scope("coster.memo_miss");
         // the quantized key *is* the costed batch: decode it back
         let qbatch: Vec<Request> = key
             .iter()
@@ -222,11 +230,13 @@ mod tests {
         let b = c.cost(&[Request::decode(97), Request::decode(128)]);
         assert_eq!(c.distinct_shapes(), 1);
         assert_eq!(c.lookups(), 2);
+        assert_eq!(c.hits(), 1);
         assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
         assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
         // crossing a bucket boundary is a new shape
         c.cost(&[Request::decode(200), Request::decode(128)]);
         assert_eq!(c.distinct_shapes(), 2);
+        assert_eq!(c.hits(), 1);
     }
 
     #[test]

@@ -47,6 +47,17 @@ pub enum FaultKind {
     LinkDegrade { duration_s: f64, factor: f64 },
 }
 
+impl FaultKind {
+    /// Short label for trace instants (`sim::telemetry`) and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::LinkDegrade { .. } => "link",
+        }
+    }
+}
+
 /// One scheduled fault event.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultSpec {
@@ -377,6 +388,19 @@ impl Default for FaultStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_kind_labels() {
+        assert_eq!(FaultKind::Crash { recovery_s: 1.0 }.label(), "crash");
+        assert_eq!(
+            FaultKind::Straggler { duration_s: 1.0, slowdown: 2.0 }.label(),
+            "straggler"
+        );
+        assert_eq!(
+            FaultKind::LinkDegrade { duration_s: 1.0, factor: 2.0 }.label(),
+            "link"
+        );
+    }
 
     #[test]
     fn backoff_is_capped_exponential() {

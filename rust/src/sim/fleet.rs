@@ -33,9 +33,10 @@ use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
 use super::faults::FaultStats;
-use super::frontend::{simulate_fleet_frontend, Frontend};
+use super::frontend::{simulate_fleet_frontend, simulate_fleet_frontend_traced, Frontend};
 use super::metrics::{outcome_stats, LatencyStats, RequestOutcome, ServingMetrics};
 use super::stream::RequestStream;
+use super::telemetry::SharedSink;
 use super::SimConfig;
 
 /// Front-end routing policy of the fleet.
@@ -269,6 +270,21 @@ pub fn simulate_fleet(
 ) -> FleetMetrics {
     let hws = vec![hw.clone(); fleet.total_replicas()];
     simulate_fleet_frontend(stream, model, &hws, cfg, fleet, &Frontend::baseline())
+}
+
+/// [`simulate_fleet`] with a telemetry sink attached to every replica.
+/// Emission happens after each step's arithmetic, so the metrics are
+/// bitwise-identical to the untraced run.
+pub fn simulate_fleet_traced(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    sink: &SharedSink,
+) -> FleetMetrics {
+    let hws = vec![hw.clone(); fleet.total_replicas()];
+    simulate_fleet_frontend_traced(stream, model, &hws, cfg, fleet, &Frontend::baseline(), sink)
 }
 
 /// Collapse per-replica metrics plus stitched per-request outcomes into

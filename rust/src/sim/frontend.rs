@@ -46,6 +46,7 @@ use super::kv::KvCache;
 use super::metrics::RequestOutcome;
 use super::sched::Scheduler;
 use super::stream::{RequestStream, TimedRequest};
+use super::telemetry::{EventKind, SharedSink};
 use super::{SimConfig, SimProbe};
 
 /// What a router or admission policy may observe about one replica at
@@ -341,6 +342,12 @@ struct Pool<'a> {
     /// `false` outside fault injection, where every health check
     /// degenerates to the pre-fault behavior.
     down: Vec<bool>,
+    /// Telemetry sink for pool-level events (sheds, failures, fault
+    /// instants); `None` by default. See [`Pool::set_sink`].
+    sink: Option<SharedSink>,
+    /// Trace replica index of `reps[0]` (a disaggregated decode pool's
+    /// replicas number after the prefill pool's).
+    replica_base: usize,
 }
 
 /// A drained pool: per-replica metrics plus per-request outcomes
@@ -349,6 +356,9 @@ struct Pool<'a> {
 struct PoolResult {
     per_replica: Vec<super::metrics::ServingMetrics>,
     outcomes: Vec<(usize, RequestOutcome)>,
+    /// Final-holder replica of each `outcomes` entry (parallel vector);
+    /// the disaggregated driver attributes handoff-link telemetry to it.
+    outcome_reps: Vec<usize>,
     origins: HashMap<usize, Origin>,
     n_rebalanced: usize,
 }
@@ -372,6 +382,41 @@ impl<'a> Pool<'a> {
             n_rebalanced: 0,
             migration_cap,
             down: vec![false; n],
+            sink: None,
+            replica_base: 0,
+        }
+    }
+
+    /// Attach a telemetry sink to every replica scheduler (as trace
+    /// replicas `replica_base..replica_base + reps.len()`) and keep a
+    /// handle for the pool-level events the schedulers cannot see
+    /// (front-door sheds, crash failures, fault instants). Disabled
+    /// sinks are dropped, keeping the untraced path free.
+    fn set_sink(&mut self, sink: &SharedSink, replica_base: usize) {
+        if !sink.borrow().enabled() {
+            return;
+        }
+        self.replica_base = replica_base;
+        for (i, s) in self.reps.iter_mut().enumerate() {
+            s.set_sink(sink.clone(), replica_base + i);
+        }
+        self.sink = Some(sink.clone());
+    }
+
+    /// Record a pool-level request event against local replica
+    /// `local_rep` (trace replica `replica_base + local_rep`).
+    fn emit(&self, local_rep: usize, t_s: f64, ext_id: usize, kind: EventKind) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut()
+                .event(self.replica_base + local_rep, t_s, ext_id, kind);
+        }
+    }
+
+    /// Record a replica-level instant (crash/drain/straggler/link).
+    fn instant(&self, local_rep: usize, t_s: f64, label: &'static str) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut()
+                .instant(self.replica_base + local_rep, t_s, label);
         }
     }
 
@@ -499,14 +544,17 @@ impl<'a> Pool<'a> {
         }
         let mut per_replica = Vec::with_capacity(self.reps.len());
         let mut outcomes: Vec<(usize, RequestOutcome)> = Vec::new();
-        for s in self.reps {
+        let mut outcome_reps: Vec<usize> = Vec::new();
+        for (ri, s) in self.reps.into_iter().enumerate() {
             let r = s.finish();
+            outcome_reps.extend(std::iter::repeat(ri).take(r.outcomes.len()));
             outcomes.extend(r.outcomes);
             per_replica.push(r.metrics);
         }
         PoolResult {
             per_replica,
             outcomes,
+            outcome_reps,
             origins: self.origins,
             n_rebalanced: self.n_rebalanced,
         }
@@ -606,14 +654,42 @@ pub fn simulate_fleet_frontend(
     fleet: &FleetConfig,
     fe: &Frontend,
 ) -> FleetMetrics {
+    run_fleet_frontend(stream, model, hws, cfg, fleet, fe, None)
+}
+
+/// [`simulate_fleet_frontend`] with a telemetry sink attached to every
+/// replica (prefill pool first for disaggregated shapes, so trace
+/// replica indices match `hws`). All emission happens after each step's
+/// arithmetic, so the metrics are bitwise-identical to the untraced run.
+pub fn simulate_fleet_frontend_traced(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+    sink: &SharedSink,
+) -> FleetMetrics {
+    run_fleet_frontend(stream, model, hws, cfg, fleet, fe, Some(sink))
+}
+
+fn run_fleet_frontend(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+    sink: Option<&SharedSink>,
+) -> FleetMetrics {
     assert_eq!(
         hws.len(),
         fleet.total_replicas(),
         "one HwConfig per replica (prefill pool first for disaggregated shapes)"
     );
     match fleet.router {
-        RouterPolicy::PrefillDecode => run_disaggregated(stream, model, hws, cfg, fleet, fe),
-        _ => run_homogeneous(stream, model, hws, cfg, fleet, fe),
+        RouterPolicy::PrefillDecode => run_disaggregated(stream, model, hws, cfg, fleet, fe, sink),
+        _ => run_homogeneous(stream, model, hws, cfg, fleet, fe, sink),
     }
 }
 
@@ -624,6 +700,7 @@ fn run_homogeneous(
     cfg: &SimConfig,
     fleet: &FleetConfig,
     fe: &Frontend,
+    sink: Option<&SharedSink>,
 ) -> FleetMetrics {
     let n_rep = fleet.n_replicas.max(1);
     let costers = pool_costers(model, &hws[..n_rep], cfg);
@@ -639,12 +716,16 @@ fn run_homogeneous(
         *cfg,
         4 * stream.requests.len() + 16,
     );
+    if let Some(s) = sink {
+        pool.set_sink(s, 0);
+    }
     let mut shed: Vec<RequestOutcome> = Vec::new();
     for r in &stream.requests {
         pool.deliver_due(r.arrival_s);
         pool.advance_all(r.arrival_s);
         let (k, obs) = pool.route(r);
         if fe.admission.sheds(r, &obs, cfg) {
+            pool.emit(k, r.arrival_s, r.id, EventKind::Shed);
             shed.push(shed_outcome(r));
         } else {
             pool.reps[k].inject(r.id, r.arrival_s, r.input_len, r.output_len);
@@ -683,7 +764,9 @@ fn run_disaggregated(
     cfg: &SimConfig,
     fleet: &FleetConfig,
     fe: &Frontend,
+    sink: Option<&SharedSink>,
 ) -> FleetMetrics {
+    let sink = sink.filter(|s| s.borrow().enabled());
     let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
     let costers = pool_costers(model, hws, cfg);
     // spec-aware footprint probe (paging + sharing + dtype), the same
@@ -703,11 +786,15 @@ fn run_disaggregated(
         .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
         .collect();
     let mut pre = Pool::new(pre_reps, Box::<JsqRouter>::default(), None, *cfg, 0);
+    if let Some(s) = sink {
+        pre.set_sink(s, 0);
+    }
     let mut shed: Vec<RequestOutcome> = Vec::new();
     for r in &stream.requests {
         pre.advance_all(r.arrival_s);
         let (k, obs) = pre.route(r);
         if fe.admission.sheds(r, &obs, cfg) {
+            pre.emit(k, r.arrival_s, r.id, EventKind::Shed);
             shed.push(shed_outcome(r));
             continue;
         }
@@ -721,6 +808,7 @@ fn run_disaggregated(
     let pre_res = pre.finish();
     let mut per_replica = pre_res.per_replica;
     let pre_outcomes = pre_res.outcomes;
+    let pre_outcome_reps = pre_res.outcome_reps;
 
     // --- KV handoff: completed prefills migrate to the decode pool
     // after `ctx * handoff_s_per_token` seconds, in global time order ---
@@ -730,7 +818,7 @@ fn run_disaggregated(
         .map(|r| (r.id, r.output_len.max(1)))
         .collect();
     let mut migs: Vec<Migration> = Vec::new();
-    for &(id, o) in &pre_outcomes {
+    for (i, &(id, o)) in pre_outcomes.iter().enumerate() {
         let (Some(finish), false) = (o.finish_s, o.rejected) else {
             continue;
         };
@@ -742,6 +830,12 @@ fn run_disaggregated(
         // whole blocks migrate: the link moves the context rounded up to
         // the KV block size (exact at block_tokens = 1)
         let link_tokens = cfg.kv.block_round(ctx);
+        // the handoff link opens at the prefill replica's finish time;
+        // the matching MigrateIn comes from the decode-side scheduler
+        if let Some(s) = sink {
+            s.borrow_mut()
+                .event(pre_outcome_reps[i], finish, id, EventKind::MigrateOut);
+        }
         migs.push(Migration {
             t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
             id,
@@ -765,6 +859,9 @@ fn run_disaggregated(
         *cfg,
         4 * migs.len() + 16,
     );
+    if let Some(s) = sink {
+        dec.set_sink(s, n_pre);
+    }
     for m in &migs {
         dec.deliver_due(m.t);
         dec.advance_all(m.t);
@@ -898,7 +995,7 @@ impl<'a> FaultDriver<'a> {
     /// into a crash, or routed into a dead replica with failover off):
     /// schedule a backoff retry if attempts remain, else count it
     /// permanently lost.
-    fn fail(&mut self, id: usize, t: f64) {
+    fn fail(&mut self, id: usize, t: f64, rep: usize) {
         self.stats.n_failed += 1;
         // any in-flight migration origin died with the attempt; the
         // retry must not inherit its first-token time
@@ -907,9 +1004,11 @@ impl<'a> FaultDriver<'a> {
         let (attempts, req) = (tr.attempts, tr.req);
         if attempts < self.retry.max_attempts {
             self.stats.n_retried += 1;
+            self.pool.emit(rep, t, id, EventKind::Fail);
             self.push_retry(t + self.retry.delay_s(attempts), id);
         } else {
             self.stats.n_lost += 1;
+            self.pool.emit(rep, t, id, EventKind::Loss);
             self.lost_final.push(RequestOutcome {
                 arrival_s: req.arrival_s,
                 input_len: req.input_len.max(1),
@@ -924,14 +1023,16 @@ impl<'a> FaultDriver<'a> {
     /// The admission gate shed this offer: back off and retry if
     /// attempts remain, else it is a terminal shed (exactly the
     /// non-fault path when retry is disabled).
-    fn shed_or_retry(&mut self, id: usize, t: f64) {
+    fn shed_or_retry(&mut self, id: usize, t: f64, rep: usize) {
         let tr = &self.tracks[&id];
         let (attempts, req) = (tr.attempts, tr.req);
         if attempts < self.retry.max_attempts {
             self.stats.n_retried += 1;
+            self.pool.emit(rep, t, id, EventKind::Fail);
             self.push_retry(t + self.retry.delay_s(attempts), id);
         } else {
             self.n_shed += 1;
+            self.pool.emit(rep, t, id, EventKind::Shed);
             self.shed_final.push(shed_outcome(&req));
         }
     }
@@ -963,7 +1064,7 @@ impl<'a> FaultDriver<'a> {
             // this is the identity remap of the plain route
             let healthy: Vec<usize> = (0..obs.len()).filter(|&k| !self.pool.down[k]).collect();
             if healthy.is_empty() {
-                self.fail(id, t);
+                self.fail(id, t, 0);
                 return;
             }
             let hobs: Vec<ReplicaObs> = healthy.iter().map(|&k| obs[k]).collect();
@@ -975,13 +1076,13 @@ impl<'a> FaultDriver<'a> {
             // attracts every request until it recovers)
             let k = self.pool.router.route(&r, &obs).min(obs.len() - 1);
             if self.pool.down[k] {
-                self.fail(id, t);
+                self.fail(id, t, k);
                 return;
             }
             k
         };
         if self.admission.sheds(&r, &obs[k], &self.cfg) {
-            self.shed_or_retry(id, t);
+            self.shed_or_retry(id, t, k);
         } else {
             self.pool.reps[k].inject(id, t, r.input_len, r.output_len);
         }
@@ -1002,14 +1103,15 @@ impl<'a> FaultDriver<'a> {
             }
         }
         for id in dead {
-            self.fail(id, t);
+            self.fail(id, t, rep);
         }
+        self.pool.instant(rep, t, "crash");
         let failed = self.pool.reps[rep].crash(t);
         self.pool.down[rep] = true;
         self.up_at[rep] = t + recovery_s.max(0.0);
         self.stats.n_crashes += 1;
         for f in failed {
-            self.fail(f.ext_id, t);
+            self.fail(f.ext_id, t, rep);
         }
     }
 
@@ -1023,6 +1125,7 @@ impl<'a> FaultDriver<'a> {
             return;
         }
         self.step_to(t);
+        self.pool.instant(rep, t, "drain");
         for _ in 0..d.max_requests {
             let Some((ctx, rest)) = self.pool.reps[rep].peek_youngest_decoding() else {
                 break;
@@ -1086,6 +1189,39 @@ pub fn simulate_fleet_faults(
     fe: &Frontend,
     res: &ResilienceSpec,
 ) -> FleetMetrics {
+    run_fleet_faults(stream, model, hws, cfg, fleet, fe, res, None)
+}
+
+/// [`simulate_fleet_faults`] with a telemetry sink attached: request
+/// lifecycle spans plus failure events (`Fail`/`Loss`/`Shed`) and
+/// replica instants (`crash`/`drain`/`straggler`/`link`). Emission
+/// happens after each step's arithmetic, so the metrics are
+/// bitwise-identical to the untraced run.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_faults_traced(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+    res: &ResilienceSpec,
+    sink: &SharedSink,
+) -> FleetMetrics {
+    run_fleet_faults(stream, model, hws, cfg, fleet, fe, res, Some(sink))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_fleet_faults(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hws: &[HwConfig],
+    cfg: &SimConfig,
+    fleet: &FleetConfig,
+    fe: &Frontend,
+    res: &ResilienceSpec,
+    sink: Option<&SharedSink>,
+) -> FleetMetrics {
     assert_eq!(
         hws.len(),
         fleet.total_replicas(),
@@ -1102,13 +1238,16 @@ pub fn simulate_fleet_faults(
         .zip(&costers)
         .map(|(hw, c)| Scheduler::with_coster(model, hw, cfg, c.clone()))
         .collect();
-    let pool = Pool::new(
+    let mut pool = Pool::new(
         reps,
         router_for(fleet.router),
         fe.rebalance,
         *cfg,
         4 * stream.requests.len() + 16,
     );
+    if let Some(s) = sink {
+        pool.set_sink(s, 0);
+    }
     let mut drv = FaultDriver {
         pool,
         admission: fe.admission,
@@ -1198,9 +1337,11 @@ pub fn simulate_fleet_faults(
                     slowdown,
                 } => {
                     drv.step_to(t);
+                    drv.pool.instant(rep, t, "straggler");
                     drv.pool.reps[rep].set_slowdown(until_s, slowdown);
                 }
                 FaultEv::LinkSet { factor } => {
+                    drv.pool.instant(0, t, "link");
                     drv.link_factor = factor;
                     if let Some(rb) = drv.pool.rebalance.as_mut() {
                         rb.handoff_s_per_token = drv.base_handoff * factor;

@@ -228,6 +228,17 @@ struct Plan {
     lease_blocks: u64,
 }
 
+/// Point-in-time KV pressure gauges (see [`KvCache::gauges`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvGauges {
+    pub frac: f64,
+    pub fragmentation: f64,
+    pub used_blocks: u64,
+    pub reserved_blocks: u64,
+    pub free_blocks: u64,
+    pub shared_tokens: u64,
+}
+
 /// The paged KV cache of one scheduler (one package).
 #[derive(Debug, Clone)]
 pub struct KvCache {
@@ -336,6 +347,20 @@ impl KvCache {
     /// Times the shared prefix was (re-)materialized into blocks.
     pub fn prefix_materializations(&self) -> usize {
         self.prefix_materializations
+    }
+
+    /// One-shot snapshot of the cache's pressure gauges — the telemetry
+    /// layer's per-replica KV signal (`sim::telemetry`), equivalent to
+    /// calling the individual accessors at one instant.
+    pub fn gauges(&self) -> KvGauges {
+        KvGauges {
+            frac: self.frac(),
+            fragmentation: self.fragmentation(),
+            used_blocks: self.used_blocks(),
+            reserved_blocks: self.reserved_blocks(),
+            free_blocks: self.free_blocks(),
+            shared_tokens: self.shared_tokens(),
+        }
     }
 
     /// Whether a request of this shape could ever be served, even alone
@@ -711,6 +736,25 @@ mod tests {
         // token-granular transfer is exact
         let mut kv1 = KvCache::new(KvSpec::token_granular(), 320);
         assert_eq!(kv1.admit_written(0, 50), 50);
+    }
+
+    #[test]
+    fn gauges_snapshot_matches_accessors() {
+        let mut kv = KvCache::new(KvSpec::paged(16), 320);
+        kv.lease(0, 40, 40);
+        kv.write_chunk(0, 40);
+        kv.admit_written(1, 30);
+        let g = kv.gauges();
+        assert_eq!(g.frac.to_bits(), kv.frac().to_bits());
+        assert_eq!(g.fragmentation.to_bits(), kv.fragmentation().to_bits());
+        assert_eq!(g.used_blocks, kv.used_blocks());
+        assert_eq!(g.reserved_blocks, kv.reserved_blocks());
+        assert_eq!(g.free_blocks, kv.free_blocks());
+        assert_eq!(g.shared_tokens, kv.shared_tokens());
+        assert_eq!(
+            g.used_blocks + g.reserved_blocks + g.free_blocks,
+            kv.capacity_blocks()
+        );
     }
 
     #[test]

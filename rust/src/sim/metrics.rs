@@ -34,6 +34,7 @@ impl LatencyStats {
         if xs.is_empty() {
             return LatencyStats::default();
         }
+        let _p = super::telemetry::profile::scope("metrics.latency_sort");
         let mut sorted = xs.to_vec();
         sorted.sort_unstable_by(|a, b| a.total_cmp(b));
         LatencyStats {
@@ -355,6 +356,7 @@ pub struct RunTotals {
 
 /// Aggregate raw scheduler state into `ServingMetrics`.
 pub fn finalize(outcomes: &[RequestOutcome], trace: TraceBuffer, t: &RunTotals) -> ServingMetrics {
+    let _p = super::telemetry::profile::scope("metrics.finalize");
     let s = outcome_stats(outcomes, &t.slo);
     let span = t.makespan_s.max(1e-12);
     let n_iter = trace.n_iters();

@@ -23,22 +23,29 @@ pub mod kv;
 pub mod metrics;
 pub mod sched;
 pub mod stream;
+pub mod telemetry;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
 pub use faults::{
     DrainSpec, FaultKind, FaultSchedule, FaultSpec, FaultStats, ResilienceSpec, RetryPolicy,
 };
-pub use fleet::{simulate_fleet, FleetConfig, FleetMetrics, RouterPolicy};
+pub use fleet::{simulate_fleet, simulate_fleet_traced, FleetConfig, FleetMetrics, RouterPolicy};
 pub use frontend::{
-    estimate_ttft, router_for, simulate_fleet_faults, simulate_fleet_frontend, AdmissionPolicy,
-    Frontend, JsqRouter, KvAwareRouter, RebalanceSpec, ReplicaObs, RoundRobinRouter, Router,
+    estimate_ttft, router_for, simulate_fleet_faults, simulate_fleet_faults_traced,
+    simulate_fleet_frontend, simulate_fleet_frontend_traced, AdmissionPolicy, Frontend, JsqRouter,
+    KvAwareRouter, RebalanceSpec, ReplicaObs, RoundRobinRouter, Router,
 };
-pub use kv::{EvictionPolicy, KvCache, KvDtype, KvSpec};
+pub use kv::{EvictionPolicy, KvCache, KvDtype, KvGauges, KvSpec};
 pub use metrics::{IterRecord, LatencyStats, RequestOutcome, ServingMetrics, SloSpec};
 pub use sched::{
-    simulate_serving, ExtractedRequest, FailedRequest, FrontendCounters, ReplicaResult, Scheduler,
+    simulate_serving, simulate_serving_traced, ExtractedRequest, FailedRequest, FrontendCounters,
+    ReplicaResult, Scheduler,
 };
 pub use stream::{RequestStream, TimedRequest};
+pub use telemetry::{
+    profile, EventKind, IterSpan, NullSink, RequestLane, RunRecord, SharedSink, Span,
+    SpanCollector, SpanKind, TraceSink,
+};
 
 use crate::arch::constants::CLOCK_HZ;
 use crate::arch::HwConfig;

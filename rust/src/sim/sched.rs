@@ -47,6 +47,7 @@ use super::coster::BatchCoster;
 use super::kv::{EvictionPolicy, KvCache};
 use super::metrics::{finalize, IterRecord, RequestOutcome, RunTotals, ServingMetrics, TraceBuffer};
 use super::stream::RequestStream;
+use super::telemetry::{profile, EventKind, IterSpan, SharedSink};
 use super::SimConfig;
 
 /// Per-request lifecycle state.
@@ -197,6 +198,14 @@ pub struct Scheduler<'a> {
     slow_until_s: f64,
     slow_mult: f64,
     truncated: bool,
+    /// Telemetry sink ([`super::telemetry`]): `None` by default, so the
+    /// untraced path does no recording work at all. Emissions happen
+    /// strictly *after* each step's arithmetic, so attaching a sink
+    /// never perturbs the simulation (bitwise anchor in
+    /// `rust/tests/telemetry_properties.rs`).
+    sink: Option<SharedSink>,
+    /// This scheduler's replica index in the recorded trace.
+    replica: usize,
 }
 
 impl<'a> Scheduler<'a> {
@@ -247,6 +256,27 @@ impl<'a> Scheduler<'a> {
             slow_until_s: 0.0,
             slow_mult: 1.0,
             truncated: false,
+            sink: None,
+            replica: 0,
+        }
+    }
+
+    /// Attach a telemetry sink, reporting as replica `replica` in the
+    /// recorded trace. Disabled sinks ([`super::telemetry::NullSink`])
+    /// are dropped on the spot, so they cost exactly as much as never
+    /// calling this.
+    pub fn set_sink(&mut self, sink: SharedSink, replica: usize) {
+        self.replica = replica;
+        self.sink = if sink.borrow().enabled() {
+            Some(sink)
+        } else {
+            None
+        };
+    }
+
+    fn emit(&self, t_s: f64, ext_id: usize, kind: EventKind) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().event(self.replica, t_s, ext_id, kind);
         }
     }
 
@@ -382,6 +412,8 @@ impl<'a> Scheduler<'a> {
         let r = &mut self.reqs[idx];
         r.migrated_out = true;
         self.migrated_out += 1;
+        self.emit(self.clock, self.ext_ids[idx], EventKind::MigrateOut);
+        let r = &self.reqs[idx];
         Some(ExtractedRequest {
             ext_id: self.ext_ids[idx],
             arrival_s: r.arrival_s,
@@ -488,6 +520,7 @@ impl<'a> Scheduler<'a> {
             self.rejected += 1;
             self.reqs.push(live);
             self.ext_ids.push(ext_id);
+            self.emit(arrival_s, ext_id, EventKind::Reject);
             return;
         }
         if !self.has_work() {
@@ -497,6 +530,15 @@ impl<'a> Scheduler<'a> {
         self.reqs.push(live);
         self.ext_ids.push(ext_id);
         self.queue.push_back(idx);
+        self.emit(
+            arrival_s,
+            ext_id,
+            if prefilled {
+                EventKind::MigrateIn
+            } else {
+                EventKind::Offer
+            },
+        );
     }
 
     /// Run iterations until the clock reaches `t` (or nothing is
@@ -571,11 +613,13 @@ impl<'a> Scheduler<'a> {
         r.past_base = 0;
         self.queue.push_front(victim);
         self.preemptions += 1;
+        self.emit(self.clock, self.ext_ids[victim], EventKind::Preempt);
     }
 
     fn admit(&mut self, idx: usize) {
         let ctx = self.reqs[idx].context_needed();
-        if self.reqs[idx].prefilled {
+        let migrated = self.reqs[idx].prefilled;
+        if migrated {
             // KV materializes via the handoff transfer: no compute, the
             // context is resident. Whole blocks migrate, so the traffic
             // is block-rounded. Re-admission after a preemption
@@ -603,6 +647,12 @@ impl<'a> Scheduler<'a> {
             r.prefill_done = 0;
         }
         self.running.push(idx);
+        self.emit(self.clock, self.ext_ids[idx], EventKind::Admit);
+        if migrated {
+            // the context materialized by transfer: a zero-length
+            // prefill span, straight into decode
+            self.emit(self.clock, self.ext_ids[idx], EventKind::PrefillDone);
+        }
     }
 
     /// Run one scheduler iteration. Returns `false` when nothing is
@@ -766,6 +816,7 @@ impl<'a> Scheduler<'a> {
 
     /// Cost the composed batch and apply its effects at completion time.
     fn run_batch(&mut self, batch: &[(usize, Role)]) {
+        let _p = profile::scope("sched.run_batch");
         let n_running = self.running.len();
         let mut cost_batch: Vec<Request> = Vec::with_capacity(batch.len());
         let mut n_prefill = 0usize;
@@ -802,6 +853,8 @@ impl<'a> Scheduler<'a> {
         self.energy += c.energy_pj;
         self.ideal_cycles += c.macs as f64 / self.peak_macs_per_cycle;
 
+        let tracing = self.sink.is_some();
+        let mut ev: Vec<(usize, EventKind)> = Vec::new();
         let mut freed: Vec<usize> = Vec::new();
         for &(i, role) in batch {
             match role {
@@ -815,22 +868,42 @@ impl<'a> Scheduler<'a> {
                         self.done += 1;
                         self.kv.release(i);
                         freed.push(i);
+                        if tracing {
+                            ev.push((self.ext_ids[i], EventKind::Finish));
+                        }
                     }
                 }
                 Role::Chunk(t) => {
                     self.kv.write_chunk(i, t);
                     let r = &mut self.reqs[i];
+                    let crossed = r.prefill_done < r.prefill_target;
                     r.prefill_done += t;
+                    let crossed = crossed && r.prefill_done >= r.prefill_target;
+                    if tracing {
+                        ev.push((self.ext_ids[i], EventKind::Chunk { tokens: t }));
+                        // re-admitted (preempted) requests re-cross the
+                        // target without re-emitting a first token, but
+                        // the span still flips back to decode
+                        if crossed {
+                            ev.push((self.ext_ids[i], EventKind::PrefillDone));
+                        }
+                    }
                     if r.prefill_done >= r.prefill_target && r.first_token_s.is_none() {
                         // prefill completion emits the first output token
                         r.first_token_s = Some(end);
                         r.generated += 1;
                         self.gen_tokens += 1;
+                        if tracing {
+                            ev.push((self.ext_ids[i], EventKind::FirstToken));
+                        }
                         if r.generated >= r.output_len {
                             r.finish_s = Some(end);
                             self.done += 1;
                             self.kv.release(i);
                             freed.push(i);
+                            if tracing {
+                                ev.push((self.ext_ids[i], EventKind::Finish));
+                            }
                         }
                     }
                 }
@@ -850,6 +923,22 @@ impl<'a> Scheduler<'a> {
             kv_frag: self.kv.fragmentation(),
             n_running,
         });
+        if let Some(sink) = &self.sink {
+            let mut s = sink.borrow_mut();
+            for &(ext, kind) in &ev {
+                s.event(self.replica, end, ext, kind);
+            }
+            s.iter(IterSpan {
+                replica: self.replica,
+                start_s: self.clock,
+                end_s: end,
+                n_prefill,
+                n_decode,
+                queue_depth: self.queue.len(),
+                kv_frac: self.kv.frac(),
+                kv_frag: self.kv.fragmentation(),
+            });
+        }
         self.clock = end;
     }
 
@@ -860,6 +949,28 @@ impl<'a> Scheduler<'a> {
     /// crash-failed requests are skipped the same way (the fleet's
     /// retry path owns their final outcome).
     pub fn finish(self) -> ReplicaResult {
+        let _p = profile::scope("sched.finish");
+        if let Some(sink) = &self.sink {
+            let mut s = sink.borrow_mut();
+            let r = self.replica;
+            s.counter_set(&format!("r{r}.n_arrived"), self.n_arrived as f64);
+            s.counter_set(&format!("r{r}.completed"), self.done as f64);
+            s.counter_set(&format!("r{r}.rejected"), self.rejected as f64);
+            s.counter_set(&format!("r{r}.preemptions"), self.preemptions as f64);
+            s.counter_set(&format!("r{r}.gen_tokens"), self.gen_tokens as f64);
+            s.counter_set(
+                &format!("r{r}.kv_transfer_tokens"),
+                self.kv_transfer_tokens as f64,
+            );
+            s.counter_set(&format!("r{r}.kv_frac"), self.kv.frac());
+            // the memo may be shared fleet-wide; each replica overwrites
+            // with the totals it sees, so the last finisher reports the
+            // run-wide numbers (counter_set, not counter_add)
+            let c = self.coster.borrow();
+            s.counter_set("coster.lookups", c.lookups() as f64);
+            s.counter_set("coster.distinct_shapes", c.distinct_shapes() as f64);
+            s.counter_set("coster.memo_hits", c.hits() as f64);
+        }
         let outcomes: Vec<(usize, RequestOutcome)> = self
             .ext_ids
             .iter()
@@ -917,6 +1028,26 @@ pub fn simulate_serving(
     cfg: &SimConfig,
 ) -> ServingMetrics {
     let mut s = Scheduler::new(model, hw, cfg);
+    for r in &stream.requests {
+        s.advance_to(r.arrival_s);
+        s.inject(r.id, r.arrival_s, r.input_len, r.output_len);
+    }
+    s.run_to_end();
+    s.finish().metrics
+}
+
+/// [`simulate_serving`] with a telemetry sink attached (replica 0).
+/// Metrics are bitwise-identical to the untraced run — recording
+/// happens after each step's arithmetic and never feeds back.
+pub fn simulate_serving_traced(
+    stream: &RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    sink: &SharedSink,
+) -> ServingMetrics {
+    let mut s = Scheduler::new(model, hw, cfg);
+    s.set_sink(sink.clone(), 0);
     for r in &stream.requests {
         s.advance_to(r.arrival_s);
         s.inject(r.id, r.arrival_s, r.input_len, r.output_len);

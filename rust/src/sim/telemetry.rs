@@ -1,0 +1,984 @@
+//! Deterministic telemetry for the serving stack: sim-time request
+//! lifecycle events, per-iteration spans, a counter/gauge registry,
+//! Chrome-trace/JSONL exporters, and (separately) wall-clock profiling
+//! scopes for the simulator's own hot paths.
+//!
+//! Two clocks, never mixed:
+//!
+//! * **Sim time** — everything recorded through [`TraceSink`] carries
+//!   the simulator's deterministic `f64` clock. Recording never feeds
+//!   back into the simulation: every instrumentation site either holds
+//!   no sink (`None` — the default, genuinely zero work) or appends to
+//!   a [`SpanCollector`] after the arithmetic of the step is done, so
+//!   metrics are bitwise-identical with telemetry on or off (anchored
+//!   in `rust/tests/telemetry_properties.rs`).
+//! * **Wall clock** — [`profile`] scopes measure where the *simulator
+//!   process* spends real time (`std::time::Instant`), for the
+//!   ROADMAP's raw-speed work. Wall-clock numbers are nondeterministic
+//!   by nature and never enter any sim-time record.
+//!
+//! The event taxonomy covers the full request lifecycle: offer →
+//! admit/reject/shed → prefill chunks → first token → decode →
+//! preempt/recompute → KV migration → crash-fail/backoff/loss →
+//! finish. [`SpanCollector::waterfall`] folds the raw events into
+//! per-request phase spans (queue / prefill / decode / backoff /
+//! migrate) that tile the request's lifetime, so the sum of a
+//! request's span durations reproduces its stitched outcome latency —
+//! the consistency gate `examples/telemetry.rs` asserts.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A shared handle to a trace sink, cloned into every instrumented
+/// layer of one run. `RefCell` (not a lock): the simulator is
+/// single-threaded per run, and determinism depends on a single
+/// sequential event order anyway.
+pub type SharedSink = Rc<std::cell::RefCell<dyn TraceSink>>;
+
+/// What happened to a request (sim time, deterministic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Entered a replica's admission queue.
+    Offer,
+    /// Entered a decode replica's queue as migrated, prefilled context.
+    MigrateIn,
+    /// Rejected at arrival (can never fit the KV capacity).
+    Reject,
+    /// Shed by the front-end admission policy (final: no retry left).
+    Shed,
+    /// Admitted: KV leased (or materialized, for migrated requests).
+    Admit,
+    /// One prefill chunk of `tokens` scheduled this iteration.
+    Chunk { tokens: u64 },
+    /// Prefill crossed its target (re-admissions cross again).
+    PrefillDone,
+    /// First output token emitted (once per request).
+    FirstToken,
+    /// Preempted under KV pressure: re-queued, prefill recomputed.
+    Preempt,
+    /// Extracted for a KV migration (rebalance, drain, disaggregated
+    /// handoff): in flight on the link until `MigrateIn`.
+    MigrateOut,
+    /// The attempt died (crash, no healthy replica): retry backoff
+    /// starts if the budget allows.
+    Fail,
+    /// Permanently lost (retry budget exhausted).
+    Loss,
+    /// Completed. Disaggregated requests finish twice: once per stage.
+    Finish,
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Offer => "offer",
+            EventKind::MigrateIn => "migrate_in",
+            EventKind::Reject => "reject",
+            EventKind::Shed => "shed",
+            EventKind::Admit => "admit",
+            EventKind::Chunk { .. } => "chunk",
+            EventKind::PrefillDone => "prefill_done",
+            EventKind::FirstToken => "first_token",
+            EventKind::Preempt => "preempt",
+            EventKind::MigrateOut => "migrate_out",
+            EventKind::Fail => "fail",
+            EventKind::Loss => "loss",
+            EventKind::Finish => "finish",
+        }
+    }
+}
+
+/// One recorded request event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Global insertion order — the tiebreak that keeps replays stable
+    /// when several events share one timestamp.
+    pub seq: usize,
+    pub replica: usize,
+    pub t_s: f64,
+    /// The run-wide external request id (stream id).
+    pub ext_id: usize,
+    pub kind: EventKind,
+}
+
+/// A replica-level moment (crash, drain, straggler window, link
+/// change) — not tied to one request.
+#[derive(Debug, Clone, Copy)]
+pub struct InstantEvent {
+    pub seq: usize,
+    pub replica: usize,
+    pub t_s: f64,
+    pub label: &'static str,
+}
+
+/// One scheduler iteration, with the occupancy gauges sampled at its
+/// close (the sink-side superset of `metrics::IterRecord`, kept
+/// unbounded here — the collector exists to be exhaustive).
+#[derive(Debug, Clone, Copy)]
+pub struct IterSpan {
+    pub replica: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    pub queue_depth: usize,
+    pub kv_frac: f64,
+    pub kv_frag: f64,
+}
+
+/// Where instrumented layers report. The simulator holds an
+/// `Option<SharedSink>` that is `None` by default, so the disabled
+/// path does no work at all; [`NullSink`] exists so generic callers
+/// can still pass "a sink" and get the identical nothing.
+pub trait TraceSink {
+    /// Whether this sink records anything. `Scheduler::set_sink`
+    /// drops sinks that report `false`, so a `NullSink` costs exactly
+    /// as much as no sink.
+    fn enabled(&self) -> bool;
+    fn event(&mut self, replica: usize, t_s: f64, ext_id: usize, kind: EventKind);
+    fn instant(&mut self, replica: usize, t_s: f64, label: &'static str);
+    fn iter(&mut self, span: IterSpan);
+    /// Overwrite a named counter (last writer wins — the right
+    /// semantics for monotone totals like shared-memo stats, where the
+    /// final writer has seen everything).
+    fn counter_set(&mut self, name: &str, value: f64);
+    fn counter_add(&mut self, name: &str, delta: f64);
+}
+
+/// The zero-overhead sink: records nothing, reports disabled.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn event(&mut self, _: usize, _: f64, _: usize, _: EventKind) {}
+    fn instant(&mut self, _: usize, _: f64, _: &'static str) {}
+    fn iter(&mut self, _: IterSpan) {}
+    fn counter_set(&mut self, _: &str, _: f64) {}
+    fn counter_add(&mut self, _: &str, _: f64) {}
+}
+
+/// The recording sink: raw events, instants, iteration spans and the
+/// counter registry, in insertion order.
+#[derive(Debug, Clone, Default)]
+pub struct SpanCollector {
+    events: Vec<Event>,
+    instants: Vec<InstantEvent>,
+    iters: Vec<IterSpan>,
+    counters: BTreeMap<String, f64>,
+    seq: usize,
+}
+
+impl SpanCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap a fresh collector as a [`SharedSink`] handle.
+    pub fn shared() -> Rc<std::cell::RefCell<SpanCollector>> {
+        Rc::new(std::cell::RefCell::new(SpanCollector::new()))
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn instants(&self) -> &[InstantEvent] {
+        &self.instants
+    }
+
+    pub fn iters(&self) -> &[IterSpan] {
+        &self.iters
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, f64> {
+        &self.counters
+    }
+
+    /// Distinct requests with at least one `Finish` event. A
+    /// disaggregated request finishes once per stage but still counts
+    /// once here.
+    pub fn n_finished(&self) -> usize {
+        let mut ids: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Finish)
+            .map(|e| e.ext_id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Events of one request, ordered by `(t_s, seq)`.
+    fn lane_events(&self) -> BTreeMap<usize, Vec<Event>> {
+        let mut lanes: BTreeMap<usize, Vec<Event>> = BTreeMap::new();
+        for e in &self.events {
+            lanes.entry(e.ext_id).or_default().push(*e);
+        }
+        for evs in lanes.values_mut() {
+            evs.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.seq.cmp(&b.seq)));
+        }
+        lanes
+    }
+
+    /// Fold the raw events into per-request phase spans. See
+    /// [`RequestLane`] for the tiling invariants.
+    pub fn waterfall(&self) -> Vec<RequestLane> {
+        self.lane_events()
+            .into_iter()
+            .map(|(ext_id, evs)| build_lane(ext_id, &evs))
+            .collect()
+    }
+
+    /// Render the waterfall as fixed-width ASCII lanes (`.` queue,
+    /// `#` prefill, `=` decode, `x` backoff, `~` migrating), at most
+    /// `max_lanes` requests, `width` time columns.
+    pub fn ascii_waterfall(&self, width: usize, max_lanes: usize) -> String {
+        let lanes = self.waterfall();
+        let width = width.max(8);
+        let t_max = lanes
+            .iter()
+            .map(|l| l.last_close_s)
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "waterfall  0 .. {:.4}s   [.] queue [#] prefill [=] decode [x] backoff [~] migrate\n",
+            t_max
+        ));
+        for lane in lanes.iter().take(max_lanes) {
+            let mut row = vec![' '; width];
+            for sp in &lane.spans {
+                let a = ((sp.start_s / t_max) * width as f64).floor() as usize;
+                let b = ((sp.end_s / t_max) * width as f64).ceil() as usize;
+                let ch = match sp.kind {
+                    SpanKind::Queue => '.',
+                    SpanKind::Prefill => '#',
+                    SpanKind::Decode => '=',
+                    SpanKind::Backoff => 'x',
+                    SpanKind::MigrateLink => '~',
+                };
+                for cell in row.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                    *cell = ch;
+                }
+            }
+            let tag = if lane.rejected {
+                "rej "
+            } else if lane.lost {
+                "lost"
+            } else if lane.finished {
+                "done"
+            } else {
+                "    "
+            };
+            out.push_str(&format!(
+                "req {:>4} {tag} |{}|\n",
+                lane.ext_id,
+                row.into_iter().collect::<String>()
+            ));
+        }
+        if lanes.len() > max_lanes {
+            out.push_str(&format!("... {} more requests\n", lanes.len() - max_lanes));
+        }
+        out
+    }
+
+    /// Export everything as Chrome trace-event JSON (Perfetto-loadable:
+    /// `ui.perfetto.dev`, or `chrome://tracing`). One `pid` per
+    /// replica; `tid 0` is the replica's iteration track, request
+    /// lanes use `tid = ext_id + 1`. Timestamps are sim-time
+    /// microseconds formatted with fixed precision, so the same run
+    /// always serializes to the identical byte string.
+    pub fn chrome_trace_json(&self) -> String {
+        let us = |t: f64| format!("{:.3}", t * 1e6);
+        let mut ev: Vec<String> = Vec::new();
+        let mut replicas: Vec<usize> = self
+            .events
+            .iter()
+            .map(|e| e.replica)
+            .chain(self.iters.iter().map(|i| i.replica))
+            .chain(self.instants.iter().map(|i| i.replica))
+            .collect();
+        replicas.sort_unstable();
+        replicas.dedup();
+        for &r in &replicas {
+            ev.push(format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{r},\"tid\":0,\
+                 \"args\":{{\"name\":\"replica {r}\"}}}}"
+            ));
+        }
+        for lane in self.waterfall() {
+            for sp in &lane.spans {
+                let (name, cname) = match sp.kind {
+                    SpanKind::Queue => ("queue", "grey"),
+                    SpanKind::Prefill => ("prefill", "thread_state_running"),
+                    SpanKind::Decode => ("decode", "good"),
+                    SpanKind::Backoff => ("backoff", "terrible"),
+                    SpanKind::MigrateLink => ("migrate", "yellow"),
+                };
+                ev.push(format!(
+                    "{{\"name\":\"{name}\",\"cat\":\"request\",\"ph\":\"X\",\
+                     \"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\
+                     \"cname\":\"{cname}\",\"args\":{{\"req\":{}}}}}",
+                    sp.replica,
+                    lane.ext_id + 1,
+                    us(sp.start_s),
+                    us((sp.end_s - sp.start_s).max(0.0)),
+                    lane.ext_id
+                ));
+            }
+        }
+        for it in &self.iters {
+            ev.push(format!(
+                "{{\"name\":\"iter\",\"cat\":\"sched\",\"ph\":\"X\",\
+                 \"pid\":{},\"tid\":0,\"ts\":{},\"dur\":{},\"args\":{{\
+                 \"prefill\":{},\"decode\":{},\"queue\":{}}}}}",
+                it.replica,
+                us(it.start_s),
+                us((it.end_s - it.start_s).max(0.0)),
+                it.n_prefill,
+                it.n_decode,
+                it.queue_depth
+            ));
+            ev.push(format!(
+                "{{\"name\":\"kv\",\"cat\":\"sched\",\"ph\":\"C\",\
+                 \"pid\":{},\"tid\":0,\"ts\":{},\"args\":{{\
+                 \"frac\":{:.6},\"frag\":{:.6}}}}}",
+                it.replica,
+                us(it.end_s),
+                it.kv_frac,
+                it.kv_frag
+            ));
+        }
+        for i in &self.instants {
+            ev.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"fault\",\"ph\":\"i\",\
+                 \"pid\":{},\"tid\":0,\"ts\":{},\"s\":\"p\"}}",
+                json_escape(i.label),
+                i.replica,
+                us(i.t_s)
+            ));
+        }
+        // self-contained summary so external validators (the CI JSON
+        // check) need no side-channel: finished-request count plus the
+        // whole counter registry
+        let t_last = self
+            .events
+            .iter()
+            .map(|e| e.t_s)
+            .fold(0.0f64, f64::max);
+        let counters: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{:.6}", json_escape(k), v))
+            .collect();
+        ev.push(format!(
+            "{{\"name\":\"run_summary\",\"ph\":\"i\",\"pid\":0,\"tid\":0,\
+             \"ts\":{},\"s\":\"g\",\"args\":{{\"finished\":{},\"events\":{},\
+             \"counters\":{{{}}}}}}}",
+            us(t_last),
+            self.n_finished(),
+            self.events.len(),
+            counters.join(",")
+        ));
+        format!(
+            "{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}\n",
+            ev.join(",\n")
+        )
+    }
+}
+
+impl TraceSink for SpanCollector {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn event(&mut self, replica: usize, t_s: f64, ext_id: usize, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(Event {
+            seq,
+            replica,
+            t_s,
+            ext_id,
+            kind,
+        });
+    }
+
+    fn instant(&mut self, replica: usize, t_s: f64, label: &'static str) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.instants.push(InstantEvent {
+            seq,
+            replica,
+            t_s,
+            label,
+        });
+    }
+
+    fn iter(&mut self, span: IterSpan) {
+        self.iters.push(span);
+    }
+
+    fn counter_set(&mut self, name: &str, value: f64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    fn counter_add(&mut self, name: &str, delta: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+}
+
+/// A request's phase while time passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// In an admission queue (offered, not yet admitted).
+    Queue,
+    /// Admitted, prefilling (chunks in flight or scheduled).
+    Prefill,
+    /// First token emitted, generating output.
+    Decode,
+    /// Between a failure and the retry re-offer.
+    Backoff,
+    /// KV in flight over a migration/handoff link.
+    MigrateLink,
+}
+
+/// One contiguous phase span of a request.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub ext_id: usize,
+    /// Replica of the event that opened the span (the link "replica"
+    /// for `MigrateLink` is the source).
+    pub replica: usize,
+    pub kind: SpanKind,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// All spans of one request, tiling `[first_open_s, last_close_s]`
+/// contiguously: every span starts exactly where the previous one
+/// closed, so the durations sum to the lane's total latency. Crash
+/// timestamps can run *behind* a replica's overshooting iteration
+/// clock (iteration atomicity); the builder clamps closes to the
+/// running cursor, which redistributes the overlap but never breaks
+/// the tiling or produces a negative span.
+#[derive(Debug, Clone)]
+pub struct RequestLane {
+    pub ext_id: usize,
+    pub spans: Vec<Span>,
+    pub finished: bool,
+    pub rejected: bool,
+    pub lost: bool,
+    pub shed: bool,
+    pub n_failures: usize,
+    pub first_open_s: f64,
+    pub last_close_s: f64,
+}
+
+impl RequestLane {
+    /// Sum of span durations — equals `last_close_s - first_open_s` up
+    /// to float association error, and (for completed requests)
+    /// reproduces the stitched outcome's `finish - arrival` latency.
+    pub fn total_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.end_s - s.start_s).sum()
+    }
+}
+
+/// Cursor-contiguous span construction (see [`RequestLane`]).
+fn build_lane(ext_id: usize, evs: &[Event]) -> RequestLane {
+    let mut lane = RequestLane {
+        ext_id,
+        spans: Vec::new(),
+        finished: false,
+        rejected: false,
+        lost: false,
+        shed: false,
+        n_failures: 0,
+        first_open_s: evs.first().map_or(0.0, |e| e.t_s),
+        last_close_s: evs.first().map_or(0.0, |e| e.t_s),
+    };
+    let mut cursor = lane.first_open_s;
+    let mut open: Option<(SpanKind, usize, f64)> = None;
+    let mut close = |open: &mut Option<(SpanKind, usize, f64)>, cursor: &mut f64, t: f64| {
+        let t = t.max(*cursor);
+        if let Some((kind, replica, start)) = open.take() {
+            lane.spans.push(Span {
+                ext_id,
+                replica,
+                kind,
+                start_s: start,
+                end_s: t,
+            });
+        }
+        *cursor = t;
+    };
+    for e in evs {
+        match e.kind {
+            EventKind::Offer | EventKind::MigrateIn => {
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::Queue, e.replica, cursor));
+            }
+            EventKind::Admit => {
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::Prefill, e.replica, cursor));
+            }
+            EventKind::PrefillDone => {
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::Decode, e.replica, cursor));
+            }
+            EventKind::Preempt => {
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::Queue, e.replica, cursor));
+            }
+            EventKind::MigrateOut => {
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::MigrateLink, e.replica, cursor));
+            }
+            EventKind::Fail => {
+                lane.n_failures += 1;
+                close(&mut open, &mut cursor, e.t_s);
+                open = Some((SpanKind::Backoff, e.replica, cursor));
+            }
+            EventKind::Finish => {
+                lane.finished = true;
+                close(&mut open, &mut cursor, e.t_s);
+            }
+            EventKind::Reject => {
+                lane.rejected = true;
+                close(&mut open, &mut cursor, e.t_s);
+            }
+            EventKind::Shed => {
+                lane.shed = true;
+                lane.rejected = true;
+                close(&mut open, &mut cursor, e.t_s);
+            }
+            EventKind::Loss => {
+                lane.lost = true;
+                lane.rejected = true;
+                close(&mut open, &mut cursor, e.t_s);
+            }
+            EventKind::Chunk { .. } | EventKind::FirstToken => {}
+        }
+    }
+    // a truncated run can leave a span open; close it at the cursor so
+    // the tiling invariant survives
+    close(&mut open, &mut cursor, cursor);
+    lane.last_close_s = cursor;
+    lane
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One structured run record (one study cell), exported as a JSONL
+/// line under `--record`. `degraded` marks cells produced after the
+/// CLI substituted a fallback for an invalid input (the old silent
+/// paths now either exit non-zero or set this flag).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub study: String,
+    pub cell: String,
+    pub rate_rps: f64,
+    pub n_arrived: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub slo_attainment: f64,
+    pub slo_goodput_tps: f64,
+    pub throughput_tps: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p99_s: f64,
+    pub makespan_s: f64,
+    pub energy_pj: f64,
+    pub truncated: bool,
+    pub degraded: bool,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"study\":\"{}\",\"cell\":\"{}\",\"rate_rps\":{:.6},\
+             \"n_arrived\":{},\"n_completed\":{},\"n_rejected\":{},\
+             \"slo_attainment\":{:.6},\"slo_goodput_tps\":{:.6},\
+             \"throughput_tps\":{:.6},\"ttft_p99_s\":{:.6},\
+             \"tpot_p99_s\":{:.6},\"makespan_s\":{:.6},\"energy_pj\":{:.6e},\
+             \"truncated\":{},\"degraded\":{}}}",
+            json_escape(&self.study),
+            json_escape(&self.cell),
+            self.rate_rps,
+            self.n_arrived,
+            self.n_completed,
+            self.n_rejected,
+            self.slo_attainment,
+            self.slo_goodput_tps,
+            self.throughput_tps,
+            self.ttft_p99_s,
+            self.tpot_p99_s,
+            self.makespan_s,
+            self.energy_pj,
+            self.truncated,
+            self.degraded
+        )
+    }
+}
+
+/// Write run records as one JSON object per line.
+pub fn write_jsonl<P: AsRef<std::path::Path>>(
+    path: P,
+    records: &[RunRecord],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    for r in records {
+        writeln!(f, "{}", r.to_json())?;
+    }
+    Ok(())
+}
+
+/// Wall-clock profiling scopes (process time, nondeterministic —
+/// strictly separated from the sim-time telemetry above). Disabled by
+/// default: [`scope`] returns `None` after one thread-local flag read,
+/// so instrumented hot paths cost nothing in normal runs. Enabled
+/// under `repro --profile`, the guards accumulate per-label call
+/// counts, total and *self* time (children subtracted), and
+/// [`take_report`] prints the table the ROADMAP's raw-speed item
+/// starts from.
+pub mod profile {
+    use std::cell::{Cell, RefCell};
+    use std::time::Instant;
+
+    #[derive(Debug, Clone, Copy)]
+    struct Frame {
+        label: &'static str,
+        start: Instant,
+        child_s: f64,
+    }
+
+    #[derive(Debug, Clone, Copy, Default)]
+    struct Tally {
+        calls: u64,
+        total_s: f64,
+        self_s: f64,
+    }
+
+    thread_local! {
+        static ENABLED: Cell<bool> = const { Cell::new(false) };
+        static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+        static TOTALS: RefCell<Vec<(&'static str, Tally)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    /// Turn profiling on/off for this thread (the sim is per-thread).
+    pub fn set_enabled(on: bool) {
+        ENABLED.with(|e| e.set(on));
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.with(|e| e.get())
+    }
+
+    /// RAII timing scope; `None` (no timer started) when disabled.
+    /// Usage: `let _p = profile::scope("coster.memo_miss");`
+    #[must_use]
+    pub fn scope(label: &'static str) -> Option<ScopeGuard> {
+        if !enabled() {
+            return None;
+        }
+        STACK.with(|s| {
+            s.borrow_mut().push(Frame {
+                label,
+                start: Instant::now(),
+                child_s: 0.0,
+            })
+        });
+        Some(ScopeGuard { _priv: () })
+    }
+
+    pub struct ScopeGuard {
+        _priv: (),
+    }
+
+    impl Drop for ScopeGuard {
+        fn drop(&mut self) {
+            let frame = match STACK.with(|s| s.borrow_mut().pop()) {
+                Some(f) => f,
+                None => return,
+            };
+            let elapsed = frame.start.elapsed().as_secs_f64();
+            let self_s = (elapsed - frame.child_s).max(0.0);
+            STACK.with(|s| {
+                if let Some(parent) = s.borrow_mut().last_mut() {
+                    parent.child_s += elapsed;
+                }
+            });
+            TOTALS.with(|t| {
+                let mut t = t.borrow_mut();
+                if let Some((_, tally)) = t.iter_mut().find(|(l, _)| *l == frame.label) {
+                    tally.calls += 1;
+                    tally.total_s += elapsed;
+                    tally.self_s += self_s;
+                } else {
+                    t.push((
+                        frame.label,
+                        Tally {
+                            calls: 1,
+                            total_s: elapsed,
+                            self_s,
+                        },
+                    ));
+                }
+            });
+        }
+    }
+
+    /// Drain the accumulated tallies into a self-time table (descending
+    /// self time) and reset. Empty string when nothing was recorded.
+    pub fn take_report() -> String {
+        let mut rows = TOTALS.with(|t| std::mem::take(&mut *t.borrow_mut()));
+        if rows.is_empty() {
+            return String::new();
+        }
+        rows.sort_by(|a, b| b.1.self_s.total_cmp(&a.1.self_s));
+        let mut out = String::from(
+            "wall-clock profile (self time, children subtracted)\n\
+             self (s)     total (s)    calls        scope\n",
+        );
+        for (label, t) in rows {
+            out.push_str(&format!(
+                "{:<12.6} {:<12.6} {:<12} {label}\n",
+                t.self_s, t.total_s, t.calls
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(script: &[(usize, f64, usize, EventKind)]) -> SpanCollector {
+        let mut c = SpanCollector::new();
+        for &(replica, t, ext, kind) in script {
+            c.event(replica, t, ext, kind);
+        }
+        c
+    }
+
+    #[test]
+    fn lane_spans_tile_the_request_lifetime() {
+        let c = collect(&[
+            (0, 1.0, 7, EventKind::Offer),
+            (0, 1.5, 7, EventKind::Admit),
+            (0, 1.6, 7, EventKind::Chunk { tokens: 32 }),
+            (0, 2.0, 7, EventKind::PrefillDone),
+            (0, 2.0, 7, EventKind::FirstToken),
+            (0, 5.0, 7, EventKind::Finish),
+        ]);
+        let lanes = c.waterfall();
+        assert_eq!(lanes.len(), 1);
+        let lane = &lanes[0];
+        assert!(lane.finished && !lane.rejected);
+        assert_eq!(lane.spans.len(), 3);
+        assert_eq!(lane.spans[0].kind, SpanKind::Queue);
+        assert_eq!(lane.spans[1].kind, SpanKind::Prefill);
+        assert_eq!(lane.spans[2].kind, SpanKind::Decode);
+        // contiguous tiling: each span starts where the last closed
+        for w in lane.spans.windows(2) {
+            assert_eq!(w[0].end_s.to_bits(), w[1].start_s.to_bits());
+        }
+        assert!((lane.total_s() - 4.0).abs() < 1e-12);
+        assert_eq!(c.n_finished(), 1);
+    }
+
+    #[test]
+    fn preempt_retry_and_migration_reopen_spans() {
+        let c = collect(&[
+            (0, 0.0, 3, EventKind::Offer),
+            (0, 0.5, 3, EventKind::Admit),
+            (0, 1.0, 3, EventKind::PrefillDone),
+            (0, 1.5, 3, EventKind::Preempt),
+            (0, 2.0, 3, EventKind::Admit),
+            (0, 2.5, 3, EventKind::PrefillDone),
+            (0, 3.0, 3, EventKind::MigrateOut),
+            (1, 3.4, 3, EventKind::MigrateIn),
+            (1, 3.5, 3, EventKind::Admit),
+            (1, 3.5, 3, EventKind::PrefillDone),
+            (1, 6.0, 3, EventKind::Finish),
+        ]);
+        let lanes = c.waterfall();
+        let lane = &lanes[0];
+        let kinds: Vec<SpanKind> = lane.spans.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SpanKind::Queue,
+                SpanKind::Prefill,
+                SpanKind::Decode,
+                SpanKind::Queue,
+                SpanKind::Prefill,
+                SpanKind::Decode,
+                SpanKind::MigrateLink,
+                SpanKind::Queue,
+                SpanKind::Prefill,
+                SpanKind::Decode,
+            ]
+        );
+        // zero-length prefill span for the migrated admission
+        assert_eq!(lane.spans[8].end_s.to_bits(), lane.spans[8].start_s.to_bits());
+        assert!((lane.total_s() - 6.0).abs() < 1e-12);
+        // the migrate span belongs to the source replica
+        assert_eq!(lane.spans[6].replica, 0);
+        assert_eq!(lane.spans[9].replica, 1);
+    }
+
+    #[test]
+    fn crash_clock_overshoot_never_goes_negative() {
+        // the replica's iteration clock overshot the crash time: the
+        // Fail event carries t=10.0 while Admit was stamped at 10.5
+        let c = collect(&[
+            (0, 9.0, 1, EventKind::Offer),
+            (0, 10.5, 1, EventKind::Admit),
+            (0, 10.0, 1, EventKind::Fail),
+            (0, 10.3, 1, EventKind::Offer),
+            (1, 10.8, 1, EventKind::Admit),
+            (1, 11.0, 1, EventKind::PrefillDone),
+            (1, 12.0, 1, EventKind::Finish),
+        ]);
+        let lane = &c.waterfall()[0];
+        for sp in &lane.spans {
+            assert!(
+                sp.end_s >= sp.start_s,
+                "negative span {:?} [{}, {}]",
+                sp.kind,
+                sp.start_s,
+                sp.end_s
+            );
+        }
+        assert_eq!(lane.n_failures, 1);
+        // tiling still holds
+        for w in lane.spans.windows(2) {
+            assert_eq!(w[0].end_s.to_bits(), w[1].start_s.to_bits());
+        }
+        assert!((lane.total_s() - (12.0 - 9.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_shape_and_deterministic() {
+        let mut c = collect(&[
+            (0, 0.0, 0, EventKind::Offer),
+            (0, 0.1, 0, EventKind::Admit),
+            (0, 0.2, 0, EventKind::PrefillDone),
+            (0, 0.4, 0, EventKind::Finish),
+            (1, 0.0, 1, EventKind::Offer),
+            (1, 0.3, 1, EventKind::Reject),
+        ]);
+        c.instant(0, 0.25, "crash");
+        c.iter(IterSpan {
+            replica: 0,
+            start_s: 0.1,
+            end_s: 0.2,
+            n_prefill: 1,
+            n_decode: 0,
+            queue_depth: 0,
+            kv_frac: 0.5,
+            kv_frag: 0.0,
+        });
+        c.counter_set("coster.lookups", 3.0);
+        let json = c.chrome_trace_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"name\":\"crash\""));
+        assert!(json.contains("\"finished\":1"));
+        assert!(json.contains("coster.lookups"));
+        // balanced braces/brackets — a cheap well-formedness check
+        let depth = json.chars().fold((0i64, 0i64), |(b, k), c| match c {
+            '{' => (b + 1, k),
+            '}' => (b - 1, k),
+            '[' => (b, k + 1),
+            ']' => (b, k - 1),
+            _ => (b, k),
+        });
+        assert_eq!(depth, (0, 0));
+        assert_eq!(json, c.chrome_trace_json(), "export must be deterministic");
+    }
+
+    #[test]
+    fn counters_set_and_add() {
+        let mut c = SpanCollector::new();
+        c.counter_add("x", 2.0);
+        c.counter_add("x", 3.0);
+        c.counter_set("y", 7.0);
+        c.counter_set("y", 9.0);
+        assert_eq!(c.counters()["x"], 5.0);
+        assert_eq!(c.counters()["y"], 9.0);
+    }
+
+    #[test]
+    fn null_sink_is_disabled_and_inert() {
+        let mut n = NullSink;
+        assert!(!n.enabled());
+        n.event(0, 0.0, 0, EventKind::Offer);
+        n.counter_add("x", 1.0);
+        // nothing observable — the trait contract is "does nothing"
+    }
+
+    #[test]
+    fn run_record_serializes_valid_json_line() {
+        let r = RunRecord {
+            study: "sim-study".into(),
+            cell: "vllm@2rps".into(),
+            rate_rps: 2.0,
+            n_arrived: 10,
+            n_completed: 9,
+            n_rejected: 1,
+            slo_attainment: 0.9,
+            slo_goodput_tps: 12.0,
+            throughput_tps: 15.0,
+            ttft_p99_s: 0.2,
+            tpot_p99_s: 0.01,
+            makespan_s: 5.0,
+            energy_pj: 1e9,
+            truncated: false,
+            degraded: true,
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"degraded\":true"));
+        assert!(!j.contains('\n'));
+    }
+
+    #[test]
+    fn profile_scopes_accumulate_self_time() {
+        profile::set_enabled(true);
+        {
+            let _outer = profile::scope("outer");
+            {
+                let _inner = profile::scope("inner");
+                std::hint::black_box((0..1000).sum::<u64>());
+            }
+        }
+        let report = profile::take_report();
+        assert!(report.contains("outer"), "{report}");
+        assert!(report.contains("inner"), "{report}");
+        profile::set_enabled(false);
+        assert!(profile::scope("off").is_none());
+        assert_eq!(profile::take_report(), "");
+    }
+}

@@ -1,0 +1,478 @@
+//! Telemetry properties: the sink-attachment bitwise anchor, span ↔
+//! outcome conservation under randomized fault storms, and trace
+//! export determinism.
+//!
+//! The anchor is the contract that makes telemetry safe to keep wired
+//! through the whole serving stack: attaching a sink — the disabled
+//! [`NullSink`] or the recording [`SpanCollector`] — must leave every
+//! entry point (`simulate_serving`, `simulate_fleet`,
+//! `simulate_fleet_frontend` homogeneous and disaggregated,
+//! `simulate_fleet_faults`) bitwise-identical in per-replica metrics
+//! *and* per-request timings. Emission happens strictly after each
+//! step's arithmetic, so the anchor holds by construction; these tests
+//! keep it honest across randomized strategies, fleets, front ends
+//! and seeded crash/straggler schedules.
+//!
+//! On top of the anchor: every recorded request lane tiles its
+//! lifetime contiguously (durations sum to the lane window), lane
+//! populations reproduce the run totals, lane windows bound (exactly,
+//! without faults) the stitched outcome latencies, and the Chrome
+//! trace JSON serializes to the identical byte string on rerun.
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{
+    self, FaultSchedule, FleetConfig, Frontend, MappingPolicy, NullSink, RequestStream,
+    ResilienceSpec, RetryPolicy, RouterPolicy, SimConfig, SloSpec, SpanCollector,
+};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+        shared_prefix_tokens: 0,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+fn null_sink() -> sim::SharedSink {
+    std::rc::Rc::new(std::cell::RefCell::new(NullSink))
+}
+
+fn collector() -> (std::rc::Rc<std::cell::RefCell<SpanCollector>>, sim::SharedSink) {
+    let c = SpanCollector::shared();
+    let sink: sim::SharedSink = c.clone();
+    (c, sink)
+}
+
+/// Full bitwise comparison of two single-replica results.
+fn assert_serving_bitwise(a: &sim::ServingMetrics, b: &sim::ServingMetrics, ctx: &str) {
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_in_flight, b.n_in_flight, "{ctx}: in flight");
+    assert_eq!(a.n_preemptions, b.n_preemptions, "{ctx}: preemptions");
+    assert_eq!(a.n_iterations, b.n_iterations, "{ctx}: iterations");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
+    assert_eq!(a.distinct_shapes, b.distinct_shapes, "{ctx}: shapes");
+    assert_eq!(a.gen_tokens, b.gen_tokens, "{ctx}: gen tokens");
+    assert_eq!(a.kv_transfer_tokens, b.kv_transfer_tokens, "{ctx}: kv transfer");
+    assert_eq!(a.max_queue_depth, b.max_queue_depth, "{ctx}: max queue");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("busy", a.busy_s, b.busy_s),
+        ("throughput", a.throughput_tps, b.throughput_tps),
+        ("goodput", a.goodput_rps, b.goodput_rps),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("ttft mean", a.ttft.mean, b.ttft.mean),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot mean", a.tpot.mean, b.tpot.mean),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("slo attainment", a.slo_attainment, b.slo_attainment),
+        ("mean queue", a.mean_queue_depth, b.mean_queue_depth),
+        ("occupancy", a.mean_batch_occupancy, b.mean_batch_occupancy),
+        ("utilization", a.utilization, b.utilization),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("edp", a.edp_under_load, b.edp_under_load),
+        ("frag", a.kv_fragmentation, b.kv_fragmentation),
+        ("concurrency", a.effective_concurrency, b.effective_concurrency),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+}
+
+/// Full bitwise comparison of two fleet results: per-replica metrics
+/// and per-request outcome timings.
+fn assert_fleet_bitwise(a: &sim::FleetMetrics, b: &sim::FleetMetrics, ctx: &str) {
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{ctx}: replica count");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        assert_serving_bitwise(x, y, &format!("{ctx}: replica {i}"));
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome count");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            x.arrival_s.to_bits(),
+            y.arrival_s.to_bits(),
+            "{ctx}: outcome {i} arrival"
+        );
+        assert_eq!(
+            x.first_token_s.map(f64::to_bits),
+            y.first_token_s.map(f64::to_bits),
+            "{ctx}: outcome {i} first token"
+        );
+        assert_eq!(
+            x.finish_s.map(f64::to_bits),
+            y.finish_s.map(f64::to_bits),
+            "{ctx}: outcome {i} finish"
+        );
+        assert_eq!(x.rejected, y.rejected, "{ctx}: outcome {i} rejected");
+    }
+    assert_eq!(a.n_shed, b.n_shed, "{ctx}: shed");
+    assert_eq!(a.n_rebalanced, b.n_rebalanced, "{ctx}: rebalanced");
+    assert_eq!(a.kv_transfer_tokens, b.kv_transfer_tokens, "{ctx}: kv transfer");
+    assert_eq!(a.faults.n_failed, b.faults.n_failed, "{ctx}: failed");
+    assert_eq!(a.faults.n_retried, b.faults.n_retried, "{ctx}: retried");
+    assert_eq!(a.faults.n_lost, b.faults.n_lost, "{ctx}: lost");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{ctx}: energy");
+    assert_eq!(a.ttft.p99.to_bits(), b.ttft.p99.to_bits(), "{ctx}: ttft p99");
+    assert_eq!(a.tpot.p99.to_bits(), b.tpot.p99.to_bits(), "{ctx}: tpot p99");
+}
+
+/// Lane-level conservation: every lane tiles its window, and the lane
+/// population reproduces the run totals.
+fn assert_lanes_conserve(
+    c: &SpanCollector,
+    n_arrived: usize,
+    n_completed: usize,
+    n_rejected: usize,
+    ctx: &str,
+) {
+    let lanes = c.waterfall();
+    for lane in &lanes {
+        let window = lane.last_close_s - lane.first_open_s;
+        let sum = lane.total_s();
+        assert!(
+            (sum - window).abs() <= 1e-6 * window.abs().max(1e-9),
+            "{ctx}: req {} spans sum {sum:.12} != window {window:.12}",
+            lane.ext_id
+        );
+        let mut cursor = lane.first_open_s;
+        for sp in &lane.spans {
+            assert_eq!(
+                sp.start_s.to_bits(),
+                cursor.to_bits(),
+                "{ctx}: req {} spans are not contiguous",
+                lane.ext_id
+            );
+            assert!(sp.end_s >= sp.start_s, "{ctx}: req {} negative span", lane.ext_id);
+            cursor = sp.end_s;
+        }
+    }
+    assert_eq!(lanes.len(), n_arrived, "{ctx}: lanes != arrivals");
+    assert_eq!(
+        lanes.iter().filter(|l| l.finished).count(),
+        n_completed,
+        "{ctx}: finished lanes != completed"
+    );
+    assert_eq!(
+        lanes.iter().filter(|l| l.rejected).count(),
+        n_rejected,
+        "{ctx}: rejected lanes != rejections"
+    );
+    assert_eq!(c.n_finished(), n_completed, "{ctx}: n_finished");
+}
+
+/// Attaching a sink to the single-replica simulator — null or
+/// recording — is bitwise-free across strategies and load levels.
+#[test]
+fn serving_sinks_are_bitwise_free() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0x7E1E);
+    for trial in 0..9 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let cfg = cfg_for(strategy, *rng.choose(&[4096u64, 768]));
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let rate = (0.5 + rng.gen_f64() * 1.5) * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 8 + rng.gen_index(8), rng.next_u64());
+        let ctx = format!("trial {trial} {strategy:?}");
+        let plain = sim::simulate_serving(&stream, &model, &hw, &cfg);
+        let nulled = sim::simulate_serving_traced(&stream, &model, &hw, &cfg, &null_sink());
+        assert_serving_bitwise(&plain, &nulled, &format!("{ctx} null"));
+        let (c, sink) = collector();
+        let traced = sim::simulate_serving_traced(&stream, &model, &hw, &cfg, &sink);
+        assert_serving_bitwise(&plain, &traced, &format!("{ctx} recording"));
+        let c = c.borrow();
+        assert!(
+            c.events().is_empty() == (traced.n_arrived == 0),
+            "{ctx}: recording sink saw nothing"
+        );
+        assert_lanes_conserve(
+            &c,
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            &ctx,
+        );
+    }
+}
+
+/// The fleet front end — homogeneous under every front-end policy, and
+/// disaggregated with KV handoff — is bitwise-free under recording
+/// sinks, and the recorded lanes conserve.
+#[test]
+fn fleet_frontend_sinks_are_bitwise_free() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xBEE5);
+    for trial in 0..6 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let cfg = cfg_for(strategy, 4096);
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let n_rep = 2 + trial % 2;
+        let fleet = if trial % 3 == 2 {
+            FleetConfig::disaggregated(1, n_rep - 1, 1e-7)
+        } else {
+            FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue)
+        };
+        let fe = if trial % 2 == 0 {
+            Frontend::baseline()
+        } else {
+            Frontend::with_shedding(probe, 1.0)
+        };
+        let rate = (0.6 + rng.gen_f64() * 1.2) * n_rep as f64 * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 10 + rng.gen_index(6), rng.next_u64());
+        let hws = vec![hw.clone(); fleet.total_replicas()];
+        let ctx = format!("trial {trial} {strategy:?} {}", fleet.describe());
+        let plain = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe);
+        let nulled = sim::simulate_fleet_frontend_traced(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &fe,
+            &null_sink(),
+        );
+        assert_fleet_bitwise(&plain, &nulled, &format!("{ctx} null"));
+        let (c, sink) = collector();
+        let traced =
+            sim::simulate_fleet_frontend_traced(&stream, &model, &hws, &cfg, &fleet, &fe, &sink);
+        assert_fleet_bitwise(&plain, &traced, &format!("{ctx} recording"));
+        assert_lanes_conserve(
+            &c.borrow(),
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            &ctx,
+        );
+    }
+}
+
+/// `simulate_fleet_traced` (the legacy wrapper) inherits the anchor.
+#[test]
+fn fleet_wrapper_sink_is_bitwise_free() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 4096);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::RoundRobin);
+    let stream = RequestStream::poisson(
+        &tiny_spec(),
+        1.4 * probe.capacity_rps(),
+        12,
+        0xF1EE7,
+    );
+    let plain = sim::simulate_fleet(&stream, &model, &hw, &cfg, &fleet);
+    let (c, sink) = collector();
+    let traced = sim::simulate_fleet_traced(&stream, &model, &hw, &cfg, &fleet, &sink);
+    assert_fleet_bitwise(&plain, &traced, "fleet wrapper");
+    assert_lanes_conserve(
+        &c.borrow(),
+        traced.n_arrived,
+        traced.n_completed,
+        traced.n_rejected,
+        "fleet wrapper",
+    );
+}
+
+/// The fault layer is bitwise-free under recording sinks across
+/// randomized crash/straggler storms with retries, the recorded lanes
+/// conserve, and lane windows bound the stitched outcome latencies
+/// from above (crash clocks can overshoot, never undershoot).
+#[test]
+fn fault_storm_sinks_are_bitwise_free_and_lanes_conserve() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0x57012);
+    for trial in 0..8 {
+        let strategy = ServingStrategy::ALL[trial % 3];
+        let cfg = cfg_for(strategy, *rng.choose(&[4096u64, 768]));
+        let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+        let n_rep = 2 + trial % 2;
+        let fleet = FleetConfig::homogeneous(n_rep, RouterPolicy::JoinShortestQueue);
+        let rate = (0.6 + rng.gen_f64() * 1.8) * n_rep as f64 * probe.capacity_rps();
+        let stream =
+            RequestStream::poisson(&tiny_spec(), rate, 10 + rng.gen_index(8), rng.next_u64());
+        let schedule = FaultSchedule::seeded(
+            n_rep,
+            stream.horizon_s(),
+            1 + trial % 2,
+            trial % 3,
+            rng.next_u64(),
+        );
+        let retry = if trial % 2 == 0 {
+            RetryPolicy::capped(3, 0.2 * probe.t_prefill_s, 2.0)
+        } else {
+            RetryPolicy::disabled()
+        };
+        let res = ResilienceSpec::none()
+            .with_schedule(schedule.clone())
+            .with_retry(retry)
+            .with_failover(trial % 3 != 2);
+        let hws = vec![hw.clone(); n_rep];
+        let ctx = format!(
+            "trial {trial} {strategy:?} {} under {}",
+            res.describe(),
+            schedule.describe()
+        );
+        let plain = sim::simulate_fleet_faults(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+        );
+        let (c, sink) = collector();
+        let traced = sim::simulate_fleet_faults_traced(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+            &sink,
+        );
+        assert_fleet_bitwise(&plain, &traced, &ctx);
+        let c = c.borrow();
+        assert_lanes_conserve(
+            &c,
+            traced.n_arrived,
+            traced.n_completed,
+            traced.n_rejected,
+            &ctx,
+        );
+        // sorted lane windows dominate sorted outcome latencies: the
+        // pointwise bound (lane opens at arrival, closes at or after
+        // finish) survives taking k-th order statistics
+        let mut lane_lat: Vec<f64> = c
+            .waterfall()
+            .iter()
+            .filter(|l| l.finished)
+            .map(|l| l.last_close_s - l.first_open_s)
+            .collect();
+        let mut out_lat: Vec<f64> = traced
+            .outcomes
+            .iter()
+            .filter_map(|o| o.finish_s.map(|f| f - o.arrival_s))
+            .collect();
+        lane_lat.sort_by(f64::total_cmp);
+        out_lat.sort_by(f64::total_cmp);
+        assert_eq!(lane_lat.len(), out_lat.len(), "{ctx}: latency sample count");
+        for (l, o) in lane_lat.iter().zip(&out_lat) {
+            assert!(
+                l + 1e-6 * o.abs().max(1.0) >= *o,
+                "{ctx}: lane window {l:.12} below outcome latency {o:.12}"
+            );
+        }
+        // without recorded failures the bound is an equality
+        if traced.faults.n_failed == 0 {
+            for (l, o) in lane_lat.iter().zip(&out_lat) {
+                assert!(
+                    (l - o).abs() <= 1e-6 * o.abs().max(1e-9),
+                    "{ctx}: faultless lane window {l:.12} != latency {o:.12}"
+                );
+            }
+        }
+    }
+}
+
+/// The Chrome trace export serializes the same run to the identical
+/// byte string, and the JSONL run-record line is stable too.
+#[test]
+fn trace_exports_are_deterministic() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 4096);
+    let probe = sim::probe(&model, &hw, &cfg, &tiny_spec());
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+    let stream = RequestStream::poisson(
+        &tiny_spec(),
+        1.3 * 2.0 * probe.capacity_rps(),
+        14,
+        0xD0C5,
+    );
+    let schedule = FaultSchedule::seeded(2, stream.horizon_s(), 1, 1, 23);
+    let res = ResilienceSpec::none()
+        .with_schedule(schedule)
+        .with_retry(RetryPolicy::capped(2, 0.2 * probe.t_prefill_s, 2.0))
+        .with_failover(true);
+    let hws = vec![hw.clone(); 2];
+    let run = || {
+        let (c, sink) = collector();
+        let m = sim::simulate_fleet_faults_traced(
+            &stream,
+            &model,
+            &hws,
+            &cfg,
+            &fleet,
+            &Frontend::baseline(),
+            &res,
+            &sink,
+        );
+        (c.borrow().chrome_trace_json(), m)
+    };
+    let (j1, m1) = run();
+    let (j2, _) = run();
+    assert_eq!(j1, j2, "trace JSON differs between identical reruns");
+    assert!(j1.starts_with("{\"traceEvents\":["));
+    assert!(j1.ends_with("\"displayTimeUnit\":\"ms\"}\n"));
+    assert!(j1.contains("\"run_summary\""));
+    assert!(j1.contains("\"cat\":\"request\""));
+
+    let rec = sim::RunRecord {
+        study: "fault-study".to_string(),
+        cell: "fault+failover+retry".to_string(),
+        rate_rps: 3.25,
+        n_arrived: m1.n_arrived,
+        n_completed: m1.n_completed,
+        n_rejected: m1.n_rejected,
+        slo_attainment: m1.slo_attainment,
+        slo_goodput_tps: m1.slo_goodput_tps,
+        throughput_tps: m1.throughput_tps,
+        ttft_p99_s: m1.ttft.p99,
+        tpot_p99_s: m1.tpot.p99,
+        makespan_s: m1.makespan_s,
+        energy_pj: m1.energy_pj,
+        truncated: m1.truncated,
+        degraded: false,
+    };
+    assert_eq!(rec.to_json(), rec.to_json(), "run record line unstable");
+    assert!(rec.to_json().starts_with("{\"study\":\"fault-study\""));
+    assert!(rec.to_json().contains("\"degraded\":false"));
+}
