@@ -2,15 +2,85 @@
 //! multi-replica traffic one wall-clock second buys, per router policy
 //! (EXPERIMENTS.md "Fleet serving"). Complements `sim_steady_state`,
 //! which measures one package.
+//!
+//! With `--large` (or `COMPASS_BENCH_LARGE=1`) it additionally runs
+//! the PR 8 steady-state scale cell — 100 000 requests across 32
+//! replicas through the allocation-free hot path with parallel
+//! replica stepping — and reports simulated-seconds-per-wall-second
+//! against the budget recorded in `BENCH_engine_micro.json`
+//! (`fleet_large_sim_s_per_wall_s`). The default run stays small so
+//! CI's non-blocking sanity step finishes in seconds.
 
 use compass::arch::{ChipletClass, Dataflow, HwConfig};
-use compass::sim::{self, FleetConfig, RouterPolicy, SimConfig};
+use compass::sim::{self, FleetConfig, Frontend, RouterPolicy, SimConfig};
 use compass::util::Bench;
 use compass::workload::serving::ServingStrategy;
 use compass::workload::trace::TraceSpec;
 use compass::workload::ModelSpec;
 
+/// The PR 8 scale cell: one measured run (no repetition — the stream
+/// itself amortizes) of 1e5 requests over 32 replicas, tiny model so
+/// the bench measures the simulator, not the cost model.
+fn run_large() {
+    let model = ModelSpec::tiny();
+    let hw = HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    );
+    let spec = TraceSpec {
+        mean_in: 128.0,
+        mean_out: 32.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 8192,
+        shared_prefix_tokens: 0,
+    };
+    let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    cfg.max_batch = 16;
+    cfg.eval_blocks = 1;
+    cfg.ctx_bucket = 256;
+    cfg.max_iterations = usize::MAX;
+    let probe = sim::probe(&model, &hw, &cfg, &spec);
+    cfg.slo = probe.slo(3.0, 4.0);
+    let n_replicas = 32usize;
+    let n_requests = 100_000usize;
+    let rate = 0.85 * n_replicas as f64 * probe.capacity_rps();
+    let stream = sim::RequestStream::poisson(&spec, rate, n_requests, 7);
+    let fleet = FleetConfig::homogeneous(n_replicas, RouterPolicy::JoinShortestQueue);
+    let hws = vec![hw.clone(); n_replicas];
+    println!(
+        "fleet_steady_state/large: {n_requests} requests @ {rate:.1} req/s \
+         over {n_replicas} replicas ({} threads)",
+        compass::cost::engine::default_threads()
+    );
+    let t0 = std::time::Instant::now();
+    let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline());
+    let wall = t0.elapsed().as_secs_f64();
+    let iters: usize = m.per_replica.iter().map(|r| r.n_iterations).sum();
+    println!(
+        "    large cell: sim {:.1}s / wall {:.1}s -> {:.1} sim-s per wall-s | \
+         {} completed / {} arrived | {} iterations | {:.0} iters/wall-s",
+        m.makespan_s,
+        wall,
+        m.makespan_s / wall.max(1e-12),
+        m.n_completed,
+        m.n_arrived,
+        iters,
+        iters as f64 / wall.max(1e-12),
+    );
+}
+
 fn main() {
+    let large = std::env::args().any(|a| a == "--large")
+        || std::env::var("COMPASS_BENCH_LARGE").map_or(false, |v| v == "1");
+    if large {
+        run_large();
+        return;
+    }
     let model = ModelSpec::gpt3_7b();
     let hw = HwConfig::homogeneous(
         2,

@@ -172,7 +172,7 @@ fn main() {
         );
         let plain = sim::simulate_serving(&stream, &s.model, &s.hw, &cfg);
         let null: sim::SharedSink =
-            std::rc::Rc::new(std::cell::RefCell::new(sim::NullSink));
+            std::sync::Arc::new(std::sync::Mutex::new(sim::NullSink));
         let nulled = sim::simulate_serving_traced(&stream, &s.model, &s.hw, &cfg, &null);
         let c = SpanCollector::shared();
         let sink: sim::SharedSink = c.clone();
@@ -186,7 +186,7 @@ fn main() {
             assert_eq!(a.n_completed, b.n_completed);
             assert_eq!(a.n_preemptions, b.n_preemptions);
         }
-        let c = c.borrow();
+        let c = c.lock().unwrap();
         assert_lane_conservation(
             &c,
             traced.n_arrived,
@@ -238,7 +238,7 @@ fn main() {
         assert_eq!(plain.energy_pj.to_bits(), traced.energy_pj.to_bits());
         assert_eq!(plain.ttft.p99.to_bits(), traced.ttft.p99.to_bits());
         assert_eq!(plain.n_completed, traced.n_completed);
-        let c = c.borrow();
+        let c = c.lock().unwrap();
         assert_lane_conservation(
             &c,
             traced.n_arrived,
@@ -329,7 +329,7 @@ fn main() {
         assert_eq!(plain.energy_pj.to_bits(), traced.energy_pj.to_bits());
         assert_eq!(plain.faults.n_failed, traced.faults.n_failed);
         assert_eq!(plain.faults.n_lost, traced.faults.n_lost);
-        let cb = c.borrow();
+        let cb = c.lock().unwrap();
         assert_lane_conservation(
             &cb,
             traced.n_arrived,
@@ -375,7 +375,7 @@ fn main() {
         let j1 = cb.chrome_trace_json();
         drop(cb);
         let (c2, _) = run_traced();
-        let j2 = c2.borrow().chrome_trace_json();
+        let j2 = c2.lock().unwrap().chrome_trace_json();
         assert_eq!(j1, j2, "chrome trace JSON differs between identical reruns");
         assert!(j1.starts_with("{\"traceEvents\":["));
         assert!(j1.contains("\"run_summary\""));

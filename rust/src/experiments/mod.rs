@@ -20,8 +20,7 @@ use crate::workload::serving::{Scenario, ServingStrategy};
 use crate::workload::trace::{Trace, TraceSpec};
 use crate::workload::{ModelSpec, Phase};
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 pub use scenes::{model_for_tops, FleetScene, Scene, SimScene};
 
@@ -1752,7 +1751,7 @@ pub fn sim_study_traced_cell(
     hw: &HwConfig,
     base: &sim::SimConfig,
     seed: u64,
-) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+) -> (String, f64, Arc<Mutex<sim::SpanCollector>>) {
     let model = scene.model();
     let spec = scene.spec();
     let probe = sim::probe(&model, hw, base, &spec);
@@ -1782,7 +1781,7 @@ pub fn fleet_study_traced_cell(
     base: &sim::SimConfig,
     fleets: &[sim::FleetConfig],
     seed: u64,
-) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+) -> (String, f64, Arc<Mutex<sim::SpanCollector>>) {
     let model = scene.model();
     let spec = scene.spec();
     let probe = sim::probe(&model, hw, base, &spec);
@@ -1814,7 +1813,7 @@ pub fn frontend_study_traced_cell(
     base: &sim::SimConfig,
     knobs: &FrontendKnobs,
     seed: u64,
-) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+) -> (String, f64, Arc<Mutex<sim::SpanCollector>>) {
     let spec = scene.spec();
     let probe = sim::probe(model, hw, base, &spec);
     let mut cfg = *base;
@@ -1849,7 +1848,7 @@ pub fn fault_study_traced_cell(
     base: &sim::SimConfig,
     knobs: &FaultKnobs,
     seed: u64,
-) -> (String, f64, Rc<RefCell<sim::SpanCollector>>) {
+) -> (String, f64, Arc<Mutex<sim::SpanCollector>>) {
     let spec = scene.spec();
     let probe = sim::probe(model, hw, base, &spec);
     let mut cfg = *base;
@@ -2234,7 +2233,7 @@ mod tests {
         let (cell, rate, sink) = sim_study_traced_cell(&scene, &hw, &cfg, 3);
         assert_eq!(cell, ServingStrategy::ChunkedPrefill.name());
         assert_eq!(rate.to_bits(), 8.0f64.to_bits());
-        let c = sink.borrow();
+        let c = sink.lock().unwrap();
         assert!(c.n_finished() > 0, "traced replay finished no requests");
         assert!(!c.events().is_empty());
         // the trace must match what the study reported for that cell

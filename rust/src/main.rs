@@ -318,7 +318,7 @@ fn run_sim_study(args: &Args) {
     append_records(&args.record, &exp::sim_study_records(&rows));
     if let Some(path) = &args.trace_out {
         let (cell, rate, sink) = exp::sim_study_traced_cell(&scene, &hw, &cfg, args.seed);
-        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+        write_trace(path, &cell, rate, &sink.lock().unwrap().chrome_trace_json());
     }
     println!(
         "\n{}",
@@ -355,7 +355,7 @@ fn run_fleet_study(args: &Args) {
     if let Some(path) = &args.trace_out {
         let (cell, rate, sink) =
             exp::fleet_study_traced_cell(&scene, &hw, &cfg, &shapes, args.seed);
-        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+        write_trace(path, &cell, rate, &sink.lock().unwrap().chrome_trace_json());
     }
 }
 
@@ -426,7 +426,7 @@ fn run_frontend_study(args: &Args) {
             &knobs,
             args.seed,
         );
-        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+        write_trace(path, &cell, rate, &sink.lock().unwrap().chrome_trace_json());
     }
     println!("\n{}", exp::frontend_study_headline(&rows));
 }
@@ -474,7 +474,7 @@ fn run_fault_study(args: &Args) {
             &knobs,
             args.seed,
         );
-        write_trace(path, &cell, rate, &sink.borrow().chrome_trace_json());
+        write_trace(path, &cell, rate, &sink.lock().unwrap().chrome_trace_json());
     }
     println!("\n{}", exp::fault_study_headline(&rows));
 }

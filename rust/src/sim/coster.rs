@@ -9,6 +9,7 @@
 //! lookup per iteration instead of one timeline simulation.
 
 use std::collections::HashMap;
+use std::hash::BuildHasherDefault;
 
 use crate::arch::HwConfig;
 use crate::cost::{group_params, EvalScratch, Evaluator, MappingEvaluator};
@@ -63,7 +64,10 @@ pub struct BatchCoster<'a> {
     /// proportionally fewer KV bytes per iteration, so decode-phase
     /// attention gets cheaper along with the capacity gain.
     kv_bits: u64,
-    memo: HashMap<CompKey, IterCost>,
+    memo: HashMap<CompKey, IterCost, BuildHasherDefault<FxHasher>>,
+    /// Reusable composition-key scratch: `fill_key` rebuilds it in place
+    /// so steady-state memo hits allocate nothing.
+    key_buf: CompKey,
     lookups: usize,
 }
 
@@ -83,7 +87,8 @@ impl<'a> BatchCoster<'a> {
             eval_blocks,
             ctx_bucket,
             kv_bits: kv_dtype.bits(),
-            memo: HashMap::new(),
+            memo: HashMap::default(),
+            key_buf: CompKey::new(),
             lookups: 0,
         }
     }
@@ -94,19 +99,18 @@ impl<'a> BatchCoster<'a> {
         x.div_ceil(b) * b
     }
 
-    /// Canonical quantized composition key of a batch.
-    fn key_of(&self, batch: &[Request]) -> CompKey {
-        let mut key: CompKey = batch
-            .iter()
-            .map(|r| match *r {
-                Request::Prefill { len, past } => {
-                    (0u8, self.quantize(len.max(1)), self.quantize(past))
-                }
-                Request::Decode { ctx } => (1u8, self.quantize(ctx.max(1)), 0),
-            })
-            .collect();
-        key.sort_unstable();
-        key
+    /// Rebuild the canonical quantized composition key of a batch into
+    /// the reusable `key_buf` (no allocation once the buffer has grown
+    /// to the steady-state batch size).
+    fn fill_key(&mut self, batch: &[Request]) {
+        let b = self.ctx_bucket.max(1);
+        let q = |x: u64| x.div_ceil(b) * b;
+        self.key_buf.clear();
+        self.key_buf.extend(batch.iter().map(|r| match *r {
+            Request::Prefill { len, past } => (0u8, q(len.max(1)), q(past)),
+            Request::Decode { ctx } => (1u8, q(ctx.max(1)), 0),
+        }));
+        self.key_buf.sort_unstable();
     }
 
     /// Distinct batch shapes simulated so far.
@@ -126,17 +130,23 @@ impl<'a> BatchCoster<'a> {
     }
 
     /// Cost one iteration batch; memo hits never re-simulate.
+    ///
+    /// The steady-state hit path is allocation-free: the composition key
+    /// is rebuilt into a reusable buffer and looked up as a borrowed
+    /// slice (`Vec<K>: Borrow<[K]>`); only a miss clones the key into
+    /// the memo.
     pub fn cost(&mut self, batch: &[Request]) -> IterCost {
         debug_assert!(!batch.is_empty(), "cannot cost an empty batch");
         self.lookups += 1;
-        let key = self.key_of(batch);
-        if let Some(c) = self.memo.get(&key) {
+        self.fill_key(batch);
+        if let Some(c) = self.memo.get(self.key_buf.as_slice()) {
             let _p = super::telemetry::profile::scope("coster.memo_hit");
             return *c;
         }
         let _p = super::telemetry::profile::scope("coster.memo_miss");
         // the quantized key *is* the costed batch: decode it back
-        let qbatch: Vec<Request> = key
+        let qbatch: Vec<Request> = self
+            .key_buf
             .iter()
             .map(|&(tag, len, past)| {
                 if tag == 0 {
@@ -175,7 +185,7 @@ impl<'a> BatchCoster<'a> {
             MappingPolicy::Searched(ga_cfg) => {
                 // per-shape seed: order-independent, deterministic
                 let mut cfg = ga_cfg;
-                cfg.seed = ga_cfg.seed ^ key_hash(&key);
+                cfg.seed = ga_cfg.seed ^ key_hash(&self.key_buf);
                 let mev = MappingEvaluator::new(&w, self.hw);
                 let res = ga::search(rows, cols, chips, &cfg, &mev);
                 let mut scratch = EvalScratch::default();
@@ -188,18 +198,82 @@ impl<'a> BatchCoster<'a> {
             energy_pj,
             macs: w.total_macs(),
         };
+        let key = self.key_buf.clone();
         self.memo.insert(key, c);
         c
     }
 }
 
-/// Deterministic 64-bit hash of a composition key (`DefaultHasher::new`
-/// is keyed with fixed constants, so this is stable across runs).
+/// Deterministic 64-bit hash of a composition key.
+///
+/// Stays on `DefaultHasher` (keyed with fixed constants, stable across
+/// runs) because it seeds `MappingPolicy::Searched` GA runs: switching
+/// it would silently change every searched-policy result bitwise. The
+/// memo's table hasher ([`FxHasher`]) is a separate, cheaper function —
+/// map iteration order is never observed, so it is free to change.
 fn key_hash(key: &CompKey) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     key.hash(&mut h);
     h.finish()
+}
+
+/// Cheap deterministic hasher for the composition memo (FxHash-style
+/// rotate–xor–multiply, fixed seed). Unkeyed by design: the memo is an
+/// internal cache whose iteration order is never observed, and the hot
+/// path hashes a handful of machine words per lookup, where SipHash's
+/// setup cost dominates.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x517c_c1b7_2722_0a95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, w: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ w).wrapping_mul(FX_SEED);
+    }
+}
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +340,121 @@ mod tests {
         );
         assert!(b.energy_pj <= a.energy_pj);
         assert_eq!(a.macs, b.macs, "quantization must not change the math");
+    }
+
+    #[test]
+    fn memo_counters_stay_consistent_under_reused_key_buffer() {
+        let (model, hw) = setup();
+        let mut c = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 64, KvDtype::Fp16);
+        // Vary batch size up and down so the reusable key buffer must
+        // both grow and shrink; the accounting invariant
+        // lookups == hits + distinct_shapes must hold after every call.
+        let batches: Vec<Vec<Request>> = vec![
+            vec![Request::decode(100); 8],
+            vec![Request::decode(100); 2],
+            vec![Request::decode(100); 8],
+            vec![Request::prefill(60), Request::decode(40)],
+            vec![Request::decode(100); 2],
+            vec![Request::decode(40), Request::prefill(60)],
+        ];
+        for (i, b) in batches.iter().enumerate() {
+            c.cost(b);
+            assert_eq!(
+                c.lookups(),
+                c.hits() + c.distinct_shapes(),
+                "accounting broke after call {i}"
+            );
+            assert_eq!(c.lookups(), i + 1);
+        }
+        // 8-wide decode, 2-wide decode, mixed: three distinct shapes,
+        // each repeated once.
+        assert_eq!(c.distinct_shapes(), 3);
+        assert_eq!(c.hits(), 3);
+    }
+
+    #[test]
+    fn stale_key_buffer_tail_never_leaks_into_smaller_batches() {
+        let (model, hw) = setup();
+        let mut big = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32, KvDtype::Fp16);
+        let mut fresh = BatchCoster::new(&model, &hw, MappingPolicy::Pipeline, 1, 32, KvDtype::Fp16);
+        // Prime `big`'s key buffer with a wide batch, then cost a narrow
+        // one: the result must be bitwise what a fresh coster computes.
+        big.cost(&vec![Request::decode(500); 16]);
+        let small = [Request::prefill(20), Request::decode(70)];
+        let a = big.cost(&small);
+        let b = fresh.cost(&small);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(big.distinct_shapes(), 2);
+    }
+
+    #[test]
+    fn quantized_key_costs_identically_to_decoded_batch() {
+        let (model, hw) = setup();
+        let bucket = 64;
+        let mut raw = BatchCoster::new(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            bucket,
+            KvDtype::Fp16,
+        );
+        let mut dec = BatchCoster::new(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            bucket,
+            KvDtype::Fp16,
+        );
+        // Cost an unaligned batch, then hand a second coster the
+        // pre-quantized (bucket-aligned) equivalent: the memo key is the
+        // costed batch, so both must produce bitwise-identical costs and
+        // the aligned batch must also land on the same key.
+        let q = |x: u64| x.div_ceil(bucket) * bucket;
+        let batch = [
+            Request::Prefill { len: 90, past: 10 },
+            Request::decode(130),
+        ];
+        let aligned = [
+            Request::Prefill {
+                len: q(90),
+                past: q(10),
+            },
+            Request::decode(q(130)),
+        ];
+        let a = raw.cost(&batch);
+        let b = dec.cost(&aligned);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.macs, b.macs);
+        // and the aligned batch is a memo hit on the raw coster
+        raw.cost(&aligned);
+        assert_eq!(raw.distinct_shapes(), 1);
+        assert_eq!(raw.hits(), 1);
+    }
+
+    #[test]
+    fn fx_hasher_is_deterministic_and_spreads() {
+        use std::hash::{Hash, Hasher};
+        let key: CompKey = vec![(0, 64, 0), (1, 128, 0)];
+        let h = |k: &CompKey| {
+            let mut h = FxHasher::default();
+            k.hash(&mut h);
+            h.finish()
+        };
+        assert_eq!(h(&key), h(&key.clone()));
+        let other: CompKey = vec![(0, 64, 0), (1, 192, 0)];
+        assert_ne!(h(&key), h(&other));
+        // slice and owned-vec hashing agree (the borrowed-slice memo
+        // lookup depends on this)
+        let mut hs = FxHasher::default();
+        key.as_slice().hash(&mut hs);
+        let mut hv = FxHasher::default();
+        key.hash(&mut hv);
+        assert_eq!(hs.finish(), hv.finish());
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Deterministic binary-heap event queue for the fleet front end.
+//!
+//! The front-end layers used to keep their time-ordered work (pending
+//! KV migrations, retry backoffs, fault schedules, disaggregated
+//! handoffs) in sorted `Vec`s maintained with `partition_point` inserts
+//! or re-`sort_by` passes — O(n) per insert on the per-event hot path.
+//! [`EventHeap`] replaces them with a binary heap under an explicit
+//! total order, so pushes and pops are O(log n) while draining the
+//! exact same deterministic sequence:
+//!
+//! * primary key: time `t` (ascending, `f64::total_cmp`);
+//! * secondary key: caller `id` (ascending) — the request id for
+//!   migrations/retries, a constant for schedules ordered by time only;
+//! * final tie-break: insertion sequence (FIFO among exact `(t, id)`
+//!   ties), matching the insert-after-equals `partition_point`
+//!   convention (and `sort_by`'s stability) of the sorted-`Vec` code it
+//!   replaces.
+//!
+//! The payload is deliberately *not* part of the order, so `T` needs no
+//! `Ord` and a payload change can never silently reorder a drain.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: ordered by `(t, id, seq)` only.
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    t: f64,
+    id: usize,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.id.cmp(&other.id))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of `(t, id, item)` events with a deterministic total order
+/// (see the module docs for the tie-break contract).
+#[derive(Debug, Clone, Default)]
+pub struct EventHeap<T> {
+    heap: BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+    seq: u64,
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> Self {
+        EventHeap {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Queue `item` at time `t` with tie-break key `id`. Among exact
+    /// `(t, id)` ties, pushes drain in FIFO order.
+    pub fn push(&mut self, t: f64, id: usize, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Entry { t, id, seq, item }));
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_t(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.t)
+    }
+
+    /// Pop the next event unconditionally.
+    pub fn pop(&mut self) -> Option<(f64, usize, T)> {
+        self.heap.pop().map(|e| (e.0.t, e.0.id, e.0.item))
+    }
+
+    /// Pop the next event if it is due at or before `t` (inclusive —
+    /// the `front().t <= t` drain convention of the sorted-`Vec` loops
+    /// this replaces).
+    pub fn pop_due(&mut self, t: f64) -> Option<(f64, usize, T)> {
+        if self.peek_t()? <= t {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Remove every event matching `pred`, returned in deterministic
+    /// `(t, id, seq)` drain order; the survivors keep their queue
+    /// positions (heap rebuild — O(n), for rare events like crashes).
+    pub fn remove_where(&mut self, mut pred: impl FnMut(f64, usize, &T) -> bool) -> Vec<(f64, usize, T)> {
+        let seq = self.seq;
+        let entries = std::mem::take(&mut self.heap).into_vec();
+        let mut removed: Vec<Entry<T>> = Vec::new();
+        let mut kept: Vec<std::cmp::Reverse<Entry<T>>> = Vec::with_capacity(entries.len());
+        for e in entries {
+            if pred(e.0.t, e.0.id, &e.0.item) {
+                removed.push(e.0);
+            } else {
+                kept.push(e);
+            }
+        }
+        removed.sort_by(|a, b| a.cmp(b));
+        self.heap = BinaryHeap::from(kept);
+        self.seq = seq;
+        removed.into_iter().map(|e| (e.t, e.id, e.item)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oracle: the sorted-`Vec` with insert-after-equals that the heap
+    /// replaces.
+    fn model_drain(events: &[(f64, usize, u32)]) -> Vec<(f64, usize, u32)> {
+        let mut v: Vec<(f64, usize, u32)> = Vec::new();
+        for &(t, id, x) in events {
+            let pos = v.partition_point(|e| e.0 < t || (e.0 == t && e.1 <= id));
+            v.insert(pos, (t, id, x));
+        }
+        v
+    }
+
+    fn heap_drain(events: &[(f64, usize, u32)]) -> Vec<(f64, usize, u32)> {
+        let mut h = EventHeap::new();
+        for &(t, id, x) in events {
+            h.push(t, id, x);
+        }
+        let mut out = Vec::new();
+        while let Some((t, id, x)) = h.pop() {
+            out.push((t, id, x));
+        }
+        out
+    }
+
+    #[test]
+    fn equal_time_drains_by_id_then_fifo() {
+        let events = [
+            (2.0, 7, 0),
+            (2.0, 3, 1),
+            (1.0, 9, 2),
+            (2.0, 3, 3), // exact (t, id) duplicate: FIFO after payload 1
+            (2.0, 1, 4),
+        ];
+        assert_eq!(
+            heap_drain(&events),
+            vec![(1.0, 9, 2), (2.0, 1, 4), (2.0, 3, 1), (2.0, 3, 3), (2.0, 7, 0)]
+        );
+    }
+
+    #[test]
+    fn pop_due_boundary_is_inclusive() {
+        let mut h = EventHeap::new();
+        h.push(1.5, 0, "a");
+        h.push(2.0, 0, "b");
+        assert_eq!(h.pop_due(1.0), None);
+        assert_eq!(h.pop_due(1.5).map(|e| e.2), Some("a"));
+        assert_eq!(h.pop_due(1.99), None);
+        assert_eq!(h.pop_due(2.0).map(|e| e.2), Some("b"));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn matches_sorted_vec_model_on_randomized_streams() {
+        // deterministic LCG; exercises heavy (t, id) collisions
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for round in 0..50 {
+            let n = 1 + (rng() % 64) as usize;
+            let events: Vec<(f64, usize, u32)> = (0..n)
+                .map(|k| {
+                    let t = (rng() % 8) as f64 * 0.25;
+                    let id = (rng() % 5) as usize;
+                    (t, id, (round * 1000 + k) as u32)
+                })
+                .collect();
+            assert_eq!(
+                heap_drain(&events),
+                model_drain(&events),
+                "divergence on round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn remove_where_returns_drain_order_and_preserves_survivors() {
+        let mut h = EventHeap::new();
+        h.push(3.0, 2, 10);
+        h.push(1.0, 5, 20);
+        h.push(3.0, 1, 30);
+        h.push(2.0, 9, 40);
+        h.push(3.0, 1, 50); // FIFO duplicate of (3.0, 1)
+        let removed = h.remove_where(|t, _, _| t >= 3.0);
+        assert_eq!(removed, vec![(3.0, 1, 30), (3.0, 1, 50), (3.0, 2, 10)]);
+        assert_eq!(h.pop(), Some((1.0, 5, 20)));
+        assert_eq!(h.pop(), Some((2.0, 9, 40)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn nan_free_total_order_handles_infinities() {
+        let mut h = EventHeap::new();
+        h.push(f64::INFINITY, 0, "inf");
+        h.push(0.0, 0, "zero");
+        h.push(-0.0, 0, "negzero"); // total_cmp: -0.0 < 0.0
+        assert_eq!(h.pop().map(|e| e.2), Some("negzero"));
+        assert_eq!(h.pop().map(|e| e.2), Some("zero"));
+        assert_eq!(h.pop_due(1e308), None, "infinity is never due at finite t");
+        assert_eq!(h.pop().map(|e| e.2), Some("inf"));
+    }
+}

@@ -32,21 +32,21 @@
 //! shapes); replicas with equal hardware share one cost memo, exactly
 //! as before.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::HwConfig;
 use crate::workload::ModelSpec;
 
 use super::coster::BatchCoster;
+use super::events::EventHeap;
 use super::faults::{DrainSpec, FaultKind, FaultStats, ResilienceSpec, RetryPolicy};
 use super::fleet::{aggregate, FleetConfig, FleetMetrics, RouterPolicy};
 use super::kv::KvCache;
 use super::metrics::RequestOutcome;
 use super::sched::Scheduler;
 use super::stream::{RequestStream, TimedRequest};
-use super::telemetry::{EventKind, SharedSink};
+use super::telemetry::{profile, BufferSink, EventKind, SharedSink};
 use super::{SimConfig, SimProbe};
 
 /// What a router or admission policy may observe about one replica at
@@ -329,9 +329,10 @@ struct Pool<'a> {
     router: Box<dyn Router>,
     rebalance: Option<RebalanceSpec>,
     cfg: SimConfig,
-    /// Undelivered rebalance migrations, ascending by (t, id);
-    /// pop-front is O(1), ordered insert O(n) in the (small) backlog.
-    pending: VecDeque<PendingMigration>,
+    /// Undelivered rebalance migrations in an [`EventHeap`] keyed by
+    /// `(t, id)` — O(log n) push/pop, draining the exact sequence of
+    /// the sorted-`Vec` insert convention it replaces.
+    pending: EventHeap<PendingMigration>,
     origins: HashMap<usize, Origin>,
     n_rebalanced: usize,
     /// Safety valve on total migrations (rebalancing moves work toward
@@ -348,6 +349,11 @@ struct Pool<'a> {
     /// Trace replica index of `reps[0]` (a disaggregated decode pool's
     /// replicas number after the prefill pool's).
     replica_base: usize,
+    /// Worker threads for [`Pool::advance_all`]'s parallel replica
+    /// stepping (`COMPASS_THREADS`-aware, see
+    /// [`crate::cost::engine::default_threads`]); `1` forces the serial
+    /// loop.
+    threads: usize,
 }
 
 /// A drained pool: per-replica metrics plus per-request outcomes
@@ -377,13 +383,14 @@ impl<'a> Pool<'a> {
             router,
             rebalance,
             cfg,
-            pending: VecDeque::new(),
+            pending: EventHeap::new(),
             origins: HashMap::new(),
             n_rebalanced: 0,
             migration_cap,
             down: vec![false; n],
             sink: None,
             replica_base: 0,
+            threads: crate::cost::engine::default_threads(),
         }
     }
 
@@ -393,7 +400,7 @@ impl<'a> Pool<'a> {
     /// (front-door sheds, crash failures, fault instants). Disabled
     /// sinks are dropped, keeping the untraced path free.
     fn set_sink(&mut self, sink: &SharedSink, replica_base: usize) {
-        if !sink.borrow().enabled() {
+        if !sink.lock().unwrap().enabled() {
             return;
         }
         self.replica_base = replica_base;
@@ -407,7 +414,8 @@ impl<'a> Pool<'a> {
     /// `local_rep` (trace replica `replica_base + local_rep`).
     fn emit(&self, local_rep: usize, t_s: f64, ext_id: usize, kind: EventKind) {
         if let Some(sink) = &self.sink {
-            sink.borrow_mut()
+            sink.lock()
+                .unwrap()
                 .event(self.replica_base + local_rep, t_s, ext_id, kind);
         }
     }
@@ -415,7 +423,8 @@ impl<'a> Pool<'a> {
     /// Record a replica-level instant (crash/drain/straggler/link).
     fn instant(&self, local_rep: usize, t_s: f64, label: &'static str) {
         if let Some(sink) = &self.sink {
-            sink.borrow_mut()
+            sink.lock()
+                .unwrap()
                 .instant(self.replica_base + local_rep, t_s, label);
         }
     }
@@ -424,9 +433,60 @@ impl<'a> Pool<'a> {
         self.reps.iter().map(observe).collect()
     }
 
+    /// Advance every replica clock to `t`. Between consecutive
+    /// front-end events the replicas are independent — they share no
+    /// mutable state except the cost memo, and `BatchCoster::cost` is a
+    /// pure deterministic function of its composition key (the memo
+    /// lock is held across the whole miss computation, so a shape is
+    /// never costed twice and hit/miss counters stay order-independent)
+    /// — so lagging replicas step concurrently on scoped threads with
+    /// results bitwise-equal to the serial loop.
+    ///
+    /// Telemetry would otherwise interleave nondeterministically, so
+    /// while threads run, each replica emits into a private
+    /// [`BufferSink`] that is replayed into the real sink in replica
+    /// index order afterwards: exactly the byte stream of the serial
+    /// loop (replica 0 fully advanced, then replica 1, ...). The
+    /// serial path is kept verbatim for single-threaded runs, a single
+    /// lagging replica, and self-time profiling (the profiler's
+    /// accumulators are thread-local).
     fn advance_all(&mut self, t: f64) {
-        for s in self.reps.iter_mut() {
-            s.advance_to(t);
+        let lagging = self.reps.iter().filter(|s| s.needs_advance(t)).count();
+        if self.threads <= 1 || lagging <= 1 || profile::enabled() {
+            for s in self.reps.iter_mut() {
+                s.advance_to(t);
+            }
+            return;
+        }
+        let traced = self.sink.is_some();
+        let mut bufs: Vec<Arc<Mutex<BufferSink>>> = Vec::new();
+        let mut saved: Vec<Option<SharedSink>> = Vec::new();
+        if traced {
+            for s in self.reps.iter_mut() {
+                let buf = Arc::new(Mutex::new(BufferSink::new()));
+                bufs.push(buf.clone());
+                saved.push(s.swap_sink(Some(buf)));
+            }
+        }
+        let chunk = self.reps.len().div_ceil(self.threads.min(lagging));
+        std::thread::scope(|scope| {
+            for slab in self.reps.chunks_mut(chunk.max(1)) {
+                scope.spawn(move || {
+                    for s in slab {
+                        s.advance_to(t);
+                    }
+                });
+            }
+        });
+        if traced {
+            for (s, orig) in self.reps.iter_mut().zip(saved) {
+                s.swap_sink(orig);
+            }
+            let sink = self.sink.as_ref().unwrap();
+            let mut sink = sink.lock().unwrap();
+            for buf in &bufs {
+                buf.lock().unwrap().replay(&mut *sink);
+            }
         }
     }
 
@@ -439,17 +499,13 @@ impl<'a> Pool<'a> {
     }
 
     fn push_migration(&mut self, m: PendingMigration) {
-        let pos = self
-            .pending
-            .partition_point(|x| x.t < m.t || (x.t == m.t && x.id <= m.id));
-        self.pending.insert(pos, m);
+        self.pending.push(m.t, m.id, m);
     }
 
     /// Deliver every pending migration due by `t`, in (time, id)
     /// order, interleaving all replica clocks exactly like arrivals.
     fn deliver_due(&mut self, t: f64) {
-        while self.pending.front().map_or(false, |m| m.t <= t) {
-            let m = self.pending.pop_front().unwrap();
+        while let Some((_, _, m)) = self.pending.pop_due(t) {
             self.advance_all(m.t);
             self.reps[m.dst].inject_migrated(m.id, m.t, m.ctx, m.rest);
         }
@@ -534,14 +590,15 @@ impl<'a> Pool<'a> {
     /// the rebalancer; work only ever moves toward idler replicas, so
     /// this terminates), drain every replica, and collapse the pool.
     fn finish(mut self) -> PoolResult {
-        while let Some(m) = self.pending.pop_front() {
+        while let Some((_, _, m)) = self.pending.pop() {
             self.advance_all(m.t);
             self.reps[m.dst].inject_migrated(m.id, m.t, m.ctx, m.rest);
             self.maybe_rebalance(m.t);
         }
-        for s in self.reps.iter_mut() {
-            s.run_to_end();
-        }
+        // the final drain is `advance_to(∞)` per replica — exactly
+        // `run_to_end`, but through `advance_all` so independent
+        // replicas drain in parallel
+        self.advance_all(f64::INFINITY);
         let mut per_replica = Vec::with_capacity(self.reps.len());
         let mut outcomes: Vec<(usize, RequestOutcome)> = Vec::new();
         let mut outcome_reps: Vec<usize> = Vec::new();
@@ -610,13 +667,13 @@ fn pool_costers<'a>(
     model: &'a ModelSpec,
     hws: &'a [HwConfig],
     cfg: &SimConfig,
-) -> Vec<Rc<RefCell<BatchCoster<'a>>>> {
-    let mut out: Vec<Rc<RefCell<BatchCoster<'a>>>> = Vec::with_capacity(hws.len());
+) -> Vec<Arc<Mutex<BatchCoster<'a>>>> {
+    let mut out: Vec<Arc<Mutex<BatchCoster<'a>>>> = Vec::with_capacity(hws.len());
     for (i, hw) in hws.iter().enumerate() {
         if let Some(j) = hws[..i].iter().position(|h| h == hw) {
             out.push(out[j].clone());
         } else {
-            out.push(Rc::new(RefCell::new(BatchCoster::new(
+            out.push(Arc::new(Mutex::new(BatchCoster::new(
                 model,
                 hw,
                 cfg.policy,
@@ -766,7 +823,7 @@ fn run_disaggregated(
     fe: &Frontend,
     sink: Option<&SharedSink>,
 ) -> FleetMetrics {
-    let sink = sink.filter(|s| s.borrow().enabled());
+    let sink = sink.filter(|s| s.lock().unwrap().enabled());
     let (n_pre, n_dec) = (fleet.n_prefill.max(1), fleet.n_decode.max(1));
     let costers = pool_costers(model, hws, cfg);
     // spec-aware footprint probe (paging + sharing + dtype), the same
@@ -817,7 +874,9 @@ fn run_disaggregated(
         .iter()
         .map(|r| (r.id, r.output_len.max(1)))
         .collect();
-    let mut migs: Vec<Migration> = Vec::new();
+    // handoffs drain in (t, id) order straight from the heap — ids are
+    // unique, so the order is exactly the old `sort_by(t, then id)`
+    let mut migs: EventHeap<Migration> = EventHeap::new();
     for (i, &(id, o)) in pre_outcomes.iter().enumerate() {
         let (Some(finish), false) = (o.finish_s, o.rejected) else {
             continue;
@@ -833,17 +892,13 @@ fn run_disaggregated(
         // the handoff link opens at the prefill replica's finish time;
         // the matching MigrateIn comes from the decode-side scheduler
         if let Some(s) = sink {
-            s.borrow_mut()
+            s.lock()
+                .unwrap()
                 .event(pre_outcome_reps[i], finish, id, EventKind::MigrateOut);
         }
-        migs.push(Migration {
-            t: finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0),
-            id,
-            ctx,
-            rest,
-        });
+        let t = finish + link_tokens as f64 * fleet.handoff_s_per_token.max(0.0);
+        migs.push(t, id, Migration { t, id, ctx, rest });
     }
-    migs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.id.cmp(&b.id)));
 
     // --- stage 2: migrations JSQ-routed over the decode pool, with
     // optional decode-pool rebalancing between its replicas ---
@@ -862,7 +917,7 @@ fn run_disaggregated(
     if let Some(s) = sink {
         dec.set_sink(s, n_pre);
     }
-    for m in &migs {
+    while let Some((_, _, m)) = migs.pop() {
         dec.deliver_due(m.t);
         dec.advance_all(m.t);
         let req = TimedRequest {
@@ -948,8 +1003,8 @@ struct FaultDriver<'a> {
     drain: Option<DrainSpec>,
     failover: bool,
     tracks: HashMap<usize, Track>,
-    /// Requests waiting out their backoff, ascending by (due, id).
-    retryq: VecDeque<(f64, usize)>,
+    /// Requests waiting out their backoff, drained in (due, id) order.
+    retryq: EventHeap<()>,
     shed_final: Vec<RequestOutcome>,
     lost_final: Vec<RequestOutcome>,
     /// Recovery deadline per replica (meaningful while `pool.down`).
@@ -985,10 +1040,7 @@ impl<'a> FaultDriver<'a> {
     }
 
     fn push_retry(&mut self, due: f64, id: usize) {
-        let pos = self
-            .retryq
-            .partition_point(|x| x.0 < due || (x.0 == due && x.1 <= id));
-        self.retryq.insert(pos, (due, id));
+        self.retryq.push(due, id, ());
     }
 
     /// A request's current attempt just died (crash-killed, migration
@@ -1093,17 +1145,10 @@ impl<'a> FaultDriver<'a> {
     /// included), and mark it down until `t + recovery_s`.
     fn on_crash(&mut self, rep: usize, t: f64, recovery_s: f64) {
         self.step_to(t);
-        let pending = std::mem::take(&mut self.pool.pending);
-        let mut dead: Vec<usize> = Vec::new();
-        for m in pending {
-            if m.dst == rep {
-                dead.push(m.id);
-            } else {
-                self.pool.pending.push_back(m);
-            }
-        }
-        for id in dead {
-            self.fail(id, t, rep);
+        // migrations in flight toward the crashed replica die in their
+        // (t, id) delivery order; the survivors keep their positions
+        for (_, _, m) in self.pool.pending.remove_where(|_, _, m| m.dst == rep) {
+            self.fail(m.id, t, rep);
         }
         self.pool.instant(rep, t, "crash");
         let failed = self.pool.reps[rep].crash(t);
@@ -1269,7 +1314,7 @@ fn run_fleet_faults(
                 )
             })
             .collect(),
-        retryq: VecDeque::new(),
+        retryq: EventHeap::new(),
         shed_final: Vec::new(),
         lost_final: Vec::new(),
         up_at: vec![0.0; n_rep],
@@ -1278,56 +1323,56 @@ fn run_fleet_faults(
         link_factor: 1.0,
         base_handoff: fe.rebalance.map_or(0.0, |rb| rb.handoff_s_per_token),
     };
-    // expand the schedule into a time-ordered event list; the stable
-    // sort keeps a drain ahead of its crash at equal times and equal-t
-    // faults in schedule order
-    let mut events: Vec<(f64, FaultEv)> = Vec::new();
+    // expand the schedule into a time-ordered event heap; pushing with a
+    // constant id makes the heap's FIFO seq the only tie-break, so
+    // equal-t faults drain in schedule order and a drain stays ahead of
+    // its crash — exactly the old stable sort by time
+    let mut events: EventHeap<FaultEv> = EventHeap::new();
     for f in &res.schedule.faults {
         let rep = f.replica.min(n_rep - 1);
         match f.kind {
             FaultKind::Crash { recovery_s } => {
                 if let Some(d) = res.drain {
-                    events.push(((f.t_s - d.lead_s).max(0.0), FaultEv::Drain { rep }));
+                    events.push((f.t_s - d.lead_s).max(0.0), 0, FaultEv::Drain { rep });
                 }
-                events.push((f.t_s, FaultEv::Crash { rep, recovery_s }));
+                events.push(f.t_s, 0, FaultEv::Crash { rep, recovery_s });
             }
             FaultKind::Straggler {
                 duration_s,
                 slowdown,
             } => {
-                events.push((
+                events.push(
                     f.t_s,
+                    0,
                     FaultEv::Straggle {
                         rep,
                         until_s: f.t_s + duration_s,
                         slowdown,
                     },
-                ));
+                );
             }
             FaultKind::LinkDegrade { duration_s, factor } => {
-                events.push((f.t_s, FaultEv::LinkSet { factor }));
-                events.push((f.t_s + duration_s, FaultEv::LinkSet { factor: 1.0 }));
+                events.push(f.t_s, 0, FaultEv::LinkSet { factor });
+                events.push(f.t_s + duration_s, 0, FaultEv::LinkSet { factor: 1.0 });
             }
         }
     }
-    events.sort_by(|a, b| a.0.total_cmp(&b.0));
     // three-way deterministic merge of fault events, stream arrivals and
     // retry due-times; ties resolve events < arrivals < retries so a
     // crash at an arrival instant kills before the arrival routes
-    let (mut ev_i, mut arr_i) = (0usize, 0usize);
+    let mut arr_i = 0usize;
     loop {
-        let te = events.get(ev_i).map_or(f64::INFINITY, |e| e.0);
+        let te = events.peek_t().unwrap_or(f64::INFINITY);
         let ta = stream
             .requests
             .get(arr_i)
             .map_or(f64::INFINITY, |r| r.arrival_s);
-        let tr = drv.retryq.front().map_or(f64::INFINITY, |x| x.0);
+        let tr = drv.retryq.peek_t().unwrap_or(f64::INFINITY);
         if te.is_infinite() && ta.is_infinite() && tr.is_infinite() {
             break;
         }
         if te <= ta && te <= tr {
-            let (t, ev) = events[ev_i];
-            ev_i += 1;
+            let (t, _, ev) = events.pop().unwrap();
             match ev {
                 FaultEv::Crash { rep, recovery_s } => drv.on_crash(rep, t, recovery_s),
                 FaultEv::Drain { rep } => drv.on_drain(rep, t),
@@ -1355,7 +1400,7 @@ fn run_fleet_faults(
             drv.offer(r.id, r.arrival_s);
             drv.pool.maybe_rebalance(r.arrival_s);
         } else {
-            let (t, id) = drv.retryq.pop_front().unwrap();
+            let (t, id, ()) = drv.retryq.pop().unwrap();
             drv.step_to(t);
             drv.offer(id, t);
             drv.pool.maybe_rebalance(t);

@@ -16,6 +16,7 @@
 //! `dse::compass_dse_serving`.
 
 pub mod coster;
+pub mod events;
 pub mod faults;
 pub mod fleet;
 pub mod frontend;
@@ -26,6 +27,7 @@ pub mod stream;
 pub mod telemetry;
 
 pub use coster::{BatchCoster, IterCost, MappingPolicy};
+pub use events::EventHeap;
 pub use faults::{
     DrainSpec, FaultKind, FaultSchedule, FaultSpec, FaultStats, ResilienceSpec, RetryPolicy,
 };
@@ -43,7 +45,7 @@ pub use sched::{
 };
 pub use stream::{RequestStream, TimedRequest};
 pub use telemetry::{
-    profile, EventKind, IterSpan, NullSink, RequestLane, RunRecord, SharedSink, Span,
+    profile, BufferSink, EventKind, IterSpan, NullSink, RequestLane, RunRecord, SharedSink, Span,
     SpanCollector, SpanKind, TraceSink,
 };
 

@@ -34,9 +34,8 @@
 //! many instances under a front-end router, injecting requests (or KV
 //! migrations, for disaggregated prefill/decode pools) between steps.
 
-use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::constants::CLOCK_HZ;
 use crate::arch::HwConfig;
@@ -110,9 +109,11 @@ pub struct ReplicaResult {
     pub outcomes: Vec<(usize, RequestOutcome)>,
 }
 
-/// One-pass front-end observation counters (see
-/// [`Scheduler::frontend_counters`]).
-#[derive(Debug, Clone, Copy, Default)]
+/// Front-end observation counters (see
+/// [`Scheduler::frontend_counters`]). Maintained incrementally at every
+/// queue/running transition, so the per-arrival × per-replica routing
+/// observation is O(1) instead of a full queue + running rescan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FrontendCounters {
     pub backlog_tokens: u64,
     pub pending_prefill_tokens: u64,
@@ -152,6 +153,9 @@ pub struct ExtractedRequest {
     pub rest: u64,
 }
 
+/// Sentinel for "no request" in the intrusive running-list links.
+const NONE: usize = usize::MAX;
+
 /// Resumable continuous-batching scheduler for one package.
 ///
 /// Drive it with [`Scheduler::inject`] / [`Scheduler::advance_to`] /
@@ -159,19 +163,46 @@ pub struct ExtractedRequest {
 /// request must be injected once the clock has reached its arrival
 /// time), which is what lets a fleet router interleave replicas
 /// deterministically.
+///
+/// Hot-path layout: `reqs` is an append-only arena (slots are never
+/// reused — request indices double as KV-cache ids), the running set is
+/// an index-based intrusive doubly-linked list threaded through
+/// `run_next`/`run_prev` (O(1) unlink replaces the old
+/// `Vec::remove`/`retain` shifts; link order *is* admission order, the
+/// explicit ordinal every batch-composition and eviction scan relies
+/// on), and per-step batch/cost/event buffers are reused across
+/// iterations so the steady state allocates nothing.
 pub struct Scheduler<'a> {
     cfg: SimConfig,
     /// All KV accounting lives here: block allocator, reservation
     /// leases, prefix sharing, fragmentation/sharing stats.
     kv: KvCache,
     /// Composition-keyed cost memo; shareable across the replicas of a
-    /// fleet (costs are order-independent, so sharing is bit-exact).
-    coster: Rc<RefCell<BatchCoster<'a>>>,
+    /// fleet (costs are order-independent, so sharing is bit-exact —
+    /// also across the parallel-stepping worker threads, hence the
+    /// `Mutex`: a lookup holds the lock for the whole cost call, so a
+    /// shape is never computed twice and every replica observes the
+    /// identical memoized value).
+    coster: Arc<Mutex<BatchCoster<'a>>>,
     peak_macs_per_cycle: f64,
     reqs: Vec<Live>,
     ext_ids: Vec<usize>,
     queue: VecDeque<usize>,
-    running: Vec<usize>, // admission order: oldest first
+    /// Intrusive running list (admission order: oldest first). Links are
+    /// request-arena indices; `NONE` terminates.
+    run_next: Vec<usize>,
+    run_prev: Vec<usize>,
+    run_head: usize,
+    run_tail: usize,
+    n_running: usize,
+    /// Incrementally maintained front-end counters; `frontend_counters`
+    /// cross-checks them against a full scan under `debug_assertions`.
+    fc: FrontendCounters,
+    /// Reusable per-step scratch (taken/restored around each use so the
+    /// steady state never allocates).
+    scratch_batch: Vec<(usize, Role)>,
+    scratch_cost: Vec<Request>,
+    scratch_ev: Vec<(usize, EventKind)>,
     clock: f64,
     trace: TraceBuffer,
     n_arrived: usize,
@@ -210,7 +241,7 @@ pub struct Scheduler<'a> {
 
 impl<'a> Scheduler<'a> {
     pub fn new(model: &'a ModelSpec, hw: &'a HwConfig, cfg: &SimConfig) -> Self {
-        let coster = Rc::new(RefCell::new(BatchCoster::new(
+        let coster = Arc::new(Mutex::new(BatchCoster::new(
             model,
             hw,
             cfg.policy,
@@ -222,15 +253,16 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Build a scheduler on a shared cost memo: identical fleet replicas
-    /// pass clones of one `Rc` so a batch shape simulated (or
+    /// pass clones of one `Arc` so a batch shape simulated (or
     /// GA-searched, under `MappingPolicy::Searched`) on any replica is
-    /// never re-costed on another. `distinct_shapes` then reports the
-    /// shared memo's size.
+    /// never re-costed on another — including replicas stepping
+    /// concurrently on worker threads. `distinct_shapes` then reports
+    /// the shared memo's size.
     pub fn with_coster(
         model: &'a ModelSpec,
         hw: &'a HwConfig,
         cfg: &SimConfig,
-        coster: Rc<RefCell<BatchCoster<'a>>>,
+        coster: Arc<Mutex<BatchCoster<'a>>>,
     ) -> Self {
         Scheduler {
             cfg: *cfg,
@@ -240,7 +272,15 @@ impl<'a> Scheduler<'a> {
             reqs: Vec::new(),
             ext_ids: Vec::new(),
             queue: VecDeque::new(),
-            running: Vec::new(),
+            run_next: Vec::new(),
+            run_prev: Vec::new(),
+            run_head: NONE,
+            run_tail: NONE,
+            n_running: 0,
+            fc: FrontendCounters::default(),
+            scratch_batch: Vec::new(),
+            scratch_cost: Vec::new(),
+            scratch_ev: Vec::new(),
             clock: 0.0,
             trace: TraceBuffer::new(cfg.trace_cap),
             n_arrived: 0,
@@ -267,16 +307,25 @@ impl<'a> Scheduler<'a> {
     /// calling this.
     pub fn set_sink(&mut self, sink: SharedSink, replica: usize) {
         self.replica = replica;
-        self.sink = if sink.borrow().enabled() {
+        self.sink = if sink.lock().unwrap().enabled() {
             Some(sink)
         } else {
             None
         };
     }
 
+    /// Swap the attached sink handle, returning the previous one. The
+    /// parallel-stepping path uses this to stage each replica's
+    /// emissions into a per-replica [`super::telemetry::BufferSink`]
+    /// while worker threads run, then restore the real sink and replay
+    /// the buffers in replica index order.
+    pub(crate) fn swap_sink(&mut self, sink: Option<SharedSink>) -> Option<SharedSink> {
+        std::mem::replace(&mut self.sink, sink)
+    }
+
     fn emit(&self, t_s: f64, ext_id: usize, kind: EventKind) {
         if let Some(sink) = &self.sink {
-            sink.borrow_mut().event(self.replica, t_s, ext_id, kind);
+            sink.lock().unwrap().event(self.replica, t_s, ext_id, kind);
         }
     }
 
@@ -290,7 +339,15 @@ impl<'a> Scheduler<'a> {
 
     /// Queued or admitted requests that still have work.
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.running.is_empty()
+        !self.queue.is_empty() || self.n_running > 0
+    }
+
+    /// Whether [`Scheduler::advance_to`]`(t)` would run at least one
+    /// iteration — the exact loop condition it tests. The fleet's
+    /// parallel stepping uses this to count lagging replicas before
+    /// deciding whether spawning worker threads is worth it.
+    pub fn needs_advance(&self, t: f64) -> bool {
+        !self.truncated && self.clock < t - 1e-12 && self.has_work()
     }
 
     /// Outstanding token work (queued context+output plus in-flight
@@ -308,7 +365,7 @@ impl<'a> Scheduler<'a> {
 
     /// Co-resident admitted requests.
     pub fn n_running(&self) -> usize {
-        self.running.len()
+        self.n_running
     }
 
     /// Admitted requests currently in their decode phase
@@ -345,12 +402,23 @@ impl<'a> Scheduler<'a> {
         self.trace.busy_s()
     }
 
-    /// One-pass snapshot of the queue/running sets for front-end
-    /// routing observations: equivalent to calling `backlog_tokens`,
-    /// `pending_prefill_tokens`, `n_decoding` and `n_prefilling`
-    /// separately, in a single traversal (the per-arrival x
-    /// per-replica routing hot path).
+    /// O(1) snapshot of the queue/running observation counters for
+    /// front-end routing (the per-arrival × per-replica hot path).
+    /// Maintained incrementally at every queue/running transition;
+    /// under `debug_assertions` each call cross-checks the increments
+    /// against the full traversal they replaced.
     pub fn frontend_counters(&self) -> FrontendCounters {
+        debug_assert_eq!(
+            self.fc,
+            self.scan_counters(),
+            "incremental front-end counters drifted from the full scan"
+        );
+        self.fc
+    }
+
+    /// The full queue + running traversal the incremental counters
+    /// replaced; kept as the `debug_assertions` cross-check oracle.
+    fn scan_counters(&self) -> FrontendCounters {
         let mut c = FrontendCounters::default();
         for &i in &self.queue {
             let r = &self.reqs[i];
@@ -359,7 +427,8 @@ impl<'a> Scheduler<'a> {
                 c.pending_prefill_tokens += r.input_len;
             }
         }
-        for &i in &self.running {
+        let mut i = self.run_head;
+        while i != NONE {
             let r = &self.reqs[i];
             c.backlog_tokens +=
                 (r.prefill_target - r.prefill_done) + r.output_len.saturating_sub(r.generated);
@@ -369,8 +438,88 @@ impl<'a> Scheduler<'a> {
             } else {
                 c.n_prefilling += 1;
             }
+            i = self.run_next[i];
         }
         c
+    }
+
+    /// What request `idx` contributes to the counters while queued
+    /// (contributions depend only on immutable fields, so add/remove
+    /// are exactly symmetric across a queue stay).
+    fn fc_queue_add(&mut self, idx: usize) {
+        let r = &self.reqs[idx];
+        self.fc.backlog_tokens += r.input_len + r.output_len;
+        if !r.prefilled {
+            self.fc.pending_prefill_tokens += r.input_len;
+        }
+    }
+
+    fn fc_queue_remove(&mut self, idx: usize) {
+        let r = &self.reqs[idx];
+        self.fc.backlog_tokens -= r.input_len + r.output_len;
+        if !r.prefilled {
+            self.fc.pending_prefill_tokens -= r.input_len;
+        }
+    }
+
+    /// What request `idx` contributes to the counters while running;
+    /// must be called with the fields it reads in their in-list state
+    /// (i.e. before an eviction resets `prefill_done`).
+    fn fc_run_add(&mut self, idx: usize) {
+        let r = &self.reqs[idx];
+        self.fc.backlog_tokens +=
+            (r.prefill_target - r.prefill_done) + r.output_len.saturating_sub(r.generated);
+        self.fc.pending_prefill_tokens += r.prefill_target.saturating_sub(r.prefill_done);
+        if r.decoding() {
+            self.fc.n_decoding += 1;
+        } else {
+            self.fc.n_prefilling += 1;
+        }
+    }
+
+    fn fc_run_remove(&mut self, idx: usize) {
+        let r = &self.reqs[idx];
+        self.fc.backlog_tokens -=
+            (r.prefill_target - r.prefill_done) + r.output_len.saturating_sub(r.generated);
+        self.fc.pending_prefill_tokens -= r.prefill_target.saturating_sub(r.prefill_done);
+        if r.decoding() {
+            self.fc.n_decoding -= 1;
+        } else {
+            self.fc.n_prefilling -= 1;
+        }
+    }
+
+    /// Append `idx` to the intrusive running list (admission order).
+    fn run_push_back(&mut self, idx: usize) {
+        self.run_next[idx] = NONE;
+        self.run_prev[idx] = self.run_tail;
+        if self.run_tail != NONE {
+            self.run_next[self.run_tail] = idx;
+        } else {
+            self.run_head = idx;
+        }
+        self.run_tail = idx;
+        self.n_running += 1;
+    }
+
+    /// Unlink `idx` from the running list in O(1). `idx` must be in the
+    /// list; relative order of the remaining requests is untouched
+    /// (exactly `Vec::remove`/`retain` semantics, without the shifts).
+    fn run_unlink(&mut self, idx: usize) {
+        let (p, n) = (self.run_prev[idx], self.run_next[idx]);
+        if p != NONE {
+            self.run_next[p] = n;
+        } else {
+            self.run_head = n;
+        }
+        if n != NONE {
+            self.run_prev[n] = p;
+        } else {
+            self.run_tail = p;
+        }
+        self.run_prev[idx] = NONE;
+        self.run_next[idx] = NONE;
+        self.n_running -= 1;
     }
 
     /// Whether a migrated request with `context_len` resident tokens
@@ -387,12 +536,22 @@ impl<'a> Scheduler<'a> {
     /// [`Scheduler::extract_youngest_decoding`] would migrate next,
     /// without extracting it.
     pub fn peek_youngest_decoding(&self) -> Option<(u64, u64)> {
-        let idx = self.running.iter().rev().copied().find(|&i| {
-            let r = &self.reqs[i];
-            r.decoding() && r.generated >= 1 && r.generated < r.output_len
-        })?;
+        let idx = self.find_youngest_decoding()?;
         let r = &self.reqs[idx];
         Some((r.input_len + r.generated, r.output_len - r.generated))
+    }
+
+    /// Youngest-first (tail-to-head) scan for a mid-decode request.
+    fn find_youngest_decoding(&self) -> Option<usize> {
+        let mut i = self.run_tail;
+        while i != NONE {
+            let r = &self.reqs[i];
+            if r.decoding() && r.generated >= 1 && r.generated < r.output_len {
+                return Some(i);
+            }
+            i = self.run_prev[i];
+        }
+        None
     }
 
     /// Remove the youngest mid-decode request (first token emitted,
@@ -402,11 +561,9 @@ impl<'a> Scheduler<'a> {
     /// [`Scheduler::inject_migrated`] on another replica, paying the
     /// block-granular KV handoff — and fleet-level outcome stitching.
     pub fn extract_youngest_decoding(&mut self) -> Option<ExtractedRequest> {
-        let pos = self.running.iter().rposition(|&i| {
-            let r = &self.reqs[i];
-            r.decoding() && r.generated >= 1 && r.generated < r.output_len
-        })?;
-        let idx = self.running.remove(pos);
+        let idx = self.find_youngest_decoding()?;
+        self.run_unlink(idx);
+        self.fc_run_remove(idx);
         self.kv.release(idx);
         let first_token_s = self.reqs[idx].first_token_s.unwrap_or(self.clock);
         let r = &mut self.reqs[idx];
@@ -438,7 +595,20 @@ impl<'a> Scheduler<'a> {
     pub fn crash(&mut self, t: f64) -> Vec<FailedRequest> {
         self.clock = self.clock.max(t);
         let queued: Vec<usize> = self.queue.drain(..).collect();
-        let running: Vec<usize> = std::mem::take(&mut self.running);
+        let mut running = Vec::with_capacity(self.n_running);
+        let mut i = self.run_head;
+        while i != NONE {
+            running.push(i);
+            i = self.run_next[i];
+        }
+        for &idx in &running {
+            self.run_prev[idx] = NONE;
+            self.run_next[idx] = NONE;
+        }
+        self.run_head = NONE;
+        self.run_tail = NONE;
+        self.n_running = 0;
+        self.fc = FrontendCounters::default();
         let mut failed = Vec::with_capacity(queued.len() + running.len());
         for idx in queued.into_iter().chain(running) {
             let r = &mut self.reqs[idx];
@@ -520,6 +690,8 @@ impl<'a> Scheduler<'a> {
             self.rejected += 1;
             self.reqs.push(live);
             self.ext_ids.push(ext_id);
+            self.run_next.push(NONE);
+            self.run_prev.push(NONE);
             self.emit(arrival_s, ext_id, EventKind::Reject);
             return;
         }
@@ -529,7 +701,10 @@ impl<'a> Scheduler<'a> {
         }
         self.reqs.push(live);
         self.ext_ids.push(ext_id);
+        self.run_next.push(NONE);
+        self.run_prev.push(NONE);
         self.queue.push_back(idx);
+        self.fc_queue_add(idx);
         self.emit(
             arrival_s,
             ext_id,
@@ -561,18 +736,22 @@ impl<'a> Scheduler<'a> {
 
     /// KV blocks this iteration's decode writes would newly allocate.
     fn decode_growth(&self) -> u64 {
-        self.running
-            .iter()
-            .filter(|&&i| self.reqs[i].decoding())
-            .map(|&i| self.kv.decode_growth_one(i))
-            .sum()
+        let mut sum = 0;
+        let mut i = self.run_head;
+        while i != NONE {
+            if self.reqs[i].decoding() {
+                sum += self.kv.decode_growth_one(i);
+            }
+            i = self.run_next[i];
+        }
+        sum
     }
 
-    /// Pick the preemption victim's position in `running` (never 0: the
-    /// oldest request keeps its cache so the system always progresses).
+    /// Pick the preemption victim (never the list head: the oldest
+    /// request keeps its cache so the system always progresses).
     fn pick_victim(&self) -> usize {
         match self.cfg.kv.eviction {
-            EvictionPolicy::YoungestFirst => self.running.len() - 1,
+            EvictionPolicy::YoungestFirst => self.run_tail,
             EvictionPolicy::CostBased => {
                 // lowest recompute loss: the non-oldest request whose
                 // eviction discards the least already-invested work —
@@ -581,11 +760,14 @@ impl<'a> Scheduler<'a> {
                 // re-admission context: a barely-started large prefill
                 // owes its remaining tokens either way, so only the
                 // written part counts. Ties go to the youngest,
-                // matching the default policy.)
-                let mut best_pos = self.running.len() - 1;
+                // matching the default policy: the tail-to-head walk
+                // with a strict `<` visits youngest first, exactly the
+                // old positional `(1..len).rev()` loop.)
+                let mut best = self.run_tail;
                 let mut best_loss = u64::MAX;
-                for pos in (1..self.running.len()).rev() {
-                    let r = &self.reqs[self.running[pos]];
+                let mut i = self.run_tail;
+                while i != NONE && i != self.run_head {
+                    let r = &self.reqs[i];
                     // migrated requests re-fetch over the handoff link
                     // instead of recomputing: zero compute loss
                     let loss = if r.prefilled {
@@ -595,28 +777,45 @@ impl<'a> Scheduler<'a> {
                     };
                     if loss < best_loss {
                         best_loss = loss;
-                        best_pos = pos;
+                        best = i;
                     }
+                    i = self.run_prev[i];
                 }
-                best_pos
+                best
             }
         }
     }
 
-    fn evict_victim(&mut self) {
-        debug_assert!(!self.running.is_empty(), "eviction needs a running request");
-        let pos = self.pick_victim();
-        let victim = self.running.remove(pos);
+    /// Evict one victim, returning the decode-write growth it was
+    /// contributing (so the caller's KV-pressure loop can subtract it
+    /// instead of rescanning: growth is per-request state, so releasing
+    /// one request never changes another's contribution).
+    fn evict_victim(&mut self) -> u64 {
+        debug_assert!(self.n_running > 0, "eviction needs a running request");
+        let victim = self.pick_victim();
+        // measured before `release` — growth_one needs the live lease
+        let growth = if self.reqs[victim].decoding() {
+            self.kv.decode_growth_one(victim)
+        } else {
+            0
+        };
+        self.run_unlink(victim);
+        self.fc_run_remove(victim);
         self.kv.release(victim);
         let r = &mut self.reqs[victim];
         r.prefill_done = 0;
         r.past_base = 0;
         self.queue.push_front(victim);
+        self.fc_queue_add(victim);
         self.preemptions += 1;
         self.emit(self.clock, self.ext_ids[victim], EventKind::Preempt);
+        growth
     }
 
     fn admit(&mut self, idx: usize) {
+        // `idx` was just popped from the queue front: retire its queued
+        // counter contribution before the admission mutates its fields
+        self.fc_queue_remove(idx);
         let ctx = self.reqs[idx].context_needed();
         let migrated = self.reqs[idx].prefilled;
         if migrated {
@@ -646,7 +845,8 @@ impl<'a> Scheduler<'a> {
             r.prefill_target = ctx - grant.skip;
             r.prefill_done = 0;
         }
-        self.running.push(idx);
+        self.run_push_back(idx);
+        self.fc_run_add(idx);
         self.emit(self.clock, self.ext_ids[idx], EventKind::Admit);
         if migrated {
             // the context materialized by transfer: a zero-length
@@ -666,48 +866,60 @@ impl<'a> Scheduler<'a> {
             self.truncated = true; // safety valve
             return false;
         }
+        let mut batch = std::mem::take(&mut self.scratch_batch);
         loop {
             // --- KV pressure: preempt per policy (never the oldest) so
             // the in-flight decodes can write this iteration's tokens
-            // without consuming reserved prefill headroom ---
-            loop {
-                let growth = self.decode_growth();
-                if self.kv.fits_growth(growth) || self.running.len() <= 1 {
-                    break;
-                }
-                self.evict_victim();
+            // without consuming reserved prefill headroom. One scan,
+            // then each eviction subtracts its victim's contribution ---
+            let mut growth = self.decode_growth();
+            while !self.kv.fits_growth(growth) && self.n_running > 1 {
+                growth -= self.evict_victim();
             }
+            debug_assert_eq!(
+                growth,
+                self.decode_growth(),
+                "incremental eviction-loop growth drifted from the rescan"
+            );
 
-            let batch = self.form_batch();
+            batch.clear();
+            self.form_batch(&mut batch, growth);
             if batch.is_empty() {
                 // KV-blocked prefills with no runnable decode: free a
                 // victim and retry (the oldest always keeps its cache,
                 // so the system is guaranteed to make progress)
-                if self.running.len() > 1 {
+                if self.n_running > 1 {
                     self.evict_victim();
                     continue;
                 }
+                self.scratch_batch = batch;
                 return false; // idle: the driver injects or stops
             }
             self.run_batch(&batch);
+            self.scratch_batch = batch;
             return true;
         }
     }
 
-    /// Compose this iteration's batch per the serving strategy.
-    /// Admission headroom is the cache's free blocks: written and
-    /// reserved (leased) blocks are both excluded, so admission can
-    /// never invade the reservation of an in-flight chunked prefill.
-    fn form_batch(&mut self) -> Vec<(usize, Role)> {
-        let mut batch: Vec<(usize, Role)> = Vec::new();
-
+    /// Compose this iteration's batch per the serving strategy into the
+    /// caller's (reused) buffer. Admission headroom is the cache's free
+    /// blocks: written and reserved (leased) blocks are both excluded,
+    /// so admission can never invade the reservation of an in-flight
+    /// chunked prefill.
+    ///
+    /// `growth` is the decode-write growth of the current running set —
+    /// exactly what `decode_growth()` would rescan — carried over from
+    /// the caller's KV-pressure loop and kept incremental through the
+    /// migrated-admission pre-pass (an admitted migrated request is
+    /// decoding, so its contribution joins the sum the strategy arms
+    /// previously recomputed over the decoding set).
+    fn form_batch(&mut self, batch: &mut Vec<(usize, Role)>, mut growth: u64) {
         // migrated requests (disaggregated decode pool) join the decode
         // set directly: admit before the strategy composes its batch.
         // Unlike prompt admission, the context is written immediately
         // *and* the admittee decodes this iteration, so the headroom
         // check must also cover every co-scheduled decode write.
-        let mut growth = self.decode_growth();
-        while self.running.len() < self.cfg.max_batch {
+        while self.n_running < self.cfg.max_batch {
             let Some(&q) = self.queue.front() else { break };
             if !self.reqs[q].prefilled {
                 break;
@@ -722,16 +934,15 @@ impl<'a> Scheduler<'a> {
             // the co-scheduled growth (the pre-paging `writes += 1`)
             growth += self.kv.decode_growth_one(q);
         }
+        debug_assert_eq!(
+            growth,
+            self.decode_growth(),
+            "carried decode growth drifted from the rescan"
+        );
 
-        let decoding: Vec<usize> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|&i| self.reqs[i].decoding())
-            .collect();
         match self.cfg.strategy {
             ServingStrategy::Vllm => {
-                while self.running.len() < self.cfg.max_batch {
+                while self.n_running < self.cfg.max_batch {
                     let Some(&q) = self.queue.front() else { break };
                     if self.reqs[q].prefilled {
                         break; // migrated: next iteration's pre-pass
@@ -745,15 +956,29 @@ impl<'a> Scheduler<'a> {
                     batch.push((q, Role::Chunk(self.reqs[q].prefill_target)));
                 }
                 if batch.is_empty() {
-                    batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
+                    // no admission happened, so the running set (and its
+                    // decoding subset) is exactly the pre-arm state
+                    let mut i = self.run_head;
+                    while i != NONE {
+                        if self.reqs[i].decoding() {
+                            batch.push((i, Role::Decode));
+                        }
+                        i = self.run_next[i];
+                    }
                 }
             }
             ServingStrategy::Orca => {
-                batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
+                let mut i = self.run_head;
+                while i != NONE {
+                    if self.reqs[i].decoding() {
+                        batch.push((i, Role::Decode));
+                    }
+                    i = self.run_next[i];
+                }
                 // this iteration's decode writes shrink the admission
-                // headroom (the pre-paging `head -= |decoding|`)
-                let growth: u64 = decoding.iter().map(|&i| self.kv.decode_growth_one(i)).sum();
-                while self.running.len() < self.cfg.max_batch {
+                // headroom (the pre-paging `head -= |decoding|`); that
+                // sum is `growth`, already in hand
+                while self.n_running < self.cfg.max_batch {
                     let Some(&q) = self.queue.front() else { break };
                     if self.reqs[q].prefilled {
                         break; // migrated: next iteration's pre-pass
@@ -768,33 +993,36 @@ impl<'a> Scheduler<'a> {
                 }
             }
             ServingStrategy::ChunkedPrefill => {
-                batch.extend(decoding.iter().map(|&i| (i, Role::Decode)));
-                let growth: u64 = decoding.iter().map(|&i| self.kv.decode_growth_one(i)).sum();
+                let mut i = self.run_head;
+                while i != NONE {
+                    if self.reqs[i].decoding() {
+                        batch.push((i, Role::Decode));
+                    }
+                    i = self.run_next[i];
+                }
                 let mut budget = self.cfg.chunk_tokens.max(1);
                 // continue in-flight prefills first, admission order;
                 // their tokens draw on the reservation leased at
                 // admission, so headroom is guaranteed
-                let prefilling: Vec<usize> = self
-                    .running
-                    .iter()
-                    .copied()
-                    .filter(|&i| !self.reqs[i].decoding())
-                    .collect();
-                for i in prefilling {
+                let mut i = self.run_head;
+                while i != NONE {
                     if budget == 0 {
                         break;
                     }
-                    let rem = self.reqs[i].prefill_target - self.reqs[i].prefill_done;
-                    let t = rem.min(budget);
-                    if t > 0 {
-                        budget -= t;
-                        batch.push((i, Role::Chunk(t)));
+                    if !self.reqs[i].decoding() {
+                        let rem = self.reqs[i].prefill_target - self.reqs[i].prefill_done;
+                        let t = rem.min(budget);
+                        if t > 0 {
+                            budget -= t;
+                            batch.push((i, Role::Chunk(t)));
+                        }
                     }
+                    i = self.run_next[i];
                 }
                 // then admit new prompts; the admission leases their
                 // full remaining context, so later chunks are
                 // guaranteed to fit even across iterations
-                while budget > 0 && self.running.len() < self.cfg.max_batch {
+                while budget > 0 && self.n_running < self.cfg.max_batch {
                     let Some(&q) = self.queue.front() else { break };
                     if self.reqs[q].prefilled {
                         break; // migrated: next iteration's pre-pass
@@ -811,14 +1039,14 @@ impl<'a> Scheduler<'a> {
                 }
             }
         }
-        batch
     }
 
     /// Cost the composed batch and apply its effects at completion time.
     fn run_batch(&mut self, batch: &[(usize, Role)]) {
         let _p = profile::scope("sched.run_batch");
-        let n_running = self.running.len();
-        let mut cost_batch: Vec<Request> = Vec::with_capacity(batch.len());
+        let n_running = self.n_running;
+        let mut cost_batch = std::mem::take(&mut self.scratch_cost);
+        cost_batch.clear();
         let mut n_prefill = 0usize;
         let mut prefill_tokens = 0u64;
         for &(i, role) in batch {
@@ -839,7 +1067,8 @@ impl<'a> Scheduler<'a> {
             }
         }
         let n_decode = batch.len() - n_prefill;
-        let c = self.coster.borrow_mut().cost(&cost_batch);
+        let c = self.coster.lock().unwrap().cost(&cost_batch);
+        self.scratch_cost = cost_batch;
         let mut dt = c.latency_cycles / CLOCK_HZ;
         // straggler fault: stretch the iteration latency (energy is
         // unchanged — a throttled clock does the same work, slower).
@@ -854,20 +1083,28 @@ impl<'a> Scheduler<'a> {
         self.ideal_cycles += c.macs as f64 / self.peak_macs_per_cycle;
 
         let tracing = self.sink.is_some();
-        let mut ev: Vec<(usize, EventKind)> = Vec::new();
-        let mut freed: Vec<usize> = Vec::new();
+        let mut ev = std::mem::take(&mut self.scratch_ev);
+        ev.clear();
         for &(i, role) in batch {
             match role {
                 Role::Decode => {
                     self.kv.write_decode(i);
                     let r = &mut self.reqs[i];
                     r.generated += 1;
-                    self.gen_tokens += 1;
-                    if r.generated >= r.output_len {
+                    let finished = r.generated >= r.output_len;
+                    if finished {
                         r.finish_s = Some(end);
+                    }
+                    self.gen_tokens += 1;
+                    // a running decode always has generated < output_len
+                    // before the write (it would have finished already
+                    // otherwise), so the remainder shrinks by exactly 1
+                    self.fc.backlog_tokens -= 1;
+                    if finished {
                         self.done += 1;
                         self.kv.release(i);
-                        freed.push(i);
+                        self.run_unlink(i);
+                        self.fc.n_decoding -= 1;
                         if tracing {
                             ev.push((self.ext_ids[i], EventKind::Finish));
                         }
@@ -879,6 +1116,14 @@ impl<'a> Scheduler<'a> {
                     let crossed = r.prefill_done < r.prefill_target;
                     r.prefill_done += t;
                     let crossed = crossed && r.prefill_done >= r.prefill_target;
+                    // chunk sizes never overshoot the target, so both
+                    // prefill remainders shrink by exactly t
+                    self.fc.backlog_tokens -= t;
+                    self.fc.pending_prefill_tokens -= t;
+                    if crossed {
+                        self.fc.n_prefilling -= 1;
+                        self.fc.n_decoding += 1;
+                    }
                     if tracing {
                         ev.push((self.ext_ids[i], EventKind::Chunk { tokens: t }));
                         // re-admitted (preempted) requests re-cross the
@@ -888,19 +1133,25 @@ impl<'a> Scheduler<'a> {
                             ev.push((self.ext_ids[i], EventKind::PrefillDone));
                         }
                     }
+                    let r = &mut self.reqs[i];
                     if r.prefill_done >= r.prefill_target && r.first_token_s.is_none() {
                         // prefill completion emits the first output token
                         r.first_token_s = Some(end);
                         r.generated += 1;
+                        let finished = r.generated >= r.output_len;
+                        if finished {
+                            r.finish_s = Some(end);
+                        }
                         self.gen_tokens += 1;
+                        self.fc.backlog_tokens -= 1;
                         if tracing {
                             ev.push((self.ext_ids[i], EventKind::FirstToken));
                         }
-                        if r.generated >= r.output_len {
-                            r.finish_s = Some(end);
+                        if finished {
                             self.done += 1;
                             self.kv.release(i);
-                            freed.push(i);
+                            self.run_unlink(i);
+                            self.fc.n_decoding -= 1;
                             if tracing {
                                 ev.push((self.ext_ids[i], EventKind::Finish));
                             }
@@ -908,9 +1159,6 @@ impl<'a> Scheduler<'a> {
                     }
                 }
             }
-        }
-        if !freed.is_empty() {
-            self.running.retain(|i| !freed.contains(i));
         }
         self.trace.push(IterRecord {
             start_s: self.clock,
@@ -924,7 +1172,7 @@ impl<'a> Scheduler<'a> {
             n_running,
         });
         if let Some(sink) = &self.sink {
-            let mut s = sink.borrow_mut();
+            let mut s = sink.lock().unwrap();
             for &(ext, kind) in &ev {
                 s.event(self.replica, end, ext, kind);
             }
@@ -939,6 +1187,7 @@ impl<'a> Scheduler<'a> {
                 kv_frag: self.kv.fragmentation(),
             });
         }
+        self.scratch_ev = ev;
         self.clock = end;
     }
 
@@ -951,7 +1200,7 @@ impl<'a> Scheduler<'a> {
     pub fn finish(self) -> ReplicaResult {
         let _p = profile::scope("sched.finish");
         if let Some(sink) = &self.sink {
-            let mut s = sink.borrow_mut();
+            let mut s = sink.lock().unwrap();
             let r = self.replica;
             s.counter_set(&format!("r{r}.n_arrived"), self.n_arrived as f64);
             s.counter_set(&format!("r{r}.completed"), self.done as f64);
@@ -966,7 +1215,7 @@ impl<'a> Scheduler<'a> {
             // the memo may be shared fleet-wide; each replica overwrites
             // with the totals it sees, so the last finisher reports the
             // run-wide numbers (counter_set, not counter_add)
-            let c = self.coster.borrow();
+            let c = self.coster.lock().unwrap();
             s.counter_set("coster.lookups", c.lookups() as f64);
             s.counter_set("coster.distinct_shapes", c.distinct_shapes() as f64);
             s.counter_set("coster.memo_hits", c.hits() as f64);
@@ -1002,7 +1251,7 @@ impl<'a> Scheduler<'a> {
                 ideal_cycles: self.ideal_cycles,
                 gen_tokens: self.gen_tokens,
                 n_preemptions: self.preemptions,
-                distinct_shapes: self.coster.borrow().distinct_shapes(),
+                distinct_shapes: self.coster.lock().unwrap().distinct_shapes(),
                 kv_transfer_tokens: self.kv_transfer_tokens,
                 kv_capacity_tokens: self.kv.capacity_tokens(),
                 kv_shared_tokens: self.kv.shared_tokens(),

@@ -27,13 +27,16 @@
 //! the consistency gate `examples/telemetry.rs` asserts.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// A shared handle to a trace sink, cloned into every instrumented
-/// layer of one run. `RefCell` (not a lock): the simulator is
-/// single-threaded per run, and determinism depends on a single
-/// sequential event order anyway.
-pub type SharedSink = Rc<std::cell::RefCell<dyn TraceSink>>;
+/// layer of one run. A `Mutex` (uncontended in the common case) rather
+/// than a `RefCell` so `Scheduler` stays `Send` and independent
+/// replicas can step on scoped worker threads; determinism still
+/// depends on a single sequential event order, which the parallel
+/// stepping path re-establishes by buffering per-replica events and
+/// replaying them in replica index order (see [`BufferSink`]).
+pub type SharedSink = Arc<Mutex<dyn TraceSink + Send>>;
 
 /// What happened to a request (sim time, deterministic).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -160,6 +163,67 @@ impl TraceSink for NullSink {
     fn counter_add(&mut self, _: &str, _: f64) {}
 }
 
+/// One buffered sink operation, replayed verbatim by [`BufferSink::replay`].
+#[derive(Debug, Clone)]
+enum SinkOp {
+    Event(usize, f64, usize, EventKind),
+    Instant(usize, f64, &'static str),
+    Iter(IterSpan),
+    CounterSet(String, f64),
+    CounterAdd(String, f64),
+}
+
+/// A per-replica staging sink for parallel stepping: while replicas
+/// advance on worker threads, each records into its own `BufferSink`;
+/// after the join, buffers are replayed into the real sink in replica
+/// index order — exactly the order the serial loop (replica 0 fully
+/// advanced, then replica 1, …) would have emitted, so sequence
+/// stamping and every downstream artifact are bitwise identical.
+#[derive(Debug, Default)]
+pub struct BufferSink {
+    ops: Vec<SinkOp>,
+}
+
+impl BufferSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drain the buffered operations into `sink`, preserving order.
+    pub fn replay(&mut self, sink: &mut dyn TraceSink) {
+        for op in self.ops.drain(..) {
+            match op {
+                SinkOp::Event(replica, t_s, ext_id, kind) => sink.event(replica, t_s, ext_id, kind),
+                SinkOp::Instant(replica, t_s, label) => sink.instant(replica, t_s, label),
+                SinkOp::Iter(span) => sink.iter(span),
+                SinkOp::CounterSet(name, value) => sink.counter_set(&name, value),
+                SinkOp::CounterAdd(name, delta) => sink.counter_add(&name, delta),
+            }
+        }
+    }
+}
+
+impl TraceSink for BufferSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn event(&mut self, replica: usize, t_s: f64, ext_id: usize, kind: EventKind) {
+        self.ops.push(SinkOp::Event(replica, t_s, ext_id, kind));
+    }
+    fn instant(&mut self, replica: usize, t_s: f64, label: &'static str) {
+        self.ops.push(SinkOp::Instant(replica, t_s, label));
+    }
+    fn iter(&mut self, span: IterSpan) {
+        self.ops.push(SinkOp::Iter(span));
+    }
+    fn counter_set(&mut self, name: &str, value: f64) {
+        self.ops.push(SinkOp::CounterSet(name.to_string(), value));
+    }
+    fn counter_add(&mut self, name: &str, delta: f64) {
+        self.ops.push(SinkOp::CounterAdd(name.to_string(), delta));
+    }
+}
+
 /// The recording sink: raw events, instants, iteration spans and the
 /// counter registry, in insertion order.
 #[derive(Debug, Clone, Default)]
@@ -177,8 +241,8 @@ impl SpanCollector {
     }
 
     /// Wrap a fresh collector as a [`SharedSink`] handle.
-    pub fn shared() -> Rc<std::cell::RefCell<SpanCollector>> {
-        Rc::new(std::cell::RefCell::new(SpanCollector::new()))
+    pub fn shared() -> Arc<Mutex<SpanCollector>> {
+        Arc::new(Mutex::new(SpanCollector::new()))
     }
 
     pub fn events(&self) -> &[Event] {

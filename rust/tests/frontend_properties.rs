@@ -14,8 +14,7 @@
 //! imbalance scenario proves the rebalancer migrates mid-decode
 //! requests over the block-granular KV handoff path.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use compass::arch::{ChipletClass, Dataflow, HwConfig};
 use compass::sim::{
@@ -80,10 +79,10 @@ fn jsq_pick(reps: &[Scheduler]) -> usize {
     best
 }
 
-type SharedCoster<'a> = Rc<RefCell<BatchCoster<'a>>>;
+type SharedCoster<'a> = Arc<Mutex<BatchCoster<'a>>>;
 
 fn shared_coster<'a>(model: &'a ModelSpec, hw: &'a HwConfig, cfg: &SimConfig) -> SharedCoster<'a> {
-    Rc::new(RefCell::new(BatchCoster::new(
+    Arc::new(Mutex::new(BatchCoster::new(
         model,
         hw,
         cfg.policy,

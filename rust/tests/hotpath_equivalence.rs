@@ -1,0 +1,422 @@
+//! Bitwise-equivalence properties for the allocation-free hot path and
+//! parallel replica stepping (PR 8).
+//!
+//! The serving-simulator refactor (slab/intrusive-queue scheduler
+//! storage, reusable scratch buffers, incremental KV-pressure and
+//! front-end counters, heap-backed event queues, parallel
+//! `Pool::advance_all`) must not move a single bit anywhere: every
+//! metric, per-replica breakdown and per-request timing is compared
+//! via `f64::to_bits` between
+//!
+//! * one worker thread and many (the scoped-thread replica stepping,
+//!   in the style of `engine_parallel.rs`'s thread-count invariance);
+//! * untraced runs and runs with a recording telemetry sink attached
+//!   (buffered per-replica emission must replay the serial byte
+//!   stream, so trace JSON is compared byte-for-byte too);
+//! * repeated runs of the same configuration (the heap-based event
+//!   queues must drain exactly the order of the sorted-`Vec`s they
+//!   replaced — equal-timestamp regression tests pin the tie-breaks).
+//!
+//! Thread counts are driven through `COMPASS_THREADS`, which
+//! `Pool::advance_all` reads at pool construction; the env var is
+//! process-global, so every mutation here is serialized behind one
+//! static mutex and restored afterwards.
+
+use std::sync::Mutex;
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{
+    self, DrainSpec, FaultSchedule, FleetConfig, Frontend, MappingPolicy, RebalanceSpec,
+    ResilienceSpec, RetryPolicy, RouterPolicy, SimConfig, SloSpec, SpanCollector,
+};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+/// Serializes `COMPASS_THREADS` mutation across the whole test binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the pool thread count pinned to `n`, restoring the
+/// previous environment afterwards (even across unwinds the next test
+/// re-acquires the lock before reading, so a poisoned guard is fine).
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let old = std::env::var("COMPASS_THREADS").ok();
+    std::env::set_var("COMPASS_THREADS", n.to_string());
+    let out = f();
+    match old {
+        Some(v) => std::env::set_var("COMPASS_THREADS", v),
+        None => std::env::remove_var("COMPASS_THREADS"),
+    }
+    out
+}
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn tiny_spec() -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 8.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+        shared_prefix_tokens: 0,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+fn assert_serving_bitwise(a: &sim::ServingMetrics, b: &sim::ServingMetrics, ctx: &str) {
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_preemptions, b.n_preemptions, "{ctx}: preemptions");
+    assert_eq!(a.n_iterations, b.n_iterations, "{ctx}: iterations");
+    assert_eq!(a.gen_tokens, b.gen_tokens, "{ctx}: gen tokens");
+    assert_eq!(a.distinct_shapes, b.distinct_shapes, "{ctx}: shapes");
+    assert_eq!(a.max_queue_depth, b.max_queue_depth, "{ctx}: max queue");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("busy", a.busy_s, b.busy_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("ttft mean", a.ttft.mean, b.ttft.mean),
+        ("tpot mean", a.tpot.mean, b.tpot.mean),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("occupancy", a.mean_batch_occupancy, b.mean_batch_occupancy),
+        ("mean queue", a.mean_queue_depth, b.mean_queue_depth),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+}
+
+/// Per-replica metrics and per-request timings, all via `to_bits`.
+fn assert_fleet_bitwise(a: &sim::FleetMetrics, b: &sim::FleetMetrics, ctx: &str) {
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{ctx}: replicas");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        assert_serving_bitwise(x, y, &format!("{ctx}: replica {i}"));
+    }
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_shed, b.n_shed, "{ctx}: shed");
+    assert_eq!(a.n_rebalanced, b.n_rebalanced, "{ctx}: rebalanced");
+    assert_eq!(a.faults.n_failed, b.faults.n_failed, "{ctx}: failed");
+    assert_eq!(a.faults.n_retried, b.faults.n_retried, "{ctx}: retried");
+    assert_eq!(a.faults.n_lost, b.faults.n_lost, "{ctx}: lost");
+    assert_eq!(a.faults.n_drained, b.faults.n_drained, "{ctx}: drained");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("imbalance", a.load_imbalance, b.load_imbalance),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcomes");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            x.arrival_s.to_bits(),
+            y.arrival_s.to_bits(),
+            "{ctx}: outcome {i} arrival"
+        );
+        assert_eq!(
+            x.first_token_s.map(f64::to_bits),
+            y.first_token_s.map(f64::to_bits),
+            "{ctx}: outcome {i} first token"
+        );
+        assert_eq!(
+            x.finish_s.map(f64::to_bits),
+            y.finish_s.map(f64::to_bits),
+            "{ctx}: outcome {i} finish"
+        );
+        assert_eq!(x.rejected, y.rejected, "{ctx}: outcome {i} rejected");
+    }
+}
+
+fn stream_for(rate_scale: f64, n: usize, seed: u64, cfg: &SimConfig) -> sim::RequestStream {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let probe = sim::probe(&model, &hw, cfg, &tiny_spec());
+    sim::RequestStream::poisson(&tiny_spec(), rate_scale * probe.capacity_rps(), n, seed)
+}
+
+/// Randomized single-replica sweep across all three serving strategies
+/// and tight/ample KV budgets: the arena/intrusive-queue scheduler must
+/// reproduce itself exactly run over run (preemption storms included),
+/// and the debug cross-checks against the old full rescans run inside.
+#[test]
+fn serving_hot_path_is_deterministic_across_strategies() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for strategy in [
+        ServingStrategy::Vllm,
+        ServingStrategy::Orca,
+        ServingStrategy::ChunkedPrefill,
+    ] {
+        for case in 0..4 {
+            // tight budgets exercise the incremental eviction loop
+            let kv = [384, 1024, 4096, 640][case];
+            let cfg = cfg_for(strategy, kv);
+            let n = 8 + rng.gen_index(10);
+            let seed = rng.next_u64();
+            let scale = 1.0 + rng.gen_f64() * 2.0;
+            let stream = stream_for(scale, n, seed, &cfg);
+            let a = sim::simulate_serving(&stream, &model, &hw, &cfg);
+            let b = sim::simulate_serving(&stream, &model, &hw, &cfg);
+            assert_serving_bitwise(&a, &b, &format!("{strategy:?} case {case}"));
+            assert_eq!(
+                a.n_completed + a.n_rejected + a.n_in_flight,
+                a.n_arrived,
+                "{strategy:?} case {case}: conservation"
+            );
+        }
+    }
+}
+
+/// The acceptance property: `simulate_fleet_frontend` on 1 thread vs 4
+/// threads, bitwise, across homogeneous (JSQ and round-robin),
+/// rebalancing and disaggregated shapes on randomized streams.
+#[test]
+fn fleet_frontend_bitwise_equal_on_one_and_many_threads() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let mut rng = Rng::seed_from_u64(0xFEED);
+    let shapes = [
+        FleetConfig::homogeneous(4, RouterPolicy::JoinShortestQueue),
+        FleetConfig::homogeneous(3, RouterPolicy::RoundRobin),
+        FleetConfig::disaggregated(1, 3, 1e-7),
+    ];
+    for (si, fleet) in shapes.iter().enumerate() {
+        for case in 0..2 {
+            let n = 12 + rng.gen_index(10);
+            let seed = rng.next_u64();
+            let stream = stream_for(2.0 + rng.gen_f64(), n, seed, &cfg);
+            let hws = vec![hw.clone(); fleet.total_replicas()];
+            let fe = if case == 0 {
+                Frontend::baseline()
+            } else {
+                Frontend::baseline().with_rebalance(RebalanceSpec::new(0.2, 1e-7))
+            };
+            let serial = with_threads(1, || {
+                sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, fleet, &fe)
+            });
+            let parallel = with_threads(4, || {
+                sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, fleet, &fe)
+            });
+            assert_fleet_bitwise(
+                &serial,
+                &parallel,
+                &format!("shape {si} case {case} ({})", fleet.describe()),
+            );
+        }
+    }
+}
+
+/// Sink-on runs: with a recording collector attached, 1-thread and
+/// 4-thread runs must produce byte-identical Chrome-trace JSON (the
+/// per-replica `BufferSink` replay reproduces the serial emission
+/// order exactly) and metrics bitwise-equal to the untraced run.
+#[test]
+fn traced_fleet_runs_replay_the_serial_byte_stream() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let stream = stream_for(2.2, 16, 77, &cfg);
+    for fleet in [
+        FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue),
+        FleetConfig::disaggregated(1, 2, 1e-7),
+    ] {
+        let hws = vec![hw.clone(); fleet.total_replicas()];
+        let fe = Frontend::baseline();
+        let plain = with_threads(4, || {
+            sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe)
+        });
+        let run_traced = |threads: usize| {
+            with_threads(threads, || {
+                let c = SpanCollector::shared();
+                let sink: sim::SharedSink = c.clone();
+                let m = sim::simulate_fleet_frontend_traced(
+                    &stream, &model, &hws, &cfg, &fleet, &fe, &sink,
+                );
+                let json = c.lock().unwrap().chrome_trace_json();
+                (m, json)
+            })
+        };
+        let (m1, j1) = run_traced(1);
+        let (m4, j4) = run_traced(4);
+        assert_fleet_bitwise(&plain, &m1, &format!("{}: untraced vs 1t", fleet.describe()));
+        assert_fleet_bitwise(&m1, &m4, &format!("{}: 1t vs 4t traced", fleet.describe()));
+        assert_eq!(
+            j1, j4,
+            "{}: trace JSON differs between 1 and 4 threads",
+            fleet.describe()
+        );
+        assert!(!j1.is_empty() && j1.starts_with("{\"traceEvents\":["));
+    }
+}
+
+/// Fault injection end-to-end on 1 vs 4 threads: seeded crash +
+/// straggler storms with failover, capped-backoff retries and
+/// proactive drain, untraced and with a sink (byte-compared).
+#[test]
+fn fleet_faults_bitwise_equal_on_one_and_many_threads() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let mut rng = Rng::seed_from_u64(0xFA_07);
+    for case in 0..3 {
+        let n = 14 + rng.gen_index(8);
+        let seed = rng.next_u64();
+        let stream = stream_for(2.5, n, seed, &cfg);
+        let fleet = FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue);
+        let hws = vec![hw.clone(); 3];
+        let fe = Frontend::baseline().with_rebalance(RebalanceSpec::new(0.4, 1e-7));
+        let horizon = stream.horizon_s();
+        let schedule = FaultSchedule::seeded(3, horizon, 2, 1, 11 + case as u64);
+        let res = ResilienceSpec::none()
+            .with_schedule(schedule)
+            .with_retry(RetryPolicy::capped(2, 0.05 * horizon, 0.2 * horizon))
+            .with_drain(DrainSpec::new(0.05 * horizon, 1e-7, 4))
+            .with_failover(case != 1);
+        let serial = with_threads(1, || {
+            sim::simulate_fleet_faults(&stream, &model, &hws, &cfg, &fleet, &fe, &res)
+        });
+        let parallel = with_threads(4, || {
+            sim::simulate_fleet_faults(&stream, &model, &hws, &cfg, &fleet, &fe, &res)
+        });
+        assert_fleet_bitwise(&serial, &parallel, &format!("faults case {case}"));
+        // sink-on: the buffered replay must also hold under crashes,
+        // retries and drains
+        let run_traced = |threads: usize| {
+            with_threads(threads, || {
+                let c = SpanCollector::shared();
+                let sink: sim::SharedSink = c.clone();
+                let m = sim::simulate_fleet_faults_traced(
+                    &stream, &model, &hws, &cfg, &fleet, &fe, &res, &sink,
+                );
+                let json = c.lock().unwrap().chrome_trace_json();
+                (m, json)
+            })
+        };
+        let (m1, j1) = run_traced(1);
+        let (m4, j4) = run_traced(4);
+        assert_fleet_bitwise(&serial, &m1, &format!("faults case {case}: traced"));
+        assert_fleet_bitwise(&m1, &m4, &format!("faults case {case}: traced threads"));
+        assert_eq!(j1, j4, "faults case {case}: trace JSON differs across threads");
+    }
+}
+
+/// Equal-timestamp tie-break regression (the event-heap replacement of
+/// the old stable sort): a fault event scheduled at *exactly* an
+/// arrival's timestamp must drain before the arrival. A crash on the
+/// replica JSQ would pick, timed bit-for-bit at the first arrival,
+/// therefore kills nothing (the replica is still empty) and the
+/// arrival routes around it via failover — zero request failures. If
+/// arrivals drained first, the request would be injected and then
+/// crash-killed.
+#[test]
+fn crash_at_arrival_instant_drains_before_the_arrival() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 2048);
+    let stream = stream_for(1.5, 12, 5, &cfg);
+    let t0 = stream.requests[0].arrival_s;
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+    let hws = vec![hw.clone(); 2];
+    // both replicas empty at t0 -> JSQ ties to replica 0, the one we crash
+    let res = ResilienceSpec::none()
+        .with_schedule(FaultSchedule::none().crash(0, t0, 1e-3))
+        .with_failover(true);
+    let m = with_threads(4, || {
+        sim::simulate_fleet_faults(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline(), &res)
+    });
+    assert_eq!(m.faults.n_crashes, 1);
+    assert_eq!(
+        m.faults.n_failed, 0,
+        "the crash drained after the tied arrival: a request was killed"
+    );
+    assert_eq!(m.n_completed + m.n_rejected, m.n_arrived);
+}
+
+/// Equal-timestamp faults drain in schedule order (the old stable
+/// sort's FIFO at ties): two straggler windows on the same replica at
+/// the same instant — the later-scheduled one overwrites, so the run
+/// is bitwise-identical to scheduling only the winner.
+#[test]
+fn equal_time_stragglers_apply_in_schedule_order() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let stream = stream_for(2.0, 14, 23, &cfg);
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+    let hws = vec![hw.clone(); 2];
+    let horizon = stream.horizon_s();
+    let t = 0.3 * horizon;
+    let a = (0.4 * horizon, 8.0); // (duration, slowdown) of fault A
+    let b = (0.2 * horizon, 2.0);
+    let run = |schedule: FaultSchedule| {
+        let res = ResilienceSpec::none().with_schedule(schedule);
+        with_threads(4, || {
+            sim::simulate_fleet_faults(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline(), &res)
+        })
+    };
+    let ab = run(FaultSchedule::none()
+        .straggler(0, t, a.0, a.1)
+        .straggler(0, t, b.0, b.1));
+    let only_b = run(FaultSchedule::none().straggler(0, t, b.0, b.1));
+    assert_fleet_bitwise(&ab, &only_b, "A-then-B must equal B alone");
+    let ba = run(FaultSchedule::none()
+        .straggler(0, t, b.0, b.1)
+        .straggler(0, t, a.0, a.1));
+    let only_a = run(FaultSchedule::none().straggler(0, t, a.0, a.1));
+    assert_fleet_bitwise(&ba, &only_a, "B-then-A must equal A alone");
+}
+
+/// Thread-count invariance holds for *any* worker count, not just the
+/// 1-vs-4 anchor: sweep 2, 3 and 8 workers over one fixed scenario.
+#[test]
+fn thread_count_sweep_is_invariant() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let stream = stream_for(2.4, 18, 41, &cfg);
+    let fleet = FleetConfig::homogeneous(4, RouterPolicy::JoinShortestQueue);
+    let hws = vec![hw.clone(); 4];
+    let fe = Frontend::baseline().with_rebalance(RebalanceSpec::new(0.3, 1e-7));
+    let anchor = with_threads(1, || {
+        sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe)
+    });
+    for threads in [2usize, 3, 8] {
+        let m = with_threads(threads, || {
+            sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &fe)
+        });
+        assert_fleet_bitwise(&anchor, &m, &format!("{threads} threads"));
+    }
+}

@@ -65,10 +65,10 @@ fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
 }
 
 fn null_sink() -> sim::SharedSink {
-    std::rc::Rc::new(std::cell::RefCell::new(NullSink))
+    std::sync::Arc::new(std::sync::Mutex::new(NullSink))
 }
 
-fn collector() -> (std::rc::Rc<std::cell::RefCell<SpanCollector>>, sim::SharedSink) {
+fn collector() -> (std::sync::Arc<std::sync::Mutex<SpanCollector>>, sim::SharedSink) {
     let c = SpanCollector::shared();
     let sink: sim::SharedSink = c.clone();
     (c, sink)
@@ -213,7 +213,7 @@ fn serving_sinks_are_bitwise_free() {
         let (c, sink) = collector();
         let traced = sim::simulate_serving_traced(&stream, &model, &hw, &cfg, &sink);
         assert_serving_bitwise(&plain, &traced, &format!("{ctx} recording"));
-        let c = c.borrow();
+        let c = c.lock().unwrap();
         assert!(
             c.events().is_empty() == (traced.n_arrived == 0),
             "{ctx}: recording sink saw nothing"
@@ -272,7 +272,7 @@ fn fleet_frontend_sinks_are_bitwise_free() {
             sim::simulate_fleet_frontend_traced(&stream, &model, &hws, &cfg, &fleet, &fe, &sink);
         assert_fleet_bitwise(&plain, &traced, &format!("{ctx} recording"));
         assert_lanes_conserve(
-            &c.borrow(),
+            &c.lock().unwrap(),
             traced.n_arrived,
             traced.n_completed,
             traced.n_rejected,
@@ -300,7 +300,7 @@ fn fleet_wrapper_sink_is_bitwise_free() {
     let traced = sim::simulate_fleet_traced(&stream, &model, &hw, &cfg, &fleet, &sink);
     assert_fleet_bitwise(&plain, &traced, "fleet wrapper");
     assert_lanes_conserve(
-        &c.borrow(),
+        &c.lock().unwrap(),
         traced.n_arrived,
         traced.n_completed,
         traced.n_rejected,
@@ -369,7 +369,7 @@ fn fault_storm_sinks_are_bitwise_free_and_lanes_conserve() {
             &sink,
         );
         assert_fleet_bitwise(&plain, &traced, &ctx);
-        let c = c.borrow();
+        let c = c.lock().unwrap();
         assert_lanes_conserve(
             &c,
             traced.n_arrived,
@@ -445,7 +445,7 @@ fn trace_exports_are_deterministic() {
             &res,
             &sink,
         );
-        (c.borrow().chrome_trace_json(), m)
+        (c.lock().unwrap().chrome_trace_json(), m)
     };
     let (j1, m1) = run();
     let (j2, _) = run();
