@@ -1,0 +1,156 @@
+//! Search-layer throughput bench: study-cells/s and DSE-candidates/s at
+//! `COMPASS_THREADS=1` vs N, plus the shared [`CostCache`] hit rate on a
+//! warm re-run (EXPERIMENTS.md "Search-layer parallelism & cost cache").
+//!
+//! Results are bit-identical at any thread count — this bench measures
+//! wall clock only. The budget recorded in `BENCH_engine_micro.json`
+//! (`search_throughput`) tracks the threads=1 -> N cell-throughput
+//! speedup and the warm-cache speedup.
+//!
+//! [`CostCache`]: compass::sim::CostCache
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::dse::{self, ResilienceSpace};
+use compass::experiments as exp;
+use compass::sim::{self, CostCache, Frontend, SimConfig};
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+fn set_threads(n: usize) {
+    std::env::set_var("COMPASS_THREADS", n.to_string());
+}
+
+/// One full `sim-study` grid (rate x strategy) on fixed hardware;
+/// returns (cells, wall seconds).
+fn run_study(scene: &exp::SimScene, hw: &HwConfig, cfg: &SimConfig) -> (usize, f64) {
+    let t0 = std::time::Instant::now();
+    let rows = exp::sim_serving_study(scene, hw, cfg, 7);
+    (rows.len(), t0.elapsed().as_secs_f64())
+}
+
+/// One `search_resilience` sweep (redundancy x retry x drain); returns
+/// (candidates, wall seconds).
+fn run_dse(
+    stream: &sim::RequestStream,
+    model: &ModelSpec,
+    hw: &HwConfig,
+    cfg: &SimConfig,
+    space: &ResilienceSpace,
+    schedule: &sim::FaultSchedule,
+) -> (usize, f64) {
+    let t0 = std::time::Instant::now();
+    let (_, rows) = dse::search_resilience(
+        stream,
+        model,
+        hw,
+        cfg,
+        &Frontend::baseline(),
+        space,
+        schedule,
+    );
+    (rows.len(), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    // capture the parallel width before pinning COMPASS_THREADS
+    let n_threads = compass::cost::engine::default_threads().max(2);
+    let cache = CostCache::global();
+
+    // --- study cells: rate x strategy grid, gpt3-7b on a fixed package
+    let mut scene = exp::SimScene::new("sharegpt", 64.0, 12);
+    scene.rates_rps = vec![0.5, 1.0, 2.0, 4.0];
+    let hw = exp::sim_default_hw(scene.tops);
+    let cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    println!(
+        "search_throughput: sim-study grid [{}], {} requests x {} rates, threads 1 vs {}",
+        scene.label(),
+        scene.n_requests,
+        scene.rates_rps.len(),
+        n_threads
+    );
+
+    set_threads(1);
+    cache.clear();
+    let (cells, serial_s) = run_study(&scene, &hw, &cfg);
+    let serial_rate = cells as f64 / serial_s.max(1e-12);
+    println!(
+        "    threads=1  cold: {cells} cells in {serial_s:.2}s -> {serial_rate:.2} cells/s"
+    );
+
+    set_threads(n_threads);
+    cache.clear();
+    let (_, par_s) = run_study(&scene, &hw, &cfg);
+    let par_rate = cells as f64 / par_s.max(1e-12);
+    println!(
+        "    threads={n_threads}  cold: {cells} cells in {par_s:.2}s -> {par_rate:.2} cells/s \
+         | speedup {:.2}x",
+        serial_s / par_s.max(1e-12)
+    );
+
+    // warm re-run: every shape is already in the shared cache
+    let s0 = cache.stats();
+    let (_, warm_s) = run_study(&scene, &hw, &cfg);
+    let s1 = cache.stats();
+    let probes = (s1.hits - s0.hits) + (s1.misses - s0.misses);
+    let hit_rate = (s1.hits - s0.hits) as f64 / probes.max(1) as f64;
+    println!(
+        "    threads={n_threads}  warm: {cells} cells in {warm_s:.2}s -> {:.2} cells/s \
+         | shared-cache hit rate {:.1}% ({} entries) | warm speedup {:.2}x",
+        cells as f64 / warm_s.max(1e-12),
+        100.0 * hit_rate,
+        s1.entries,
+        par_s / warm_s.max(1e-12)
+    );
+
+    // --- DSE candidates: resilience grid on a tiny model so the bench
+    // measures the search loop, not the cost model
+    let model = ModelSpec::tiny();
+    let thw = HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    );
+    let spec = TraceSpec {
+        mean_in: 128.0,
+        mean_out: 32.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 8192,
+        shared_prefix_tokens: 0,
+    };
+    let mut dcfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    dcfg.max_batch = 8;
+    dcfg.eval_blocks = 1;
+    dcfg.ctx_bucket = 64;
+    let probe = sim::probe(&model, &thw, &dcfg, &spec);
+    dcfg.slo = probe.slo(3.0, 4.0);
+    let stream =
+        sim::RequestStream::poisson(&spec, 2.0 * 0.9 * probe.capacity_rps(), 48, 7);
+    let space = ResilienceSpace::new(2);
+    let schedule = sim::FaultSchedule::seeded(2, stream.horizon_s(), 1, 1, 17);
+
+    set_threads(1);
+    cache.clear();
+    let (cands, dse_serial_s) = run_dse(&stream, &model, &thw, &dcfg, &space, &schedule);
+    println!(
+        "    dse threads=1:  {cands} candidates in {dse_serial_s:.2}s -> {:.2} candidates/s",
+        cands as f64 / dse_serial_s.max(1e-12)
+    );
+    set_threads(n_threads);
+    cache.clear();
+    let (_, dse_par_s) = run_dse(&stream, &model, &thw, &dcfg, &space, &schedule);
+    println!(
+        "    dse threads={n_threads}: {cands} candidates in {dse_par_s:.2}s -> \
+         {:.2} candidates/s | speedup {:.2}x",
+        cands as f64 / dse_par_s.max(1e-12),
+        dse_serial_s / dse_par_s.max(1e-12)
+    );
+    println!(
+        "budget (BENCH_engine_micro.json/search_throughput): cold speedup >= 2x and \
+         warm-cache speedup >= 1.5x at 8 threads on an 8-core host"
+    );
+}

@@ -299,6 +299,52 @@ where
     out
 }
 
+/// Deterministic parallel map with arbitrary result types, for search
+/// outer loops (study cells, DSE candidates): `out[i] = f(i, &items[i])`
+/// with results assembled in index order, so downstream argmin scans and
+/// row tables are bit-identical to a serial run.
+///
+/// Unlike [`par_map_f64`]'s contiguous chunking, work is handed out one
+/// item at a time from a shared atomic counter: search cells are highly
+/// heterogeneous (a cell near saturation simulates far longer than an
+/// idle one), and chunking would serialize the slow cells onto one
+/// thread. `threads == 1` runs inline with no thread or lock overhead —
+/// callers pass 1 to force the serial path (e.g. while the thread-local
+/// profiler is enabled).
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: &F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.min(items.len()).max(1);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every slot filled"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -415,5 +461,19 @@ mod tests {
         let parallel = par_map_f64(&items, 7, &f);
         assert_eq!(serial, parallel);
         assert_eq!(serial[41], 123.0);
+    }
+
+    #[test]
+    fn generic_par_map_is_index_ordered_and_thread_invariant() {
+        let items: Vec<u64> = (0..97).collect();
+        let f = |i: usize, x: &u64| (i as u64, *x * 7, format!("cell-{x}"));
+        let serial = par_map(&items, 1, &f);
+        for threads in [2, 5, 16] {
+            let parallel = par_map(&items, threads, &f);
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+        assert_eq!(serial[13], (13, 91, "cell-13".to_string()));
+        let empty: Vec<u64> = Vec::new();
+        assert!(par_map(&empty, 4, &f).is_empty());
     }
 }

@@ -9,6 +9,7 @@
 
 use crate::arch::{HwConfig, HwSpace};
 use crate::bo::{self, BoConfig, Gp};
+use crate::cost::engine::{default_threads, par_map};
 use crate::cost::{group_params, EvalResult, Evaluator, MappingEvaluator};
 use crate::ga::{self, GaConfig};
 use crate::mapping::Mapping;
@@ -193,11 +194,13 @@ pub fn search_kv(
     sim_cfg: &SimConfig,
     specs: &[KvSpec],
 ) -> (KvSpec, Vec<(KvSpec, ServingMetrics)>) {
-    let mut rows: Vec<(KvSpec, ServingMetrics)> = Vec::with_capacity(specs.len());
-    for &spec in specs {
-        let cfg = sim_cfg.with_kv(spec);
-        rows.push((spec, sim::simulate_serving(stream, model, hw, &cfg)));
-    }
+    // Candidate-parallel, rows assembled in spec order: the winner scan
+    // below sees exactly the sequence the serial loop produced.
+    let rows: Vec<(KvSpec, ServingMetrics)> =
+        par_map(specs, sim::profile::outer_threads(), &|_, &spec| {
+            let cfg = sim_cfg.with_kv(spec);
+            (spec, sim::simulate_serving(stream, model, hw, &cfg))
+        });
     let best = rows
         .iter()
         .min_by(|a, b| a.1.objective().total_cmp(&b.1.objective()))
@@ -404,28 +407,44 @@ pub fn search_fleet_frontend(
     sim::simulate_fleet_frontend(stream, model, hws, &cfg, fleet, fe)
 }
 
+/// GP constructor handed to [`compass_dse_fleet`]: fleet candidates are
+/// scored on scoped worker threads, so each candidate's BO loop builds
+/// its own surrogate instead of sharing one `&mut dyn Gp`. Equivalent to
+/// the old shared-GP signature bit for bit — every `Gp::fit` retrains
+/// from scratch on its own observations, so a fresh surrogate per
+/// candidate sees exactly the data the reused one did.
+pub type GpFactory<'g> = dyn Fn() -> Box<dyn Gp + 'g> + Sync + 'g;
+
 /// Compass scaled out: BO over per-replica hardware *per fleet
 /// candidate* (replica count x router, even or heterogeneous
 /// prefill/decode split, and SLO-shed admission margin, all under the
 /// shared total-TOPS budget), the fleet simulator inside, maximizing
 /// fleet SLO-constrained goodput via [`FleetMetrics::objective`]. The
 /// shedding estimator is re-calibrated per hardware sample from the
-/// stream itself ([`sim::probe_stream`]). The same `gp` is reused
-/// across candidates (each `fit` retrains from scratch on its own
-/// observations).
+/// stream itself ([`sim::probe_stream`]).
+///
+/// Candidates are evaluated in parallel (narrow outer width — each BO
+/// loop already fans its GA evaluations across threads) and collected in
+/// candidate-index order, so the strict-`<` argmin below tie-breaks to
+/// the earliest candidate exactly as the serial loop did.
 pub fn compass_dse_fleet(
     stream: &RequestStream,
     model: &ModelSpec,
     fspace: &FleetSpace,
     cfg: &DseConfig,
     sim_cfg: &SimConfig,
-    gp: &mut dyn Gp,
+    make_gp: &GpFactory<'_>,
 ) -> FleetDseOutcome {
-    let mut per_shape: Vec<(FleetCandidate, f64)> = Vec::new();
-    let mut best: Option<(FleetCandidate, bo::BoResult)> = None;
-    for cand in fspace.candidates() {
+    let cands = fspace.candidates();
+    let outer = if sim::profile::enabled() {
+        1
+    } else {
+        (default_threads() / 4).max(1)
+    };
+    let results: Vec<bo::BoResult> = par_map(&cands, outer, &|_, cand| {
+        let mut gp = make_gp();
         let space = fspace.space_for(&cand.fleet);
-        let result = bo::optimize(&space, &cfg.bo, gp, |hw| {
+        bo::optimize(&space, &cfg.bo, gp.as_mut(), |hw| {
             let hws = fspace.replica_hws(&cand.fleet, hw);
             // probe calibration is only paid by shedding candidates,
             // and runs against the pool that produces the TTFT — the
@@ -437,16 +456,24 @@ pub fn compass_dse_fleet(
             };
             search_fleet_frontend(stream, model, &hws, &cfg.ga, sim_cfg, &cand.fleet, &fe)
                 .objective()
-        });
-        per_shape.push((cand.clone(), result.best.objective));
-        if best
-            .as_ref()
-            .map_or(true, |(_, b)| result.best.objective < b.best.objective)
-        {
-            best = Some((cand, result));
+        })
+    });
+    let per_shape: Vec<(FleetCandidate, f64)> = cands
+        .iter()
+        .zip(&results)
+        .map(|(c, r)| (c.clone(), r.best.objective))
+        .collect();
+    let mut best_i = 0usize;
+    for i in 1..results.len() {
+        if results[i].best.objective < results[best_i].best.objective {
+            best_i = i;
         }
     }
-    let (cand, result) = best.expect("fleet space yields at least one candidate");
+    let result = results
+        .into_iter()
+        .nth(best_i)
+        .expect("fleet space yields at least one candidate");
+    let cand = &cands[best_i];
     let hws = fspace.replica_hws(&cand.fleet, &result.best.hw);
     let fe = match cand.shed_margin {
         Some(_) => cand.frontend(sim::probe_stream(model, &hws[0], sim_cfg, stream)),
@@ -539,36 +566,42 @@ pub fn search_resilience(
     space: &ResilienceSpace,
     schedule: &FaultSchedule,
 ) -> (ResilienceCandidate, Vec<(ResilienceCandidate, FleetMetrics)>) {
-    let mut rows: Vec<(ResilienceCandidate, FleetMetrics)> = Vec::new();
+    // Flatten the nested grid in its serial iteration order, then score
+    // the candidates in parallel with index-ordered row assembly: the
+    // strict-`>` argmax scan below tie-breaks to the earliest (cheapest-
+    // listed) candidate exactly as the serial triple loop did.
+    let mut cands: Vec<ResilienceCandidate> = Vec::new();
     for &extra in &space.extra_replicas {
         for &retry in &space.retries {
             for &drain in &space.drain_options {
-                let cand = ResilienceCandidate {
+                cands.push(ResilienceCandidate {
                     extra_replicas: extra,
                     retry,
                     drain,
-                };
-                let n = space.base_replicas + extra;
-                let fleet = FleetConfig::homogeneous(n, RouterPolicy::JoinShortestQueue);
-                let hws = vec![hw.clone(); n];
-                let res = ResilienceSpec {
-                    schedule: schedule.clone(),
-                    retry,
-                    drain: drain.then(|| {
-                        DrainSpec::new(
-                            space.drain_lead_s,
-                            space.drain_handoff_s_per_token,
-                            sim_cfg.max_batch,
-                        )
-                    }),
-                    failover: true,
-                };
-                let m =
-                    sim::simulate_fleet_faults(stream, model, &hws, sim_cfg, &fleet, fe, &res);
-                rows.push((cand, m));
+                });
             }
         }
     }
+    let rows: Vec<(ResilienceCandidate, FleetMetrics)> =
+        par_map(&cands, sim::profile::outer_threads(), &|_, &cand| {
+            let n = space.base_replicas + cand.extra_replicas;
+            let fleet = FleetConfig::homogeneous(n, RouterPolicy::JoinShortestQueue);
+            let hws = vec![hw.clone(); n];
+            let res = ResilienceSpec {
+                schedule: schedule.clone(),
+                retry: cand.retry,
+                drain: cand.drain.then(|| {
+                    DrainSpec::new(
+                        space.drain_lead_s,
+                        space.drain_handoff_s_per_token,
+                        sim_cfg.max_batch,
+                    )
+                }),
+                failover: true,
+            };
+            let m = sim::simulate_fleet_faults(stream, model, &hws, sim_cfg, &fleet, fe, &res);
+            (cand, m)
+        });
     let score = |c: &ResilienceCandidate, m: &FleetMetrics| {
         m.slo_goodput_tps / (space.base_replicas + c.extra_replicas) as f64
     };
@@ -738,8 +771,8 @@ mod tests {
         assert_eq!(fspace.shapes().len(), 2);
         assert_eq!(fspace.candidates().len(), 4);
         let dse_cfg = DseConfig::tiny();
-        let mut gp = NativeGp::new();
-        let out = compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &mut gp);
+        let make_gp = || -> Box<dyn Gp> { Box::new(NativeGp::new()) };
+        let out = compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &make_gp);
         assert_eq!(out.backend, "native");
         assert_eq!(out.per_shape.len(), 4);
         assert_eq!(out.bo_history.len(), dse_cfg.bo.rounds);

@@ -10,6 +10,7 @@ use crate::baselines::{fixed_length_scenario, gemini, moham, random, scar};
 #[cfg(feature = "xla")]
 use crate::bo::PjrtGp;
 use crate::bo::{Gp, NativeGp};
+use crate::cost::engine::par_map;
 use crate::cost::{edp_of, edp_probe, Evaluator, SimOptions};
 use crate::dse::{self, DseConfig};
 use crate::ga::GaConfig;
@@ -658,19 +659,25 @@ pub fn sim_serving_study(
     } else {
         scene.rates_rps.clone()
     };
-    let mut rows = Vec::new();
-    for &rate in &rates {
-        let stream = scene.stream(rate, seed);
-        for strategy in ServingStrategy::ALL {
-            let metrics = sim::simulate_serving(&stream, &model, hw, &cfg.with_strategy(strategy));
-            rows.push(SimStudyRow {
-                strategy,
-                rate_rps: rate,
-                metrics,
-            });
+    // Streams are built serially (seeded, rate-indexed), then the
+    // rate x strategy grid runs cell-parallel with rows assembled in
+    // the serial loop's (rate-major) order.
+    let streams: Vec<sim::RequestStream> =
+        rates.iter().map(|&r| scene.stream(r, seed)).collect();
+    let cells: Vec<(usize, ServingStrategy)> = rates
+        .iter()
+        .enumerate()
+        .flat_map(|(ri, _)| ServingStrategy::ALL.into_iter().map(move |s| (ri, s)))
+        .collect();
+    par_map(&cells, sim::profile::outer_threads(), &|_, &(ri, strategy)| {
+        let metrics =
+            sim::simulate_serving(&streams[ri], &model, hw, &cfg.with_strategy(strategy));
+        SimStudyRow {
+            strategy,
+            rate_rps: rates[ri],
+            metrics,
         }
-    }
-    rows
+    })
 }
 
 /// Format the sweep as the study table (TTFT/TPOT tails, SLO
@@ -831,23 +838,27 @@ pub fn kv_paging_study_with_model(
     } else {
         scene.rates_rps.clone()
     };
-    let mut rows = Vec::new();
-    for &rate in &rates {
-        let stream = scene_stream(&trace_spec, scene, rate, seed);
-        for &kv in specs {
-            let c = cfg.with_kv(kv);
-            let metrics = sim::simulate_serving(&stream, model, hw, &c);
-            rows.push(KvStudyRow {
-                kv,
-                rate_rps: rate,
-                // the block-floored capacity the run actually used, so
-                // the table never disagrees with the metrics
-                capacity_tokens: metrics.kv_capacity_tokens,
-                metrics,
-            });
+    let streams: Vec<sim::RequestStream> = rates
+        .iter()
+        .map(|&r| scene_stream(&trace_spec, scene, r, seed))
+        .collect();
+    let cells: Vec<(usize, sim::KvSpec)> = rates
+        .iter()
+        .enumerate()
+        .flat_map(|(ri, _)| specs.iter().map(move |&kv| (ri, kv)))
+        .collect();
+    par_map(&cells, sim::profile::outer_threads(), &|_, &(ri, kv)| {
+        let c = cfg.with_kv(kv);
+        let metrics = sim::simulate_serving(&streams[ri], model, hw, &c);
+        KvStudyRow {
+            kv,
+            rate_rps: rates[ri],
+            // the block-floored capacity the run actually used, so
+            // the table never disagrees with the metrics
+            capacity_tokens: metrics.kv_capacity_tokens,
+            metrics,
         }
-    }
-    rows
+    })
 }
 
 /// Build the study stream from an already-prefixed trace spec.
@@ -958,19 +969,22 @@ pub fn fleet_study(
     } else {
         scene.rates_rps.clone()
     };
-    let mut rows = Vec::new();
-    for &rate in &rates {
-        let stream = scene.stream(rate, seed);
-        for fleet in fleets {
-            let metrics = sim::simulate_fleet(&stream, &model, hw, &cfg, fleet);
-            rows.push(FleetStudyRow {
-                fleet: fleet.clone(),
-                rate_rps: rate,
-                metrics,
-            });
+    let streams: Vec<sim::RequestStream> =
+        rates.iter().map(|&r| scene.stream(r, seed)).collect();
+    let cells: Vec<(usize, usize)> = rates
+        .iter()
+        .enumerate()
+        .flat_map(|(ri, _)| (0..fleets.len()).map(move |fi| (ri, fi)))
+        .collect();
+    par_map(&cells, sim::profile::outer_threads(), &|_, &(ri, fi)| {
+        let fleet = &fleets[fi];
+        let metrics = sim::simulate_fleet(&streams[ri], &model, hw, &cfg, fleet);
+        FleetStudyRow {
+            fleet: fleet.clone(),
+            rate_rps: rates[ri],
+            metrics,
         }
-    }
-    rows
+    })
 }
 
 /// Format the fleet sweep as the study table.
@@ -1153,19 +1167,21 @@ pub fn frontend_study_stream(
     probe: &sim::SimProbe,
     stream: &sim::RequestStream,
 ) -> Vec<FrontendStudyRow> {
-    frontend_cells(scene, hw, probe, knobs)
-        .into_iter()
-        .map(|(key, fleet, hws, fe)| {
-            let metrics = sim::simulate_fleet_frontend(stream, model, &hws, cfg, &fleet, &fe);
+    let cells = frontend_cells(scene, hw, probe, knobs);
+    par_map(
+        &cells,
+        sim::profile::outer_threads(),
+        &|_, (key, fleet, hws, fe)| {
+            let metrics = sim::simulate_fleet_frontend(stream, model, hws, cfg, fleet, fe);
             FrontendStudyRow {
-                key,
-                fleet,
+                key: *key,
+                fleet: fleet.clone(),
                 frontend_label: fe.describe(),
                 rate_rps: stream.rate_rps,
                 metrics,
             }
-        })
-        .collect()
+        },
+    )
 }
 
 /// Sweep the front-end control plane on one [`FleetScene`] with fixed
@@ -1431,28 +1447,32 @@ pub fn fault_study_stream(
     schedule: &sim::FaultSchedule,
     stream: &sim::RequestStream,
 ) -> Vec<FaultStudyRow> {
-    let mut rows = Vec::new();
-    for (key, n_cell, res) in fault_cells(n, retry, drain, schedule) {
-        let fleet = sim::FleetConfig::homogeneous(n_cell, sim::RouterPolicy::JoinShortestQueue);
-        let hws = vec![hw.clone(); n_cell];
-        let metrics = sim::simulate_fleet_faults(
-            stream,
-            model,
-            &hws,
-            cfg,
-            &fleet,
-            &sim::Frontend::baseline(),
-            &res,
-        );
-        rows.push(FaultStudyRow {
-            key,
-            rate_rps: stream.rate_rps,
-            resilience_label: res.describe(),
-            n_replicas: n_cell,
-            metrics,
-        });
-    }
-    rows
+    let cells = fault_cells(n, retry, drain, schedule);
+    par_map(
+        &cells,
+        sim::profile::outer_threads(),
+        &|_, (key, n_cell, res)| {
+            let fleet =
+                sim::FleetConfig::homogeneous(*n_cell, sim::RouterPolicy::JoinShortestQueue);
+            let hws = vec![hw.clone(); *n_cell];
+            let metrics = sim::simulate_fleet_faults(
+                stream,
+                model,
+                &hws,
+                cfg,
+                &fleet,
+                &sim::Frontend::baseline(),
+                res,
+            );
+            FaultStudyRow {
+                key: *key,
+                rate_rps: stream.rate_rps,
+                resilience_label: res.describe(),
+                n_replicas: *n_cell,
+                metrics,
+            }
+        },
+    )
 }
 
 /// Sweep the fault cell ladder on one [`FleetScene`] with fixed

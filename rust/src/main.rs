@@ -57,6 +57,13 @@ flags:
   --rates A,B,C       sim-study arrival rates in req/s (default: auto
                       {0.4,0.8,1.3} x estimated capacity)
   --requests N        sim-study requests per stream (default 24)
+  --threads N         worker threads for parallel search/study loops and
+                      replica stepping (overrides COMPASS_THREADS;
+                      default: auto). Results are bit-identical at any
+                      thread count
+  --tiny              shrink any study to a CI-smoke grid: 6 requests,
+                      fixed rates {1.0, 2.5} req/s unless --rates is
+                      given
   --replicas N        fleet-study replicas; --tops is the fleet's *total*
                       budget, split evenly (default 4)
   --handoff S         fleet-study KV handoff cost, s per migrated token
@@ -109,6 +116,8 @@ struct Args {
     decode_groups: usize,
     rates: Vec<f64>,
     requests: usize,
+    threads: usize,
+    tiny: bool,
     replicas: usize,
     handoff: f64,
     block_tokens: u64,
@@ -144,6 +153,8 @@ fn parse_args() -> Args {
         decode_groups: 3,
         rates: Vec::new(),
         requests: 24,
+        threads: 0,
+        tiny: false,
         replicas: 4,
         handoff: 1e-8,
         block_tokens: 16,
@@ -189,6 +200,8 @@ fn parse_args() -> Args {
                     .collect();
             }
             "--requests" => args.requests = next_val(&mut it, a),
+            "--threads" => args.threads = next_val(&mut it, a),
+            "--tiny" => args.tiny = true,
             "--replicas" => args.replicas = next_val(&mut it, a),
             "--handoff" => args.handoff = next_val(&mut it, a),
             "--block-tokens" => args.block_tokens = next_val(&mut it, a),
@@ -221,6 +234,14 @@ fn parse_args() -> Args {
     if args.cmd.is_empty() {
         print!("{HELP}");
         std::process::exit(2);
+    }
+    if args.tiny {
+        // CI-smoke preset: small fixed grid, explicit rates so no cell
+        // depends on probe-calibrated auto sweeps drifting with --tops
+        args.requests = 6;
+        if args.rates.is_empty() {
+            args.rates = vec![1.0, 2.5];
+        }
     }
     if let Err(e) = exp::validate_rates(&args.rates) {
         eprintln!("{e}");
@@ -541,6 +562,11 @@ fn run_kv_study(args: &Args) {
 
 fn main() {
     let args = parse_args();
+    if args.threads > 0 {
+        // before any work: default_threads() reads the env per call, so
+        // every downstream pool and search loop sees the override
+        std::env::set_var("COMPASS_THREADS", args.threads.to_string());
+    }
     compass::log::set_level(if args.quiet {
         compass::log::Level::Quiet
     } else if args.verbose {
@@ -709,6 +735,12 @@ fn main() {
         } else {
             eprint!("{report}");
         }
+        let s = compass::sim::CostCache::global().stats();
+        eprintln!(
+            "shared cost cache: {} hits, {} misses, {} GA searches run, \
+             {} GA searches avoided, {} configs, {} entries",
+            s.hits, s.misses, s.ga_searches, s.ga_avoided, s.configs, s.entries
+        );
     }
     compass::log::info(&format!("done in {:.1}s", t0.elapsed().as_secs_f64()));
 }

@@ -7,9 +7,18 @@
 //! to `ctx_bucket`), which bounds the number of distinct shapes a long
 //! simulation can produce: steady-state serving then pays one hash
 //! lookup per iteration instead of one timeline simulation.
+//!
+//! On top of the per-coster memo sits a process-wide [`CostCache`]:
+//! study cells, DSE candidates, and whole runs that cost the same batch
+//! shape under the same (model, hw, policy, kv-dtype) configuration
+//! share one entry instead of each re-simulating (or re-running the
+//! `Searched` GA). Sharing is bitwise-sound because `cost` is a pure
+//! function of exactly the fingerprinted inputs plus the quantized key.
 
 use std::collections::HashMap;
 use std::hash::BuildHasherDefault;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::arch::HwConfig;
 use crate::cost::{group_params, EvalScratch, Evaluator, MappingEvaluator};
@@ -53,6 +62,138 @@ pub struct IterCost {
 /// triples with tag 0 = prefill, 1 = decode.
 type CompKey = Vec<(u8, u64, u64)>;
 
+/// Snapshot of the shared-cache counters (the `--profile` cache-stats
+/// table). Unlike the per-coster counters these are *not* deterministic
+/// under parallel search — which coster reaches a shape first depends on
+/// scheduling — so they are reported for observability only and never
+/// enter metrics, records, or trace bytes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Lookups served by the shared cache (the local memo missed but
+    /// another coster had already simulated the shape).
+    pub hits: usize,
+    /// Lookups that fell through to a fresh simulation.
+    pub misses: usize,
+    /// Misses that ran a `MappingPolicy::Searched` GA search.
+    pub ga_searches: usize,
+    /// Shared hits that would have run a GA search without the cache.
+    pub ga_avoided: usize,
+    /// Distinct (model, hw, policy, kv-dtype) fingerprints seen.
+    pub configs: usize,
+    /// Total cost entries across all fingerprints.
+    pub entries: usize,
+}
+
+/// One fingerprint's slice of the shared cache: a mutex-guarded map from
+/// quantized composition key to cost. Costers resolve their shard once
+/// at construction, so the hot path never touches the shard directory.
+#[derive(Default)]
+struct Shard {
+    map: Mutex<HashMap<CompKey, IterCost, BuildHasherDefault<FxHasher>>>,
+}
+
+/// Thread-safe cost cache shared across [`BatchCoster`] instances — and
+/// therefore across study cells, DSE candidates, and whole runs in one
+/// process.
+///
+/// Entries are keyed by an exact configuration fingerprint (the `Debug`
+/// rendering of model, hardware, and policy, plus `eval_blocks` and the
+/// KV bit width) and, within that fingerprint's shard, by the quantized
+/// composition key. Sharing is bitwise-sound because `cost` is a pure
+/// function of exactly those inputs: the quantized key *is* the costed
+/// batch (so `ctx_bucket` is deliberately *not* fingerprinted — two
+/// costers with different buckets that land on the same quantized key
+/// cost the identical workload), and `Searched` GA seeds derive from
+/// the key alone via `key_hash`, never from lookup order or thread
+/// identity. Racing threads compute bit-identical values for the same
+/// key, so which insert wins is unobservable.
+pub struct CostCache {
+    shards: Mutex<HashMap<String, Arc<Shard>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    ga_searches: AtomicUsize,
+    ga_avoided: AtomicUsize,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        CostCache {
+            shards: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            ga_searches: AtomicUsize::new(0),
+            ga_avoided: AtomicUsize::new(0),
+        }
+    }
+
+    /// The process-global cache attached by [`BatchCoster::new`]
+    /// (unless `COMPASS_SHARED_CACHE=0`).
+    pub fn global() -> Arc<CostCache> {
+        static GLOBAL: OnceLock<Arc<CostCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(CostCache::new())).clone()
+    }
+
+    fn shard(&self, fingerprint: String) -> Arc<Shard> {
+        let mut shards = self.shards.lock().unwrap();
+        shards.entry(fingerprint).or_default().clone()
+    }
+
+    /// Counter + size snapshot (taken non-atomically across shards;
+    /// exact when the cache is quiescent, e.g. at end of run).
+    pub fn stats(&self) -> CacheStats {
+        let (configs, entries) = {
+            let shards = self.shards.lock().unwrap();
+            let entries = shards.values().map(|s| s.map.lock().unwrap().len()).sum();
+            (shards.len(), entries)
+        };
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            ga_searches: self.ga_searches.load(Ordering::Relaxed),
+            ga_avoided: self.ga_avoided.load(Ordering::Relaxed),
+            configs,
+            entries,
+        }
+    }
+
+    /// Drop every entry and zero the counters. Costers constructed
+    /// before the clear keep their (now detached) shards; benches call
+    /// this between phases for cold-vs-warm comparisons.
+    pub fn clear(&self) {
+        self.shards.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.ga_searches.store(0, Ordering::Relaxed);
+        self.ga_avoided.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        CostCache::new()
+    }
+}
+
+/// Cross-coster sharing is on by default; `COMPASS_SHARED_CACHE=0`
+/// turns it off (every coster then sees only its local memo).
+fn sharing_enabled() -> bool {
+    std::env::var("COMPASS_SHARED_CACHE").map_or(true, |v| v != "0")
+}
+
+/// Exact configuration fingerprint for shard selection. The `Debug`
+/// renderings are structural over every field that enters `cost`, so
+/// distinct configurations can never collide into one shard; the string
+/// is built once per coster, never on the hot path.
+fn fingerprint(
+    model: &ModelSpec,
+    hw: &HwConfig,
+    policy: &MappingPolicy,
+    eval_blocks: usize,
+    kv_bits: u64,
+) -> String {
+    format!("{model:?}|{hw:?}|{policy:?}|blocks={eval_blocks}|kv={kv_bits}")
+}
+
 /// Composition-memoized batch coster.
 pub struct BatchCoster<'a> {
     model: &'a ModelSpec,
@@ -68,7 +209,17 @@ pub struct BatchCoster<'a> {
     /// Reusable composition-key scratch: `fill_key` rebuilds it in place
     /// so steady-state memo hits allocate nothing.
     key_buf: CompKey,
+    /// Shared cache handle plus this configuration's pre-resolved shard
+    /// (`None` = local memo only).
+    shared: Option<(Arc<CostCache>, Arc<Shard>)>,
     lookups: usize,
+    /// Explicit counters — one per lookup outcome, so accounting stays
+    /// exact however lookups are served (local memo, shared cache, or a
+    /// fresh simulation). Invariant: lookups == hits + shared_hits +
+    /// computed.
+    hits: usize,
+    shared_hits: usize,
+    computed: usize,
 }
 
 impl<'a> BatchCoster<'a> {
@@ -80,16 +231,42 @@ impl<'a> BatchCoster<'a> {
         ctx_bucket: u64,
         kv_dtype: super::kv::KvDtype,
     ) -> Self {
+        let cache = sharing_enabled().then(CostCache::global);
+        Self::with_cache(model, hw, policy, eval_blocks, ctx_bucket, kv_dtype, cache)
+    }
+
+    /// Like [`BatchCoster::new`] but with an explicit shared cache
+    /// (`None` disables cross-coster sharing). `new` attaches the
+    /// process-global [`CostCache::global`] unless the
+    /// `COMPASS_SHARED_CACHE=0` kill switch is set.
+    pub fn with_cache(
+        model: &'a ModelSpec,
+        hw: &'a HwConfig,
+        policy: MappingPolicy,
+        eval_blocks: usize,
+        ctx_bucket: u64,
+        kv_dtype: super::kv::KvDtype,
+        cache: Option<Arc<CostCache>>,
+    ) -> Self {
+        let kv_bits = kv_dtype.bits();
+        let shared = cache.map(|c| {
+            let shard = c.shard(fingerprint(model, hw, &policy, eval_blocks, kv_bits));
+            (c, shard)
+        });
         BatchCoster {
             model,
             hw,
             policy,
             eval_blocks,
             ctx_bucket,
-            kv_bits: kv_dtype.bits(),
+            kv_bits,
             memo: HashMap::default(),
             key_buf: CompKey::new(),
+            shared,
             lookups: 0,
+            hits: 0,
+            shared_hits: 0,
+            computed: 0,
         }
     }
 
@@ -123,10 +300,26 @@ impl<'a> BatchCoster<'a> {
         self.lookups
     }
 
-    /// Memo hits so far: every lookup that did not simulate a new
-    /// distinct shape.
+    /// Local memo hits: lookups this coster served from its own memo.
+    /// (Counted explicitly — the old derived form `lookups - memo.len()`
+    /// could not distinguish a shared-cache hit from a local repeat.)
+    /// Deterministic under any thread count, so it is safe in traces.
     pub fn hits(&self) -> usize {
-        self.lookups - self.memo.len()
+        self.hits
+    }
+
+    /// Lookups served by the shared [`CostCache`]: the local memo missed
+    /// but another coster had already simulated the shape. *Not*
+    /// deterministic under parallel search (it depends on which coster
+    /// got there first), so it feeds only observability surfaces.
+    pub fn shared_hits(&self) -> usize {
+        self.shared_hits
+    }
+
+    /// Lookups that actually simulated (both the local memo and the
+    /// shared cache missed). `shared_hits + computed == distinct_shapes`.
+    pub fn computed(&self) -> usize {
+        self.computed
     }
 
     /// Cost one iteration batch; memo hits never re-simulate.
@@ -140,8 +333,26 @@ impl<'a> BatchCoster<'a> {
         self.lookups += 1;
         self.fill_key(batch);
         if let Some(c) = self.memo.get(self.key_buf.as_slice()) {
+            self.hits += 1;
             let _p = super::telemetry::profile::scope("coster.memo_hit");
             return *c;
+        }
+        let searched = matches!(self.policy, MappingPolicy::Searched(_));
+        if let Some((cache, shard)) = &self.shared {
+            let found = shard.map.lock().unwrap().get(self.key_buf.as_slice()).copied();
+            if let Some(c) = found {
+                let _p = super::telemetry::profile::scope("coster.shared_hit");
+                self.shared_hits += 1;
+                cache.hits.fetch_add(1, Ordering::Relaxed);
+                if searched {
+                    cache.ga_avoided.fetch_add(1, Ordering::Relaxed);
+                }
+                // Mirror into the local memo: steady-state repeats stay
+                // lock-free, and the deterministic local counters keep
+                // the same values a cache-off run would report.
+                self.memo.insert(self.key_buf.clone(), c);
+                return c;
+            }
         }
         let _p = super::telemetry::profile::scope("coster.memo_miss");
         // the quantized key *is* the costed batch: decode it back
@@ -198,7 +409,17 @@ impl<'a> BatchCoster<'a> {
             energy_pj,
             macs: w.total_macs(),
         };
+        self.computed += 1;
         let key = self.key_buf.clone();
+        if let Some((cache, shard)) = &self.shared {
+            cache.misses.fetch_add(1, Ordering::Relaxed);
+            if searched {
+                cache.ga_searches.fetch_add(1, Ordering::Relaxed);
+            }
+            // First writer wins; any racer computed the same bits, so
+            // keeping the existing entry is value-identical.
+            shard.map.lock().unwrap().entry(key.clone()).or_insert(c);
+        }
         self.memo.insert(key, c);
         c
     }
@@ -455,6 +676,227 @@ mod tests {
         let mut hv = FxHasher::default();
         key.hash(&mut hv);
         assert_eq!(hs.finish(), hv.finish());
+    }
+
+    #[test]
+    fn hit_accounting_is_explicit_under_shared_cache() {
+        let (model, hw) = setup();
+        let cache = Arc::new(CostCache::new());
+        let mk = |c: Option<Arc<CostCache>>| {
+            BatchCoster::with_cache(&model, &hw, MappingPolicy::Pipeline, 1, 64, KvDtype::Fp16, c)
+        };
+        let batch = [Request::decode(100), Request::decode(120)];
+        let mut c1 = mk(Some(cache.clone()));
+        let a = c1.cost(&batch);
+        assert_eq!((c1.hits(), c1.shared_hits(), c1.computed()), (0, 0, 1));
+        // Second coster: the shared cache serves its first lookup. The
+        // old derived accounting (`lookups - memo.len()`) could not
+        // represent this outcome; the explicit counters must.
+        let mut c2 = mk(Some(cache.clone()));
+        let b = c2.cost(&batch);
+        assert_eq!((c2.hits(), c2.shared_hits(), c2.computed()), (0, 1, 0));
+        assert_eq!(c2.distinct_shapes(), 1, "shared hit mirrors locally");
+        // A repeat is now a plain local hit, not a second shared hit.
+        c2.cost(&batch);
+        assert_eq!((c2.hits(), c2.shared_hits(), c2.computed()), (1, 1, 0));
+        assert_eq!(c2.lookups(), c2.hits() + c2.shared_hits() + c2.computed());
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.macs, b.macs);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!((s.configs, s.entries), (1, 1));
+    }
+
+    #[test]
+    fn cache_off_matches_cache_on_bitwise() {
+        let (model, hw) = setup();
+        let cache = Arc::new(CostCache::new());
+        let batches: Vec<Vec<Request>> = vec![
+            vec![Request::decode(100); 4],
+            vec![Request::prefill(60), Request::decode(40)],
+            vec![Request::decode(100); 4],
+        ];
+        let mut on1 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut on2 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut off = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Fp16,
+            None,
+        );
+        for b in &batches {
+            let x = on1.cost(b);
+            let y = on2.cost(b); // always shared- or memo-served
+            let z = off.cost(b);
+            assert_eq!(x.latency_cycles.to_bits(), z.latency_cycles.to_bits());
+            assert_eq!(y.latency_cycles.to_bits(), z.latency_cycles.to_bits());
+            assert_eq!(x.energy_pj.to_bits(), z.energy_pj.to_bits());
+            assert_eq!(y.energy_pj.to_bits(), z.energy_pj.to_bits());
+        }
+        assert_eq!(on2.computed(), 0, "on2 never had to simulate");
+        // Deterministic local accounting matches the cache-off coster.
+        assert_eq!(on1.hits(), off.hits());
+        assert_eq!(on1.distinct_shapes(), off.distinct_shapes());
+    }
+
+    #[test]
+    fn shared_cache_avoids_ga_searches_bitwise() {
+        let (model, hw) = setup();
+        let cfg = crate::ga::GaConfig::tiny();
+        let cache = Arc::new(CostCache::new());
+        let batch = vec![Request::decode(50); 4];
+        let mut c1 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Searched(cfg),
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut c2 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Searched(cfg),
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut solo = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Searched(cfg),
+            1,
+            32,
+            KvDtype::Fp16,
+            None,
+        );
+        let a = c1.cost(&batch);
+        let b = c2.cost(&batch);
+        let c = solo.cost(&batch);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.latency_cycles.to_bits(), c.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), c.energy_pj.to_bits());
+        let s = cache.stats();
+        assert_eq!(s.ga_searches, 1, "one real GA run");
+        assert_eq!(s.ga_avoided, 1, "one GA run served from the cache");
+    }
+
+    #[test]
+    fn distinct_configs_never_share_a_shard() {
+        let (model, hw) = setup();
+        let cache = Arc::new(CostCache::new());
+        let batch = vec![Request::decode(2048); 8];
+        let mut fp16 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut int4 = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Int4,
+            Some(cache.clone()),
+        );
+        fp16.cost(&batch);
+        int4.cost(&batch);
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "different kv dtypes must not share");
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.configs, 2);
+    }
+
+    #[test]
+    fn cross_ctx_bucket_sharing_costs_the_quantized_key() {
+        let (model, hw) = setup();
+        let cache = Arc::new(CostCache::new());
+        // bucket 64 quantizes decode(100) to decode(128) before costing;
+        // a bucket-1 coster handed decode(128) lands on the same key, so
+        // excluding ctx_bucket from the fingerprint is sound.
+        let mut wide = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            64,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut exact = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            1,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        let mut fresh = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            1,
+            KvDtype::Fp16,
+            None,
+        );
+        let a = wide.cost(&[Request::decode(100), Request::decode(120)]);
+        let b = exact.cost(&[Request::decode(128), Request::decode(128)]);
+        let c = fresh.cost(&[Request::decode(128), Request::decode(128)]);
+        assert_eq!(exact.shared_hits(), 1, "cross-bucket shared hit");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(b.latency_cycles.to_bits(), c.latency_cycles.to_bits());
+        assert_eq!(b.energy_pj.to_bits(), c.energy_pj.to_bits());
+        assert_eq!(cache.stats().configs, 1, "ctx_bucket not fingerprinted");
+    }
+
+    #[test]
+    fn clear_resets_entries_and_counters() {
+        let (model, hw) = setup();
+        let cache = Arc::new(CostCache::new());
+        let mut c = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            32,
+            KvDtype::Fp16,
+            Some(cache.clone()),
+        );
+        c.cost(&[Request::decode(64)]);
+        assert_eq!(cache.stats().entries, 1);
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.configs), (0, 0, 0, 0));
     }
 
     #[test]

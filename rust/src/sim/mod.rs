@@ -26,7 +26,7 @@ pub mod sched;
 pub mod stream;
 pub mod telemetry;
 
-pub use coster::{BatchCoster, IterCost, MappingPolicy};
+pub use coster::{BatchCoster, CacheStats, CostCache, IterCost, MappingPolicy};
 pub use events::EventHeap;
 pub use faults::{
     DrainSpec, FaultKind, FaultSchedule, FaultSpec, FaultStats, ResilienceSpec, RetryPolicy,

@@ -755,6 +755,18 @@ pub mod profile {
         ENABLED.with(|e| e.get())
     }
 
+    /// Worker width for search/study outer loops: the configured thread
+    /// count (`COMPASS_THREADS`-aware), forced to 1 while profiling is
+    /// enabled — the profiler's accumulators are thread-local, so scopes
+    /// recorded on worker threads would vanish from the report.
+    pub fn outer_threads() -> usize {
+        if enabled() {
+            1
+        } else {
+            crate::cost::engine::default_threads()
+        }
+    }
+
     /// RAII timing scope; `None` (no timer started) when disabled.
     /// Usage: `let _p = profile::scope("coster.memo_miss");`
     #[must_use]

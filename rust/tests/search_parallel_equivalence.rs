@@ -1,0 +1,582 @@
+//! Bitwise-equivalence properties for the parallel search outer loop
+//! and the shared cross-run cost cache (PR 9).
+//!
+//! The search-layer parallelization (cell-parallel study grids with
+//! index-ordered row assembly, candidate-parallel `search_kv` /
+//! `search_resilience` / `compass_dse_fleet`) and the process-global
+//! [`CostCache`] must not move a single bit anywhere: every study row,
+//! run record, DSE winner, BO history and traced-cell byte stream is
+//! compared between
+//!
+//! * one outer thread and many (`COMPASS_THREADS`, read by
+//!   `sim::profile::outer_threads` at each grid launch);
+//! * shared cache on and off (`COMPASS_SHARED_CACHE=0` — sharing is
+//!   bitwise-sound because `BatchCoster::cost` is a pure function of
+//!   the fingerprint + quantized key, and `Searched` GA seeds derive
+//!   from the key alone);
+//! * isolated costers and costers racing on one shared cache.
+//!
+//! Both env vars are process-global, so every mutation here is
+//! serialized behind one static mutex and restored afterwards.
+
+use std::sync::{Arc, Mutex};
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::bo::{Gp, NativeGp};
+use compass::dse::{self, DseConfig, FleetSpace, ResilienceSpace};
+use compass::experiments as exp;
+use compass::ga::GaConfig;
+use compass::sim::{
+    self, BatchCoster, CostCache, FaultSchedule, FleetConfig, Frontend, IterCost, KvDtype,
+    KvSpec, MappingPolicy, RouterPolicy, SimConfig, SloSpec,
+};
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::{ModelSpec, Request};
+
+/// Serializes `COMPASS_THREADS` / `COMPASS_SHARED_CACHE` mutation
+/// across the whole test binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the outer-loop thread count pinned to `threads` and
+/// cross-coster sharing forced on or off, restoring the previous
+/// environment afterwards (a poisoned guard is fine: the next test
+/// re-acquires the lock before reading).
+fn with_env<T>(threads: usize, shared_cache: bool, f: impl FnOnce() -> T) -> T {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let old_threads = std::env::var("COMPASS_THREADS").ok();
+    let old_shared = std::env::var("COMPASS_SHARED_CACHE").ok();
+    std::env::set_var("COMPASS_THREADS", threads.to_string());
+    std::env::set_var("COMPASS_SHARED_CACHE", if shared_cache { "1" } else { "0" });
+    let out = f();
+    match old_threads {
+        Some(v) => std::env::set_var("COMPASS_THREADS", v),
+        None => std::env::remove_var("COMPASS_THREADS"),
+    }
+    match old_shared {
+        Some(v) => std::env::set_var("COMPASS_SHARED_CACHE", v),
+        None => std::env::remove_var("COMPASS_SHARED_CACHE"),
+    }
+    out
+}
+
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    with_env(n, true, f)
+}
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+fn assert_serving_bitwise(a: &sim::ServingMetrics, b: &sim::ServingMetrics, ctx: &str) {
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_preemptions, b.n_preemptions, "{ctx}: preemptions");
+    assert_eq!(a.n_iterations, b.n_iterations, "{ctx}: iterations");
+    assert_eq!(a.gen_tokens, b.gen_tokens, "{ctx}: gen tokens");
+    assert_eq!(a.distinct_shapes, b.distinct_shapes, "{ctx}: shapes");
+    assert_eq!(a.max_queue_depth, b.max_queue_depth, "{ctx}: max queue");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("busy", a.busy_s, b.busy_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("ttft mean", a.ttft.mean, b.ttft.mean),
+        ("tpot mean", a.tpot.mean, b.tpot.mean),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("occupancy", a.mean_batch_occupancy, b.mean_batch_occupancy),
+        ("mean queue", a.mean_queue_depth, b.mean_queue_depth),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+}
+
+fn assert_fleet_bitwise(a: &sim::FleetMetrics, b: &sim::FleetMetrics, ctx: &str) {
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{ctx}: replicas");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        assert_serving_bitwise(x, y, &format!("{ctx}: replica {i}"));
+    }
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_shed, b.n_shed, "{ctx}: shed");
+    assert_eq!(a.n_rebalanced, b.n_rebalanced, "{ctx}: rebalanced");
+    assert_eq!(a.faults.n_failed, b.faults.n_failed, "{ctx}: failed");
+    assert_eq!(a.faults.n_lost, b.faults.n_lost, "{ctx}: lost");
+    assert_eq!(a.faults.n_drained, b.faults.n_drained, "{ctx}: drained");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("imbalance", a.load_imbalance, b.load_imbalance),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+}
+
+fn records_json(records: &[sim::RunRecord]) -> String {
+    records
+        .iter()
+        .map(|r| r.to_json())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn study_cfg() -> SimConfig {
+    let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    cfg.max_batch = 8;
+    cfg.eval_blocks = 1;
+    cfg.ctx_bucket = 512;
+    cfg
+}
+
+/// The sim study's rate x strategy grid, run serially and on four outer
+/// threads: rows and `--record` JSONL must match bit for bit (ordered
+/// assembly makes the parallel grid structurally identical to the
+/// serial loop).
+#[test]
+fn sim_study_rows_and_records_bitwise_equal_across_threads() {
+    let mut scene = exp::SimScene::new("sharegpt", 64.0, 5);
+    scene.rates_rps = vec![2.0, 8.0];
+    let hw = exp::sim_default_hw(64.0);
+    let cfg = study_cfg();
+    let serial = with_threads(1, || exp::sim_serving_study(&scene, &hw, &cfg, 3));
+    let parallel = with_threads(4, || exp::sim_serving_study(&scene, &hw, &cfg, 3));
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * ServingStrategy::ALL.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.strategy, b.strategy, "row {i}: strategy order");
+        assert_eq!(a.rate_rps.to_bits(), b.rate_rps.to_bits(), "row {i}: rate");
+        assert_serving_bitwise(&a.metrics, &b.metrics, &format!("row {i}"));
+    }
+    assert_eq!(
+        records_json(&exp::sim_study_records(&serial)),
+        records_json(&exp::sim_study_records(&parallel)),
+        "run-record JSONL differs across thread counts"
+    );
+}
+
+/// The KV layout x rate grid (quantized dtypes give every cell its own
+/// cache fingerprint, so cells never cross-contaminate).
+#[test]
+fn kv_study_rows_bitwise_equal_across_threads() {
+    let mut scene = exp::SimScene::new("sharegpt", 64.0, 6);
+    scene.rates_rps = vec![3.0, 12.0];
+    let hw = exp::sim_default_hw(64.0);
+    let mut cfg = study_cfg();
+    cfg.chunk_tokens = 64;
+    cfg.kv_budget_tokens = 0;
+    cfg.dram_gb = 2048.0 * ModelSpec::gpt3_7b().kv_bytes_per_token() as f64 / 1e9;
+    let specs = exp::default_kv_specs(16, 64);
+    let run = || exp::kv_paging_study(&scene, &hw, &cfg, &specs, 64, 3);
+    let serial = with_threads(1, run);
+    let parallel = with_threads(4, run);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * specs.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.kv.describe(), b.kv.describe(), "row {i}: layout order");
+        assert_eq!(a.rate_rps.to_bits(), b.rate_rps.to_bits(), "row {i}: rate");
+        assert_eq!(a.capacity_tokens, b.capacity_tokens, "row {i}: capacity");
+        assert_serving_bitwise(&a.metrics, &b.metrics, &format!("row {i}"));
+    }
+    assert_eq!(
+        records_json(&exp::kv_study_records(&serial)),
+        records_json(&exp::kv_study_records(&parallel)),
+    );
+}
+
+/// The fleet shape x rate grid.
+#[test]
+fn fleet_study_rows_bitwise_equal_across_threads() {
+    let mut scene = exp::FleetScene::new("sharegpt", 64.0, 2, 6);
+    scene.rates_rps = vec![4.0, 16.0];
+    let hw = exp::sim_default_hw(scene.tops_per_replica());
+    let cfg = study_cfg();
+    let shapes = exp::default_fleet_shapes(scene.n_replicas, 1e-8);
+    let run = || exp::fleet_study(&scene, &hw, &cfg, &shapes, 3);
+    let serial = with_threads(1, run);
+    let parallel = with_threads(4, run);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * shapes.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.fleet.describe(), b.fleet.describe(), "row {i}: shape");
+        assert_eq!(a.rate_rps.to_bits(), b.rate_rps.to_bits(), "row {i}: rate");
+        assert_fleet_bitwise(&a.metrics, &b.metrics, &format!("row {i}"));
+    }
+    assert_eq!(
+        records_json(&exp::fleet_study_records(&serial)),
+        records_json(&exp::fleet_study_records(&parallel)),
+    );
+}
+
+/// The front-end cell ladder and the fault cell ladder (the two studies
+/// whose outer rate loops stay serial and call the now-parallel
+/// `*_study_stream` inside).
+#[test]
+fn frontend_and_fault_study_rows_bitwise_equal_across_threads() {
+    let mut scene = exp::FleetScene::new("sharegpt", 64.0, 2, 6);
+    scene.rates_rps = vec![4.0, 20.0];
+    let model = ModelSpec::gpt3_7b();
+    let hw = exp::sim_default_hw(scene.tops_per_replica());
+    let cfg = study_cfg();
+
+    let knobs = exp::FrontendKnobs::default();
+    let run_fe = || exp::frontend_study_with_model(&scene, &model, &hw, &cfg, &knobs, 3);
+    let serial = with_threads(1, run_fe);
+    let parallel = with_threads(4, run_fe);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * 6, "2 rates x 6 cells");
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.key, b.key, "frontend row {i}: cell order");
+        assert_eq!(a.frontend_label, b.frontend_label, "frontend row {i}");
+        assert_eq!(a.rate_rps.to_bits(), b.rate_rps.to_bits(), "frontend row {i}");
+        assert_fleet_bitwise(&a.metrics, &b.metrics, &format!("frontend row {i}"));
+    }
+    assert_eq!(
+        records_json(&exp::frontend_study_records(&serial)),
+        records_json(&exp::frontend_study_records(&parallel)),
+    );
+
+    let fknobs = exp::FaultKnobs::default();
+    let run_fault = || exp::fault_study_with_model(&scene, &model, &hw, &cfg, &fknobs, 3);
+    let serial = with_threads(1, run_fault);
+    let parallel = with_threads(4, run_fault);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * 6, "2 rates x 6 ladder cells");
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.key, b.key, "fault row {i}: cell order");
+        assert_eq!(a.n_replicas, b.n_replicas, "fault row {i}: replicas");
+        assert_eq!(a.resilience_label, b.resilience_label, "fault row {i}");
+        assert_fleet_bitwise(&a.metrics, &b.metrics, &format!("fault row {i}"));
+    }
+    assert_eq!(
+        records_json(&exp::fault_study_records(&serial)),
+        records_json(&exp::fault_study_records(&parallel)),
+    );
+}
+
+fn tiny_sim_setup() -> (sim::RequestStream, ModelSpec, SimConfig) {
+    let spec = TraceSpec {
+        mean_in: 48.0,
+        mean_out: 6.0,
+        sigma_in: 0.4,
+        sigma_out: 0.3,
+        max_len: 2048,
+        shared_prefix_tokens: 0,
+    };
+    let mut cfg = SimConfig::new(ServingStrategy::ChunkedPrefill);
+    cfg.max_batch = 8;
+    cfg.chunk_tokens = 32;
+    cfg.kv_budget_tokens = 2048;
+    cfg.ctx_bucket = 64;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(1.0, 0.5);
+    (
+        sim::RequestStream::poisson(&spec, 50.0, 6, 13),
+        ModelSpec::tiny(),
+        cfg,
+    )
+}
+
+/// The DSE entry points on 1 vs 4 outer threads: `search_serving` (GA
+/// per distinct shape under the shared cache), the candidate-parallel
+/// `search_kv`, `search_fleet`, and the grid-parallel
+/// `search_resilience` — winners and every row, bitwise.
+#[test]
+fn search_entrypoints_bitwise_equal_across_threads() {
+    let (stream, model, cfg) = tiny_sim_setup();
+    let hw = tiny_hw();
+    let ga = GaConfig::tiny();
+
+    let a = with_threads(1, || dse::search_serving(&stream, &model, &hw, &ga, &cfg));
+    let b = with_threads(4, || dse::search_serving(&stream, &model, &hw, &ga, &cfg));
+    assert_serving_bitwise(&a, &b, "search_serving");
+
+    let specs = [
+        KvSpec::token_granular(),
+        KvSpec::paged(16),
+        KvSpec::paged(16).with_dtype(KvDtype::Int4),
+    ];
+    let (wa, rows_a) = with_threads(1, || dse::search_kv(&stream, &model, &hw, &cfg, &specs));
+    let (wb, rows_b) = with_threads(4, || dse::search_kv(&stream, &model, &hw, &cfg, &specs));
+    assert_eq!(wa.describe(), wb.describe(), "search_kv winner");
+    assert_eq!(rows_a.len(), rows_b.len());
+    for (i, (x, y)) in rows_a.iter().zip(&rows_b).enumerate() {
+        assert_eq!(x.0.describe(), y.0.describe(), "search_kv row {i}: spec order");
+        assert_serving_bitwise(&x.1, &y.1, &format!("search_kv row {i}"));
+    }
+
+    let fleet = FleetConfig::homogeneous(2, RouterPolicy::JoinShortestQueue);
+    let fa = with_threads(1, || {
+        dse::search_fleet(&stream, &model, &hw, &ga, &cfg, &fleet)
+    });
+    let fb = with_threads(4, || {
+        dse::search_fleet(&stream, &model, &hw, &ga, &cfg, &fleet)
+    });
+    assert_fleet_bitwise(&fa, &fb, "search_fleet");
+
+    let space = ResilienceSpace::new(2);
+    let schedule = FaultSchedule::none().crash(0, 0.05, 0.2);
+    let fe = Frontend::baseline();
+    let (ba, rows_a) = with_threads(1, || {
+        dse::search_resilience(&stream, &model, &hw, &cfg, &fe, &space, &schedule)
+    });
+    let (bb, rows_b) = with_threads(4, || {
+        dse::search_resilience(&stream, &model, &hw, &cfg, &fe, &space, &schedule)
+    });
+    assert_eq!(ba.describe(), bb.describe(), "search_resilience winner");
+    assert_eq!(rows_a.len(), rows_b.len());
+    assert_eq!(
+        rows_a.len(),
+        space.extra_replicas.len() * space.retries.len() * space.drain_options.len(),
+        "flattened grid covers the serial triple loop"
+    );
+    for (i, (x, y)) in rows_a.iter().zip(&rows_b).enumerate() {
+        assert_eq!(x.0.describe(), y.0.describe(), "resilience row {i}: order");
+        assert_fleet_bitwise(&x.1, &y.1, &format!("resilience row {i}"));
+    }
+}
+
+/// `compass_dse_fleet` with the `GpFactory` signature: the candidate-
+/// parallel run (8 threads -> outer width 2, fresh surrogate per
+/// candidate) must reproduce the serial run's winner, BO history and
+/// per-candidate objectives bit for bit — every `Gp::fit` retrains from
+/// scratch, so a fresh surrogate sees exactly the data a reused one did.
+#[test]
+fn fleet_dse_bitwise_equal_across_threads() {
+    let (stream, model, cfg) = tiny_sim_setup();
+    let mut fspace = FleetSpace::new(64.0);
+    fspace.replica_counts = vec![2];
+    fspace.routers = vec![RouterPolicy::JoinShortestQueue];
+    fspace.splits = vec![];
+    fspace.hetero_splits = vec![(1, 1, 0.3)];
+    fspace.shed_margins = vec![1.5];
+    let dse_cfg = DseConfig::tiny();
+    let make_gp = || -> Box<dyn Gp> { Box::new(NativeGp::new()) };
+    let a = with_threads(1, || {
+        dse::compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &make_gp)
+    });
+    let b = with_threads(8, || {
+        dse::compass_dse_fleet(&stream, &model, &fspace, &dse_cfg, &cfg, &make_gp)
+    });
+    assert_eq!(a.fleet.describe(), b.fleet.describe(), "winning shape");
+    assert_eq!(
+        a.shed_margin.map(f64::to_bits),
+        b.shed_margin.map(f64::to_bits),
+        "winning admission margin"
+    );
+    assert_eq!(format!("{:?}", a.hw), format!("{:?}", b.hw), "winning hw");
+    assert_eq!(
+        format!("{:?}", a.hws),
+        format!("{:?}", b.hws),
+        "per-replica hw vector"
+    );
+    assert_eq!(a.bo_history.len(), b.bo_history.len());
+    for (i, (x, y)) in a.bo_history.iter().zip(&b.bo_history).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "bo history round {i}");
+    }
+    assert_eq!(a.per_shape.len(), b.per_shape.len());
+    for (i, (x, y)) in a.per_shape.iter().zip(&b.per_shape).enumerate() {
+        assert_eq!(x.0.describe(), y.0.describe(), "candidate {i}: order");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "candidate {i}: objective");
+    }
+    assert_fleet_bitwise(&a.metrics, &b.metrics, "winner metrics");
+}
+
+/// Traced representative cells re-run under `--trace-out`'s protocol:
+/// the Chrome-trace JSON must be byte-identical at 1 and 4 threads —
+/// the deterministic local coster counters (`coster.memo_hits`) enter
+/// the trace, the nondeterministic shared-cache stats never do.
+#[test]
+fn traced_cells_byte_identical_across_threads() {
+    let mut scene = exp::SimScene::new("sharegpt", 64.0, 5);
+    scene.rates_rps = vec![2.0, 8.0];
+    let hw = exp::sim_default_hw(64.0);
+    let cfg = study_cfg();
+    let run_sim = |threads: usize| {
+        with_threads(threads, || {
+            let (label, rate, sink) = exp::sim_study_traced_cell(&scene, &hw, &cfg, 3);
+            let json = sink.lock().unwrap().chrome_trace_json();
+            (label, rate, json)
+        })
+    };
+    let (l1, r1, j1) = run_sim(1);
+    let (l4, r4, j4) = run_sim(4);
+    assert_eq!(l1, l4);
+    assert_eq!(r1.to_bits(), r4.to_bits());
+    assert!(!j1.is_empty() && j1.starts_with("{\"traceEvents\":["));
+    assert_eq!(j1, j4, "sim-study trace bytes differ across threads");
+
+    let mut fscene = exp::FleetScene::new("sharegpt", 64.0, 2, 6);
+    fscene.rates_rps = vec![4.0, 20.0];
+    let model = ModelSpec::gpt3_7b();
+    let fhw = exp::sim_default_hw(fscene.tops_per_replica());
+    let knobs = exp::FaultKnobs::default();
+    let run_fault = |threads: usize| {
+        with_threads(threads, || {
+            let (label, rate, sink) =
+                exp::fault_study_traced_cell(&fscene, &model, &fhw, &cfg, &knobs, 3);
+            let json = sink.lock().unwrap().chrome_trace_json();
+            (label, rate, json)
+        })
+    };
+    let (l1, r1, j1) = run_fault(1);
+    let (l4, r4, j4) = run_fault(4);
+    assert_eq!(l1, l4);
+    assert_eq!(r1.to_bits(), r4.to_bits());
+    assert_eq!(j1, j4, "fault-study trace bytes differ across threads");
+}
+
+/// `COMPASS_SHARED_CACHE=0` (every coster back on its local memo only)
+/// against the default shared-cache run, both on four threads: rows
+/// bitwise-identical — the cache can only change *when* a shape is
+/// simulated, never what the simulation returns.
+#[test]
+fn shared_cache_off_matches_on_bitwise() {
+    let mut scene = exp::SimScene::new("sharegpt", 64.0, 5);
+    scene.rates_rps = vec![2.0, 8.0];
+    let hw = exp::sim_default_hw(64.0);
+    let cfg = study_cfg();
+    let on = with_env(4, true, || exp::sim_serving_study(&scene, &hw, &cfg, 3));
+    let off = with_env(4, false, || exp::sim_serving_study(&scene, &hw, &cfg, 3));
+    assert_eq!(on.len(), off.len());
+    for (i, (a, b)) in on.iter().zip(&off).enumerate() {
+        assert_eq!(a.strategy, b.strategy, "row {i}");
+        assert_serving_bitwise(&a.metrics, &b.metrics, &format!("cache on/off row {i}"));
+    }
+
+    let (stream, model, tcfg) = tiny_sim_setup();
+    let thw = tiny_hw();
+    let space = ResilienceSpace::new(2);
+    let schedule = FaultSchedule::none().crash(0, 0.05, 0.2);
+    let fe = Frontend::baseline();
+    let (won, rows_on) = with_env(4, true, || {
+        dse::search_resilience(&stream, &model, &thw, &tcfg, &fe, &space, &schedule)
+    });
+    let (woff, rows_off) = with_env(4, false, || {
+        dse::search_resilience(&stream, &model, &thw, &tcfg, &fe, &space, &schedule)
+    });
+    assert_eq!(won.describe(), woff.describe(), "winner flips with cache");
+    for (i, (x, y)) in rows_on.iter().zip(&rows_off).enumerate() {
+        assert_fleet_bitwise(&x.1, &y.1, &format!("cache on/off resilience row {i}"));
+    }
+}
+
+/// Eight costers hammering one fresh [`CostCache`] with overlapping
+/// batches, in worker-skewed order, under the `Searched` policy (GA
+/// seeds derive from the quantized key, never from lookup order): every
+/// worker's every cost must equal the isolated no-cache reference bit
+/// for bit, each coster's explicit counters must add up, and the global
+/// counters must balance the per-coster ones.
+#[test]
+fn concurrent_shared_cache_is_bitwise_deterministic() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let policy = MappingPolicy::Searched(GaConfig::tiny());
+    let cache = Arc::new(CostCache::new());
+    // 12 batches; prefill lengths collide after ctx_bucket=32
+    // quantization, so workers race on genuinely shared keys
+    let batches: Vec<Vec<Request>> = (0..12)
+        .map(|i| {
+            let mut b = vec![Request::Prefill {
+                len: 16 * (i as u64 % 4 + 1),
+                past: 0,
+            }];
+            for j in 0..(i % 3 + 1) {
+                b.push(Request::Decode {
+                    ctx: 32 * (j as u64 + 1) + (i as u64 % 2),
+                });
+            }
+            b
+        })
+        .collect();
+    let expect: Vec<IterCost> = {
+        let mut reference =
+            BatchCoster::with_cache(&model, &hw, policy, 1, 32, KvDtype::Fp16, None);
+        batches.iter().map(|b| reference.cost(b)).collect()
+    };
+    let n = batches.len();
+    let batches_ref = &batches;
+    let (model_ref, hw_ref, cache_ref) = (&model, &hw, &cache);
+    let per_worker: Vec<(Vec<IterCost>, usize, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut c = BatchCoster::with_cache(
+                        model_ref,
+                        hw_ref,
+                        policy,
+                        1,
+                        32,
+                        KvDtype::Fp16,
+                        Some(cache_ref.clone()),
+                    );
+                    // rotated visit order; every batch costed twice so
+                    // local-memo hits and shared hits both occur
+                    let mut out = vec![None; n];
+                    for pass in 0..2 {
+                        for k in 0..n {
+                            let i = (k + w * (pass + 1)) % n;
+                            out[i] = Some(c.cost(&batches_ref[i]));
+                        }
+                    }
+                    assert_eq!(
+                        c.lookups(),
+                        c.hits() + c.shared_hits() + c.computed(),
+                        "worker {w}: counter invariant"
+                    );
+                    (
+                        out.into_iter().map(|c| c.unwrap()).collect::<Vec<_>>(),
+                        c.shared_hits(),
+                        c.computed(),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut probes = 0usize;
+    for (w, (costs, shared_hits, computed)) in per_worker.iter().enumerate() {
+        probes += shared_hits + computed;
+        for (i, (got, want)) in costs.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                got.latency_cycles.to_bits(),
+                want.latency_cycles.to_bits(),
+                "worker {w} batch {i}: latency"
+            );
+            assert_eq!(
+                got.energy_pj.to_bits(),
+                want.energy_pj.to_bits(),
+                "worker {w} batch {i}: energy"
+            );
+            assert_eq!(got.macs, want.macs, "worker {w} batch {i}: macs");
+        }
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.configs, 1, "one fingerprint, one shard");
+    assert_eq!(
+        stats.hits + stats.misses,
+        probes,
+        "global counters balance the per-coster ones"
+    );
+    assert!(stats.entries >= 1 && stats.entries <= stats.misses);
+    assert_eq!(
+        stats.ga_searches, stats.misses,
+        "every miss under Searched runs a GA"
+    );
+    assert_eq!(
+        stats.ga_avoided, stats.hits,
+        "every shared hit under Searched avoids a GA"
+    );
+}
