@@ -8,8 +8,12 @@
 //! replicas through the allocation-free hot path with parallel
 //! replica stepping — and reports simulated-seconds-per-wall-second
 //! against the budget recorded in `BENCH_engine_micro.json`
-//! (`fleet_large_sim_s_per_wall_s`). The default run stays small so
-//! CI's non-blocking sanity step finishes in seconds.
+//! (`fleet_large_sim_s_per_wall_s`). The large cell runs twice — decode
+//! fast-forward on (the default) and off (`COMPASS_COALESCE=0`) — and
+//! prints the wall-clock speedup against the
+//! `fleet_large_coalesce_speedup >= 3.0` budget, asserting the two runs
+//! bitwise-agree first. The default run stays small so CI's
+//! non-blocking sanity step finishes in seconds.
 
 use compass::arch::{ChipletClass, Dataflow, HwConfig};
 use compass::sim::{self, FleetConfig, Frontend, RouterPolicy, SimConfig};
@@ -57,20 +61,57 @@ fn run_large() {
          over {n_replicas} replicas ({} threads)",
         compass::cost::engine::default_threads()
     );
-    let t0 = std::time::Instant::now();
-    let m = sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline());
-    let wall = t0.elapsed().as_secs_f64();
-    let iters: usize = m.per_replica.iter().map(|r| r.n_iterations).sum();
+    // One measured run per coalescing mode. The schedulers read
+    // COMPASS_COALESCE at construction, so forcing it here (and
+    // restoring the caller's value after) pins the mode per run.
+    let run_once = |coalesce_on: bool| {
+        let old = std::env::var("COMPASS_COALESCE").ok();
+        std::env::set_var("COMPASS_COALESCE", if coalesce_on { "1" } else { "0" });
+        let t0 = std::time::Instant::now();
+        let m =
+            sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, &fleet, &Frontend::baseline());
+        let wall = t0.elapsed().as_secs_f64();
+        match old {
+            Some(v) => std::env::set_var("COMPASS_COALESCE", v),
+            None => std::env::remove_var("COMPASS_COALESCE"),
+        }
+        (m, wall)
+    };
+    let (m_on, wall_on) = run_once(true);
+    let (m_off, wall_off) = run_once(false);
+    for (label, m, wall) in [
+        ("coalesce=on ", &m_on, wall_on),
+        ("coalesce=off", &m_off, wall_off),
+    ] {
+        let iters: usize = m.per_replica.iter().map(|r| r.n_iterations).sum();
+        println!(
+            "    large cell [{label}]: sim {:.1}s / wall {:.1}s -> {:.1} sim-s per wall-s | \
+             {} completed / {} arrived | {} iterations | {:.0} iters/wall-s",
+            m.makespan_s,
+            wall,
+            m.makespan_s / wall.max(1e-12),
+            m.n_completed,
+            m.n_arrived,
+            iters,
+            iters as f64 / wall.max(1e-12),
+        );
+    }
+    // Fast-forward is a pure perf transform: refuse to report a speedup
+    // for runs that disagree anywhere it would show.
+    assert_eq!(
+        m_on.makespan_s.to_bits(),
+        m_off.makespan_s.to_bits(),
+        "coalesce on/off diverged (makespan)"
+    );
+    assert_eq!(m_on.n_completed, m_off.n_completed, "coalesce on/off diverged (completed)");
+    assert_eq!(
+        m_on.energy_pj.to_bits(),
+        m_off.energy_pj.to_bits(),
+        "coalesce on/off diverged (energy)"
+    );
     println!(
-        "    large cell: sim {:.1}s / wall {:.1}s -> {:.1} sim-s per wall-s | \
-         {} completed / {} arrived | {} iterations | {:.0} iters/wall-s",
-        m.makespan_s,
-        wall,
-        m.makespan_s / wall.max(1e-12),
-        m.n_completed,
-        m.n_arrived,
-        iters,
-        iters as f64 / wall.max(1e-12),
+        "    coalesce speedup: {:.2}x wall (budget fleet_large_coalesce_speedup >= 3.0)",
+        wall_off / wall_on.max(1e-12),
     );
 }
 
@@ -130,11 +171,12 @@ fn main() {
             .run(|| sim::simulate_fleet(&stream, &model, &hw, &cfg, fleet));
         println!(
             "    {:<22} sim {:>9.3}s / wall -> {:>10.1} sim-s per wall-s | \
-             {} iterations total | imbalance {:.3} | kv-handoff {} tok",
+             {} iterations total | {:.0} iters/wall-s | imbalance {:.3} | kv-handoff {} tok",
             fleet.describe(),
             cold.makespan_s,
             cold.makespan_s / wall.max(1e-12),
             iters,
+            iters as f64 / wall.max(1e-12),
             cold.load_imbalance,
             cold.kv_transfer_tokens,
         );

@@ -322,6 +322,23 @@ impl<'a> BatchCoster<'a> {
         self.computed
     }
 
+    /// Account for `n` cost lookups the scheduler's decode fast-forward
+    /// replayed without calling [`BatchCoster::cost`]: a coalesced
+    /// stretch costs its (constant) composition once and reuses the
+    /// `IterCost` for the remaining iterations, each of which the naive
+    /// loop would have served as a guaranteed *local* memo hit (the
+    /// first lookup of the stretch leaves the key in the local memo on
+    /// every path). Booking them keeps the deterministic counters —
+    /// which feed traced-run counter records — bitwise identical to
+    /// naive stepping, and the invariant
+    /// `lookups == hits + shared_hits + computed` intact. The shared
+    /// [`CostCache`] counters are deliberately untouched: local repeats
+    /// never reach the shared cache.
+    pub fn note_replayed_hits(&mut self, n: usize) {
+        self.lookups += n;
+        self.hits += n;
+    }
+
     /// Cost one iteration batch; memo hits never re-simulate.
     ///
     /// The steady-state hit path is allocation-free: the composition key
@@ -532,6 +549,48 @@ mod tests {
         c.cost(&[Request::decode(200), Request::decode(128)]);
         assert_eq!(c.distinct_shapes(), 2);
         assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn replayed_hits_match_repeated_lookups() {
+        let (model, hw) = setup();
+        let batch = [Request::decode(100), Request::decode(120)];
+        // naive: one real lookup + k-1 identical repeats
+        let mut naive = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            64,
+            KvDtype::Fp16,
+            None,
+        );
+        let k = 5;
+        for _ in 0..k {
+            naive.cost(&batch);
+        }
+        // coalesced: one real lookup, then book the replays
+        let mut ff = BatchCoster::with_cache(
+            &model,
+            &hw,
+            MappingPolicy::Pipeline,
+            1,
+            64,
+            KvDtype::Fp16,
+            None,
+        );
+        ff.cost(&batch);
+        ff.note_replayed_hits(k - 1);
+        assert_eq!(ff.lookups(), naive.lookups());
+        assert_eq!(ff.hits(), naive.hits());
+        assert_eq!(ff.shared_hits(), naive.shared_hits());
+        assert_eq!(ff.computed(), naive.computed());
+        assert_eq!(ff.distinct_shapes(), naive.distinct_shapes());
+        assert_eq!(
+            ff.lookups(),
+            ff.hits() + ff.shared_hits() + ff.computed(),
+            "accounting invariant"
+        );
     }
 
     #[test]

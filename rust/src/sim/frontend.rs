@@ -450,6 +450,13 @@ impl<'a> Pool<'a> {
     /// serial path is kept verbatim for single-threaded runs, a single
     /// lagging replica, and self-time profiling (the profiler's
     /// accumulators are thread-local).
+    ///
+    /// The horizon `t` is also what keeps decode fast-forward honest:
+    /// every external event — arrival, migration delivery, fault
+    /// instant, drain deadline — reaches a replica as an `advance_to`
+    /// horizon, and [`Scheduler::try_fast_forward`] re-checks it per
+    /// replayed iteration, so a coalesced stretch can never overshoot
+    /// an event this control plane will deliver.
     fn advance_all(&mut self, t: f64) {
         let lagging = self.reps.iter().filter(|s| s.needs_advance(t)).count();
         if self.threads <= 1 || lagging <= 1 || profile::enabled() {

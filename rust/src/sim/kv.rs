@@ -556,6 +556,57 @@ impl KvCache {
         self.used_blocks + self.reserved_blocks + growth <= self.capacity_blocks
     }
 
+    /// Phase of `idx`'s private tail block: tokens already written into
+    /// it (`priv_tokens % block_tokens`). A decode write allocates a new
+    /// block exactly when the phase is 0, so the scheduler's decode
+    /// fast-forward derives every future iteration's block growth from
+    /// these residues instead of rescanning [`Self::decode_growth_one`]:
+    /// at stretch iteration `j`, sequence `idx` allocates iff
+    /// `(decode_phase(idx) + j) % block_tokens == 0`.
+    pub fn decode_phase(&self, idx: usize) -> u64 {
+        let s = &self.seqs[idx];
+        debug_assert!(s.active, "KV decode phase of an inactive sequence {idx}");
+        debug_assert_eq!(s.reserved_tokens, 0, "decode phase during prefill");
+        s.priv_tokens % self.spec.block_tokens
+    }
+
+    /// Apply one coalesced decode iteration's *global* accounting:
+    /// `delta_blocks` blocks newly allocated by this iteration's writes
+    /// (derived from the [`Self::decode_phase`] residues) and `n_tokens`
+    /// appended tokens (one per decoding sequence). Per-sequence state is
+    /// deferred to [`Self::finish_decode_stretch`], so `frac` /
+    /// `fragmentation` / `free_blocks` stay exact after every iteration
+    /// of the stretch while the per-sequence fields are intentionally
+    /// stale in between; conservation is re-established (and
+    /// `debug_assert`ed) by the sync.
+    pub fn bulk_decode_iter(&mut self, delta_blocks: u64, n_tokens: u64) {
+        self.used_blocks += delta_blocks;
+        self.written_tokens += n_tokens;
+        debug_assert!(
+            self.used_blocks + self.reserved_blocks <= self.capacity_blocks,
+            "coalesced decode write over capacity"
+        );
+    }
+
+    /// Sync per-sequence state after a coalesced decode stretch: each
+    /// sequence in `ids` appended exactly `iters` tokens whose global
+    /// accounting already went through [`Self::bulk_decode_iter`]. Must
+    /// run before any of the sequences is released — [`Self::release`]
+    /// reads `priv_blocks`/`priv_tokens`. Equivalent to `iters` calls to
+    /// [`Self::write_decode`] per sequence (anchored by a unit test
+    /// below and bitwise end-to-end in
+    /// `rust/tests/coalesce_equivalence.rs`).
+    pub fn finish_decode_stretch(&mut self, ids: &[usize], iters: u64) {
+        for &idx in ids {
+            let s = &mut self.seqs[idx];
+            assert!(s.active, "KV stretch sync for an inactive sequence {idx}");
+            debug_assert_eq!(s.reserved_tokens, 0, "decode stretch during prefill");
+            s.priv_tokens += iters;
+            s.priv_blocks = s.priv_tokens.div_ceil(self.spec.block_tokens);
+        }
+        self.assert_conserved();
+    }
+
     /// Free everything `idx` holds (completion or preemption): private
     /// blocks, outstanding lease, and its shared-prefix reference.
     /// Shared blocks are freed only when the last reference drops.
@@ -755,6 +806,55 @@ mod tests {
             g.used_blocks + g.reserved_blocks + g.free_blocks,
             kv.capacity_blocks()
         );
+    }
+
+    #[test]
+    fn bulk_decode_stretch_matches_serial_writes() {
+        // Mixed tail phases across paged and token-granular specs: the
+        // coalesced path (per-iteration bulk_decode_iter from the phase
+        // residues + one finish_decode_stretch) must land on exactly the
+        // state that per-token write_decode calls produce, after *every*
+        // iteration for the global gauges and at the end for everything.
+        for spec in [KvSpec::token_granular(), KvSpec::paged(4), KvSpec::paged(16)] {
+            let bt = spec.block_tokens;
+            let mut serial = KvCache::new(spec, 640);
+            let mut bulk = KvCache::new(spec, 640);
+            // three sequences with distinct tail phases
+            for (idx, ctx) in [(0u64, 5u64), (1, 16), (2, 23)] {
+                serial.admit_written(idx as usize, ctx);
+                bulk.admit_written(idx as usize, ctx);
+            }
+            let ids = [0usize, 1, 2];
+            let resid: Vec<u64> = ids.iter().map(|&i| bulk.decode_phase(i)).collect();
+            let iters = 10u64;
+            for j in 0..iters {
+                for &i in &ids {
+                    serial.write_decode(i);
+                }
+                let phase = (bt - (j % bt)) % bt;
+                let delta = resid.iter().filter(|&&p| p == phase).count() as u64;
+                bulk.bulk_decode_iter(delta, ids.len() as u64);
+                assert_eq!(bulk.used_blocks(), serial.used_blocks(), "iter {j}");
+                assert_eq!(bulk.free_blocks(), serial.free_blocks(), "iter {j}");
+                assert_eq!(bulk.frac().to_bits(), serial.frac().to_bits());
+                assert_eq!(
+                    bulk.fragmentation().to_bits(),
+                    serial.fragmentation().to_bits()
+                );
+            }
+            bulk.finish_decode_stretch(&ids, iters);
+            for &i in &ids {
+                assert_eq!(bulk.decode_phase(i), serial.decode_phase(i));
+                assert_eq!(bulk.decode_growth_one(i), serial.decode_growth_one(i));
+            }
+            // release order must observe identical per-seq state
+            for &i in &ids {
+                serial.release(i);
+                bulk.release(i);
+                assert_eq!(bulk.used_blocks(), serial.used_blocks());
+            }
+            assert_eq!(bulk.free_blocks(), bulk.capacity_blocks());
+        }
     }
 
     #[test]

@@ -86,6 +86,11 @@ pub struct IterRecord {
 /// while the stored [`IterRecord`]s are capped at `2 * cap` entries by
 /// deterministic pairwise merging (duration-weighted), so a 1M-iteration
 /// run keeps a plottable trace in O(cap) memory instead of ~72 MB.
+///
+/// Decode fast-forward feeds this buffer one [`IterRecord`] per
+/// *replayed* iteration — identical fields in identical order to the
+/// naive loop — so the running sums, the downsampling cadence, and the
+/// stored records are all bitwise-independent of `COMPASS_COALESCE`.
 #[derive(Debug, Clone)]
 pub struct TraceBuffer {
     /// Target record count; 0 = unbounded (keep every iteration).

@@ -33,6 +33,16 @@
 //! over a whole stream, while the fleet layer (`sim::fleet`) interleaves
 //! many instances under a front-end router, injecting requests (or KV
 //! migrations, for disaggregated prefill/decode pools) between steps.
+//!
+//! Quiescent decode stretches are *fast-forwarded*: when no admission
+//! is possible, no chunked prefill is in flight, and no eviction can
+//! trigger, the batch composition is provably constant until the next
+//! finish or `ctx_bucket` crossing, so `advance_to` costs it once and
+//! replays the per-iteration scalar updates in the exact floating-point
+//! operation order of the naive loop — bitwise-identical results at a
+//! fraction of the per-iteration work (see
+//! [`Scheduler::try_fast_forward`]; `COMPASS_COALESCE=0` forces the
+//! naive loop, anchored in `rust/tests/coalesce_equivalence.rs`).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -156,6 +166,15 @@ pub struct ExtractedRequest {
 /// Sentinel for "no request" in the intrusive running-list links.
 const NONE: usize = usize::MAX;
 
+/// Decode fast-forward is on by default; `COMPASS_COALESCE=0` turns it
+/// off, forcing every iteration through the naive [`Scheduler::step`]
+/// loop (mirroring the `COMPASS_SHARED_CACHE` kill switch). Read once
+/// at scheduler construction; [`Scheduler::set_coalescing`] overrides
+/// per instance.
+fn coalescing_enabled() -> bool {
+    std::env::var("COMPASS_COALESCE").map_or(true, |v| v != "0")
+}
+
 /// Resumable continuous-batching scheduler for one package.
 ///
 /// Drive it with [`Scheduler::inject`] / [`Scheduler::advance_to`] /
@@ -203,6 +222,15 @@ pub struct Scheduler<'a> {
     scratch_batch: Vec<(usize, Role)>,
     scratch_cost: Vec<Request>,
     scratch_ev: Vec<(usize, EventKind)>,
+    /// Decode fast-forward scratch ([`Scheduler::try_fast_forward`]):
+    /// the stretch's run-list-order request ids and their KV tail-block
+    /// phase residues.
+    stretch_ids: Vec<usize>,
+    stretch_resid: Vec<u64>,
+    /// Decode fast-forward switch: `COMPASS_COALESCE=0` (or
+    /// [`Scheduler::set_coalescing`]`(false)`) forces the naive
+    /// per-iteration loop, which is bitwise-identical by construction.
+    coalesce: bool,
     clock: f64,
     trace: TraceBuffer,
     n_arrived: usize,
@@ -281,6 +309,9 @@ impl<'a> Scheduler<'a> {
             scratch_batch: Vec::new(),
             scratch_cost: Vec::new(),
             scratch_ev: Vec::new(),
+            stretch_ids: Vec::new(),
+            stretch_resid: Vec::new(),
+            coalesce: coalescing_enabled(),
             clock: 0.0,
             trace: TraceBuffer::new(cfg.trace_cap),
             n_arrived: 0,
@@ -627,6 +658,15 @@ impl<'a> Scheduler<'a> {
         failed
     }
 
+    /// Override the decode fast-forward switch (the default comes from
+    /// the `COMPASS_COALESCE` environment variable at construction).
+    /// `false` reproduces the naive per-iteration loop exactly; `true`
+    /// coalesces quiescent decode stretches with bitwise-identical
+    /// results (`rust/tests/coalesce_equivalence.rs`).
+    pub fn set_coalescing(&mut self, on: bool) {
+        self.coalesce = on;
+    }
+
     /// Apply a straggler window: iterations *starting* before
     /// `until_s` have their costed latency multiplied by `factor`
     /// (clamped >= 1). Later calls override earlier ones; the default
@@ -723,15 +763,289 @@ impl<'a> Scheduler<'a> {
     /// single-package driver.
     pub fn advance_to(&mut self, t: f64) {
         while !self.truncated && self.clock < t - 1e-12 && self.has_work() {
+            // fast-forward a quiescent decode stretch when possible; an
+            // inapplicable state (or any composition change) falls back
+            // to one naive step and re-tests on the next pass
+            if self.coalesce && self.try_fast_forward(t) {
+                continue;
+            }
             if !self.step() {
                 break;
             }
         }
     }
 
-    /// Drain all remaining work.
+    /// Drain all remaining work. Routed through [`Scheduler::advance_to`]
+    /// with an unbounded horizon so the final drain fast-forwards decode
+    /// stretches too; `step`'s own idle/cap exits terminate the loop
+    /// exactly as the old direct `while step()` form did.
     pub fn run_to_end(&mut self) {
-        while !self.truncated && self.step() {}
+        self.advance_to(f64::INFINITY);
+    }
+
+    /// Mirror of the admission gates [`Scheduler::form_batch`] applies
+    /// at the top of an iteration over a pure-decode running set:
+    /// `true` means neither the migrated pre-pass nor the strategy arm
+    /// can admit the queue head this iteration. Because every admission
+    /// loop stops at its first inadmissible head, and free headroom net
+    /// of decode growth only shrinks while a pure-decode stretch writes
+    /// (iteration `j+1`'s free blocks are iteration `j`'s minus the
+    /// growth it checked), a blocked head stays blocked until the next
+    /// composition change — a finish or an eviction, both of which end
+    /// the stretch. The prefix-sharing plan is untouched by decode
+    /// writes, so `can_admit`'s lease planning is stable across the
+    /// stretch too.
+    fn admission_blocked(&self, growth: u64) -> bool {
+        if self.n_running >= self.cfg.max_batch {
+            return true;
+        }
+        let Some(&q) = self.queue.front() else {
+            return true; // empty queue: nothing to admit
+        };
+        let r = &self.reqs[q];
+        let need = r.context_needed();
+        if r.prefilled {
+            // the migrated-admission pre-pass gate (the strategy arms
+            // all skip a migrated head)
+            return !self.kv.can_admit_written(need, growth);
+        }
+        match self.cfg.strategy {
+            // vLLM admits prompts without co-scheduled decode growth
+            ServingStrategy::Vllm => !self.kv.can_admit(need, r.input_len, 0),
+            ServingStrategy::Orca | ServingStrategy::ChunkedPrefill => {
+                !self.kv.can_admit(need, r.input_len, growth)
+            }
+        }
+    }
+
+    /// Attempt one coalesced quiescent-decode stretch under horizon `t`.
+    ///
+    /// Returns `true` when at least one iteration executed (the
+    /// `advance_to` loop then re-tests); `false` defers to the naive
+    /// [`Scheduler::step`] without touching any state.
+    ///
+    /// Preconditions — each mirroring what `step` would establish this
+    /// iteration: every running request is decoding (no chunked prefill
+    /// in flight), this iteration's decode writes fit without eviction,
+    /// and no admission is possible ([`Scheduler::admission_blocked`]).
+    /// Under those, the batch composition — and with it the coster's
+    /// quantized key and memoized [`super::coster::IterCost`] — is
+    /// constant until the nearest finish or the first decode context to
+    /// cross a `ctx_bucket` boundary, whichever comes first; that bound
+    /// is the stretch length `k`. The composition is costed once and
+    /// each of the (up to) `k` iterations replays the naive
+    /// [`Scheduler::run_batch`] scalar tail operation for operation on
+    /// the same f64 inputs (dt/slowdown branch, `end = clock + dt`,
+    /// energy and ideal-cycle accumulation, KV gauges, trace and sink
+    /// emissions), so coalesced results — metrics, per-request timings,
+    /// counters, and trace bytes — are bitwise identical to naive
+    /// stepping. The horizon, the `max_iterations` cap, and
+    /// per-iteration KV pressure are re-checked before every replayed
+    /// iteration exactly where the naive loop checks them, so the
+    /// stretch never overshoots an external event and the cap truncates
+    /// mid-stretch precisely where naive stepping would.
+    fn try_fast_forward(&mut self, t: f64) -> bool {
+        // pure-decode running set with at least one decoder
+        if self.fc.n_prefilling != 0 || self.fc.n_decoding == 0 {
+            return false;
+        }
+        // the naive step would truncate before running anything
+        if self.trace.n_iters() >= self.cfg.max_iterations {
+            return false;
+        }
+        // this iteration's decode writes must fit without eviction
+        let growth = self.decode_growth();
+        if !self.kv.fits_growth(growth) {
+            return false;
+        }
+        if !self.admission_blocked(growth) {
+            return false;
+        }
+        let _p = profile::scope("sched.fast_forward");
+
+        // ---- stretch bounds: nearest finish, nearest bucket crossing --
+        let bucket = self.cfg.ctx_bucket.max(1);
+        let bt = self.kv.spec().block_tokens.max(1);
+        let mut ids = std::mem::take(&mut self.stretch_ids);
+        let mut resid = std::mem::take(&mut self.stretch_resid);
+        let mut cost_batch = std::mem::take(&mut self.scratch_cost);
+        ids.clear();
+        resid.clear();
+        cost_batch.clear();
+        let mut k_finish = u64::MAX;
+        let mut k_bucket = u64::MAX;
+        let mut i = self.run_head;
+        while i != NONE {
+            let r = &self.reqs[i];
+            debug_assert!(r.decoding(), "non-decoder in a pure-decode stretch");
+            let ctx = r.context_needed();
+            k_finish = k_finish.min(r.output_len - r.generated);
+            // iterations until q(ctx) changes: reach the next multiple
+            // of the bucket, plus one to step past it
+            k_bucket = k_bucket.min(ctx.div_ceil(bucket) * bucket - ctx + 1);
+            ids.push(i);
+            resid.push(self.kv.decode_phase(i));
+            cost_batch.push(Request::decode(ctx));
+            i = self.run_next[i];
+        }
+        let k = k_finish.min(k_bucket);
+        let n = ids.len();
+        debug_assert_eq!(n, self.n_running, "stretch must cover the running set");
+
+        // ---- cost the constant composition once; iterations 2..k are
+        // the guaranteed local-memo hits the naive loop would have
+        // issued, booked after the loop via note_replayed_hits ----
+        let c = self.coster.lock().unwrap().cost(&cost_batch);
+        self.scratch_cost = cost_batch;
+        let dt_base = c.latency_cycles / CLOCK_HZ;
+        let ideal_inc = c.macs as f64 / self.peak_macs_per_cycle;
+        let n_running = self.n_running;
+        let queue_depth = self.queue.len();
+        let tracing = self.sink.is_some();
+
+        let mut executed = 0u64;
+        let mut synced = false;
+        for j in 0..k {
+            // this iteration's block growth from the tail-block phases:
+            // sequence r allocates at j iff (resid_r + j) % bt == 0
+            let phase = (bt - (j % bt)) % bt;
+            let delta = resid.iter().filter(|&&p| p == phase).count() as u64;
+            if j == 0 {
+                debug_assert_eq!(delta, growth, "phase residues drifted from the rescan");
+            } else {
+                // the naive gate sequence between iterations, verbatim:
+                // advance_to's horizon test, step's cap test, then the
+                // KV-pressure test (an eviction would change the
+                // composition, so the stretch ends there)
+                if !(self.clock < t - 1e-12) {
+                    break;
+                }
+                if self.trace.n_iters() >= self.cfg.max_iterations {
+                    self.truncated = true;
+                    break;
+                }
+                if !self.kv.fits_growth(delta) {
+                    break;
+                }
+            }
+
+            // --- run_batch's scalar tail, replayed operation for
+            // operation on the same f64 inputs ---
+            let mut dt = dt_base;
+            if self.clock < self.slow_until_s {
+                dt *= self.slow_mult;
+            }
+            let end = self.clock + dt;
+            self.energy += c.energy_pj;
+            self.ideal_cycles += ideal_inc;
+            self.kv.bulk_decode_iter(delta, n as u64);
+            self.gen_tokens += n as u64;
+            self.fc.backlog_tokens -= n as u64;
+            executed += 1;
+
+            if j + 1 == k_finish {
+                // the finishing iteration: sync per-sequence KV state
+                // first (release reads it), then process finishers in
+                // batch (run-list) order exactly like run_batch
+                self.kv.finish_decode_stretch(&ids, executed);
+                let mut ev = std::mem::take(&mut self.scratch_ev);
+                ev.clear();
+                for &idx in &ids {
+                    let r = &mut self.reqs[idx];
+                    r.generated += executed;
+                    if r.generated >= r.output_len {
+                        r.finish_s = Some(end);
+                        self.done += 1;
+                        self.kv.release(idx);
+                        self.run_unlink(idx);
+                        self.fc.n_decoding -= 1;
+                        if tracing {
+                            ev.push((self.ext_ids[idx], EventKind::Finish));
+                        }
+                    }
+                }
+                synced = true;
+                self.trace.push(IterRecord {
+                    start_s: self.clock,
+                    end_s: end,
+                    n_decode: n,
+                    n_prefill: 0,
+                    prefill_tokens: 0,
+                    queue_depth,
+                    kv_frac: self.kv.frac(),
+                    kv_frag: self.kv.fragmentation(),
+                    n_running,
+                });
+                if let Some(sink) = &self.sink {
+                    let mut s = sink.lock().unwrap();
+                    for &(ext, kind) in &ev {
+                        s.event(self.replica, end, ext, kind);
+                    }
+                    s.iter(IterSpan {
+                        replica: self.replica,
+                        start_s: self.clock,
+                        end_s: end,
+                        n_prefill: 0,
+                        n_decode: n,
+                        queue_depth,
+                        kv_frac: self.kv.frac(),
+                        kv_frag: self.kv.fragmentation(),
+                    });
+                }
+                self.scratch_ev = ev;
+                self.clock = end;
+                break; // the composition changes here: stretch over
+            }
+
+            // non-finishing iteration: no lifecycle events to emit
+            self.trace.push(IterRecord {
+                start_s: self.clock,
+                end_s: end,
+                n_decode: n,
+                n_prefill: 0,
+                prefill_tokens: 0,
+                queue_depth,
+                kv_frac: self.kv.frac(),
+                kv_frag: self.kv.fragmentation(),
+                n_running,
+            });
+            if let Some(sink) = &self.sink {
+                let mut s = sink.lock().unwrap();
+                s.iter(IterSpan {
+                    replica: self.replica,
+                    start_s: self.clock,
+                    end_s: end,
+                    n_prefill: 0,
+                    n_decode: n,
+                    queue_depth,
+                    kv_frac: self.kv.frac(),
+                    kv_frag: self.kv.fragmentation(),
+                });
+            }
+            self.clock = end;
+        }
+
+        if !synced {
+            // ended early (horizon / cap / KV pressure) or at a bucket
+            // boundary: no finishes happened — just sync the deferred
+            // per-sequence state
+            self.kv.finish_decode_stretch(&ids, executed);
+            for &idx in &ids {
+                self.reqs[idx].generated += executed;
+            }
+        }
+        // the naive loop would have issued one (local-hit) cost lookup
+        // per replayed iteration
+        if executed > 1 {
+            self.coster
+                .lock()
+                .unwrap()
+                .note_replayed_hits((executed - 1) as usize);
+        }
+        self.stretch_ids = ids;
+        self.stretch_resid = resid;
+        debug_assert!(executed >= 1, "a committed stretch always runs j = 0");
+        true
     }
 
     /// KV blocks this iteration's decode writes would newly allocate.
@@ -1386,6 +1700,55 @@ mod tests {
             rate_rps: 1.0,
             seed: 0,
         }
+    }
+
+    #[test]
+    fn fast_forward_engages_and_matches_naive_bitwise() {
+        let model = ModelSpec::tiny();
+        let hw = tiny_hw();
+        let mut cfg = tiny_cfg(ServingStrategy::ChunkedPrefill);
+        cfg.ctx_bucket = 64;
+        let stream = fixed_stream(&[(0.0, 8, 100)]);
+        let mut naive = Scheduler::new(&model, &hw, &cfg);
+        naive.set_coalescing(false);
+        let mut fast = Scheduler::new(&model, &hw, &cfg);
+        fast.set_coalescing(true);
+        for s in [&mut naive, &mut fast] {
+            for r in &stream.requests {
+                s.advance_to(r.arrival_s);
+                s.inject(r.id, r.arrival_s, r.input_len, r.output_len);
+            }
+        }
+        // one chunked-prefill iteration completes the prompt and emits
+        // the first token; the remaining decode stretch is quiescent
+        assert!(naive.step());
+        assert!(fast.step());
+        let before = fast.trace.n_iters();
+        assert!(
+            fast.try_fast_forward(f64::INFINITY),
+            "quiescent decode stretch must engage the fast-forward"
+        );
+        let coalesced = fast.trace.n_iters() - before;
+        // ctx = 9 after the first token, bucket 64: the stretch runs to
+        // the bucket crossing (64 - 9 + 1 iterations) in one call
+        assert!(coalesced > 1, "only {coalesced} iterations coalesced");
+        naive.run_to_end();
+        fast.run_to_end();
+        assert_eq!(naive.clock().to_bits(), fast.clock().to_bits());
+        assert_eq!(naive.trace.n_iters(), fast.trace.n_iters());
+        // replayed-hit booking keeps the coster counters identical
+        {
+            let (nc, fc) = (naive.coster.lock().unwrap(), fast.coster.lock().unwrap());
+            assert_eq!(nc.lookups(), fc.lookups());
+            assert_eq!(nc.hits(), fc.hits());
+            assert_eq!(nc.distinct_shapes(), fc.distinct_shapes());
+        }
+        let (a, b) = (naive.finish().metrics, fast.finish().metrics);
+        assert_eq!(a.n_iterations, b.n_iterations);
+        assert_eq!(a.gen_tokens, b.gen_tokens);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
     }
 
     #[test]

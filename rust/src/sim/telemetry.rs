@@ -11,7 +11,12 @@
 //!   no sink (`None` — the default, genuinely zero work) or appends to
 //!   a [`SpanCollector`] after the arithmetic of the step is done, so
 //!   metrics are bitwise-identical with telemetry on or off (anchored
-//!   in `rust/tests/telemetry_properties.rs`).
+//!   in `rust/tests/telemetry_properties.rs`). Decode fast-forward
+//!   (`sched::Scheduler::try_fast_forward`) preserves this byte-for-
+//!   byte: a coalesced stretch replays the exact per-iteration span
+//!   and lifecycle-event sequence of the naive loop at the same sim
+//!   instants, so trace files are identical with `COMPASS_COALESCE`
+//!   on or off (anchored in `rust/tests/coalesce_equivalence.rs`).
 //! * **Wall clock** — [`profile`] scopes measure where the *simulator
 //!   process* spends real time (`std::time::Instant`), for the
 //!   ROADMAP's raw-speed work. Wall-clock numbers are nondeterministic

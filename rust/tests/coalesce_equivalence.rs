@@ -1,0 +1,400 @@
+//! Bitwise-equivalence properties for decode fast-forward (PR 10).
+//!
+//! Coalesced stepping (`Scheduler::try_fast_forward`) costs a quiescent
+//! decode stretch once and replays the per-iteration scalar updates in
+//! the exact floating-point operation order of the naive loop, so it
+//! must not move a single bit anywhere: every metric, per-replica
+//! breakdown, per-request timing, fault counter, and trace byte is
+//! compared between
+//!
+//! * coalesce-on (`COMPASS_COALESCE=1`, the default) and coalesce-off
+//!   (`COMPASS_COALESCE=0`, the naive per-iteration loop) runs,
+//! * at one worker thread and eight (coalescing happens inside
+//!   `Scheduler::advance_to`, under the parallel replica stepping),
+//! * across all three `ServingStrategy` policies, token-granular /
+//!   paged / prefix-sharing KV layouts, homogeneous and disaggregated
+//!   fleets, shed / rebalance front ends, and seeded fault storms.
+//!
+//! The `COMPASS_COALESCE` and `COMPASS_THREADS` variables are
+//! process-global, so every mutation here is serialized behind one
+//! static mutex and restored afterwards (the same discipline as
+//! `hotpath_equivalence.rs`).
+
+use std::sync::Mutex;
+
+use compass::arch::{ChipletClass, Dataflow, HwConfig};
+use compass::sim::{
+    self, DrainSpec, FaultSchedule, FleetConfig, Frontend, KvSpec, MappingPolicy, RebalanceSpec,
+    ResilienceSpec, RetryPolicy, RouterPolicy, Scheduler, SimConfig, SloSpec, SpanCollector,
+};
+use compass::util::Rng;
+use compass::workload::serving::ServingStrategy;
+use compass::workload::trace::TraceSpec;
+use compass::workload::ModelSpec;
+
+/// Serializes `COMPASS_COALESCE`/`COMPASS_THREADS` mutation across the
+/// whole test binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the decode fast-forward switch and the pool thread
+/// count pinned, restoring the previous environment afterwards (a
+/// poisoned guard is fine: the next caller re-acquires and re-sets).
+fn with_coalesce<T>(on: bool, threads: usize, f: impl FnOnce() -> T) -> T {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let old_c = std::env::var("COMPASS_COALESCE").ok();
+    let old_t = std::env::var("COMPASS_THREADS").ok();
+    std::env::set_var("COMPASS_COALESCE", if on { "1" } else { "0" });
+    std::env::set_var("COMPASS_THREADS", threads.to_string());
+    let out = f();
+    match old_c {
+        Some(v) => std::env::set_var("COMPASS_COALESCE", v),
+        None => std::env::remove_var("COMPASS_COALESCE"),
+    }
+    match old_t {
+        Some(v) => std::env::set_var("COMPASS_THREADS", v),
+        None => std::env::remove_var("COMPASS_THREADS"),
+    }
+    out
+}
+
+fn tiny_hw() -> HwConfig {
+    HwConfig::homogeneous(
+        2,
+        2,
+        ChipletClass::S,
+        Dataflow::WeightStationary,
+        32.0,
+        16.0,
+    )
+}
+
+/// Decode-heavy trace spec (long outputs make real quiescent stretches)
+/// with an optional shared system prompt.
+fn decode_spec(prefix: u64) -> TraceSpec {
+    TraceSpec {
+        mean_in: 48.0,
+        mean_out: 40.0,
+        sigma_in: 0.5,
+        sigma_out: 0.4,
+        max_len: 4096,
+        shared_prefix_tokens: prefix,
+    }
+}
+
+fn cfg_for(strategy: ServingStrategy, kv_tokens: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(strategy);
+    cfg.policy = MappingPolicy::Pipeline;
+    cfg.max_batch = 6;
+    cfg.chunk_tokens = 24;
+    cfg.kv_budget_tokens = kv_tokens;
+    cfg.ctx_bucket = 32;
+    cfg.eval_blocks = 1;
+    cfg.slo = SloSpec::new(0.5, 0.1);
+    cfg.max_iterations = 500_000;
+    cfg
+}
+
+fn stream_for(spec: &TraceSpec, rate_scale: f64, n: usize, seed: u64, cfg: &SimConfig) -> sim::RequestStream {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let probe = sim::probe(&model, &hw, cfg, spec);
+    sim::RequestStream::poisson(spec, rate_scale * probe.capacity_rps(), n, seed)
+}
+
+fn assert_serving_bitwise(a: &sim::ServingMetrics, b: &sim::ServingMetrics, ctx: &str) {
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_preemptions, b.n_preemptions, "{ctx}: preemptions");
+    assert_eq!(a.n_iterations, b.n_iterations, "{ctx}: iterations");
+    assert_eq!(a.gen_tokens, b.gen_tokens, "{ctx}: gen tokens");
+    assert_eq!(a.distinct_shapes, b.distinct_shapes, "{ctx}: shapes");
+    assert_eq!(a.max_queue_depth, b.max_queue_depth, "{ctx}: max queue");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("busy", a.busy_s, b.busy_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("ttft mean", a.ttft.mean, b.ttft.mean),
+        ("tpot mean", a.tpot.mean, b.tpot.mean),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("occupancy", a.mean_batch_occupancy, b.mean_batch_occupancy),
+        ("mean queue", a.mean_queue_depth, b.mean_queue_depth),
+        ("utilization", a.utilization, b.utilization),
+        ("kv frag", a.kv_fragmentation, b.kv_fragmentation),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+}
+
+/// Per-replica metrics, fault counters and per-request timings, all via
+/// `to_bits`.
+fn assert_fleet_bitwise(a: &sim::FleetMetrics, b: &sim::FleetMetrics, ctx: &str) {
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{ctx}: replicas");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        assert_serving_bitwise(x, y, &format!("{ctx}: replica {i}"));
+    }
+    assert_eq!(a.n_arrived, b.n_arrived, "{ctx}: arrived");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}: completed");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}: rejected");
+    assert_eq!(a.n_shed, b.n_shed, "{ctx}: shed");
+    assert_eq!(a.n_rebalanced, b.n_rebalanced, "{ctx}: rebalanced");
+    assert_eq!(a.faults.n_failed, b.faults.n_failed, "{ctx}: failed");
+    assert_eq!(a.faults.n_retried, b.faults.n_retried, "{ctx}: retried");
+    assert_eq!(a.faults.n_lost, b.faults.n_lost, "{ctx}: lost");
+    assert_eq!(a.faults.n_drained, b.faults.n_drained, "{ctx}: drained");
+    for (name, x, y) in [
+        ("makespan", a.makespan_s, b.makespan_s),
+        ("energy", a.energy_pj, b.energy_pj),
+        ("ttft p99", a.ttft.p99, b.ttft.p99),
+        ("tpot p99", a.tpot.p99, b.tpot.p99),
+        ("slo goodput", a.slo_goodput_tps, b.slo_goodput_tps),
+        ("imbalance", a.load_imbalance, b.load_imbalance),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcomes");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            x.arrival_s.to_bits(),
+            y.arrival_s.to_bits(),
+            "{ctx}: outcome {i} arrival"
+        );
+        assert_eq!(
+            x.first_token_s.map(f64::to_bits),
+            y.first_token_s.map(f64::to_bits),
+            "{ctx}: outcome {i} first token"
+        );
+        assert_eq!(
+            x.finish_s.map(f64::to_bits),
+            y.finish_s.map(f64::to_bits),
+            "{ctx}: outcome {i} finish"
+        );
+        assert_eq!(x.rejected, y.rejected, "{ctx}: outcome {i} rejected");
+    }
+}
+
+/// Single replica, coalesce on vs off, across all three strategies and
+/// token-granular / tight / paged / prefix-sharing KV layouts on
+/// randomized decode-heavy streams. The tight budget exercises the
+/// KV-pressure stretch break (evictions end a stretch); the paged
+/// layouts exercise per-iteration block growth from the phase residues;
+/// the prefix layout checks that shared blocks never perturb a stretch.
+#[test]
+fn serving_coalesced_matches_naive_across_strategies_and_kv_layouts() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut rng = Rng::seed_from_u64(0x0C0A);
+    let layouts: [(&str, KvSpec, u64, u64); 4] = [
+        ("token-ample", KvSpec::token_granular(), 4096, 0),
+        ("token-tight", KvSpec::token_granular(), 448, 0),
+        ("paged-16", KvSpec::paged(16), 4096, 0),
+        ("paged-prefix", KvSpec::paged(8).with_prefix(64), 2048, 64),
+    ];
+    for strategy in [
+        ServingStrategy::Vllm,
+        ServingStrategy::Orca,
+        ServingStrategy::ChunkedPrefill,
+    ] {
+        for (name, kv, budget, prefix) in &layouts {
+            let mut cfg = cfg_for(strategy, *budget);
+            cfg.kv = *kv;
+            let spec = decode_spec(*prefix);
+            let n = 10 + rng.gen_index(8);
+            let seed = rng.next_u64();
+            let scale = 1.0 + rng.gen_f64();
+            let stream = stream_for(&spec, scale, n, seed, &cfg);
+            let naive =
+                with_coalesce(false, 1, || sim::simulate_serving(&stream, &model, &hw, &cfg));
+            let fast =
+                with_coalesce(true, 1, || sim::simulate_serving(&stream, &model, &hw, &cfg));
+            assert_serving_bitwise(&fast, &naive, &format!("{strategy:?} {name}"));
+            assert_eq!(
+                naive.n_completed + naive.n_rejected + naive.n_in_flight,
+                naive.n_arrived,
+                "{strategy:?} {name}: conservation"
+            );
+        }
+    }
+}
+
+/// Sink-on single-replica runs: the fast-forward replays per-iteration
+/// occupancy spans and lifecycle events exactly, so the Chrome-trace
+/// JSON must be byte-identical between coalesce on and off (and the
+/// metrics bitwise-equal to the untraced run).
+#[test]
+fn traced_serving_replays_identical_bytes() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let mut cfg = cfg_for(ServingStrategy::ChunkedPrefill, 2048);
+    cfg.kv = KvSpec::paged(16);
+    let spec = decode_spec(0);
+    let stream = stream_for(&spec, 1.4, 14, 99, &cfg);
+    let untraced = with_coalesce(true, 1, || sim::simulate_serving(&stream, &model, &hw, &cfg));
+    let run_traced = |on: bool| {
+        with_coalesce(on, 1, || {
+            let c = SpanCollector::shared();
+            let sink: sim::SharedSink = c.clone();
+            let m = sim::simulate_serving_traced(&stream, &model, &hw, &cfg, &sink);
+            let json = c.lock().unwrap().chrome_trace_json();
+            (m, json)
+        })
+    };
+    let (m_on, j_on) = run_traced(true);
+    let (m_off, j_off) = run_traced(false);
+    assert_serving_bitwise(&m_on, &m_off, "traced serving");
+    assert_serving_bitwise(&m_on, &untraced, "traced vs untraced");
+    assert_eq!(j_on, j_off, "trace JSON differs between coalesce on/off");
+    assert!(!j_on.is_empty() && j_on.starts_with("{\"traceEvents\":["));
+}
+
+/// Fleets: coalesce on/off × 1/8 worker threads, bitwise, across
+/// homogeneous (JSQ with SLO shedding, round-robin baseline,
+/// JSQ rebalancing) and disaggregated prefill/decode shapes.
+#[test]
+fn fleet_coalesced_matches_naive_at_one_and_eight_threads() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let spec = decode_spec(0);
+    let probe = sim::probe(&model, &hw, &cfg, &spec);
+    let combos: [(FleetConfig, Frontend); 4] = [
+        (
+            FleetConfig::homogeneous(4, RouterPolicy::JoinShortestQueue),
+            Frontend::with_shedding(probe, 3.0),
+        ),
+        (
+            FleetConfig::homogeneous(3, RouterPolicy::RoundRobin),
+            Frontend::baseline(),
+        ),
+        (
+            FleetConfig::homogeneous(4, RouterPolicy::JoinShortestQueue),
+            Frontend::baseline().with_rebalance(RebalanceSpec::new(0.3, 1e-7)),
+        ),
+        (FleetConfig::disaggregated(1, 3, 1e-7), Frontend::baseline()),
+    ];
+    let mut rng = Rng::seed_from_u64(0xC0A1E5CE);
+    for (ci, (fleet, fe)) in combos.iter().enumerate() {
+        let n = 12 + rng.gen_index(8);
+        let seed = rng.next_u64();
+        let stream = stream_for(&spec, 1.6 + rng.gen_f64(), n, seed, &cfg);
+        let hws = vec![hw.clone(); fleet.total_replicas()];
+        let run = |on: bool, threads: usize| {
+            with_coalesce(on, threads, || {
+                sim::simulate_fleet_frontend(&stream, &model, &hws, &cfg, fleet, fe)
+            })
+        };
+        let anchor = run(false, 1);
+        for (on, threads) in [(true, 1), (true, 8), (false, 8)] {
+            let m = run(on, threads);
+            assert_fleet_bitwise(
+                &anchor,
+                &m,
+                &format!(
+                    "combo {ci} ({}) coalesce={on} threads={threads}",
+                    fleet.describe()
+                ),
+            );
+        }
+    }
+}
+
+/// Seeded fault storms (crashes + stragglers with failover, capped
+/// retries and proactive drains): fault instants arrive as `advance_to`
+/// horizons, so a stretch must end exactly at them. Coalesce on/off at
+/// 1 and 8 threads, untraced bitwise plus one traced byte-compare.
+#[test]
+fn faulted_fleet_coalesced_matches_naive() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let cfg = cfg_for(ServingStrategy::ChunkedPrefill, 1024);
+    let spec = decode_spec(0);
+    let mut rng = Rng::seed_from_u64(0xFA_C0A1);
+    for case in 0..2 {
+        let n = 14 + rng.gen_index(8);
+        let seed = rng.next_u64();
+        let stream = stream_for(&spec, 2.0, n, seed, &cfg);
+        let fleet = FleetConfig::homogeneous(3, RouterPolicy::JoinShortestQueue);
+        let hws = vec![hw.clone(); 3];
+        let fe = Frontend::baseline().with_rebalance(RebalanceSpec::new(0.4, 1e-7));
+        let horizon = stream.horizon_s();
+        let schedule = FaultSchedule::seeded(3, horizon, 2, 1, 17 + case as u64);
+        let res = ResilienceSpec::none()
+            .with_schedule(schedule)
+            .with_retry(RetryPolicy::capped(2, 0.05 * horizon, 0.2 * horizon))
+            .with_drain(DrainSpec::new(0.05 * horizon, 1e-7, 4))
+            .with_failover(case == 0);
+        let run = |on: bool, threads: usize| {
+            with_coalesce(on, threads, || {
+                sim::simulate_fleet_faults(&stream, &model, &hws, &cfg, &fleet, &fe, &res)
+            })
+        };
+        let anchor = run(false, 1);
+        for (on, threads) in [(true, 1), (true, 8)] {
+            let m = run(on, threads);
+            assert_fleet_bitwise(
+                &anchor,
+                &m,
+                &format!("faults case {case} coalesce={on} threads={threads}"),
+            );
+        }
+        if case == 0 {
+            let run_traced = |on: bool| {
+                with_coalesce(on, 1, || {
+                    let c = SpanCollector::shared();
+                    let sink: sim::SharedSink = c.clone();
+                    let m = sim::simulate_fleet_faults_traced(
+                        &stream, &model, &hws, &cfg, &fleet, &fe, &res, &sink,
+                    );
+                    let json = c.lock().unwrap().chrome_trace_json();
+                    (m, json)
+                })
+            };
+            let (m_on, j_on) = run_traced(true);
+            let (m_off, j_off) = run_traced(false);
+            assert_fleet_bitwise(&m_on, &m_off, "faults traced on/off");
+            assert_fleet_bitwise(&anchor, &m_off, "faults traced vs untraced");
+            assert_eq!(j_on, j_off, "fault-run trace JSON differs on/off");
+        }
+    }
+}
+
+/// The `max_iterations` satellite regression: a cap boundary landing
+/// deep inside a coalesced stretch must count every replayed iteration
+/// toward the cap and set `truncated` exactly where the naive loop
+/// would — same iteration count, same clock bits, same metrics.
+#[test]
+fn iteration_cap_inside_a_stretch_truncates_identically() {
+    let model = ModelSpec::tiny();
+    let hw = tiny_hw();
+    let run = |cap: usize, coalesce: bool| {
+        let mut cfg = cfg_for(ServingStrategy::ChunkedPrefill, 8192);
+        // one huge bucket: after the single prefill iteration the whole
+        // decode run is one quiescent stretch, so the cap lands mid-way
+        cfg.ctx_bucket = 1024;
+        cfg.max_iterations = cap;
+        let mut s = Scheduler::new(&model, &hw, &cfg);
+        s.set_coalescing(coalesce);
+        s.inject(0, 0.0, 8, 400);
+        s.run_to_end();
+        let truncated = s.truncated();
+        let clock = s.clock();
+        (truncated, clock, s.finish().metrics)
+    };
+    // cap 64: the prefill iteration plus 63 of the ~400 decode
+    // iterations — far inside the stretch
+    let (tc, clock_c, mc) = run(64, true);
+    let (tn, clock_n, mn) = run(64, false);
+    assert!(tc && tn, "the cap must truncate both runs mid-stretch");
+    assert_eq!(mc.n_iterations, 64, "coalesced run overran the cap");
+    assert_eq!(clock_c.to_bits(), clock_n.to_bits(), "cap: clock");
+    assert_serving_bitwise(&mc, &mn, "cap boundary inside a stretch");
+    // ample cap: the same scenario runs to completion, still bitwise
+    let (tc, clock_c, mc) = run(100_000, true);
+    let (tn, clock_n, mn) = run(100_000, false);
+    assert!(!tc && !tn, "ample cap must not truncate");
+    assert_eq!(mc.n_completed, 1);
+    assert_eq!(clock_c.to_bits(), clock_n.to_bits(), "completion: clock");
+    assert_serving_bitwise(&mc, &mn, "completion after long stretches");
+}
